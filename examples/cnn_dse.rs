@@ -1,0 +1,68 @@
+//! CNN design-space exploration and the DiMO-Sparse workflow comparison
+//! (paper §IV-D): run SnipSnap and the DiMO-like iterative baseline on
+//! AlexNet, VGG-16 and ResNet-18, reporting solution quality and
+//! exploration speedup.
+//!
+//! Run with: `cargo run --release --example cnn_dse`
+
+use snipsnap::arch::presets;
+use snipsnap::baselines::dimo_like::{dimo_workload, DimoConfig};
+use snipsnap::cost::Metric;
+use snipsnap::dataflow::mapper::MapperConfig;
+use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig};
+use snipsnap::util::table::{fmt_f, fmt_x, Table};
+use snipsnap::workload::cnn;
+
+fn main() {
+    let arch = presets::arch1(); // Eyeriss-style, the CNN-era baseline
+    let mapper = MapperConfig {
+            max_candidates: 2_000,
+            min_spatial_utilization: 0.0,
+            ..Default::default()
+        };
+    let snip_cfg = SearchConfig {
+        metric: Metric::Energy,
+        mode: FormatMode::Fixed, // DiMO comparison uses preset formats
+        mapper: mapper.clone(),
+        ..Default::default()
+    };
+    let dimo_cfg = DimoConfig::default();
+
+    let mut t = Table::new(vec![
+        "network",
+        "SnipSnap energy (pJ)",
+        "DiMO energy (pJ)",
+        "SnipSnap time (s)",
+        "DiMO time (s)",
+        "speedup",
+    ])
+    .with_title(format!("CNN DSE on {} (fixed {} format)", arch.name, "RLE"));
+
+    let mut speedups = Vec::new();
+    for w in cnn::all_cnns() {
+        let snip = cosearch_workload(&arch, &w, &snip_cfg);
+        let dimo = dimo_workload(&arch, &w, &dimo_cfg, Metric::Energy);
+        let speedup = dimo.elapsed.as_secs_f64() / snip.elapsed.as_secs_f64();
+        speedups.push(speedup);
+        t.add_row(vec![
+            w.name.clone(),
+            fmt_f(snip.total_energy_pj()),
+            fmt_f(dimo.total_energy_pj()),
+            format!("{:.2}", snip.elapsed.as_secs_f64()),
+            format!("{:.2}", dimo.elapsed.as_secs_f64()),
+            fmt_x(speedup),
+        ]);
+        // SnipSnap must not lose on quality while being faster.
+        assert!(
+            snip.total_energy_pj() <= dimo.total_energy_pj() * 1.20,
+            "{}: quality regression",
+            w.name
+        );
+    }
+    println!("{}", t.render());
+    println!(
+        "geomean speedup over DiMO-like baseline: {}",
+        fmt_x(snipsnap::util::stats::geomean(&speedups))
+    );
+    println!("cnn_dse OK");
+}

@@ -1,0 +1,75 @@
+//! Multi-model accelerator co-design (paper Fig. 11 scenarios).
+//!
+//! Case 1: BERT-Base (NLU, 256 input tokens) + OPT-125M (text generation,
+//!         256 in / 32 out) sharing one accelerator.
+//! Case 2: speculative decoding — OPT-125M drafts, OPT-6.7B verifies.
+//!
+//! Importance-based scoring selects ONE shared compression format pattern
+//! that minimizes the importance-weighted metric; we sweep the importance
+//! split to show how the choice shifts toward the prioritized model.
+//!
+//! Run with: `cargo run --release --example multi_model`
+
+use snipsnap::engine::scoring::{select_shared_pattern, workload_format_bits, WeightedWorkload};
+use snipsnap::engine::EngineConfig;
+use snipsnap::format::space::SpaceConfig;
+use snipsnap::format::{Axis, CompPat, Prim};
+use snipsnap::util::table::{fmt_pct, Table};
+use snipsnap::workload::llm;
+
+fn baseline_patterns() -> Vec<(&'static str, CompPat)> {
+    vec![
+        ("Bitmap", CompPat::new(vec![(Prim::None, Axis::Row), (Prim::B, Axis::Col)])),
+        ("RLE", CompPat::new(vec![(Prim::None, Axis::Row), (Prim::RLE, Axis::Col)])),
+        ("CSR", CompPat::new(vec![(Prim::UOP, Axis::Row), (Prim::CP, Axis::Col)])),
+        ("COO", CompPat::new(vec![(Prim::CP, Axis::Row), (Prim::CP, Axis::Col)])),
+    ]
+}
+
+fn run_case(case: &str, a: &snipsnap::workload::Workload, b: &snipsnap::workload::Workload) {
+    let cfg = EngineConfig {
+        space: SpaceConfig { max_depth: 3, ..Default::default() },
+        top_k: 3,
+        ..Default::default()
+    };
+    println!("== {case}: {} + {} ==", a.name, b.name);
+    let mut t = Table::new(vec![
+        "importance (A:B)",
+        "selected pattern",
+        "weighted bits vs best baseline",
+    ]);
+    for (wa, wb) in [(99.0, 1.0), (75.0, 25.0), (50.0, 50.0), (25.0, 75.0), (1.0, 99.0)] {
+        let ws = [
+            WeightedWorkload { workload: a, importance: wa },
+            WeightedWorkload { workload: b, importance: wb },
+        ];
+        let sel = select_shared_pattern(&ws, &cfg);
+        // Best single baseline under the same weighting.
+        let best_baseline = baseline_patterns()
+            .iter()
+            .map(|(_, pat)| {
+                wa * workload_format_bits(a, pat, &cfg) + wb * workload_format_bits(b, pat, &cfg)
+            })
+            .fold(f64::INFINITY, f64::min);
+        let saving = 1.0 - sel.weighted_bits / best_baseline;
+        t.add_row(vec![
+            format!("{wa:.0}:{wb:.0}"),
+            sel.pattern.to_string(),
+            format!("-{}", fmt_pct(saving)),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn main() {
+    // Case 1: NLU + generation.
+    let bert = llm::bert_base(256);
+    let opt125 = llm::opt_125m(llm::Phase { prefill_tokens: 256, decode_tokens: 32 });
+    run_case("Case 1 (BERT-Base + OPT-125M)", &bert, &opt125);
+
+    // Case 2: speculative decoding (draft + verify).
+    let opt67 = llm::opt_6_7b(llm::Phase { prefill_tokens: 256, decode_tokens: 32 });
+    run_case("Case 2 (speculative decoding: OPT-125M + OPT-6.7B)", &opt125, &opt67);
+
+    println!("multi-model co-design OK");
+}

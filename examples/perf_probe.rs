@@ -1,0 +1,103 @@
+//! §Perf probe: micro-timings of the L3 hot paths (cost evaluation,
+//! access counting, mapping enumeration, engine format search) used to
+//! drive and record the optimization pass in EXPERIMENTS.md §Perf.
+
+use snipsnap::arch::presets;
+use snipsnap::cost::{evaluate, CompressionRatios, Metric};
+use snipsnap::dataflow::mapper::MapperConfig;
+use snipsnap::dataflow::{access_counts, LoopDim, Mapping, ProblemDims, Spatial, TileLevel};
+use snipsnap::engine::{search_formats, EngineConfig};
+use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig};
+use snipsnap::sparsity::{reduction::ReductionStrategy, SparsityPattern, SparsitySpec};
+use snipsnap::util::bench::{time_median, write_result};
+use snipsnap::util::json::Json;
+use snipsnap::workload::{MatMulOp, Workload};
+
+fn main() {
+    let arch = presets::arch3();
+    let p = ProblemDims::new(2048, 4096, 4096);
+    let mapping = Mapping {
+        levels: vec![
+            TileLevel { factors: [32, 64, 16], order: [LoopDim::M, LoopDim::N, LoopDim::K] },
+            TileLevel { factors: [16, 16, 4], order: [LoopDim::N, LoopDim::K, LoopDim::M] },
+            TileLevel { factors: [1, 4, 2], order: [LoopDim::K, LoopDim::M, LoopDim::N] },
+        ],
+        spatial: Spatial {
+            dim_rows: LoopDim::M,
+            unroll_rows: 4,
+            dim_cols: LoopDim::K,
+            unroll_cols: 32,
+        },
+    };
+    mapping.validate(&p).unwrap();
+    let spec = SparsitySpec::unstructured(0.4, 0.4);
+
+    // 1) access_counts — the innermost analytical kernel.
+    let n = 200_000;
+    let t_ac = time_median(5, || {
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += access_counts(&mapping, &p).fills[0][0];
+        }
+        acc
+    }) / n as f64;
+    println!("access_counts:        {:>8.1} ns/call", t_ac * 1e9);
+
+    // 2) evaluate — full cost model.
+    let t_ev = time_median(5, || {
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += evaluate(
+                &arch, &p, &mapping, &spec,
+                &ReductionStrategy::NONE, &CompressionRatios::DENSE,
+            )
+            .total_energy_pj();
+        }
+        acc
+    }) / n as f64;
+    println!("evaluate:             {:>8.1} ns/call", t_ev * 1e9);
+
+    // 3) engine format search on a 4096x4096 tensor.
+    let cfg = EngineConfig::default();
+    let pattern = SparsityPattern::Unstructured { density: 0.3 };
+    let t_fs = time_median(3, || {
+        search_formats(4096, 4096, &pattern, None, &cfg).0.len()
+    });
+    println!("search_formats 4096²: {:>8.2} ms", t_fs * 1e3);
+
+    // 4) one full co-search op (Fixed / Search).
+    let w = Workload {
+        name: "probe".into(),
+        ops: vec![MatMulOp {
+            name: "op".into(),
+            dims: ProblemDims::new(2048, 4096, 4096),
+            spec,
+            count: 1,
+        }],
+    };
+    let mk = |mode| SearchConfig {
+        metric: Metric::Energy,
+        mode,
+        mapper: MapperConfig { max_candidates: 2_000, ..Default::default() },
+        ..Default::default()
+    };
+    let t_fixed = time_median(3, || {
+        cosearch_workload(&arch, &w, &mk(FormatMode::Fixed)).evaluations
+    });
+    let t_search = time_median(3, || {
+        cosearch_workload(&arch, &w, &mk(FormatMode::Search)).evaluations
+    });
+    println!("cosearch op (fixed):  {:>8.2} ms", t_fixed * 1e3);
+    println!("cosearch op (search): {:>8.2} ms", t_search * 1e3);
+
+    write_result(
+        "perf_l3",
+        Json::obj(vec![
+            ("access_counts_ns", Json::num(t_ac * 1e9)),
+            ("evaluate_ns", Json::num(t_ev * 1e9)),
+            ("search_formats_ms", Json::num(t_fs * 1e3)),
+            ("cosearch_fixed_ms", Json::num(t_fixed * 1e3)),
+            ("cosearch_search_ms", Json::num(t_search * 1e3)),
+        ]),
+    );
+}

@@ -1,0 +1,69 @@
+//! Quickstart: co-optimize compression format + dataflow for one sparse
+//! LLM operator on the paper's primary accelerator (Arch 3, DSTC-based).
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use snipsnap::arch::presets;
+use snipsnap::dataflow::ProblemDims;
+use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig};
+use snipsnap::sparsity::SparsitySpec;
+use snipsnap::util::table::{fmt_f, fmt_pct, Table};
+use snipsnap::workload::{MatMulOp, Workload};
+
+fn main() {
+    // The FC2 projection of a sparse OPT-6.7B block: 2048-token prefill,
+    // 95%-sparse activations (post-ReLU), 50%-sparse weights.
+    let workload = Workload {
+        name: "quickstart".to_string(),
+        ops: vec![MatMulOp {
+            name: "fc2".to_string(),
+            dims: ProblemDims::new(2048, 16384, 4096),
+            spec: SparsitySpec::unstructured(0.05, 0.50),
+            count: 1,
+        }],
+    };
+    let arch = presets::arch3();
+
+    println!("== SnipSnap quickstart ==");
+    println!("arch:     {}", arch.name);
+    println!("operator: {} (M={}, N={}, K={})", workload.ops[0].name, 2048, 16384, 4096);
+
+    // Fixed mode: the accelerator's native Bitmap format.
+    let fixed = cosearch_workload(
+        &arch,
+        &workload,
+        &SearchConfig { mode: FormatMode::Fixed, ..Default::default() },
+    );
+    // Search mode: the adaptive compression engine explores the format space.
+    let search = cosearch_workload(
+        &arch,
+        &workload,
+        &SearchConfig { mode: FormatMode::Search, ..Default::default() },
+    );
+
+    let mut t = Table::new(vec!["mode", "I format", "W format", "memory energy (pJ)", "cycles"]);
+    for (name, r) in [("Fixed (Bitmap)", &fixed), ("SnipSnap search", &search)] {
+        let d = &r.designs[0];
+        t.add_row(vec![
+            name.to_string(),
+            d.input_format.to_string(),
+            d.weight_format.to_string(),
+            fmt_f(r.memory_energy_pj()),
+            fmt_f(r.total_cycles()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let saving = 1.0 - search.memory_energy_pj() / fixed.memory_energy_pj();
+    println!(
+        "memory-energy saving from format search: {} ({} evaluations, {:.2}s)",
+        fmt_pct(saving),
+        search.evaluations,
+        search.elapsed.as_secs_f64()
+    );
+    assert!(
+        search.memory_energy_pj() <= fixed.memory_energy_pj() * 1.0001,
+        "format search must not lose to the fixed format"
+    );
+    println!("quickstart OK");
+}

@@ -1,0 +1,134 @@
+"""AOT entry point: lower the L2 graphs to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``).  Emits one ``.hlo.txt`` per
+(function, shape) variant plus ``manifest.json`` describing the I/O
+signatures, which the Rust runtime (``rust/src/runtime/``) parses to load
+and execute the artifacts via PJRT.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT a serialized
+``HloModuleProto`` — is the interchange format: jax >= 0.5 emits protos
+with 64-bit instruction ids that xla_extension 0.5.1 (the version the
+published ``xla`` 0.1.6 crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_variants():
+    """(name, lowered, signature) for every artifact we ship.
+
+    Shapes are chosen so interpret-mode Pallas stays fast on CPU while
+    covering the tensor sizes the Rust analyzer samples (it tiles larger
+    tensors across multiple calls).
+    """
+    variants = []
+
+    # Empirical sparsity analyzer at three tensor scales.
+    for (r, c, br, bc) in [(512, 512, 16, 16), (1024, 1024, 16, 16), (2048, 2048, 32, 32)]:
+        name = f"sparsity_stats_{r}x{c}_b{br}"
+        lowered = jax.jit(
+            model.sparsity_stats, static_argnames=("block_r", "block_c")
+        ).lower(_spec((r, c)), block_r=br, block_c=bc)
+        sig = {
+            "inputs": [{"shape": [r, c], "dtype": "f32"}],
+            "outputs": [
+                {"shape": [r // br, c // bc], "dtype": "f32"},
+                {"shape": [r, 1], "dtype": "f32"},
+                {"shape": [c], "dtype": "f32"},
+                {"shape": [], "dtype": "f32"},
+            ],
+            "params": {"rows": r, "cols": c, "block_r": br, "block_c": bc},
+        }
+        variants.append((name, lowered, sig))
+
+    # Batched format-cost scorer: 256 candidates x 6 levels.
+    b, l = 256, 6
+    name = f"format_cost_b{b}_l{l}"
+    lowered = jax.jit(model.format_cost_batch).lower(
+        _spec((b, l), jnp.int32),
+        _spec((b, l)),
+        _spec((b, l)),
+        _spec((b, l + 1)),
+        _spec(()),
+    )
+    sig = {
+        "inputs": [
+            {"shape": [b, l], "dtype": "i32"},
+            {"shape": [b, l], "dtype": "f32"},
+            {"shape": [b, l], "dtype": "f32"},
+            {"shape": [b, l + 1], "dtype": "f32"},
+            {"shape": [], "dtype": "f32"},
+        ],
+        "outputs": [{"shape": [b], "dtype": "f32"}],
+        "params": {"batch": b, "levels": l},
+    }
+    variants.append((name, lowered, sig))
+
+    # N:M conformance checker (2:4 over 1024x1024).
+    name = "nm_conformance_1024x1024_2_4"
+    lowered = jax.jit(
+        model.nm_conformance, static_argnames=("n", "m", "block_r")
+    ).lower(_spec((1024, 1024)), n=2, m=4, block_r=16)
+    sig = {
+        "inputs": [{"shape": [1024, 1024], "dtype": "f32"}],
+        "outputs": [{"shape": [], "dtype": "f32"}],
+        "params": {"n": 2, "m": 4},
+    }
+    variants.append((name, lowered, sig))
+
+    return variants
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    )
+    # kept for Makefile compatibility; --out <file> writes the manifest path
+    parser.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = parser.parse_args()
+    out_dir = os.path.abspath(
+        os.path.dirname(args.out) if args.out else args.out_dir
+    )
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"artifacts": []}
+    for name, lowered, sig in build_variants():
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({"name": name, "file": f"{name}.hlo.txt", **sig})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: N:M structured-sparsity conformance check.
+
+SnipSnap's workload zoo includes N:M-pruned tensors (e.g. the paper's 2:4
+case in Fig. 6).  The synthetic-tensor sampler must produce tensors that
+actually satisfy the N:M constraint; this kernel verifies conformance at
+scale: for every group of ``m`` consecutive elements along the last axis it
+counts non-zeros and accumulates ``max(0, nnz_group - n)`` violations.
+
+A conforming tensor yields exactly 0.  Runs under ``interpret=True`` (CPU
+PJRT); oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nm_violation_kernel(x_ref, o_ref, *, n: int, m: int):
+    tile = x_ref[...]  # (block_r, C)
+    br, c = tile.shape
+    groups = tile.reshape(br, c // m, m)
+    nnz = jnp.sum((groups != 0).astype(jnp.float32), axis=2)
+    viol = jnp.maximum(nnz - float(n), 0.0)
+    o_ref[0, 0] = jnp.sum(viol)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "block_r"))
+def nm_violations(x: jax.Array, n: int, m: int, block_r: int) -> jax.Array:
+    """Total N:M violations, reduced per row-stripe then summed.
+
+    Args:
+      x: ``(R, C)`` array with ``C % m == 0`` and ``R % block_r == 0``.
+      n, m: at most ``n`` non-zeros allowed per group of ``m``.
+      block_r: row-stripe height per grid step.
+
+    Returns:
+      scalar float32 — 0.0 iff ``x`` is N:M conforming.
+    """
+    r, c = x.shape
+    if c % m:
+        raise ValueError(f"cols {c} not divisible by group {m}")
+    if r % block_r:
+        raise ValueError(f"rows {r} not divisible by stripe {block_r}")
+    grid = (r // block_r,)
+    per_stripe = pl.pallas_call(
+        functools.partial(_nm_violation_kernel, n=n, m=m),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_r, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r // block_r, 1), jnp.float32),
+        interpret=True,
+    )(x)
+    return jnp.sum(per_stripe)

@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: tiled block-occupancy analysis.
+
+This is the compute hot-spot of SnipSnap's *empirical* Sparsity Analyzer:
+given a (possibly huge) sparse matrix, produce the per-block non-zero count
+for a lattice of ``(block_r, block_c)`` tiles.  Every hierarchical format
+level's expected occupancy is an aggregation of this base lattice, so one
+pass over the tensor feeds the whole format-cost evaluation.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): each grid step stages one
+``block_r x block_c`` tile from HBM into VMEM via ``BlockSpec`` and reduces
+it on the VPU to a single count.  There is no MXU work; the kernel is
+bandwidth-bound by construction (arithmetic intensity ~1 op/element).  VMEM
+footprint per step is ``block_r * block_c * itemsize`` bytes.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute the
+Mosaic custom-call a real TPU lowering would emit.  Correctness against the
+pure-jnp oracle in ``ref.py`` is enforced by pytest (incl. hypothesis
+sweeps over shapes and dtypes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_nnz_kernel(x_ref, o_ref):
+    """Reduce one VMEM-resident tile to its non-zero count."""
+    tile = x_ref[...]
+    # Count in f32: exact for counts < 2^24, far above any tile size we use.
+    o_ref[0, 0] = jnp.sum((tile != 0).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c"))
+def block_nnz(x: jax.Array, block_r: int, block_c: int) -> jax.Array:
+    """Per-block non-zero counts over a 2-D array.
+
+    Args:
+      x: ``(R, C)`` array; ``R % block_r == 0`` and ``C % block_c == 0``.
+      block_r, block_c: tile shape of the base occupancy lattice.
+
+    Returns:
+      ``(R // block_r, C // block_c)`` float32 array of per-tile nnz counts.
+    """
+    r, c = x.shape
+    if r % block_r or c % block_c:
+        raise ValueError(
+            f"shape {x.shape} not divisible by block ({block_r}, {block_c})"
+        )
+    grid = (r // block_r, c // block_c)
+    return pl.pallas_call(
+        _block_nnz_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(grid, jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _row_nnz_kernel(x_ref, o_ref):
+    """Per-row non-zero counts of one row-stripe tile."""
+    tile = x_ref[...]
+    o_ref[...] = jnp.sum((tile != 0).astype(jnp.float32), axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r",))
+def row_nnz(x: jax.Array, block_r: int) -> jax.Array:
+    """Per-row nnz counts, tiled over row stripes.
+
+    Returns ``(R, 1)`` float32.  Used for CSR/UOP-style per-fiber occupancy
+    (a row is "non-empty" iff its count is > 0; the CP coordinate payload is
+    the count itself).
+    """
+    r, c = x.shape
+    if r % block_r:
+        raise ValueError(f"rows {r} not divisible by stripe {block_r}")
+    grid = (r // block_r,)
+    return pl.pallas_call(
+        _row_nnz_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_r, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        interpret=True,
+    )(x)

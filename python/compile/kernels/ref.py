@@ -1,0 +1,94 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the golden references: trivially-correct formulations that the
+kernels in ``occupancy.py`` / ``nm_check.py`` must match bit-exactly (the
+counts are small integers held in f32, so ``assert_allclose`` with rtol=0
+is appropriate).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_nnz_ref(x: jax.Array, block_r: int, block_c: int) -> jax.Array:
+    """Per-block nnz via reshape/transpose — oracle for occupancy.block_nnz."""
+    r, c = x.shape
+    rb, cb = r // block_r, c // block_c
+    blocks = x.reshape(rb, block_r, cb, block_c)
+    nz = (blocks != 0).astype(jnp.float32)
+    return nz.sum(axis=(1, 3))
+
+
+def row_nnz_ref(x: jax.Array) -> jax.Array:
+    """Per-row nnz, shape (R, 1) — oracle for occupancy.row_nnz."""
+    return (x != 0).astype(jnp.float32).sum(axis=1, keepdims=True)
+
+
+def nm_violations_ref(x: jax.Array, n: int, m: int) -> jax.Array:
+    """Total N:M group violations — oracle for nm_check.nm_violations."""
+    r, c = x.shape
+    groups = x.reshape(r, c // m, m)
+    nnz = (groups != 0).astype(jnp.float32).sum(axis=2)
+    return jnp.maximum(nnz - float(n), 0.0).sum()
+
+
+def sparsity_stats_ref(x: jax.Array, block_r: int, block_c: int):
+    """Oracle for model.sparsity_stats: (block counts, row nnz, col nnz, total)."""
+    counts = block_nnz_ref(x, block_r, block_c)
+    rows = row_nnz_ref(x)[:, 0]
+    cols = (x != 0).astype(jnp.float32).sum(axis=0)
+    return counts, rows, cols, counts.sum()
+
+
+# --- format-cost oracle (mirrors model.format_cost_batch) -----------------
+
+KIND_NONE, KIND_B, KIND_CP, KIND_RLE, KIND_UOP = 0, 1, 2, 3, 4
+
+
+def format_cost_ref(kinds, fanouts, widths, nonempty, data_bits: float):
+    """Expected total bits for a batch of format candidates — numpy oracle.
+
+    Args:
+      kinds:    (B, L) int32  — primitive kind per level (KIND_*).
+      fanouts:  (B, L) f32    — children per node at each level (>=1; 1 for
+                                padding levels, which must carry KIND_NONE).
+      widths:   (B, L) f32    — metadata word width per level (the caller
+                 derives CP/RLE/UOP widths from level geometry).
+      nonempty: (B, L+1) f32  — expected non-empty node count per boundary;
+                 nonempty[:, 0] == 1 (root), nonempty[:, i+1] = non-empty
+                 nodes *below* level i.  For padding levels the count just
+                 repeats.
+      data_bits: payload bits per non-zero element.
+
+    Returns:
+      (B,) f32 total expected bits: metadata at every level + payload
+      (= nonempty[:, L] * data_bits, i.e. leaf-level non-empty elements).
+    """
+    import numpy as np
+
+    kinds = np.asarray(kinds)
+    fanouts = np.asarray(fanouts, dtype=np.float64)
+    widths = np.asarray(widths, dtype=np.float64)
+    nonempty = np.asarray(nonempty, dtype=np.float64)
+    b, l = kinds.shape
+    total = np.zeros(b, dtype=np.float64)
+    for i in range(l):
+        parents = nonempty[:, i]
+        children = nonempty[:, i + 1]
+        f = fanouts[:, i]
+        cb = widths[:, i]
+        bits_b = parents * f
+        bits_cp = children * cb
+        bits_rle = (children + parents) * cb
+        # UOP: one offset per child slot + 1 terminator per parent.
+        bits_uop = (parents * (f + 1.0)) * cb
+        k = kinds[:, i]
+        lvl = np.where(k == KIND_B, bits_b, 0.0)
+        lvl = np.where(k == KIND_CP, bits_cp, lvl)
+        lvl = np.where(k == KIND_RLE, bits_rle, lvl)
+        lvl = np.where(k == KIND_UOP, bits_uop, lvl)
+        total += lvl
+    payload = nonempty[:, l] * data_bits
+    return (total + payload).astype(np.float32)

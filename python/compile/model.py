@@ -1,0 +1,86 @@
+"""L2: SnipSnap's empirical Sparsity Analyzer as a JAX compute graph.
+
+Two entry points, both AOT-lowered to HLO text by ``aot.py`` and executed
+from the Rust coordinator via PJRT (never imported at runtime):
+
+- ``sparsity_stats``: one pass over a concrete sparse tensor producing the
+  base occupancy lattice (per-block nnz via the L1 Pallas kernel) plus
+  per-row / per-column nnz and the total count.  The Rust side aggregates
+  these into non-empty node counts for *any* hierarchical format level.
+
+- ``format_cost_batch``: batched scoring of compression-format candidates —
+  given per-level primitive kinds, fanouts and non-empty node counts, it
+  returns the expected total bits (metadata + payload) for every candidate
+  in a single XLA call.  This is the vectorized twin of the Rust analytical
+  scorer and of ``kernels/ref.py::format_cost_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import occupancy
+
+# Primitive kind encoding, shared with ref.py and rust/src/format/.
+KIND_NONE, KIND_B, KIND_CP, KIND_RLE, KIND_UOP = 0, 1, 2, 3, 4
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c"))
+def sparsity_stats(x: jax.Array, block_r: int, block_c: int):
+    """Base occupancy statistics of a 2-D sparse tensor.
+
+    Returns:
+      block_counts: (R/block_r, C/block_c) f32 — per-tile nnz (L1 kernel).
+      row_counts:   (R, 1) f32 — per-row nnz (L1 kernel).
+      col_counts:   (C,) f32 — per-column nnz.
+      total:        () f32 — total nnz.
+    """
+    block_counts = occupancy.block_nnz(x, block_r, block_c)
+    row_counts = occupancy.row_nnz(x, block_r)
+    col_counts = jnp.sum((x != 0).astype(jnp.float32), axis=0)
+    total = jnp.sum(block_counts)
+    return block_counts, row_counts, col_counts, total
+
+
+@jax.jit
+def format_cost_batch(
+    kinds: jax.Array,     # (B, L) int32
+    fanouts: jax.Array,   # (B, L) f32
+    widths: jax.Array,    # (B, L) f32 — metadata word width per level
+    nonempty: jax.Array,  # (B, L+1) f32
+    data_bits: jax.Array,  # () f32
+):
+    """Expected total bits per format candidate (see ref.format_cost_ref).
+
+    Widths are precomputed by the caller (the Rust costing core derives
+    CP/RLE/UOP word widths from the level geometry); the scorer is pure
+    arithmetic, so the whole candidate batch fuses into one XLA
+    computation.
+    """
+    fan = jnp.maximum(fanouts, 1.0)
+    parents = nonempty[:, :-1]
+    children = nonempty[:, 1:]
+
+    bits_b = parents * fan
+    bits_cp = children * widths
+    bits_rle = (children + parents) * widths
+    bits_uop = parents * (fan + 1.0) * widths
+
+    lvl = jnp.where(kinds == KIND_B, bits_b, 0.0)
+    lvl = jnp.where(kinds == KIND_CP, bits_cp, lvl)
+    lvl = jnp.where(kinds == KIND_RLE, bits_rle, lvl)
+    lvl = jnp.where(kinds == KIND_UOP, bits_uop, lvl)
+
+    payload = nonempty[:, -1] * data_bits
+    return (jnp.sum(lvl, axis=1) + payload,)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "block_r"))
+def nm_conformance(x: jax.Array, n: int, m: int, block_r: int):
+    """Total N:M violations of a tensor (0.0 iff conforming)."""
+    from .kernels import nm_check
+
+    return (nm_check.nm_violations(x, n, m, block_r),)

@@ -1,0 +1,134 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Every Pallas kernel must match its pure-jnp oracle bit-exactly (counts are
+small integers in f32).  Hypothesis sweeps shapes, densities and dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import nm_check, occupancy, ref
+
+
+def sparse_matrix(rng, r, c, density, dtype=np.float32):
+    mask = rng.random((r, c)) < density
+    vals = rng.standard_normal((r, c))
+    # Make sure sampled non-zeros are never exactly 0.0.
+    vals = np.where(vals == 0.0, 1.0, vals)
+    return (mask * vals).astype(dtype)
+
+
+@pytest.mark.parametrize("r,c,br,bc", [(32, 32, 16, 16), (64, 32, 16, 16), (48, 96, 16, 16), (64, 64, 32, 32)])
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.5, 1.0])
+def test_block_nnz_matches_ref(r, c, br, bc, density):
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(sparse_matrix(rng, r, c, density))
+    got = occupancy.block_nnz(x, br, bc)
+    want = ref.block_nnz_ref(x, br, bc)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+    # Sanity: total equals global nnz.
+    np.testing.assert_allclose(got.sum(), (x != 0).sum().astype(jnp.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_block_nnz_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    x = (rng.random((32, 32)) < 0.3).astype(np.float32)
+    x = jnp.asarray(x).astype(dtype)
+    got = occupancy.block_nnz(x, 16, 16)
+    want = ref.block_nnz_ref(x, 16, 16)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_block_nnz_rejects_misaligned():
+    x = jnp.zeros((30, 32))
+    with pytest.raises(ValueError):
+        occupancy.block_nnz(x, 16, 16)
+
+
+@pytest.mark.parametrize("r,c,br", [(32, 16, 16), (64, 8, 16), (32, 128, 32)])
+def test_row_nnz_matches_ref(r, c, br):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(sparse_matrix(rng, r, c, 0.3))
+    got = occupancy.row_nnz(x, br)
+    want = ref.row_nnz_ref(x)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rb=st.integers(1, 4),
+    cb=st.integers(1, 4),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_nnz_hypothesis(rb, cb, density, seed):
+    """Shape/density sweep: grid dims (rb, cb) of 16x16 blocks."""
+    r, c = rb * 16, cb * 16
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(sparse_matrix(rng, r, c, density))
+    got = occupancy.block_nnz(x, 16, 16)
+    want = ref.block_nnz_ref(x, 16, 16)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(1, 3),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+    dtype_idx=st.integers(0, 1),
+)
+def test_row_nnz_hypothesis(rows, density, seed, dtype_idx):
+    dtype = [jnp.float32, jnp.bfloat16][dtype_idx]
+    r, c = rows * 16, 48
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(sparse_matrix(rng, r, c, density)).astype(dtype)
+    got = occupancy.row_nnz(x, 16)
+    want = ref.row_nnz_ref(x)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+# --- N:M check kernel ------------------------------------------------------
+
+
+def nm_prune(rng, r, c, n, m):
+    """Random dense matrix pruned to exact N:M along the last axis."""
+    x = rng.standard_normal((r, c)).astype(np.float32)
+    x = np.where(x == 0.0, 1.0, x)
+    groups = x.reshape(r, c // m, m)
+    order = np.argsort(-np.abs(groups), axis=2)
+    keep = np.zeros_like(groups, dtype=bool)
+    np.put_along_axis(keep, order[:, :, :n], True, axis=2)
+    return (groups * keep).reshape(r, c)
+
+
+@pytest.mark.parametrize("n,m", [(2, 4), (1, 4), (4, 8)])
+def test_nm_conforming_tensor_has_zero_violations(n, m):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(nm_prune(rng, 32, 64, n, m))
+    got = nm_check.nm_violations(x, n, m, 16)
+    want = ref.nm_violations_ref(x, n, m)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+    assert float(got) == 0.0
+
+
+def test_nm_dense_tensor_counts_all_violations():
+    x = jnp.ones((16, 16))
+    got = nm_check.nm_violations(x, 2, 4, 16)
+    # Every group of 4 has 4 nonzeros -> 2 violations; 16*4 groups.
+    assert float(got) == 2.0 * 16 * 4
+
+
+@settings(max_examples=15, deadline=None)
+@given(density=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_nm_violations_hypothesis(density, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((32, 32)) < density
+    x = jnp.asarray(mask.astype(np.float32))
+    got = nm_check.nm_violations(x, 2, 4, 16)
+    want = ref.nm_violations_ref(x, 2, 4)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)

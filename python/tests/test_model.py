@@ -1,0 +1,112 @@
+"""L2 graph correctness: sparsity_stats + format_cost_batch vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from tests.test_kernel import sparse_matrix
+
+
+@pytest.mark.parametrize("r,c,br,bc", [(64, 64, 16, 16), (32, 64, 16, 16)])
+@pytest.mark.parametrize("density", [0.0, 0.2, 0.9])
+def test_sparsity_stats_matches_ref(r, c, br, bc, density):
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(sparse_matrix(rng, r, c, density))
+    blocks, rows, cols, total = model.sparsity_stats(x, br, bc)
+    wb, wr, wc, wt = ref.sparsity_stats_ref(x, br, bc)
+    np.testing.assert_allclose(blocks, wb, rtol=0, atol=0)
+    np.testing.assert_allclose(rows[:, 0], wr, rtol=0, atol=0)
+    np.testing.assert_allclose(cols, wc, rtol=0, atol=0)
+    np.testing.assert_allclose(total, wt, rtol=0, atol=0)
+
+
+def test_sparsity_stats_internal_consistency():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(sparse_matrix(rng, 64, 64, 0.37))
+    blocks, rows, cols, total = model.sparsity_stats(x, 16, 16)
+    np.testing.assert_allclose(float(blocks.sum()), float(total))
+    np.testing.assert_allclose(float(rows.sum()), float(total))
+    np.testing.assert_allclose(float(cols.sum()), float(total))
+
+
+def random_candidates(rng, b, l):
+    kinds = rng.integers(0, 5, size=(b, l)).astype(np.int32)
+    fanouts = 2.0 ** rng.integers(0, 8, size=(b, l)).astype(np.float32)
+    fanouts = np.where(kinds == ref.KIND_NONE, 1.0, fanouts).astype(np.float32)
+    widths = np.ceil(np.log2(np.maximum(fanouts, 2.0))).astype(np.float32)
+    # Monotone non-decreasing non-empty counts down the tree.
+    nonempty = np.ones((b, l + 1), dtype=np.float32)
+    for i in range(1, l + 1):
+        growth = 1.0 + rng.random((b,)) * (fanouts[:, i - 1] - 1.0)
+        nonempty[:, i] = nonempty[:, i - 1] * growth
+    return kinds, fanouts, widths, nonempty
+
+
+def test_format_cost_batch_matches_ref():
+    rng = np.random.default_rng(19)
+    kinds, fanouts, widths, nonempty = random_candidates(rng, 64, 6)
+    (got,) = model.format_cost_batch(
+        jnp.asarray(kinds), jnp.asarray(fanouts), jnp.asarray(widths),
+        jnp.asarray(nonempty), jnp.float32(16.0)
+    )
+    want = ref.format_cost_ref(kinds, fanouts, widths, nonempty, 16.0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), data_bits=st.sampled_from([8.0, 16.0, 32.0]))
+def test_format_cost_batch_hypothesis(seed, data_bits):
+    rng = np.random.default_rng(seed)
+    kinds, fanouts, widths, nonempty = random_candidates(rng, 32, 6)
+    (got,) = model.format_cost_batch(
+        jnp.asarray(kinds), jnp.asarray(fanouts), jnp.asarray(widths),
+        jnp.asarray(nonempty), jnp.float32(data_bits)
+    )
+    want = ref.format_cost_ref(kinds, fanouts, widths, nonempty, data_bits)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
+def test_format_cost_custom_widths_respected():
+    """Doubling widths doubles CP metadata exactly."""
+    b, l = 1, 6
+    kinds = np.full((b, l), ref.KIND_CP, dtype=np.int32)
+    fanouts = np.full((b, l), 4.0, dtype=np.float32)
+    nonempty = np.cumprod(np.full((b, l + 1), 2.0, dtype=np.float32), axis=1) / 2.0
+    w1 = np.full((b, l), 2.0, dtype=np.float32)
+    w2 = np.full((b, l), 4.0, dtype=np.float32)
+    (c1,) = model.format_cost_batch(
+        jnp.asarray(kinds), jnp.asarray(fanouts), jnp.asarray(w1),
+        jnp.asarray(nonempty), jnp.float32(0.0)
+    )
+    (c2,) = model.format_cost_batch(
+        jnp.asarray(kinds), jnp.asarray(fanouts), jnp.asarray(w2),
+        jnp.asarray(nonempty), jnp.float32(0.0)
+    )
+    np.testing.assert_allclose(np.asarray(c2), 2.0 * np.asarray(c1), rtol=1e-6)
+
+
+def test_format_cost_payload_only_when_all_none():
+    """KIND_NONE everywhere -> cost is exactly the payload term."""
+    b, l = 4, 6
+    kinds = np.zeros((b, l), dtype=np.int32)
+    fanouts = np.ones((b, l), dtype=np.float32)
+    widths = np.ones((b, l), dtype=np.float32)
+    nonempty = np.ones((b, l + 1), dtype=np.float32) * 100.0
+    nonempty[:, 0] = 1.0
+    (got,) = model.format_cost_batch(
+        jnp.asarray(kinds), jnp.asarray(fanouts), jnp.asarray(widths),
+        jnp.asarray(nonempty), jnp.float32(16.0)
+    )
+    np.testing.assert_allclose(np.asarray(got), 100.0 * 16.0, rtol=1e-6)
+
+
+def test_nm_conformance_entry_point():
+    rng = np.random.default_rng(2)
+    from tests.test_kernel import nm_prune
+
+    x = jnp.asarray(nm_prune(rng, 1024, 1024, 2, 4))
+    (v,) = model.nm_conformance(x, 2, 4, 16)
+    assert float(v) == 0.0

@@ -1,0 +1,88 @@
+//! §IV-D — DiMO-Sparse workflow comparison on CNNs.
+//!
+//! SnipSnap (preset formats, matching DiMO's constraint) vs the DiMO-like
+//! iterative optimizer on AlexNet, VGG-16 and ResNet-18.  Paper: 19.4x,
+//! 19.7x and 23.8x speedups; we reproduce the shape (order-of-magnitude
+//! faster at comparable quality).
+
+use snipsnap::arch::presets;
+use snipsnap::baselines::dimo_like::{dimo_workload, DimoConfig};
+use snipsnap::cost::Metric;
+use snipsnap::dataflow::mapper::MapperConfig;
+use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig};
+use snipsnap::util::bench::{banner, write_result};
+use snipsnap::util::json::Json;
+use snipsnap::util::stats::geomean;
+use snipsnap::util::table::{fmt_f, fmt_x, Table};
+use snipsnap::workload::cnn;
+
+fn main() {
+    banner("§IV-D", "exploration speed vs DiMO-like iterative baseline (CNNs)");
+    let arch = presets::arch1();
+    // CNN im2col dims are divisor-rich; give the one-shot search enough
+    // protos that truncation doesn't concede quality to DiMO's restarts.
+    let snip_cfg = SearchConfig {
+        metric: Metric::Energy,
+        mode: FormatMode::Fixed,
+        mapper: MapperConfig {
+            max_candidates: 2_000,
+            min_spatial_utilization: 0.0,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let dimo_cfg = DimoConfig::default();
+
+    let mut t = Table::new(vec![
+        "network", "SnipSnap evals", "DiMO evals", "speedup (evals)",
+        "SnipSnap (s)", "DiMO (s)", "SnipSnap energy", "DiMO energy",
+    ]);
+    let mut speedups = Vec::new();
+    let mut records = Vec::new();
+    for w in cnn::all_cnns() {
+        let snip = cosearch_workload(&arch, &w, &snip_cfg);
+        let dimo = dimo_workload(&arch, &w, &dimo_cfg, Metric::Energy);
+        // Both workflows run on OUR fast evaluator, so wall-clock no longer
+        // reflects the methodology gap the paper measured against the real
+        // DiMO tool; cost-model evaluations are the deterministic
+        // workflow-effort proxy (DiMO re-evaluates 6^L order combos per
+        // candidate move across restarts).
+        let sp = dimo.evaluations as f64 / snip.evaluations as f64;
+        speedups.push(sp);
+        t.add_row(vec![
+            w.name.clone(),
+            snip.evaluations.to_string(),
+            dimo.evaluations.to_string(),
+            fmt_x(sp),
+            format!("{:.2}", snip.elapsed.as_secs_f64()),
+            format!("{:.2}", dimo.elapsed.as_secs_f64()),
+            fmt_f(snip.total_energy_pj()),
+            fmt_f(dimo.total_energy_pj()),
+        ]);
+        records.push(Json::obj(vec![
+            ("network", Json::str(&w.name)),
+            ("speedup", Json::num(sp)),
+            ("snip_energy", Json::num(snip.total_energy_pj())),
+            ("dimo_energy", Json::num(dimo.total_energy_pj())),
+        ]));
+        assert!(
+            snip.total_energy_pj() <= dimo.total_energy_pj() * 1.20,
+            "{}: quality regression ({} vs {})",
+            w.name,
+            snip.total_energy_pj(),
+            dimo.total_energy_pj()
+        );
+    }
+    println!("{}", t.render());
+    let g = geomean(&speedups);
+    println!(
+        "geomean workflow-effort speedup: {} (paper wall-clock vs real DiMO: 19.4x / 19.7x / 23.8x)",
+        fmt_x(g)
+    );
+    assert!(g > 1.0, "speedup too small: {g}");
+    write_result(
+        "dimo_cnn_speed",
+        Json::obj(vec![("geomean_speedup", Json::num(g)), ("rows", Json::arr(records))]),
+    );
+    println!("dimo_cnn OK");
+}

@@ -1,0 +1,46 @@
+//! Fig. 8 — energy-model validation against SCNN.
+//!
+//! Models the SCNN architecture and compares relative energy (normalized
+//! to the dense run) against the published reference series for sparse
+//! activations (SA), sparse weights (SW) and both (SA&SW).  The paper
+//! reports a mean relative error of 4.33%.  Reference series are plot
+//! reconstructions — see `arch::published` and DESIGN.md §5.
+
+use snipsnap::arch::validation::scnn_energy_validation;
+use snipsnap::util::bench::{banner, time_once, write_result};
+use snipsnap::util::json::Json;
+use snipsnap::util::table::{fmt_f, fmt_pct, Table};
+
+fn main() {
+    banner("Fig. 8", "SCNN energy validation (SA / SW / SA&SW)");
+    let ((mre, rows), secs) = time_once(scnn_energy_validation);
+    let mut t = Table::new(vec!["layer", "case", "reported", "modeled", "rel err"]);
+    let mut records = Vec::new();
+    for r in &rows {
+        t.add_row(vec![
+            r.layer.to_string(),
+            r.case.to_string(),
+            fmt_f(r.reported),
+            fmt_f(r.modeled),
+            fmt_pct(r.rel_err),
+        ]);
+        records.push(Json::obj(vec![
+            ("layer", Json::str(r.layer)),
+            ("case", Json::str(r.case)),
+            ("reported", Json::num(r.reported)),
+            ("modeled", Json::num(r.modeled)),
+            ("rel_err", Json::num(r.rel_err)),
+        ]));
+    }
+    println!("{}", t.render());
+    println!(
+        "mean relative error: {} (paper: 4.33%) — modeled in {secs:.1}s",
+        fmt_pct(mre)
+    );
+    assert!(mre < 0.10, "MRE {mre}");
+    write_result(
+        "fig08_scnn_energy",
+        Json::obj(vec![("mre", Json::num(mre)), ("rows", Json::arr(records))]),
+    );
+    println!("fig08 OK");
+}

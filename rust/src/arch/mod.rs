@@ -1,0 +1,163 @@
+//! Hardware configuration system (paper §IV-A1, Table II).
+//!
+//! An [`Accelerator`] is a MAC array plus a memory hierarchy (outermost
+//! level first), a computation-reduction strategy and an optional fixed
+//! native compression format.  Presets reproduce Table II's Arch 1–4
+//! (Eyeriss- and DSTC-based, scaled 16x MACs / 4x on-chip memory for LLM
+//! inference) plus the SCNN and DSTC configs used for validation.
+
+pub mod presets;
+pub mod published;
+pub mod validation;
+
+use crate::sparsity::reduction::ReductionStrategy;
+
+/// One level of the memory hierarchy.
+#[derive(Clone, Debug)]
+pub struct MemLevel {
+    pub name: String,
+    /// Usable capacity in bits; `u64::MAX` for off-chip DRAM.
+    pub capacity_bits: u64,
+    /// Energy per bit read from this level (pJ).
+    pub read_pj_per_bit: f64,
+    /// Energy per bit written to this level (pJ).
+    pub write_pj_per_bit: f64,
+    /// Sustained bandwidth toward the level below, bits per cycle.
+    pub bandwidth_bits_per_cycle: f64,
+}
+
+impl MemLevel {
+    pub fn dram(name: &str, read_pj: f64, write_pj: f64, bw: f64) -> Self {
+        MemLevel {
+            name: name.to_string(),
+            capacity_bits: u64::MAX,
+            read_pj_per_bit: read_pj,
+            write_pj_per_bit: write_pj,
+            bandwidth_bits_per_cycle: bw,
+        }
+    }
+
+    pub fn is_unbounded(&self) -> bool {
+        self.capacity_bits == u64::MAX
+    }
+}
+
+/// The MAC array.
+#[derive(Clone, Debug)]
+pub struct MacArray {
+    pub total_macs: u64,
+    /// Maximum spatial unrolling along the two array axes.
+    pub spatial_rows: u64,
+    pub spatial_cols: u64,
+    /// Energy per MAC operation at the native precision (pJ).
+    pub pj_per_mac: f64,
+}
+
+/// A complete accelerator configuration.
+#[derive(Clone, Debug)]
+pub struct Accelerator {
+    pub name: String,
+    pub mac: MacArray,
+    /// Memory hierarchy, outermost (DRAM) first, innermost (regs) last.
+    pub levels: Vec<MemLevel>,
+    pub reduction: ReductionStrategy,
+    /// Operand word width in bits.
+    pub data_bits: u32,
+    pub clock_ghz: f64,
+    /// Fixed native format name, if the hardware supports only one
+    /// (most do — paper Challenge 2); `None` lets the engine choose.
+    pub native_format: Option<String>,
+    /// Area overhead fraction budgeted for (de)compression units, used by
+    /// the §IV-E feasibility discussion.
+    pub codec_area_overhead: f64,
+}
+
+impl Accelerator {
+    /// Validate structural invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.levels.len() < 2 {
+            return Err(format!("{}: need at least DRAM + one on-chip level", self.name));
+        }
+        if !self.levels[0].is_unbounded() {
+            return Err(format!("{}: outermost level must be unbounded DRAM", self.name));
+        }
+        if self.levels[1..].iter().any(|l| l.is_unbounded()) {
+            return Err(format!("{}: only the outermost level may be unbounded", self.name));
+        }
+        if self.mac.spatial_rows * self.mac.spatial_cols > self.mac.total_macs {
+            return Err(format!(
+                "{}: spatial {}x{} exceeds {} MACs",
+                self.name, self.mac.spatial_rows, self.mac.spatial_cols, self.mac.total_macs
+            ));
+        }
+        // Energy must increase monotonically outward (physics sanity).
+        for w in self.levels.windows(2) {
+            if w[0].read_pj_per_bit < w[1].read_pj_per_bit {
+                return Err(format!(
+                    "{}: outer level {} cheaper than inner {}",
+                    self.name, w[0].name, w[1].name
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of on-chip (bounded) levels.
+    pub fn on_chip_levels(&self) -> usize {
+        self.levels.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets;
+    use super::*;
+    use crate::sparsity::reduction::{Direction, ReductionStrategy};
+
+    #[test]
+    fn presets_validate() {
+        for a in presets::all_table2() {
+            a.validate().unwrap_or_else(|e| panic!("{e}"));
+        }
+        presets::scnn().validate().unwrap();
+        presets::dstc_validation().validate().unwrap();
+    }
+
+    #[test]
+    fn table2_matches_paper() {
+        let archs = presets::all_table2();
+        assert_eq!(archs.len(), 4);
+        // MAC counts from Table II (scaled 16x).
+        assert_eq!(archs[0].mac.total_macs, 2688);
+        assert_eq!(archs[1].mac.total_macs, 2688);
+        assert_eq!(archs[2].mac.total_macs, 2048);
+        assert_eq!(archs[3].mac.total_macs, 2048);
+        // Native formats.
+        assert_eq!(archs[0].native_format.as_deref(), Some("RLE"));
+        assert_eq!(archs[2].native_format.as_deref(), Some("Bitmap"));
+        // Reduction strategies.
+        assert_eq!(
+            archs[0].reduction,
+            ReductionStrategy::gating(Direction::InputOnly)
+        );
+        assert_eq!(
+            archs[2].reduction,
+            ReductionStrategy::skipping(Direction::Both)
+        );
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut a = presets::arch1();
+        a.levels[1].read_pj_per_bit = 1e9; // inner more expensive than DRAM
+        assert!(a.validate().is_err());
+
+        let mut b = presets::arch1();
+        b.mac.spatial_rows = 10_000;
+        assert!(b.validate().is_err());
+
+        let mut c = presets::arch1();
+        c.levels.truncate(1);
+        assert!(c.validate().is_err());
+    }
+}

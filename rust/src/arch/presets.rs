@@ -1,0 +1,173 @@
+//! Preset accelerator configurations.
+//!
+//! Table II of the paper: Arch 1/2 use the Eyeriss memory hierarchy with
+//! 2688 MACs (168 PEs x 16 scale-up), Arch 3/4 the DSTC hierarchy with
+//! 2048 MACs; all scaled 16x MACs and 4x on-chip memory for LLM inference.
+//! Energy-per-access constants follow the widely-used 45 nm numbers from
+//! the Eyeriss papers (DRAM ~200 pJ / 16-bit word, global buffer ~6 pJ,
+//! local scratchpad ~1 pJ, MAC ~1 pJ), expressed per bit.
+
+use super::{Accelerator, MacArray, MemLevel};
+use crate::sparsity::reduction::{Direction, ReductionStrategy};
+
+const WORD: f64 = 16.0;
+
+fn level(name: &str, kib: u64, read_pj_word: f64, write_pj_word: f64, bw_bits: f64) -> MemLevel {
+    MemLevel {
+        name: name.to_string(),
+        capacity_bits: kib * 1024 * 8,
+        read_pj_per_bit: read_pj_word / WORD,
+        write_pj_per_bit: write_pj_word / WORD,
+        bandwidth_bits_per_cycle: bw_bits,
+    }
+}
+
+/// Eyeriss-style hierarchy scaled 4x on-chip: DRAM -> 432 KiB GLB ->
+/// per-PE scratchpads (aggregated).
+fn eyeriss_hierarchy() -> Vec<MemLevel> {
+    vec![
+        MemLevel::dram("DRAM", 200.0 / WORD, 200.0 / WORD, 64.0),
+        level("GLB", 432, 6.0, 6.0, 512.0),
+        level("SPad", 4 * 168, 1.0, 1.0, 2688.0 * 16.0 * 3.0),
+    ]
+}
+
+/// DSTC-style hierarchy scaled 4x on-chip: DRAM -> 512 KiB L2 ->
+/// 128 KiB operand buffers.
+fn dstc_hierarchy() -> Vec<MemLevel> {
+    vec![
+        MemLevel::dram("DRAM", 200.0 / WORD, 200.0 / WORD, 128.0),
+        level("L2", 512, 8.0, 8.0, 1024.0),
+        level("OpBuf", 128, 1.5, 1.5, 2048.0 * 16.0 * 3.0),
+    ]
+}
+
+/// Table II Arch 1: Eyeriss, Gating I->W, RLE.
+pub fn arch1() -> Accelerator {
+    Accelerator {
+        name: "Arch 1 (Eyeriss, Gating I->W, RLE)".to_string(),
+        mac: MacArray { total_macs: 2688, spatial_rows: 56, spatial_cols: 48, pj_per_mac: 1.0 },
+        levels: eyeriss_hierarchy(),
+        reduction: ReductionStrategy::gating(Direction::InputOnly),
+        data_bits: 16,
+        clock_ghz: 1.0,
+        native_format: Some("RLE".to_string()),
+        codec_area_overhead: 0.05,
+    }
+}
+
+/// Table II Arch 2: Eyeriss, Skipping I->W, RLE.
+pub fn arch2() -> Accelerator {
+    Accelerator {
+        name: "Arch 2 (Eyeriss, Skipping I->W, RLE)".to_string(),
+        reduction: ReductionStrategy::skipping(Direction::InputOnly),
+        ..arch1()
+    }
+}
+
+/// Table II Arch 3: DSTC, Skipping I<->W, Bitmap — the paper's primary
+/// SotA accelerator for the §IV-C format studies.
+pub fn arch3() -> Accelerator {
+    Accelerator {
+        name: "Arch 3 (DSTC, Skipping I<->W, Bitmap)".to_string(),
+        mac: MacArray { total_macs: 2048, spatial_rows: 64, spatial_cols: 32, pj_per_mac: 0.8 },
+        levels: dstc_hierarchy(),
+        reduction: ReductionStrategy::skipping(Direction::Both),
+        data_bits: 16,
+        clock_ghz: 1.2,
+        native_format: Some("Bitmap".to_string()),
+        codec_area_overhead: 0.08,
+    }
+}
+
+/// Table II Arch 4: DSTC, Gating I<->W, Bitmap.
+pub fn arch4() -> Accelerator {
+    Accelerator {
+        name: "Arch 4 (DSTC, Gating I<->W, Bitmap)".to_string(),
+        reduction: ReductionStrategy::gating(Direction::Both),
+        ..arch3()
+    }
+}
+
+/// All four Table II architectures, in order.
+pub fn all_table2() -> Vec<Accelerator> {
+    vec![arch1(), arch2(), arch3(), arch4()]
+}
+
+/// SCNN (ISCA'17) as modeled for the Fig. 8 energy validation: 64 PEs x
+/// 16 MACs, per-PE buffers, skipping on both operands (SCNN computes only
+/// non-zero products via the cartesian-product dataflow).
+pub fn scnn() -> Accelerator {
+    Accelerator {
+        name: "SCNN".to_string(),
+        mac: MacArray { total_macs: 1024, spatial_rows: 32, spatial_cols: 32, pj_per_mac: 1.0 },
+        levels: vec![
+            MemLevel::dram("DRAM", 200.0 / WORD, 200.0 / WORD, 64.0),
+            level("GLB", 1024, 6.0, 6.0, 512.0),
+            level("PEBuf", 10 * 64, 1.0, 1.0, 1024.0 * 16.0 * 3.0),
+        ],
+        reduction: ReductionStrategy::skipping(Direction::Both),
+        data_bits: 16,
+        clock_ghz: 1.0,
+        native_format: Some("RLE".to_string()),
+        codec_area_overhead: 0.0765, // SCNN reports ~7.65% for sparse logic
+    }
+}
+
+/// DSTC at its published scale (not the Table II 16x LLM scale-up), used
+/// for the Fig. 9 latency validation.
+pub fn dstc_validation() -> Accelerator {
+    Accelerator {
+        name: "DSTC (validation)".to_string(),
+        mac: MacArray { total_macs: 512, spatial_rows: 32, spatial_cols: 16, pj_per_mac: 0.8 },
+        levels: vec![
+            // GPU-class HBM feeding a 512-MAC tensor-core slice: the
+            // compute/memory crossover lands near d ~ 0.55, matching the
+            // published latency curve's knee.
+            MemLevel::dram("DRAM", 200.0 / WORD, 200.0 / WORD, 256.0),
+            level("L2", 128, 8.0, 8.0, 2048.0),
+            level("OpBuf", 32, 1.5, 1.5, 512.0 * 16.0 * 3.0),
+        ],
+        reduction: ReductionStrategy::skipping(Direction::Both),
+        data_bits: 16,
+        clock_ghz: 1.2,
+        native_format: Some("Bitmap".to_string()),
+        codec_area_overhead: 0.08,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hierarchy_shapes() {
+        assert_eq!(arch1().levels.len(), 3);
+        assert_eq!(arch3().levels.len(), 3);
+        assert_eq!(arch1().on_chip_levels(), 2);
+    }
+
+    #[test]
+    fn arch2_differs_from_arch1_only_in_reduction() {
+        let (a1, a2) = (arch1(), arch2());
+        assert_eq!(a1.mac.total_macs, a2.mac.total_macs);
+        assert_ne!(a1.reduction, a2.reduction);
+    }
+
+    #[test]
+    fn dram_is_most_expensive() {
+        for a in all_table2() {
+            let dram = &a.levels[0];
+            for l in &a.levels[1..] {
+                assert!(dram.read_pj_per_bit > l.read_pj_per_bit);
+            }
+        }
+    }
+
+    #[test]
+    fn spatial_fits_array() {
+        for a in all_table2() {
+            assert!(a.mac.spatial_rows * a.mac.spatial_cols <= a.mac.total_macs);
+        }
+    }
+}

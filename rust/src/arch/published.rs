@@ -1,0 +1,98 @@
+//! Reference series for the validation experiments (Figs. 8–9).
+//!
+//! **Substitution note (DESIGN.md §5):** the paper validates against
+//! numbers published in the SCNN (ISCA'17) and DSTC (IEEE TC'24) papers.
+//! Those exact series are not redistributable data files; the constants
+//! below are *approximate plot reconstructions* with the qualitative
+//! shape of the published results (energy decreasing with sparsity,
+//! dual-side skipping compounding, bandwidth-bound tails), clearly
+//! labeled as such.  The validation benches report mean relative error of
+//! our model against these series exactly as the paper does against the
+//! published data.
+
+/// One SCNN energy validation point: density pair and reported relative
+/// energy (normalized to the dense baseline = 1.0).
+#[derive(Clone, Copy, Debug)]
+pub struct ScnnEnergyPoint {
+    pub layer: &'static str,
+    pub act_density: f64,
+    pub wgt_density: f64,
+    /// Sparse activations only.
+    pub sa: f64,
+    /// Sparse weights only.
+    pub sw: f64,
+    /// Both sparse.
+    pub sa_sw: f64,
+}
+
+/// Reconstructed SCNN relative-energy series across representative conv
+/// layers (GoogLeNet / VGG-style operating points from the SCNN paper).
+///
+/// Calibration note: the values sit in the physically-plausible band for
+/// an accelerator that skips zero products but keeps partial sums dense
+/// (SCNN's published savings at moderate conv sparsity are well under the
+/// d_a*d_w ideal).  Because they are plot reconstructions rather than the
+/// unavailable raw data, the MRE the validation bench reports against
+/// them demonstrates the *methodology* of Fig. 8, not an independent
+/// silicon-accuracy claim — see DESIGN.md §5.
+pub const SCNN_ENERGY: [ScnnEnergyPoint; 5] = [
+    ScnnEnergyPoint { layer: "conv_a", act_density: 0.65, wgt_density: 0.60, sa: 0.84, sw: 0.82, sa_sw: 0.74 },
+    ScnnEnergyPoint { layer: "conv_b", act_density: 0.55, wgt_density: 0.45, sa: 0.79, sw: 0.73, sa_sw: 0.62 },
+    ScnnEnergyPoint { layer: "conv_c", act_density: 0.45, wgt_density: 0.35, sa: 0.67, sw: 0.65, sa_sw: 0.50 },
+    ScnnEnergyPoint { layer: "conv_d", act_density: 0.35, wgt_density: 0.30, sa: 0.57, sw: 0.62, sa_sw: 0.44 },
+    ScnnEnergyPoint { layer: "conv_e", act_density: 0.30, wgt_density: 0.25, sa: 0.53, sw: 0.56, sa_sw: 0.39 },
+];
+
+/// One DSTC latency validation point for the 4096x4096 MatMul of Fig. 9:
+/// density pair (activation, weight) and reported latency normalized to
+/// the dense run = 1.0.
+#[derive(Clone, Copy, Debug)]
+pub struct DstcLatencyPoint {
+    pub act_density: f64,
+    pub wgt_density: f64,
+    pub latency_rel: f64,
+}
+
+/// Reconstructed DSTC relative-latency series at the sparsity levels
+/// common in LLaMA2-7B (paper §IV-B).  Dual-side skipping approaches
+/// `d_a * d_w` at high sparsity but saturates toward a ~12% floor of
+/// scheduling/bandwidth overhead at low sparsity.
+pub const DSTC_LATENCY: [DstcLatencyPoint; 6] = [
+    DstcLatencyPoint { act_density: 1.00, wgt_density: 1.00, latency_rel: 1.00 },
+    DstcLatencyPoint { act_density: 0.90, wgt_density: 0.90, latency_rel: 0.83 },
+    DstcLatencyPoint { act_density: 0.75, wgt_density: 0.75, latency_rel: 0.59 },
+    DstcLatencyPoint { act_density: 0.60, wgt_density: 0.60, latency_rel: 0.40 },
+    DstcLatencyPoint { act_density: 0.50, wgt_density: 0.50, latency_rel: 0.315 },
+    DstcLatencyPoint { act_density: 0.35, wgt_density: 0.35, latency_rel: 0.21 },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scnn_series_is_physical() {
+        for p in &SCNN_ENERGY {
+            // Combined sparsity must beat single-side; all below dense.
+            assert!(p.sa_sw < p.sa && p.sa_sw < p.sw, "{}", p.layer);
+            assert!(p.sa < 1.0 && p.sw < 1.0);
+            // Denser layers cost more.
+            assert!((0.0..=1.0).contains(&p.act_density));
+        }
+        // Monotone: energy falls as density falls.
+        for w in SCNN_ENERGY.windows(2) {
+            assert!(w[1].sa_sw < w[0].sa_sw);
+        }
+    }
+
+    #[test]
+    fn dstc_series_is_physical() {
+        for w in DSTC_LATENCY.windows(2) {
+            assert!(w[1].latency_rel < w[0].latency_rel);
+            // Latency never beats the ideal d_a*d_w bound by more than it should:
+            let ideal = w[1].act_density * w[1].wgt_density;
+            assert!(w[1].latency_rel >= ideal * 0.95, "point {:?}", w[1]);
+        }
+        assert_eq!(DSTC_LATENCY[0].latency_rel, 1.0);
+    }
+}

@@ -1,0 +1,282 @@
+//! DiMO-Sparse-style iterative optimizer (DATE'24) for the §IV-D CNN
+//! comparison.
+//!
+//! DiMO-Sparse performs differentiable/iterative optimization of sparse
+//! CNN dataflow with *preset* compression formats.  We reproduce the
+//! workflow shape: multi-restart coordinate descent over tiling factors
+//! with full sparse re-evaluation per move, exhaustive order expansion
+//! per accepted point, and no compression-aware pruning.  Like the
+//! original it is limited to CNN workloads (single-batch im2col MatMuls)
+//! and fixed formats.
+
+use crate::arch::Accelerator;
+use crate::cost::{evaluate, mapping_is_legal, CompressionRatios, Metric};
+use crate::dataflow::mapper::{all_orders, spatial_candidates};
+use crate::dataflow::{LoopDim, Mapping, ProblemDims, TileLevel};
+use crate::engine::ScoredFormat;
+use crate::search::progressive::native_format;
+use crate::search::{OpDesign, WorkloadResult};
+use crate::util::prng::Pcg32;
+use crate::workload::{MatMulOp, Workload};
+use std::time::Instant;
+
+/// DiMO-like optimizer parameters.
+#[derive(Clone, Debug)]
+pub struct DimoConfig {
+    pub restarts: usize,
+    pub max_sweeps: usize,
+    pub seed: u64,
+}
+
+impl Default for DimoConfig {
+    fn default() -> Self {
+        DimoConfig { restarts: 6, max_sweeps: 24, seed: 0xD1_40 }
+    }
+}
+
+/// Check whether a workload looks like a CNN lowered to im2col MatMuls —
+/// DiMO-Sparse does not generalize beyond CNNs (§IV-D).
+pub fn is_cnn_workload(w: &Workload) -> bool {
+    w.ops.iter().all(|o| o.count == 1)
+}
+
+fn random_mapping(
+    p: &ProblemDims,
+    nlevels: usize,
+    arch: &Accelerator,
+    rng: &mut Pcg32,
+) -> Mapping {
+    let spatials =
+        spatial_candidates(p, arch.mac.spatial_rows, arch.mac.spatial_cols, 0.0);
+    let spatial = *rng.choose(&spatials);
+    let mut levels: Vec<TileLevel> = (0..nlevels)
+        .map(|_| TileLevel {
+            factors: [1, 1, 1],
+            order: [LoopDim::M, LoopDim::N, LoopDim::K],
+        })
+        .collect();
+    for (di, d) in LoopDim::ALL.iter().enumerate() {
+        let mut rem = p.get(*d) / spatial.factor(*d);
+        // Random divisor chain outermost-first.
+        for lvl in 0..nlevels - 1 {
+            let divs = crate::util::mathx::divisors(rem);
+            let pick = *rng.choose(&divs);
+            levels[lvl].factors[di] = pick;
+            rem /= pick;
+        }
+        levels[nlevels - 1].factors[di] = rem;
+    }
+    Mapping { levels, spatial }
+}
+
+/// One coordinate-descent move: shift a factor between two levels.
+fn neighbors(m: &Mapping) -> Vec<Mapping> {
+    let mut out = Vec::new();
+    let n = m.levels.len();
+    for di in 0..3 {
+        for a in 0..n {
+            for b in 0..n {
+                if a == b {
+                    continue;
+                }
+                let fa = m.levels[a].factors[di];
+                for step in [2u64, 3, 5, 7] {
+                    if fa % step == 0 {
+                        let mut nm = m.clone();
+                        nm.levels[a].factors[di] /= step;
+                        nm.levels[b].factors[di] *= step;
+                        out.push(nm);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Iterative search for one CNN layer with the fixed native format.
+pub fn dimo_op(
+    arch: &Accelerator,
+    op: &MatMulOp,
+    cfg: &DimoConfig,
+    metric: Metric,
+    evals: &mut u64,
+) -> Option<OpDesign> {
+    let p = op.dims;
+    let nlevels = arch.levels.len();
+    let fi = ScoredFormat::score(
+        native_format(arch, p.m, p.n),
+        &op.spec.input,
+        &crate::engine::EngineConfig::default(),
+    );
+    let fw = ScoredFormat::score(
+        native_format(arch, p.n, p.k),
+        &op.spec.weight,
+        &crate::engine::EngineConfig::default(),
+    );
+    let ratios = CompressionRatios {
+        input: fi.cost.ratio().min(1.0),
+        weight: fw.cost.ratio().min(1.0),
+    };
+    let orders = all_orders();
+    let mut rng = Pcg32::new(cfg.seed);
+    let mut best: Option<(Mapping, crate::cost::CostReport, f64)> = None;
+
+    // Full sparse evaluation with exhaustive order expansion — DiMO's
+    // inner objective is evaluated on every candidate move.
+    let mut eval_all_orders =
+        |m: &Mapping, evals: &mut u64| -> Option<(Mapping, crate::cost::CostReport, f64)> {
+            if !mapping_is_legal(arch, m, &CompressionRatios::DENSE) {
+                return None;
+            }
+            let mut local: Option<(Mapping, crate::cost::CostReport, f64)> = None;
+            let mut idx = vec![0usize; nlevels];
+            loop {
+                let mut cand = m.clone();
+                for (i, &oi) in idx.iter().enumerate() {
+                    cand.levels[i].order = orders[oi];
+                }
+                let r = evaluate(arch, &p, &cand, &op.spec, &arch.reduction, &ratios);
+                *evals += 1;
+                let v = metric.of(&r);
+                if local.as_ref().map(|(_, _, b)| v < *b).unwrap_or(true) {
+                    local = Some((cand, r, v));
+                }
+                let mut i = nlevels;
+                let mut done = true;
+                while i > 0 {
+                    i -= 1;
+                    idx[i] += 1;
+                    if idx[i] < orders.len() {
+                        done = false;
+                        break;
+                    }
+                    idx[i] = 0;
+                }
+                if done {
+                    break;
+                }
+            }
+            local
+        };
+
+    for _ in 0..cfg.restarts {
+        let mut cur = random_mapping(&p, nlevels, arch, &mut rng);
+        let mut cur_val = match eval_all_orders(&cur, evals) {
+            Some((m, r, v)) => {
+                if best.as_ref().map(|(_, _, b)| v < *b).unwrap_or(true) {
+                    best = Some((m.clone(), r, v));
+                }
+                v
+            }
+            None => f64::INFINITY,
+        };
+        for _ in 0..cfg.max_sweeps {
+            let mut improved = false;
+            for nb in neighbors(&cur) {
+                if nb.validate(&p).is_err() {
+                    continue;
+                }
+                if let Some((m, r, v)) = eval_all_orders(&nb, evals) {
+                    if v < cur_val {
+                        cur = nb;
+                        cur_val = v;
+                        improved = true;
+                        if best.as_ref().map(|(_, _, b)| v < *b).unwrap_or(true) {
+                            best = Some((m, r, v));
+                        }
+                    }
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+    }
+
+    best.map(|(mapping, report, v)| OpDesign {
+        op_name: op.name.clone(),
+        input_format: fi.format.clone(),
+        weight_format: fw.format.clone(),
+        mapping,
+        report,
+        metric_value: v,
+        count: op.count,
+    })
+}
+
+/// DiMO-like search across a CNN workload.  Panics on non-CNN workloads
+/// (the original tool does not support them — §IV-D).
+pub fn dimo_workload(
+    arch: &Accelerator,
+    w: &Workload,
+    cfg: &DimoConfig,
+    metric: Metric,
+) -> WorkloadResult {
+    assert!(is_cnn_workload(w), "DiMO-Sparse is limited to CNNs; got {}", w.name);
+    let start = Instant::now();
+    let mut evals = 0u64;
+    let mut designs = Vec::new();
+    for op in &w.ops {
+        let d = dimo_op(arch, op, cfg, metric, &mut evals)
+            .unwrap_or_else(|| panic!("dimo found no design for {}", op.name));
+        designs.push(d);
+    }
+    WorkloadResult {
+        workload: w.name.clone(),
+        designs,
+        elapsed: start.elapsed(),
+        evaluations: evals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::sparsity::SparsitySpec;
+
+    fn tiny_cnn() -> Workload {
+        Workload {
+            name: "tiny-cnn".into(),
+            ops: vec![MatMulOp {
+                name: "conv".into(),
+                dims: ProblemDims::new(64, 72, 64),
+                spec: SparsitySpec::unstructured(0.5, 0.4),
+                count: 1,
+            }],
+        }
+    }
+
+    fn quick() -> DimoConfig {
+        DimoConfig { restarts: 2, max_sweeps: 4, seed: 7 }
+    }
+
+    #[test]
+    fn dimo_finds_a_design() {
+        let arch = presets::arch1();
+        let r = dimo_workload(&arch, &tiny_cnn(), &quick(), Metric::Energy);
+        assert_eq!(r.designs.len(), 1);
+        assert!(r.total_energy_pj() > 0.0);
+        assert!(r.evaluations > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "limited to CNNs")]
+    fn dimo_rejects_llms() {
+        let arch = presets::arch1();
+        let w = crate::workload::llm::opt_125m(crate::workload::llm::Phase {
+            prefill_tokens: 16,
+            decode_tokens: 0,
+        });
+        dimo_workload(&arch, &w, &quick(), Metric::Energy);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let arch = presets::arch1();
+        let a = dimo_workload(&arch, &tiny_cnn(), &quick(), Metric::Energy);
+        let b = dimo_workload(&arch, &tiny_cnn(), &quick(), Metric::Energy);
+        assert_eq!(a.total_energy_pj(), b.total_energy_pj());
+    }
+}

@@ -1,0 +1,10 @@
+//! Baseline DSE workflows re-implemented on the same cost model, for the
+//! exploration-efficiency comparisons of §IV-D (Table I and the
+//! DiMO-Sparse CNN study).  See DESIGN.md §5: the originals are an
+//! external C++ artifact (Sparseloop) and a closed-source tool
+//! (DiMO-Sparse); re-implementing their *workflows* against our cost
+//! model isolates exactly the variable the paper measures — workflow
+//! efficiency — at the price of not reproducing absolute speedup values.
+
+pub mod dimo_like;
+pub mod sparseloop_like;

@@ -1,0 +1,9 @@
+//! Configuration system: a hand-rolled TOML-subset parser ([`toml`])
+//! plus typed loaders turning config files into [`Accelerator`]s,
+//! [`Workload`]s and search settings ([`typed`]).
+
+pub mod toml;
+pub mod typed;
+
+pub use toml::TomlDoc;
+pub use typed::{load_run_config, RunConfig};

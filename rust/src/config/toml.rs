@@ -1,0 +1,263 @@
+//! Minimal TOML-subset parser (serde/toml crates unavailable offline).
+//!
+//! Supported grammar — the subset our config files use:
+//! - `[section]` and `[section.sub]` headers
+//! - `key = "string" | number | true/false | [array of scalars]`
+//! - `#` comments, blank lines
+//!
+//! Unsupported (rejected with an error): multi-line strings, inline
+//! tables, arrays of tables, datetimes.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as u64)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: section path -> key -> value.  The implicit root
+/// section is "".
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new();
+        doc.sections.entry(current.clone()).or_default();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: ln + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated section header"))?
+                    .trim();
+                if name.is_empty() || name.starts_with('[') {
+                    return Err(err("arrays of tables are not supported"));
+                }
+                current = name.to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err("expected 'key = value'"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+            doc.sections
+                .get_mut(&current)
+                .unwrap()
+                .insert(key.to_string(), val);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn section(&self, name: &str) -> Option<&BTreeMap<String, TomlValue>> {
+        self.sections.get(name)
+    }
+
+    /// Sections whose path starts with `prefix.` (e.g. all `[op.X]`).
+    pub fn sections_under(&self, prefix: &str) -> Vec<(&str, &BTreeMap<String, TomlValue>)> {
+        let pat = format!("{prefix}.");
+        self.sections
+            .iter()
+            .filter(|(k, _)| k.starts_with(&pat))
+            .map(|(k, v)| (k.as_str(), v))
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Track string state so '#' inside quotes survives.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.find('"').ok_or("unterminated string")?;
+        if !rest[end + 1..].trim().is_empty() {
+            return Err("trailing characters after string".into());
+        }
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    let cleaned = s.replace('_', "");
+    cleaned
+        .parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+name = "snipsnap"
+[search]
+metric = "energy"   # trailing comment
+top_k = 4
+gamma = 1.05
+fixed = false
+dims = [2048, 4096, 4_096]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("snipsnap"));
+        assert_eq!(doc.get("search", "top_k").unwrap().as_u64(), Some(4));
+        assert_eq!(doc.get("search", "gamma").unwrap().as_f64(), Some(1.05));
+        assert_eq!(doc.get("search", "fixed").unwrap().as_bool(), Some(false));
+        let dims: Vec<u64> = doc
+            .get("search", "dims")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_u64().unwrap())
+            .collect();
+        assert_eq!(dims, vec![2048, 4096, 4096]);
+    }
+
+    #[test]
+    fn nested_sections() {
+        let doc = TomlDoc::parse("[op.fc1]\nm = 2\n[op.fc2]\nm = 3\n").unwrap();
+        let subs = doc.sections_under("op");
+        assert_eq!(subs.len(), 2);
+        assert_eq!(doc.get("op.fc1", "m").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn error_reporting_with_line_numbers() {
+        let e = TomlDoc::parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = TomlDoc::parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        assert!(TomlDoc::parse("x = [1, 2\n").is_err());
+        assert!(TomlDoc::parse("x = \"abc\ndef\"\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_survives() {
+        let doc = TomlDoc::parse("x = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn u64_rejects_negative_and_fractional() {
+        let doc = TomlDoc::parse("a = -1\nb = 1.5\nc = 3\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_u64(), None);
+        assert_eq!(doc.get("", "b").unwrap().as_u64(), None);
+        assert_eq!(doc.get("", "c").unwrap().as_u64(), Some(3));
+    }
+}

@@ -1,0 +1,356 @@
+//! Typed configuration loaders: turn a [`TomlDoc`] into accelerators,
+//! workloads and search settings.
+//!
+//! A run config looks like:
+//!
+//! ```toml
+//! [run]
+//! arch = "arch3"            # preset name, or define [arch] inline
+//! workload = "llama2-7b"    # preset name, or define [op.*] tables
+//! metric = "energy"         # energy | memory-energy | latency | edp
+//! mode = "search"           # search | fixed
+//!
+//! [search]
+//! gamma = 1.05
+//! top_k = 4
+//! max_depth = 4
+//! max_mappings = 40000
+//!
+//! # Optional custom workload:
+//! [op.fc1]
+//! m = 2048
+//! n = 4096
+//! k = 16384
+//! act_density = 0.4
+//! wgt_density = 0.5
+//! count = 32
+//!
+//! # Optional custom accelerator:
+//! [arch]
+//! macs = 2048
+//! spatial_rows = 64
+//! spatial_cols = 32
+//! data_bits = 16
+//! clock_ghz = 1.2
+//! reduction = "skipping-both"
+//! native_format = "Bitmap"
+//! # levels: name, capacity KiB (0 = unbounded), read pJ/word, write
+//! # pJ/word, bandwidth bits/cycle
+//! level0 = ["DRAM", 0, 200.0, 200.0, 128]
+//! level1 = ["L2", 512, 8.0, 8.0, 1024]
+//! level2 = ["OpBuf", 128, 1.5, 1.5, 8192]
+//! ```
+
+use super::toml::{TomlDoc, TomlValue};
+use crate::arch::{presets, Accelerator, MacArray, MemLevel};
+use crate::cost::Metric;
+use crate::dataflow::ProblemDims;
+use crate::search::{FormatMode, SearchConfig};
+use crate::sparsity::reduction::{Direction, ReductionStrategy};
+use crate::sparsity::SparsitySpec;
+use crate::workload::{llm, MatMulOp, Workload};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A fully-resolved run configuration.
+pub struct RunConfig {
+    pub arch: Accelerator,
+    pub workload: Workload,
+    pub search: SearchConfig,
+}
+
+/// Resolve an accelerator preset by name.
+pub fn arch_by_name(name: &str) -> Result<Accelerator> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "arch1" => presets::arch1(),
+        "arch2" => presets::arch2(),
+        "arch3" => presets::arch3(),
+        "arch4" => presets::arch4(),
+        "scnn" => presets::scnn(),
+        "dstc" => presets::dstc_validation(),
+        other => bail!("unknown arch preset '{other}' (arch1-4, scnn, dstc)"),
+    })
+}
+
+/// Resolve a workload preset by name.
+pub fn workload_by_name(name: &str) -> Result<Workload> {
+    let ph = llm::Phase::default_prefill_decode();
+    let small = llm::Phase { prefill_tokens: 256, decode_tokens: 32 };
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "llama2-7b" => llm::llama2_7b(ph),
+        "llama2-13b" => llm::llama2_13b(ph),
+        "opt-125m" => llm::opt_125m(small),
+        "opt-6.7b" => llm::opt_6_7b(ph),
+        "opt-13b" => llm::opt_13b(ph),
+        "opt-30b" => llm::opt_30b(ph),
+        "bert-base" => llm::bert_base(256),
+        "alexnet" => crate::workload::cnn::alexnet(),
+        "vgg-16" | "vgg16" => crate::workload::cnn::vgg16(),
+        "resnet-18" | "resnet18" => crate::workload::cnn::resnet18(),
+        other => bail!("unknown workload preset '{other}'"),
+    })
+}
+
+pub fn metric_by_name(name: &str) -> Result<Metric> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "energy" => Metric::Energy,
+        "memory-energy" | "memory_energy" => Metric::MemoryEnergy,
+        "latency" => Metric::Latency,
+        "edp" => Metric::Edp,
+        other => bail!("unknown metric '{other}'"),
+    })
+}
+
+fn reduction_by_name(name: &str) -> Result<ReductionStrategy> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "none" => ReductionStrategy::NONE,
+        "gating-input" => ReductionStrategy::gating(Direction::InputOnly),
+        "gating-weight" => ReductionStrategy::gating(Direction::WeightOnly),
+        "gating-both" => ReductionStrategy::gating(Direction::Both),
+        "skipping-input" => ReductionStrategy::skipping(Direction::InputOnly),
+        "skipping-weight" => ReductionStrategy::skipping(Direction::WeightOnly),
+        "skipping-both" => ReductionStrategy::skipping(Direction::Both),
+        other => bail!("unknown reduction '{other}'"),
+    })
+}
+
+fn parse_level(v: &TomlValue) -> Result<MemLevel> {
+    let a = v.as_arr().ok_or_else(|| anyhow!("level must be an array"))?;
+    if a.len() != 5 {
+        bail!("level needs [name, KiB, read pJ/word, write pJ/word, bw]");
+    }
+    let name = a[0].as_str().ok_or_else(|| anyhow!("level name"))?;
+    let kib = a[1].as_f64().ok_or_else(|| anyhow!("capacity"))?;
+    let read = a[2].as_f64().ok_or_else(|| anyhow!("read pJ"))?;
+    let write = a[3].as_f64().ok_or_else(|| anyhow!("write pJ"))?;
+    let bw = a[4].as_f64().ok_or_else(|| anyhow!("bandwidth"))?;
+    let word = 16.0;
+    Ok(MemLevel {
+        name: name.to_string(),
+        capacity_bits: if kib == 0.0 { u64::MAX } else { (kib * 1024.0 * 8.0) as u64 },
+        read_pj_per_bit: read / word,
+        write_pj_per_bit: write / word,
+        bandwidth_bits_per_cycle: bw,
+    })
+}
+
+fn parse_inline_arch(doc: &TomlDoc) -> Result<Option<Accelerator>> {
+    let Some(sec) = doc.section("arch") else { return Ok(None) };
+    if sec.is_empty() {
+        return Ok(None);
+    }
+    let get_u = |k: &str| -> Result<u64> {
+        sec.get(k)
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow!("[arch] missing integer '{k}'"))
+    };
+    let mut levels = Vec::new();
+    for i in 0.. {
+        match sec.get(&format!("level{i}")) {
+            Some(v) => levels.push(parse_level(v)?),
+            None => break,
+        }
+    }
+    if levels.is_empty() {
+        bail!("[arch] needs level0..levelN");
+    }
+    let arch = Accelerator {
+        name: sec
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("custom")
+            .to_string(),
+        mac: MacArray {
+            total_macs: get_u("macs")?,
+            spatial_rows: get_u("spatial_rows")?,
+            spatial_cols: get_u("spatial_cols")?,
+            pj_per_mac: sec.get("pj_per_mac").and_then(|v| v.as_f64()).unwrap_or(1.0),
+        },
+        levels,
+        reduction: reduction_by_name(
+            sec.get("reduction")
+                .and_then(|v| v.as_str())
+                .unwrap_or("skipping-both"),
+        )?,
+        data_bits: get_u("data_bits").unwrap_or(16) as u32,
+        clock_ghz: sec.get("clock_ghz").and_then(|v| v.as_f64()).unwrap_or(1.0),
+        native_format: sec
+            .get("native_format")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string()),
+        codec_area_overhead: sec
+            .get("codec_area_overhead")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.05),
+    };
+    arch.validate().map_err(|e| anyhow!(e))?;
+    Ok(Some(arch))
+}
+
+fn parse_inline_workload(doc: &TomlDoc) -> Result<Option<Workload>> {
+    let subs = doc.sections_under("op");
+    if subs.is_empty() {
+        return Ok(None);
+    }
+    let mut ops = Vec::new();
+    for (name, sec) in subs {
+        let get_u = |k: &str| -> Result<u64> {
+            sec.get(k)
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("[{name}] missing integer '{k}'"))
+        };
+        let get_f = |k: &str, default: f64| -> f64 {
+            sec.get(k).and_then(|v| v.as_f64()).unwrap_or(default)
+        };
+        ops.push(MatMulOp {
+            name: name.trim_start_matches("op.").to_string(),
+            dims: ProblemDims::new(get_u("m")?, get_u("n")?, get_u("k")?),
+            spec: SparsitySpec::unstructured(
+                get_f("act_density", 1.0),
+                get_f("wgt_density", 1.0),
+            ),
+            count: sec.get("count").and_then(|v| v.as_u64()).unwrap_or(1),
+        });
+    }
+    Ok(Some(Workload { name: "custom".to_string(), ops }))
+}
+
+/// Load a complete run configuration from TOML text.
+pub fn load_run_config(src: &str) -> Result<RunConfig> {
+    let doc = TomlDoc::parse(src).map_err(|e| anyhow!("{e}"))?;
+    let run = doc.section("run").cloned().unwrap_or_default();
+
+    let arch = match parse_inline_arch(&doc)? {
+        Some(a) => a,
+        None => arch_by_name(
+            run.get("arch")
+                .and_then(|v| v.as_str())
+                .context("[run] arch missing (or provide [arch])")?,
+        )?,
+    };
+    let workload = match parse_inline_workload(&doc)? {
+        Some(w) => w,
+        None => workload_by_name(
+            run.get("workload")
+                .and_then(|v| v.as_str())
+                .context("[run] workload missing (or provide [op.*])")?,
+        )?,
+    };
+
+    let mut search = SearchConfig::default();
+    if let Some(m) = run.get("metric").and_then(|v| v.as_str()) {
+        search.metric = metric_by_name(m)?;
+    }
+    if let Some(m) = run.get("mode").and_then(|v| v.as_str()) {
+        search.mode = match m {
+            "search" => FormatMode::Search,
+            "fixed" => FormatMode::Fixed,
+            other => bail!("unknown mode '{other}'"),
+        };
+    }
+    if let Some(sec) = doc.section("search") {
+        if let Some(g) = sec.get("gamma").and_then(|v| v.as_f64()) {
+            search.engine.gamma = g;
+        }
+        if let Some(k) = sec.get("top_k").and_then(|v| v.as_u64()) {
+            search.engine.top_k = k as usize;
+        }
+        if let Some(d) = sec.get("max_depth").and_then(|v| v.as_u64()) {
+            search.engine.space.max_depth = d as usize;
+        }
+        if let Some(m) = sec.get("max_mappings").and_then(|v| v.as_u64()) {
+            search.mapper.max_candidates = m as usize;
+        }
+        if let Some(p) = sec.get("pairs_to_map").and_then(|v| v.as_u64()) {
+            search.pairs_to_map = p as usize;
+        }
+    }
+    search.engine.data_bits = arch.data_bits;
+    Ok(RunConfig { arch, workload, search })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        assert!(arch_by_name("arch3").is_ok());
+        assert!(arch_by_name("bogus").is_err());
+        assert!(workload_by_name("llama2-7b").is_ok());
+        assert!(workload_by_name("resnet-18").is_ok());
+        assert!(workload_by_name("gpt-5").is_err());
+        assert!(metric_by_name("edp").is_ok());
+    }
+
+    #[test]
+    fn full_preset_config() {
+        let cfg = load_run_config(
+            r#"
+[run]
+arch = "arch3"
+workload = "opt-125m"
+metric = "memory-energy"
+mode = "fixed"
+[search]
+top_k = 2
+max_mappings = 1000
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.workload.name, "OPT-125M");
+        assert_eq!(cfg.search.metric, Metric::MemoryEnergy);
+        assert_eq!(cfg.search.mode, FormatMode::Fixed);
+        assert_eq!(cfg.search.mapper.max_candidates, 1000);
+    }
+
+    #[test]
+    fn inline_arch_and_workload() {
+        let cfg = load_run_config(
+            r#"
+[run]
+metric = "energy"
+[arch]
+name = "tiny"
+macs = 64
+spatial_rows = 8
+spatial_cols = 8
+reduction = "skipping-both"
+native_format = "Bitmap"
+level0 = ["DRAM", 0, 200.0, 200.0, 64]
+level1 = ["Buf", 32, 2.0, 2.0, 1024]
+[op.gemm]
+m = 64
+n = 64
+k = 64
+act_density = 0.5
+wgt_density = 0.5
+count = 2
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.arch.name, "tiny");
+        assert_eq!(cfg.arch.levels.len(), 2);
+        assert_eq!(cfg.workload.ops.len(), 1);
+        assert_eq!(cfg.workload.ops[0].count, 2);
+        assert_eq!(cfg.workload.ops[0].name, "gemm");
+    }
+
+    #[test]
+    fn inline_arch_validation_errors_surface() {
+        let r = load_run_config(
+            r#"
+[arch]
+macs = 64
+spatial_rows = 100
+spatial_cols = 100
+level0 = ["DRAM", 0, 200.0, 200.0, 64]
+level1 = ["Buf", 32, 2.0, 2.0, 1024]
+[op.g]
+m = 4
+n = 4
+k = 4
+"#,
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,315 @@
+//! The Evaluator's Cost Model (paper §III-A): energy, latency and EDP of
+//! one MatMul under a mapping, a computation-reduction strategy and
+//! per-operand compression ratios.
+//!
+//! Energy: MAC energy scaled by the reduction strategy's energy fraction,
+//! plus per-boundary transfer energy (read at the source level + write at
+//! the destination) with I/W traffic scaled by their compressed-size
+//! ratios (operands move compressed; decompression happens at the PEs).
+//! Latency: max of compute cycles (skipping shrinks the effective MAC
+//! count) and each boundary's bandwidth-limited cycles — the perfectly
+//! double-buffered roofline.  EDP: product.
+
+use crate::arch::Accelerator;
+use crate::dataflow::{access_counts, LoopDim, Mapping, Operand, ProblemDims};
+use crate::sparsity::{reduction::ReductionStrategy, SparsitySpec};
+
+/// Compressed/dense traffic ratios per operand (outputs move dense).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CompressionRatios {
+    pub input: f64,
+    pub weight: f64,
+}
+
+impl CompressionRatios {
+    pub const DENSE: CompressionRatios = CompressionRatios { input: 1.0, weight: 1.0 };
+
+    pub fn get(&self, op: Operand) -> f64 {
+        match op {
+            Operand::I => self.input,
+            Operand::W => self.weight,
+            Operand::O => 1.0,
+        }
+    }
+}
+
+/// Partial-sum traffic multiplier for the output operand: each fill is a
+/// read-modify-write.
+const PSUM_RW: f64 = 2.0;
+
+/// Full cost breakdown of one evaluated design point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostReport {
+    /// Energy of all MAC operations (pJ).
+    pub mac_energy_pj: f64,
+    /// Per-boundary memory transfer energy (pJ), outermost first.
+    pub mem_energy_pj: Vec<f64>,
+    /// Compute-bound cycles.
+    pub compute_cycles: f64,
+    /// Per-boundary bandwidth-bound cycles, outermost first.
+    pub mem_cycles: Vec<f64>,
+}
+
+impl CostReport {
+    pub fn memory_energy_pj(&self) -> f64 {
+        self.mem_energy_pj.iter().sum()
+    }
+
+    pub fn total_energy_pj(&self) -> f64 {
+        self.mac_energy_pj + self.memory_energy_pj()
+    }
+
+    /// Roofline latency in cycles.
+    pub fn latency_cycles(&self) -> f64 {
+        self.mem_cycles
+            .iter()
+            .fold(self.compute_cycles, |a, &b| a.max(b))
+    }
+
+    pub fn latency_seconds(&self, clock_ghz: f64) -> f64 {
+        self.latency_cycles() / (clock_ghz * 1e9)
+    }
+
+    /// Energy-delay product (pJ x cycles).
+    pub fn edp(&self) -> f64 {
+        self.total_energy_pj() * self.latency_cycles()
+    }
+}
+
+/// Which metric the search optimizes (paper: "the prioritized performance
+/// metric ... energy consumption, latency, and energy-delay-product").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Metric {
+    Energy,
+    MemoryEnergy,
+    Latency,
+    Edp,
+}
+
+impl Metric {
+    pub fn of(&self, r: &CostReport) -> f64 {
+        match self {
+            Metric::Energy => r.total_energy_pj(),
+            Metric::MemoryEnergy => r.memory_energy_pj(),
+            Metric::Latency => r.latency_cycles(),
+            Metric::Edp => r.edp(),
+        }
+    }
+}
+
+/// Compressed on-chip footprint (bits) of the tile inside mapping level
+/// `b` — the §III-D2 compression-aware legality quantity.
+pub fn tile_footprint_bits(
+    mapping: &Mapping,
+    b: usize,
+    data_bits: u32,
+    ratios: &CompressionRatios,
+) -> f64 {
+    let (tm, tn, tk) = mapping.tile_at(b);
+    Operand::ALL
+        .iter()
+        .map(|op| op.footprint(tm, tn, tk) as f64 * data_bits as f64 * ratios.get(*op))
+        .sum()
+}
+
+/// Is `mapping` legal on `arch` given compressed operand sizes?  Double
+/// buffering reserves half of each on-chip level.
+pub fn mapping_is_legal(
+    arch: &Accelerator,
+    mapping: &Mapping,
+    ratios: &CompressionRatios,
+) -> bool {
+    debug_assert_eq!(mapping.levels.len(), arch.levels.len());
+    for b in 0..mapping.levels.len() - 1 {
+        // Tile inside level b is buffered at level b+1 (on-chip).
+        let cap = arch.levels[b + 1].capacity_bits as f64 / 2.0;
+        if tile_footprint_bits(mapping, b, arch.data_bits, ratios) > cap {
+            return false;
+        }
+    }
+    // Spatial unrolling must fit the array axes.
+    mapping.spatial.unroll_rows <= arch.mac.spatial_rows
+        && mapping.spatial.unroll_cols <= arch.mac.spatial_cols
+}
+
+/// Evaluate one design point.
+pub fn evaluate(
+    arch: &Accelerator,
+    p: &ProblemDims,
+    mapping: &Mapping,
+    spec: &SparsitySpec,
+    reduction: &ReductionStrategy,
+    ratios: &CompressionRatios,
+) -> CostReport {
+    let ac = access_counts(mapping, p);
+    let data_bits = arch.data_bits as f64;
+
+    // --- MAC compute --------------------------------------------------
+    let peak_macs = p.macs() as f64;
+    let mac_energy_pj = peak_macs * reduction.energy_fraction(spec) * arch.mac.pj_per_mac;
+    let spatial = (mapping.spatial.factor(LoopDim::M)
+        * mapping.spatial.factor(LoopDim::N)
+        * mapping.spatial.factor(LoopDim::K)) as f64;
+    let compute_cycles = peak_macs * reduction.cycle_fraction(spec) / spatial;
+
+    // --- Memory boundaries ---------------------------------------------
+    let nb = mapping.levels.len();
+    let mut mem_energy_pj = Vec::with_capacity(nb);
+    let mut mem_cycles = Vec::with_capacity(nb);
+    for b in 0..nb {
+        let mut bits = 0.0;
+        for (oi, op) in Operand::ALL.iter().enumerate() {
+            let psum = if *op == Operand::O { PSUM_RW } else { 1.0 };
+            bits += ac.fills[b][oi] * data_bits * ratios.get(*op) * psum;
+        }
+        let read_pj = arch.levels[b].read_pj_per_bit;
+        let write_pj = if b + 1 < arch.levels.len() {
+            arch.levels[b + 1].write_pj_per_bit
+        } else {
+            0.0 // delivery into the MAC datapath
+        };
+        mem_energy_pj.push(bits * (read_pj + write_pj));
+        mem_cycles.push(bits / arch.levels[b].bandwidth_bits_per_cycle);
+    }
+
+    CostReport { mac_energy_pj, mem_energy_pj, compute_cycles, mem_cycles }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::dataflow::{Spatial, TileLevel};
+    use crate::sparsity::SparsitySpec;
+
+    fn toy_setup() -> (Accelerator, ProblemDims, Mapping) {
+        let arch = presets::arch3();
+        let p = ProblemDims::new(64, 64, 64);
+        let mapping = Mapping {
+            levels: vec![
+                TileLevel { factors: [4, 4, 4], order: [LoopDim::M, LoopDim::N, LoopDim::K] },
+                TileLevel { factors: [4, 4, 4], order: [LoopDim::M, LoopDim::N, LoopDim::K] },
+                TileLevel { factors: [1, 4, 1], order: [LoopDim::N, LoopDim::M, LoopDim::K] },
+            ],
+            spatial: Spatial {
+                dim_rows: LoopDim::M,
+                unroll_rows: 4,
+                dim_cols: LoopDim::K,
+                unroll_cols: 4,
+            },
+        };
+        mapping.validate(&p).unwrap();
+        (arch, p, mapping)
+    }
+
+    #[test]
+    fn dense_evaluation_sane() {
+        let (arch, p, mapping) = toy_setup();
+        let r = evaluate(
+            &arch,
+            &p,
+            &mapping,
+            &SparsitySpec::dense(),
+            &ReductionStrategy::NONE,
+            &CompressionRatios::DENSE,
+        );
+        assert!(r.total_energy_pj() > 0.0);
+        assert!(r.latency_cycles() > 0.0);
+        // Compute cycles = macs / spatial.
+        assert_eq!(r.compute_cycles, (64u64 * 64 * 64) as f64 / 16.0);
+        // MAC energy = macs * pj.
+        assert_eq!(r.mac_energy_pj, (64u64 * 64 * 64) as f64 * arch.mac.pj_per_mac);
+    }
+
+    #[test]
+    fn skipping_reduces_compute_cycles_and_energy() {
+        let (arch, p, mapping) = toy_setup();
+        let spec = SparsitySpec::unstructured(0.5, 0.5);
+        let dense = evaluate(
+            &arch, &p, &mapping, &spec,
+            &ReductionStrategy::NONE, &CompressionRatios::DENSE,
+        );
+        let skip = evaluate(
+            &arch, &p, &mapping, &spec,
+            &arch.reduction, // Arch3: skipping both
+            &CompressionRatios::DENSE,
+        );
+        assert!(skip.compute_cycles < dense.compute_cycles);
+        assert!((skip.compute_cycles / dense.compute_cycles - 0.25).abs() < 1e-9);
+        assert!(skip.mac_energy_pj < dense.mac_energy_pj);
+        // Memory traffic unchanged by reduction alone.
+        assert_eq!(skip.mem_energy_pj, dense.mem_energy_pj);
+    }
+
+    #[test]
+    fn compression_reduces_memory_energy_not_mac() {
+        let (arch, p, mapping) = toy_setup();
+        let spec = SparsitySpec::unstructured(0.3, 0.3);
+        let dense = evaluate(
+            &arch, &p, &mapping, &spec,
+            &arch.reduction, &CompressionRatios::DENSE,
+        );
+        let comp = evaluate(
+            &arch, &p, &mapping, &spec,
+            &arch.reduction,
+            &CompressionRatios { input: 0.4, weight: 0.4 },
+        );
+        assert!(comp.memory_energy_pj() < dense.memory_energy_pj());
+        assert_eq!(comp.mac_energy_pj, dense.mac_energy_pj);
+    }
+
+    #[test]
+    fn legality_rejects_oversized_tiles() {
+        let (arch, _, _) = toy_setup();
+        // Whole 1024^3 problem resident on chip: far beyond any level.
+        let p = ProblemDims::new(1024, 1024, 1024);
+        let mapping = Mapping {
+            levels: vec![
+                TileLevel { factors: [1, 1, 1], order: [LoopDim::M, LoopDim::N, LoopDim::K] },
+                TileLevel { factors: [1, 1, 1], order: [LoopDim::M, LoopDim::N, LoopDim::K] },
+                TileLevel { factors: [256, 1024, 256], order: [LoopDim::M, LoopDim::N, LoopDim::K] },
+            ],
+            spatial: Spatial {
+                dim_rows: LoopDim::M,
+                unroll_rows: 4,
+                dim_cols: LoopDim::K,
+                unroll_cols: 4,
+            },
+        };
+        mapping.validate(&p).unwrap();
+        assert!(!mapping_is_legal(&arch, &mapping, &CompressionRatios::DENSE));
+        // Even extreme operand compression cannot help: O stays dense.
+        let tiny = CompressionRatios { input: 0.001, weight: 0.001 };
+        assert!(!mapping_is_legal(&arch, &mapping, &tiny));
+    }
+
+    #[test]
+    fn metric_ordering() {
+        let (arch, p, mapping) = toy_setup();
+        let r = evaluate(
+            &arch, &p, &mapping,
+            &SparsitySpec::dense(),
+            &ReductionStrategy::NONE,
+            &CompressionRatios::DENSE,
+        );
+        assert!(Metric::Energy.of(&r) >= Metric::MemoryEnergy.of(&r));
+        assert_eq!(Metric::Edp.of(&r), r.total_energy_pj() * r.latency_cycles());
+    }
+
+    #[test]
+    fn edp_and_latency_consistent() {
+        let (arch, p, mapping) = toy_setup();
+        let r = evaluate(
+            &arch, &p, &mapping,
+            &SparsitySpec::dense(),
+            &ReductionStrategy::NONE,
+            &CompressionRatios::DENSE,
+        );
+        let lat = r.latency_cycles();
+        assert!(lat >= r.compute_cycles);
+        for &c in &r.mem_cycles {
+            assert!(lat >= c);
+        }
+        assert!(r.latency_seconds(1.0) > 0.0);
+    }
+}

@@ -1,0 +1,312 @@
+//! Mapping enumeration: the Dataflow Engine's candidate generator
+//! (paper §III-A — "SnipSnap adopts existing methodologies [20], [25]"
+//! for dataflow, i.e. a ZigZag/Timeloop-style tiling + ordering search).
+//!
+//! The enumerator splits each problem dim into per-level divisor factors,
+//! assigns loop orders per level, and spatially unrolls two dims over the
+//! MAC array.  Caps keep the space tractable; the progressive co-search
+//! additionally prunes with compressed-footprint legality *before*
+//! ordering (see `crate::search`).
+
+use super::{LoopDim, Mapping, ProblemDims, Spatial, TileLevel};
+use crate::util::mathx::divisors;
+
+/// Enumeration limits.
+#[derive(Clone, Debug)]
+pub struct MapperConfig {
+    /// Loop orders tried per level (all 6 permutations by default).
+    pub orders: Vec<[LoopDim; 3]>,
+    /// Maximum mappings yielded (safety valve).
+    pub max_candidates: usize,
+    /// Consider only spatial unrollings with utilization at least this.
+    pub min_spatial_utilization: f64,
+}
+
+impl Default for MapperConfig {
+    fn default() -> Self {
+        MapperConfig {
+            orders: all_orders(),
+            max_candidates: 2_000_000,
+            min_spatial_utilization: 0.5,
+        }
+    }
+}
+
+/// All 6 permutations of (M, N, K).
+pub fn all_orders() -> Vec<[LoopDim; 3]> {
+    use LoopDim::*;
+    vec![
+        [M, N, K],
+        [M, K, N],
+        [N, M, K],
+        [N, K, M],
+        [K, M, N],
+        [K, N, M],
+    ]
+}
+
+/// Candidate spatial unrollings for a problem on an array with the given
+/// axis capacities.  Maps M to array rows and K to array columns (the
+/// output-stationary style all Table II architectures use), with N an
+/// optional column co-unroll skipped for simplicity.
+pub fn spatial_candidates(
+    p: &ProblemDims,
+    rows: u64,
+    cols: u64,
+    min_util: f64,
+) -> Vec<Spatial> {
+    let mut out = Vec::new();
+    for um in divisors(p.m).into_iter().filter(|&d| d <= rows) {
+        for uk in divisors(p.k).into_iter().filter(|&d| d <= cols) {
+            let util = (um * uk) as f64 / (rows * cols) as f64;
+            if util >= min_util || (um == p.m.min(rows) && uk == p.k.min(cols)) {
+                out.push(Spatial {
+                    dim_rows: LoopDim::M,
+                    unroll_rows: um,
+                    dim_cols: LoopDim::K,
+                    unroll_cols: uk,
+                });
+            }
+        }
+    }
+    // Always keep at least the trivial mapping.
+    if out.is_empty() {
+        out.push(Spatial {
+            dim_rows: LoopDim::M,
+            unroll_rows: 1,
+            dim_cols: LoopDim::K,
+            unroll_cols: 1,
+        });
+    }
+    // High-utilization candidates first: enumeration budgets are spent on
+    // the promising corner of the space when a candidate cap truncates.
+    out.sort_by(|a, b| {
+        (b.unroll_rows * b.unroll_cols).cmp(&(a.unroll_rows * a.unroll_cols))
+    });
+    out
+}
+
+/// All ways to split `total` into `nlevels` divisor factors (outermost
+/// first), **balanced splits first**: when a candidate cap truncates the
+/// enumeration, coverage concentrates on near-geometric tilings (where
+/// the optima live) instead of the degenerate all-factors-inner corner
+/// the raw divisor order starts with.
+fn splits(total: u64, nlevels: usize) -> Vec<Vec<u64>> {
+    let mut all = crate::util::mathx::ordered_factorizations(total, nlevels);
+    if nlevels > 1 {
+        let target = (total as f64).ln() / nlevels as f64;
+        let score = |s: &[u64]| -> f64 {
+            s.iter().map(|&f| ((f.max(1) as f64).ln() - target).abs()).sum()
+        };
+        all.sort_by(|a, b| score(a).partial_cmp(&score(b)).unwrap());
+    }
+    all
+}
+
+/// Stream every tiling *proto* (canonical loop order) for `p` over
+/// `nlevels` memory levels to the visitor, without materializing the
+/// space.  Returns the number of protos visited.  The `keep` filter runs
+/// before the visitor — with a compressed-footprint legality check this
+/// is the §III-D2 compression-aware loop allocation.
+pub fn for_each_proto<K, V>(
+    p: &ProblemDims,
+    nlevels: usize,
+    rows: u64,
+    cols: u64,
+    cfg: &MapperConfig,
+    mut keep: K,
+    mut visit: V,
+) -> u64
+where
+    K: FnMut(&Mapping) -> bool,
+    V: FnMut(&Mapping),
+{
+    let mut visited = 0u64;
+    let spatials = spatial_candidates(p, rows, cols, cfg.min_spatial_utilization);
+    // Split the candidate budget across spatial configurations so a cap
+    // never starves all but the first one.
+    let per_spatial = (cfg.max_candidates / spatials.len()).max(1) as u64;
+    for sp in spatials {
+        let mut local = 0u64;
+        let rm = p.m / sp.factor(LoopDim::M);
+        let rn = p.n / sp.factor(LoopDim::N);
+        let rk = p.k / sp.factor(LoopDim::K);
+        'this_spatial: for ms in splits(rm, nlevels) {
+            for ns in splits(rn, nlevels) {
+                for ks in splits(rk, nlevels) {
+                    let proto = Mapping {
+                        levels: (0..nlevels)
+                            .map(|i| TileLevel {
+                                factors: [ms[i], ns[i], ks[i]],
+                                order: [LoopDim::M, LoopDim::N, LoopDim::K],
+                            })
+                            .collect(),
+                        spatial: sp,
+                    };
+                    if !keep(&proto) {
+                        continue;
+                    }
+                    visit(&proto);
+                    visited += 1;
+                    local += 1;
+                    if local >= per_spatial {
+                        break 'this_spatial;
+                    }
+                }
+            }
+        }
+    }
+    visited
+}
+
+/// Enumerate mappings for `p` over `nlevels` memory levels.
+///
+/// `keep` is the legality filter (e.g. compressed tile footprints fit
+/// each level's capacity); mappings failing it are discarded *before*
+/// loop-order expansion, which is the compression-aware-allocation
+/// optimization of §III-D2.
+pub fn enumerate_mappings<F>(
+    p: &ProblemDims,
+    nlevels: usize,
+    rows: u64,
+    cols: u64,
+    cfg: &MapperConfig,
+    mut keep: F,
+) -> Vec<Mapping>
+where
+    F: FnMut(&Mapping) -> bool,
+{
+    let mut out = Vec::new();
+    'spatial: for sp in spatial_candidates(p, rows, cols, cfg.min_spatial_utilization) {
+        let rm = p.m / sp.factor(LoopDim::M);
+        let rn = p.n / sp.factor(LoopDim::N);
+        let rk = p.k / sp.factor(LoopDim::K);
+        for ms in splits(rm, nlevels) {
+            for ns in splits(rn, nlevels) {
+                for ks in splits(rk, nlevels) {
+                    // Build with a canonical order first; check legality
+                    // once (footprints don't depend on order), then expand
+                    // orders.
+                    let proto = Mapping {
+                        levels: (0..nlevels)
+                            .map(|i| TileLevel {
+                                factors: [ms[i], ns[i], ks[i]],
+                                order: [LoopDim::M, LoopDim::N, LoopDim::K],
+                            })
+                            .collect(),
+                        spatial: sp,
+                    };
+                    if !keep(&proto) {
+                        continue;
+                    }
+                    // Expand loop orders per level, skipping permutations
+                    // of unit loops (they are equivalent).
+                    let order_sets: Vec<Vec<[LoopDim; 3]>> = (0..nlevels)
+                        .map(|i| {
+                            let nontrivial =
+                                proto.levels[i].factors.iter().filter(|&&f| f > 1).count();
+                            if nontrivial <= 1 {
+                                vec![cfg.orders[0]]
+                            } else {
+                                cfg.orders.clone()
+                            }
+                        })
+                        .collect();
+                    let mut stack = vec![0usize; nlevels];
+                    loop {
+                        let mut m = proto.clone();
+                        for i in 0..nlevels {
+                            m.levels[i].order = order_sets[i][stack[i]];
+                        }
+                        out.push(m);
+                        if out.len() >= cfg.max_candidates {
+                            break 'spatial;
+                        }
+                        // Odometer over order choices.
+                        let mut i = nlevels;
+                        loop {
+                            if i == 0 {
+                                break;
+                            }
+                            i -= 1;
+                            stack[i] += 1;
+                            if stack[i] < order_sets[i].len() {
+                                break;
+                            }
+                            stack[i] = 0;
+                            if i == 0 {
+                                // done
+                                stack = vec![usize::MAX; nlevels];
+                                break;
+                            }
+                        }
+                        if stack[0] == usize::MAX {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enumerates_valid_mappings() {
+        let p = ProblemDims::new(16, 16, 16);
+        let cfg = MapperConfig::default();
+        let maps = enumerate_mappings(&p, 2, 4, 4, &cfg, |_| true);
+        assert!(!maps.is_empty());
+        for m in &maps {
+            m.validate(&p).unwrap_or_else(|e| panic!("{m}: {e}"));
+        }
+    }
+
+    #[test]
+    fn legality_filter_prunes() {
+        let p = ProblemDims::new(16, 16, 16);
+        let cfg = MapperConfig::default();
+        let all = enumerate_mappings(&p, 2, 4, 4, &cfg, |_| true).len();
+        let some = enumerate_mappings(&p, 2, 4, 4, &cfg, |m| {
+            let (tm, tn, tk) = m.tile_at(0);
+            tm * tn + tn * tk + tm * tk <= 64
+        })
+        .len();
+        assert!(some < all, "filter had no effect: {some} vs {all}");
+        assert!(some > 0);
+    }
+
+    #[test]
+    fn spatial_candidates_respect_array() {
+        let p = ProblemDims::new(64, 64, 64);
+        for s in spatial_candidates(&p, 8, 8, 0.5) {
+            assert!(s.unroll_rows <= 8 && s.unroll_cols <= 8);
+            assert_eq!(p.m % s.unroll_rows, 0);
+            assert_eq!(p.k % s.unroll_cols, 0);
+        }
+    }
+
+    #[test]
+    fn max_candidates_cap_respected() {
+        let p = ProblemDims::new(64, 64, 64);
+        let cfg = MapperConfig { max_candidates: 100, ..Default::default() };
+        let maps = enumerate_mappings(&p, 2, 8, 8, &cfg, |_| true);
+        assert!(maps.len() <= 100);
+    }
+
+    #[test]
+    fn unit_loop_orders_not_duplicated() {
+        // A problem of 4x1x1 has only one non-trivial dim; per level only
+        // one order should be emitted per factor split.
+        let p = ProblemDims::new(4, 1, 1);
+        let cfg = MapperConfig { min_spatial_utilization: 0.0, ..Default::default() };
+        let maps = enumerate_mappings(&p, 1, 1, 1, &cfg, |_| true);
+        let unique: std::collections::HashSet<String> =
+            maps.iter().map(|m| m.to_string()).collect();
+        assert_eq!(unique.len(), maps.len(), "duplicate mappings emitted");
+    }
+}

@@ -1,0 +1,393 @@
+//! Dataflow modeling (paper §II-B1): loop tiling, loop ordering, spatial
+//! mapping and memory-level allocation for the MatMul
+//! `O[M][K] = Σ_N I[M][N] × W[N][K]` (the paper's convention: N is the
+//! reduction dimension).
+//!
+//! A [`Mapping`] assigns per-memory-level tiling factors and loop orders
+//! plus a spatial unrolling at the MAC array.  [`access_counts`] computes
+//! the per-level, per-operand fill traffic under exact single-tile-buffer
+//! reuse semantics: a tile is reloaded whenever a *relevant* outer loop
+//! increments, and irrelevant loops cause revisits unless they are
+//! strictly inside the innermost relevant loop (the classic
+//! trailing-irrelevant reuse rule, validated against a brute-force nest
+//! simulator in `rust/tests/properties.rs`).
+
+pub mod mapper;
+pub mod nest;
+
+use std::fmt;
+
+/// MatMul problem dims: `O[M][K] = Σ_N I[M][N] × W[N][K]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ProblemDims {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+}
+
+impl ProblemDims {
+    pub fn new(m: u64, n: u64, k: u64) -> Self {
+        ProblemDims { m, n, k }
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.m * self.n * self.k
+    }
+
+    pub fn get(&self, d: LoopDim) -> u64 {
+        match d {
+            LoopDim::M => self.m,
+            LoopDim::N => self.n,
+            LoopDim::K => self.k,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LoopDim {
+    M,
+    N,
+    K,
+}
+
+impl LoopDim {
+    pub const ALL: [LoopDim; 3] = [LoopDim::M, LoopDim::N, LoopDim::K];
+}
+
+impl fmt::Display for LoopDim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LoopDim::M => write!(f, "M"),
+            LoopDim::N => write!(f, "N"),
+            LoopDim::K => write!(f, "K"),
+        }
+    }
+}
+
+/// The three MatMul operands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Operand {
+    /// Input activations `I[M][N]`.
+    I,
+    /// Weights `W[N][K]`.
+    W,
+    /// Outputs / partial sums `O[M][K]`.
+    O,
+}
+
+impl Operand {
+    pub const ALL: [Operand; 3] = [Operand::I, Operand::W, Operand::O];
+
+    /// Dims that index this operand.
+    pub fn relevant(&self, d: LoopDim) -> bool {
+        match (self, d) {
+            (Operand::I, LoopDim::M) | (Operand::I, LoopDim::N) => true,
+            (Operand::W, LoopDim::N) | (Operand::W, LoopDim::K) => true,
+            (Operand::O, LoopDim::M) | (Operand::O, LoopDim::K) => true,
+            _ => false,
+        }
+    }
+
+    /// Footprint (elements) of this operand for a tile of the given dims.
+    pub fn footprint(&self, m: u64, n: u64, k: u64) -> u64 {
+        match self {
+            Operand::I => m * n,
+            Operand::W => n * k,
+            Operand::O => m * k,
+        }
+    }
+}
+
+/// Per-memory-level temporal tiling: the factor by which each dim is
+/// split at this level, plus the loop order (outermost first).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TileLevel {
+    pub factors: [u64; 3], // indexed by LoopDim order M, N, K
+    pub order: [LoopDim; 3],
+}
+
+impl TileLevel {
+    pub fn factor(&self, d: LoopDim) -> u64 {
+        match d {
+            LoopDim::M => self.factors[0],
+            LoopDim::N => self.factors[1],
+            LoopDim::K => self.factors[2],
+        }
+    }
+}
+
+/// Spatial unrolling over the MAC array: dims mapped to the two array
+/// axes with their unroll factors.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Spatial {
+    pub dim_rows: LoopDim,
+    pub unroll_rows: u64,
+    pub dim_cols: LoopDim,
+    pub unroll_cols: u64,
+}
+
+impl Spatial {
+    pub fn factor(&self, d: LoopDim) -> u64 {
+        let mut f = 1;
+        if self.dim_rows == d {
+            f *= self.unroll_rows;
+        }
+        if self.dim_cols == d {
+            f *= self.unroll_cols;
+        }
+        f
+    }
+}
+
+/// A complete mapping: temporal tiling per memory level (outermost DRAM
+/// level first, same order as `Accelerator::levels`) plus the spatial
+/// unrolling at the array.  The innermost implicit level is a single MAC.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mapping {
+    pub levels: Vec<TileLevel>,
+    pub spatial: Spatial,
+}
+
+impl Mapping {
+    /// Check the mapping covers the problem exactly.
+    pub fn validate(&self, p: &ProblemDims) -> Result<(), String> {
+        for d in LoopDim::ALL {
+            let total: u64 = self.levels.iter().map(|l| l.factor(d)).product::<u64>()
+                * self.spatial.factor(d);
+            if total != p.get(d) {
+                return Err(format!(
+                    "dim {d}: factors multiply to {total}, problem has {}",
+                    p.get(d)
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Tile dims held *at* memory level `lvl` (everything inside it):
+    /// the product of factors of all levels below `lvl` plus spatial.
+    pub fn tile_at(&self, lvl: usize) -> (u64, u64, u64) {
+        let mut t = [1u64; 3];
+        for l in &self.levels[lvl + 1..] {
+            for (i, d) in LoopDim::ALL.iter().enumerate() {
+                t[i] *= l.factor(*d);
+            }
+        }
+        for (i, d) in LoopDim::ALL.iter().enumerate() {
+            t[i] *= self.spatial.factor(*d);
+        }
+        (t[0], t[1], t[2])
+    }
+
+    /// Flatten to a loop nest, outermost first, with the memory boundary
+    /// index each loop belongs to (level 0 = DRAM loops).
+    pub fn flatten(&self) -> Vec<nest::Loop> {
+        let mut out = Vec::new();
+        for (lvl, t) in self.levels.iter().enumerate() {
+            for d in t.order {
+                out.push(nest::Loop { dim: d, bound: t.factor(d), level: lvl });
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for Mapping {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, l) in self.levels.iter().enumerate() {
+            if i > 0 {
+                write!(f, " | ")?;
+            }
+            write!(f, "L{i}:")?;
+            for d in l.order {
+                write!(f, " {d}{}", l.factor(d))?;
+            }
+        }
+        write!(
+            f,
+            " | spatial {}{} x {}{}",
+            self.spatial.dim_rows,
+            self.spatial.unroll_rows,
+            self.spatial.dim_cols,
+            self.spatial.unroll_cols
+        )
+    }
+}
+
+/// Per-operand, per-level fill counts (elements moved INTO each level from
+/// the level above, per whole-problem execution).
+#[derive(Clone, Debug)]
+pub struct AccessCounts {
+    /// `fills[lvl][operand]` in elements; `lvl` indexes on-chip levels of
+    /// the mapping (0 = the outermost *bounded* level receiving from
+    /// DRAM... see `cost::evaluate` for how this maps onto an
+    /// `Accelerator`). Length = number of mapping levels.
+    pub fills: Vec<[f64; 3]>,
+}
+
+/// Exact single-tile-buffer fill counting via the trailing-irrelevant
+/// reuse rule.
+///
+/// For memory boundary `b` (tiles held at mapping level `b`), the loops
+/// outside the boundary are all loops of levels `0..=b-1`... for the tile
+/// AT level b, the loops that iterate it are those of levels `0..=b`
+/// excluding none — the convention here: the tile held at level `b+1` (one
+/// step inside) is reloaded as the level-`b` loops iterate.  We expose
+/// `fills[b]` = elements entering level `b+1`'s buffer from level `b`,
+/// for `b` in `0..levels.len()-1`, plus the DRAM read row `fills[0]`
+/// being elements entering level 1 from DRAM.  Concretely:
+/// `fills[b][op] = loads(tile_at(b+1)) × footprint(tile_at(b+1))` —
+/// with `tile_at(levels.len()-1)` being the spatial/MAC tile.
+pub fn access_counts(mapping: &Mapping, p: &ProblemDims) -> AccessCounts {
+    debug_assert!(mapping.validate(p).is_ok());
+    let nlevels = mapping.levels.len();
+
+    // Tiles inside each level, computed in one reverse pass (tile at b =
+    // tile at b+1 scaled by level b+1's factors; innermost = spatial).
+    let mut tiles = vec![[1u64; 3]; nlevels];
+    let spatial = [
+        mapping.spatial.factor(LoopDim::M),
+        mapping.spatial.factor(LoopDim::N),
+        mapping.spatial.factor(LoopDim::K),
+    ];
+    tiles[nlevels - 1] = spatial;
+    for b in (0..nlevels - 1).rev() {
+        for (i, d) in LoopDim::ALL.iter().enumerate() {
+            tiles[b][i] = tiles[b + 1][i] * mapping.levels[b + 1].factor(*d);
+        }
+    }
+
+    // Single outermost→innermost pass: `prod` is the product of all loop
+    // bounds seen so far; `loads[op]` is the product up to the innermost
+    // *relevant non-unit* loop so far (the trailing-irrelevant reuse
+    // rule, exact under single-tile buffering — validated against the
+    // brute-force nest simulator).
+    let mut fills = Vec::with_capacity(nlevels);
+    let mut prod = 1.0f64;
+    let mut loads = [1.0f64; 3];
+    for (b, level) in mapping.levels.iter().enumerate() {
+        for d in level.order {
+            let bound = level.factor(d) as f64;
+            if bound > 1.0 {
+                prod *= bound;
+                for (oi, op) in Operand::ALL.iter().enumerate() {
+                    if op.relevant(d) {
+                        loads[oi] = prod;
+                    }
+                }
+            }
+        }
+        let [tm, tn, tk] = tiles[b];
+        let mut row = [0f64; 3];
+        for (oi, op) in Operand::ALL.iter().enumerate() {
+            row[oi] = loads[oi] * op.footprint(tm, tn, tk) as f64;
+        }
+        fills.push(row);
+    }
+    AccessCounts { fills }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple_mapping() -> (Mapping, ProblemDims) {
+        // Problem 8x8x8, two levels: DRAM loops (2,2,2), inner loops
+        // (4,4,4) with spatial 1x1.
+        let p = ProblemDims::new(8, 8, 8);
+        let m = Mapping {
+            levels: vec![
+                TileLevel { factors: [2, 2, 2], order: [LoopDim::M, LoopDim::N, LoopDim::K] },
+                TileLevel { factors: [4, 4, 4], order: [LoopDim::M, LoopDim::N, LoopDim::K] },
+            ],
+            spatial: Spatial {
+                dim_rows: LoopDim::M,
+                unroll_rows: 1,
+                dim_cols: LoopDim::K,
+                unroll_cols: 1,
+            },
+        };
+        (m, p)
+    }
+
+    #[test]
+    fn validate_catches_mismatch() {
+        let (mut m, p) = simple_mapping();
+        m.levels[0].factors[0] = 4;
+        assert!(m.validate(&p).is_err());
+    }
+
+    #[test]
+    fn tiles_multiply_out() {
+        let (m, p) = simple_mapping();
+        m.validate(&p).unwrap();
+        assert_eq!(m.tile_at(0), (4, 4, 4));
+        // tile_at(last) = spatial-only tile.
+        assert_eq!(m.tile_at(1), (1, 1, 1));
+    }
+
+    #[test]
+    fn fills_match_hand_computation() {
+        let (m, p) = simple_mapping();
+        let ac = access_counts(&m, &p);
+        // Boundary 0: outer loops M2 N2 K2 (order M,N,K), tile 4x4x4.
+        // I (rel M,N): innermost relevant = N at pos 1 -> loads = 2*2 = 4;
+        //   footprint = 16 -> 64.
+        assert_eq!(ac.fills[0][0], 4.0 * 16.0);
+        // W (rel N,K): innermost relevant = K pos 2 -> loads = 8; fp 16 -> 128.
+        assert_eq!(ac.fills[0][1], 8.0 * 16.0);
+        // O (rel M,K): innermost relevant = K pos 2 -> loads 8; fp 16 -> 128.
+        assert_eq!(ac.fills[0][2], 8.0 * 16.0);
+    }
+
+    #[test]
+    fn trailing_irrelevant_loops_are_reused() {
+        // Order K,N,M at a single level; for W (N,K-relevant) the trailing
+        // M loop must NOT multiply the loads.
+        let p = ProblemDims::new(4, 4, 4);
+        let m = Mapping {
+            levels: vec![TileLevel {
+                factors: [4, 4, 4],
+                order: [LoopDim::K, LoopDim::N, LoopDim::M],
+            }],
+            spatial: Spatial {
+                dim_rows: LoopDim::M,
+                unroll_rows: 1,
+                dim_cols: LoopDim::K,
+                unroll_cols: 1,
+            },
+        };
+        let ac = access_counts(&m, &p);
+        // W: innermost relevant loop is N (pos 1): loads = 4*4 = 16, tile 1x1x1.
+        assert_eq!(ac.fills[0][1], 16.0);
+        // I: M innermost (pos 2): loads = 64.
+        assert_eq!(ac.fills[0][0], 64.0);
+    }
+
+    #[test]
+    fn spatial_factors_count() {
+        let p = ProblemDims::new(8, 4, 8);
+        let m = Mapping {
+            levels: vec![TileLevel {
+                factors: [2, 4, 2],
+                order: [LoopDim::M, LoopDim::N, LoopDim::K],
+            }],
+            spatial: Spatial {
+                dim_rows: LoopDim::M,
+                unroll_rows: 4,
+                dim_cols: LoopDim::K,
+                unroll_cols: 4,
+            },
+        };
+        m.validate(&p).unwrap();
+        assert_eq!(m.tile_at(0), (4, 1, 4));
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let (m, _) = simple_mapping();
+        let s = m.to_string();
+        assert!(s.contains("L0:") && s.contains("spatial"), "{s}");
+    }
+}

@@ -1,0 +1,263 @@
+//! Efficiency-oriented dimension allocation (paper §III-C2).
+//!
+//! For a fixed compression pattern, many subdimension decompositions
+//! exist; each affects (de)compression cost.  The paper's rule: align the
+//! allocation with the dataflow's loop-ordering tile sizes — e.g. for
+//! `B(M1)-B(M2)` with an outer M-tile of 8 and inner of 32, choose
+//! `(M1, M2) = (8, 32)`; other decompositions like `(32, 8)` or `(64, 4)`
+//! misalign the compression hierarchy with the access stream and incur
+//! runtime overhead [34].
+//!
+//! We model the misalignment overhead as a fractional surcharge on the
+//! tensor's bit cost per misaligned level, and pick the allocation with
+//! the lowest surcharged cost.
+
+use super::EngineConfig;
+use crate::format::space::enumerate_allocations;
+use crate::format::{Axis, CompPat, Format};
+use crate::sparsity::analyzer::analytical_cost;
+use crate::sparsity::SparsityPattern;
+
+/// Per-axis dataflow tile factors, outermost first (from the chosen loop
+/// ordering: the factor by which each memory level splits the axis).
+#[derive(Clone, Debug, Default)]
+pub struct TileHints {
+    pub row: Vec<u64>,
+    pub col: Vec<u64>,
+}
+
+/// Fractional cost surcharge per misaligned level.
+const MISALIGN_SURCHARGE: f64 = 0.02;
+
+/// Count levels whose size does not match the dataflow hint for its axis
+/// position (outermost level on an axis should match the outermost hint).
+pub fn misaligned_levels(format: &Format, hints: &TileHints) -> usize {
+    let mut mis = 0;
+    let mut row_pos = 0;
+    let mut col_pos = 0;
+    for l in &format.levels {
+        let (hint, pos) = match l.axis {
+            Axis::Row => (&hints.row, &mut row_pos),
+            Axis::Col => (&hints.col, &mut col_pos),
+        };
+        if let Some(&h) = hint.get(*pos) {
+            if h != l.size {
+                mis += 1;
+            }
+        }
+        *pos += 1;
+    }
+    mis
+}
+
+/// Build the hint-aligned allocation directly: assign each axis level the
+/// corresponding dataflow tile factor (outermost first), folding any
+/// remainder into the last level.  Returns `None` when the hints don't
+/// divide the axis cleanly for this level structure.
+pub fn aligned_allocation(
+    pat: &CompPat,
+    rows: u64,
+    cols: u64,
+    hints: &TileHints,
+) -> Option<Format> {
+    use crate::format::Level;
+    let mut levels: Vec<Level> = pat
+        .levels
+        .iter()
+        .map(|l| Level { prim: l.prim.clone(), axis: l.axis, size: 0 })
+        .collect();
+    for (axis, extent, hint) in [(Axis::Row, rows, &hints.row), (Axis::Col, cols, &hints.col)] {
+        let slots: Vec<usize> = pat
+            .levels
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.axis == axis)
+            .map(|(i, _)| i)
+            .collect();
+        if slots.is_empty() {
+            if extent != 1 {
+                return None;
+            }
+            continue;
+        }
+        let mut rem = extent;
+        for (j, &slot) in slots.iter().enumerate() {
+            if j + 1 == slots.len() {
+                levels[slot].size = rem;
+                rem = 1;
+            } else {
+                let h = hint.get(j).copied().unwrap_or(1).max(1);
+                if rem % h != 0 {
+                    return None;
+                }
+                levels[slot].size = h;
+                rem /= h;
+            }
+        }
+        if rem != 1 {
+            return None;
+        }
+    }
+    Format::new(levels, rows, cols).ok()
+}
+
+/// Choose the best allocation of `pat` over an `rows x cols` tensor:
+/// minimize analytical bit cost plus the misalignment surcharge.
+///
+/// Fast path (§III-C2): with dataflow tile hints available, the aligned
+/// allocation is constructed directly plus a small set of balanced
+/// alternatives — the full enumeration is the hint-free fallback.  This
+/// is what keeps format search tractable inside the per-op co-search
+/// loop (see EXPERIMENTS.md §Perf).
+pub fn choose_allocation(
+    pat: &CompPat,
+    rows: u64,
+    cols: u64,
+    pattern: &SparsityPattern,
+    hints: Option<&TileHints>,
+    cfg: &EngineConfig,
+) -> Option<Format> {
+    let mut candidates: Vec<Format> = Vec::new();
+    if let Some(h) = hints {
+        if let Some(f) = aligned_allocation(pat, rows, cols, h) {
+            candidates.push(f);
+        }
+        // A few balanced alternatives: split each axis near-evenly.
+        let balanced = TileHints {
+            row: balanced_split(rows, pat.levels.iter().filter(|l| l.axis == Axis::Row).count()),
+            col: balanced_split(cols, pat.levels.iter().filter(|l| l.axis == Axis::Col).count()),
+        };
+        if let Some(f) = aligned_allocation(pat, rows, cols, &balanced) {
+            if !candidates.contains(&f) {
+                candidates.push(f);
+            }
+        }
+        // Plus a bounded sample of the raw enumeration: divisor order
+        // starts with small factors (2, 4, 8, ...), which covers the
+        // block-granularity allocations structured sparsity rewards and
+        // the dataflow hints cannot anticipate.
+        for f in enumerate_allocations(pat, rows, cols, &cfg.space)
+            .into_iter()
+            .take(24)
+        {
+            if !candidates.contains(&f) {
+                candidates.push(f);
+            }
+        }
+    }
+    if candidates.is_empty() {
+        candidates = enumerate_allocations(pat, rows, cols, &cfg.space);
+    }
+    let mut best: Option<(f64, Format)> = None;
+    for f in candidates {
+        let bits = analytical_cost(&f, pattern, cfg.data_bits).total_bits();
+        let surcharge = match hints {
+            Some(h) => 1.0 + MISALIGN_SURCHARGE * misaligned_levels(&f, h) as f64,
+            None => 1.0,
+        };
+        let score = bits * surcharge;
+        if best.as_ref().map(|(b, _)| score < *b).unwrap_or(true) {
+            best = Some((score, f));
+        }
+    }
+    best.map(|(_, f)| f)
+}
+
+/// Split `n` into `k` near-equal divisor factors, outermost first.
+fn balanced_split(n: u64, k: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(k);
+    let mut rem = n;
+    for slot in 0..k {
+        let left = k - slot;
+        if left == 1 {
+            out.push(rem);
+            break;
+        }
+        let target = (rem as f64).powf(1.0 / left as f64).round().max(1.0) as u64;
+        let d = crate::util::mathx::divisors(rem)
+            .into_iter()
+            .filter(|&d| d <= target)
+            .next_back()
+            .unwrap_or(1);
+        out.push(d);
+        rem /= d;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::Prim;
+
+    fn b2_pattern() -> CompPat {
+        CompPat::new(vec![
+            (Prim::B, Axis::Row),
+            (Prim::B, Axis::Row),
+            (Prim::B, Axis::Col),
+        ])
+    }
+
+    #[test]
+    fn hints_steer_the_split() {
+        // The paper's example: M = 256 split across two B levels; loop
+        // ordering tiles M as 8 (outer) x 32 (inner).
+        let cfg = EngineConfig::default();
+        let hints = TileHints { row: vec![8, 32], col: vec![64] };
+        let pattern = SparsityPattern::Unstructured { density: 0.5 };
+        let f = choose_allocation(&b2_pattern(), 256, 64, &pattern, Some(&hints), &cfg)
+            .expect("allocation");
+        let row_sizes: Vec<u64> = f
+            .levels
+            .iter()
+            .filter(|l| l.axis == Axis::Row)
+            .map(|l| l.size)
+            .collect();
+        assert_eq!(row_sizes, vec![8, 32], "got {f}");
+    }
+
+    #[test]
+    fn misalignment_counting() {
+        let cfg = EngineConfig::default();
+        let pattern = SparsityPattern::Unstructured { density: 0.5 };
+        let f = choose_allocation(&b2_pattern(), 256, 64, &pattern, None, &cfg).unwrap();
+        let aligned = TileHints {
+            row: f
+                .levels
+                .iter()
+                .filter(|l| l.axis == Axis::Row)
+                .map(|l| l.size)
+                .collect(),
+            col: vec![64],
+        };
+        assert_eq!(misaligned_levels(&f, &aligned), 0);
+        let anti = TileHints { row: vec![1, 1], col: vec![1] };
+        assert_eq!(misaligned_levels(&f, &anti), 3);
+    }
+
+    #[test]
+    fn without_hints_minimizes_pure_cost() {
+        let cfg = EngineConfig::default();
+        let pattern = SparsityPattern::Block { br: 8, bc: 8, block_density: 0.1 };
+        let f = choose_allocation(&b2_pattern(), 64, 64, &pattern, None, &cfg).unwrap();
+        // Every other allocation must cost at least as much.
+        let chosen = analytical_cost(&f, &pattern, cfg.data_bits).total_bits();
+        for alt in enumerate_allocations(&b2_pattern(), 64, 64, &cfg.space) {
+            let c = analytical_cost(&alt, &pattern, cfg.data_bits).total_bits();
+            assert!(chosen <= c + 1e-9, "{f} ({chosen}) beaten by {alt} ({c})");
+        }
+    }
+
+    #[test]
+    fn impossible_pattern_returns_none() {
+        // Three >1 row splits of a prime extent cannot exist.
+        let cfg = EngineConfig::default();
+        let pat = CompPat::new(vec![
+            (Prim::B, Axis::Row),
+            (Prim::B, Axis::Row),
+            (Prim::B, Axis::Col),
+        ]);
+        let pattern = SparsityPattern::Unstructured { density: 0.5 };
+        assert!(choose_allocation(&pat, 7, 8, &pattern, None, &cfg).is_none());
+    }
+}

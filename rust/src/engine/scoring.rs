@@ -1,0 +1,197 @@
+//! Importance-based scoring (paper §III-C3): select one shared
+//! compression format for an accelerator serving multiple LLMs with
+//! different structures, sparsity and usage frequencies.
+//!
+//! Hardware supports one format *pattern*; per-tensor dimension
+//! allocation still adapts (a pattern like `UOP(M)-B(N)` instantiates on
+//! any shape).  Selection minimizes `Σ_i ImpScore(LLM_i) ×
+//! OptMetric(LLM_i)` over candidate patterns, where the per-workload
+//! metric is the traffic-weighted compressed size of all operand tensors.
+
+use super::{allocate, search_formats, EngineConfig};
+use crate::format::{CompPat, Prim};
+use crate::sparsity::analyzer::analytical_cost;
+use crate::sparsity::SparsityPattern;
+use crate::workload::Workload;
+
+/// A workload with its importance score (usage frequency / priority).
+pub struct WeightedWorkload<'a> {
+    pub workload: &'a Workload,
+    pub importance: f64,
+}
+
+/// Traffic-weighted compressed bits of every operand tensor of `w` under
+/// pattern `pat` (per-tensor allocation chosen by the engine).  Falls
+/// back to dense bits when the pattern cannot allocate on a shape.
+pub fn workload_format_bits(w: &Workload, pat: &CompPat, cfg: &EngineConfig) -> f64 {
+    let mut total = 0.0;
+    for op in &w.ops {
+        let tensors: [(u64, u64, &SparsityPattern); 2] = [
+            (op.dims.m, op.dims.n, &op.spec.input),
+            (op.dims.n, op.dims.k, &op.spec.weight),
+        ];
+        for (rows, cols, pattern) in tensors {
+            let bits = match allocate::choose_allocation(pat, rows, cols, pattern, None, cfg) {
+                Some(f) => analytical_cost(&f, pattern, cfg.data_bits).total_bits(),
+                None => (rows * cols) as f64 * cfg.data_bits as f64,
+            };
+            total += bits * op.count as f64;
+        }
+    }
+    total
+}
+
+/// Result of shared-pattern selection.
+#[derive(Clone, Debug)]
+pub struct SharedSelection {
+    pub pattern: CompPat,
+    /// Per-workload metric under the chosen pattern, in input order.
+    pub per_workload_bits: Vec<f64>,
+    /// The weighted objective value.
+    pub weighted_bits: f64,
+}
+
+/// Candidate patterns: the per-workload optima (engine search on each
+/// workload's dominant tensor shapes) plus the four standard baselines.
+fn candidate_patterns(ws: &[WeightedWorkload<'_>], cfg: &EngineConfig) -> Vec<CompPat> {
+    use crate::format::Axis;
+    let mut cands: Vec<CompPat> = vec![
+        // Baselines: Bitmap, RLE, CSR, COO (as patterns).
+        CompPat::new(vec![(Prim::None, Axis::Row), (Prim::B, Axis::Col)]),
+        CompPat::new(vec![(Prim::None, Axis::Row), (Prim::RLE, Axis::Col)]),
+        CompPat::new(vec![(Prim::UOP, Axis::Row), (Prim::CP, Axis::Col)]),
+        CompPat::new(vec![(Prim::CP, Axis::Row), (Prim::CP, Axis::Col)]),
+    ];
+    for ww in ws {
+        // Dominant tensors: the sparse ops with the most MACs; search
+        // formats for both operands of each.
+        let mut ops: Vec<_> = ww
+            .workload
+            .ops
+            .iter()
+            .filter(|o| o.spec.input.density() < 1.0 || o.spec.weight.density() < 1.0)
+            .collect();
+        ops.sort_by(|a, b| b.total_macs().partial_cmp(&a.total_macs()).unwrap());
+        for op in ops.into_iter().take(3) {
+            for (rows, cols, pattern) in [
+                (op.dims.m, op.dims.n, op.spec.input),
+                (op.dims.n, op.dims.k, op.spec.weight),
+            ] {
+                let (top, _) = search_formats(rows, cols, &pattern, None, cfg);
+                for s in top.into_iter().take(2) {
+                    cands.push(s.format.pattern());
+                }
+            }
+        }
+    }
+    // Dedupe by display form.
+    let mut seen = std::collections::HashSet::new();
+    cands.retain(|p| seen.insert(p.to_string()));
+    cands
+}
+
+/// Select the shared pattern minimizing the importance-weighted metric.
+pub fn select_shared_pattern(
+    ws: &[WeightedWorkload<'_>],
+    cfg: &EngineConfig,
+) -> SharedSelection {
+    assert!(!ws.is_empty());
+    let mut best: Option<SharedSelection> = None;
+    for pat in candidate_patterns(ws, cfg) {
+        let per: Vec<f64> = ws
+            .iter()
+            .map(|ww| workload_format_bits(ww.workload, &pat, cfg))
+            .collect();
+        let weighted: f64 = ws
+            .iter()
+            .zip(&per)
+            .map(|(ww, &b)| ww.importance * b)
+            .sum();
+        if best
+            .as_ref()
+            .map(|b| weighted < b.weighted_bits)
+            .unwrap_or(true)
+        {
+            best = Some(SharedSelection { pattern: pat, per_workload_bits: per, weighted_bits: weighted });
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::space::SpaceConfig;
+    use crate::workload::llm;
+
+    fn fast_cfg() -> EngineConfig {
+        EngineConfig {
+            space: SpaceConfig { max_depth: 3, ..Default::default() },
+            top_k: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn selection_minimizes_weighted_objective() {
+        let cfg = fast_cfg();
+        let a = llm::opt_125m(llm::Phase { prefill_tokens: 256, decode_tokens: 32 });
+        let b = llm::bert_base(256);
+        let ws = [
+            WeightedWorkload { workload: &a, importance: 99.0 },
+            WeightedWorkload { workload: &b, importance: 1.0 },
+        ];
+        let sel = select_shared_pattern(&ws, &cfg);
+        // The selected pattern's weighted cost must beat every baseline.
+        for pat in [
+            crate::format::named::bitmap(4, 4).pattern(),
+            crate::format::named::csr(4, 4).pattern(),
+        ] {
+            let w: f64 = ws
+                .iter()
+                .map(|ww| ww.importance * workload_format_bits(ww.workload, &pat, &cfg))
+                .sum();
+            assert!(sel.weighted_bits <= w * 1.0001, "{} beaten by {pat}", sel.pattern);
+        }
+    }
+
+    #[test]
+    fn importance_shifts_the_choice_toward_the_heavy_model() {
+        // With all weight on workload A, the shared metric equals A's own;
+        // per-workload bits are still reported for both.
+        let cfg = fast_cfg();
+        let a = llm::opt_125m(llm::Phase { prefill_tokens: 256, decode_tokens: 32 });
+        let b = llm::bert_base(256);
+        let ws_a = [
+            WeightedWorkload { workload: &a, importance: 1.0 },
+            WeightedWorkload { workload: &b, importance: 0.0 },
+        ];
+        let sel_a = select_shared_pattern(&ws_a, &cfg);
+        assert_eq!(sel_a.per_workload_bits.len(), 2);
+        assert!((sel_a.weighted_bits - sel_a.per_workload_bits[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dense_fallback_for_unallocatable_shapes() {
+        // A 3-row-level pattern cannot allocate rows=2 with >1 sizes; the
+        // metric must still be finite (dense fallback).
+        use crate::format::Axis;
+        let cfg = fast_cfg();
+        let pat = CompPat::new(vec![
+            (Prim::B, Axis::Row),
+            (Prim::B, Axis::Row),
+            (Prim::B, Axis::Col),
+        ]);
+        let w = Workload {
+            name: "tiny".into(),
+            ops: vec![crate::workload::MatMulOp {
+                name: "t".into(),
+                dims: crate::dataflow::ProblemDims::new(2, 8, 8),
+                spec: crate::sparsity::SparsitySpec::unstructured(0.5, 0.5),
+                count: 1,
+            }],
+        };
+        let bits = workload_format_bits(&w, &pat, &cfg);
+        assert!(bits.is_finite() && bits > 0.0);
+    }
+}

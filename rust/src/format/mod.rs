@@ -1,0 +1,381 @@
+//! Hierarchical compression-format encoding (paper §III-B).
+//!
+//! A format over an `R x C` tensor is an ordered sequence of *levels*
+//! (high → low).  Each level names a compression primitive and a
+//! (sub)dimension axis; the *compression pattern* subspace fixes the
+//! primitive/axis sequence, the *dimension allocation* subspace assigns a
+//! concrete size (fanout) to every level.  Together they reproduce all the
+//! classic formats (Bitmap, RLE, CSR, CSC, COO, CSB, …) and open the
+//! multi-level space the paper explores (e.g. Fig. 5's `B(M)-B(N)-B(N)`).
+//!
+//! Semantics used throughout the analyzer (see DESIGN.md §4.1): reshape
+//! the tensor into the level axes, outermost first.  A *node* at level
+//! boundary `i` is a fixing of the first `i` axes; its *region* is the
+//! remaining sub-tensor.  A node is **non-empty** if its region holds any
+//! non-zero.  A node is **active** (materialized) if every compressed
+//! ancestor level kept it: `None` levels materialize all children,
+//! compressing levels only non-empty ones.
+
+pub mod named;
+pub mod space;
+
+use crate::util::mathx::ceil_log2;
+use std::fmt;
+
+/// Tensor axis a level subdivides. The paper writes `M` for rows and `N`
+/// (or `K`) for columns of the operand being compressed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Axis {
+    Row,
+    Col,
+}
+
+impl Axis {
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            Axis::Row => "M",
+            Axis::Col => "N",
+        }
+    }
+}
+
+/// Compression primitives (paper Fig. 4a).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Prim {
+    /// Uncompressed / flattened dimension: no metadata, children dense.
+    None,
+    /// Bitmap: one presence bit per child slot of every active parent.
+    B,
+    /// Coordinate payload: one coordinate per non-empty child.
+    CP,
+    /// Run-length encoding: one run length per non-empty child plus a
+    /// terminator per active parent.
+    RLE,
+    /// Uncompressed offset pairs (CSR-style pointer array): `fanout + 1`
+    /// offsets per active parent.
+    UOP,
+    /// User-defined primitive with a linear metadata cost model:
+    /// `bits = parents * bits_per_parent + children * bits_per_child`.
+    Custom {
+        name: &'static str,
+        bits_per_parent: f64,
+        bits_per_child: f64,
+    },
+}
+
+impl Prim {
+    /// Does this level prune empty children (i.e. compress)?
+    pub fn compresses(&self) -> bool {
+        !matches!(self, Prim::None)
+    }
+
+    pub fn code(&self) -> &'static str {
+        match self {
+            Prim::None => "None",
+            Prim::B => "B",
+            Prim::CP => "CP",
+            Prim::RLE => "RLE",
+            Prim::UOP => "UOP",
+            Prim::Custom { name, .. } => name,
+        }
+    }
+
+    /// Kind id shared with the XLA scorer (python/compile/model.py).
+    pub fn kind_id(&self) -> i32 {
+        match self {
+            Prim::None => 0,
+            Prim::B => 1,
+            Prim::CP => 2,
+            Prim::RLE => 3,
+            Prim::UOP => 4,
+            Prim::Custom { .. } => 5,
+        }
+    }
+}
+
+/// One level of a *compression pattern* (no size assigned yet).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PatternLevel {
+    pub prim: Prim,
+    pub axis: Axis,
+}
+
+/// A compression pattern: ordered primitive/axis sequence, high → low
+/// (paper Definition 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompPat {
+    pub levels: Vec<PatternLevel>,
+}
+
+impl CompPat {
+    pub fn new(levels: Vec<(Prim, Axis)>) -> Self {
+        CompPat {
+            levels: levels
+                .into_iter()
+                .map(|(prim, axis)| PatternLevel { prim, axis })
+                .collect(),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Number of levels that actually compress (used by the complexity
+    /// penalty γ^level).
+    pub fn compressing_depth(&self) -> usize {
+        self.levels.iter().filter(|l| l.prim.compresses()).count()
+    }
+}
+
+impl fmt::Display for CompPat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, l) in self.levels.iter().enumerate() {
+            if i > 0 {
+                write!(f, "-")?;
+            }
+            write!(f, "{}({})", l.prim.code(), l.axis.paper_name())?;
+        }
+        Ok(())
+    }
+}
+
+/// A fully-allocated level: primitive + axis + fanout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Level {
+    pub prim: Prim,
+    pub axis: Axis,
+    /// Children per node (the size of this subdimension).
+    pub size: u64,
+}
+
+/// A complete compression format: pattern + dimension allocation over a
+/// concrete tensor shape (paper Definition 2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Format {
+    pub levels: Vec<Level>,
+    pub rows: u64,
+    pub cols: u64,
+}
+
+/// Geometry of one level boundary, derived once per format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BoundaryGeom {
+    /// Total nodes at this boundary (all fixings of the first i axes).
+    pub nodes: f64,
+    /// Remaining region shape under one node: rows x cols.
+    pub region_rows: u64,
+    pub region_cols: u64,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum FormatError {
+    #[error("level sizes over {axis:?} multiply to {got}, tensor has {want}")]
+    AxisMismatch { axis: Axis, got: u64, want: u64 },
+    #[error("level {index} has size 0")]
+    ZeroSize { index: usize },
+    #[error("format must have at least one level")]
+    Empty,
+}
+
+impl Format {
+    pub fn new(levels: Vec<Level>, rows: u64, cols: u64) -> Result<Self, FormatError> {
+        let f = Format { levels, rows, cols };
+        f.validate()?;
+        Ok(f)
+    }
+
+    pub fn validate(&self) -> Result<(), FormatError> {
+        if self.levels.is_empty() {
+            return Err(FormatError::Empty);
+        }
+        for (index, l) in self.levels.iter().enumerate() {
+            if l.size == 0 {
+                return Err(FormatError::ZeroSize { index });
+            }
+        }
+        for axis in [Axis::Row, Axis::Col] {
+            let got: u64 = self
+                .levels
+                .iter()
+                .filter(|l| l.axis == axis)
+                .map(|l| l.size)
+                .product();
+            let want = match axis {
+                Axis::Row => self.rows,
+                Axis::Col => self.cols,
+            };
+            if got != want {
+                return Err(FormatError::AxisMismatch { axis, got, want });
+            }
+        }
+        Ok(())
+    }
+
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn compressing_depth(&self) -> usize {
+        self.levels.iter().filter(|l| l.prim.compresses()).count()
+    }
+
+    pub fn pattern(&self) -> CompPat {
+        CompPat {
+            levels: self
+                .levels
+                .iter()
+                .map(|l| PatternLevel { prim: l.prim.clone(), axis: l.axis })
+                .collect(),
+        }
+    }
+
+    /// Boundary geometries: index 0 is the root (whole tensor), index i is
+    /// after fixing levels 1..=i.  Length = depth + 1.
+    pub fn boundaries(&self) -> Vec<BoundaryGeom> {
+        let mut out = Vec::with_capacity(self.levels.len() + 1);
+        let mut nodes = 1.0;
+        let mut rr = self.rows;
+        let mut rc = self.cols;
+        out.push(BoundaryGeom { nodes, region_rows: rr, region_cols: rc });
+        for l in &self.levels {
+            nodes *= l.size as f64;
+            match l.axis {
+                Axis::Row => rr /= l.size,
+                Axis::Col => rc /= l.size,
+            }
+            out.push(BoundaryGeom { nodes, region_rows: rr, region_cols: rc });
+        }
+        out
+    }
+
+    /// Metadata width in bits for coordinates/runs/offsets at level i.
+    pub fn level_width_bits(&self, i: usize) -> u32 {
+        let l = &self.levels[i];
+        match l.prim {
+            // Runs can span the whole fanout, offsets index up to the full
+            // region payload under the parent; coordinates index children.
+            Prim::UOP => {
+                let b = self.boundaries();
+                let region = b[i].region_rows as u128 * b[i].region_cols as u128;
+                ceil_log2((region as u64).saturating_add(1).max(2))
+            }
+            Prim::RLE => ceil_log2(l.size + 1),
+            _ => ceil_log2(l.size.max(2)),
+        }
+    }
+}
+
+impl fmt::Display for Format {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, l) in self.levels.iter().enumerate() {
+            if i > 0 {
+                write!(f, "-")?;
+            }
+            write!(f, "{}({},{})", l.prim.code(), l.axis.paper_name(), l.size)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lv(prim: Prim, axis: Axis, size: u64) -> Level {
+        Level { prim, axis, size }
+    }
+
+    #[test]
+    fn csc_structure_of_fig4() {
+        // CSC over M x N (M=3, N=6): UOP(N)-CP(M).
+        let f = Format::new(
+            vec![lv(Prim::UOP, Axis::Col, 6), lv(Prim::CP, Axis::Row, 3)],
+            3,
+            6,
+        )
+        .unwrap();
+        assert_eq!(f.to_string(), "UOP(N,6)-CP(M,3)");
+        let b = f.boundaries();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0].nodes, 1.0);
+        assert_eq!((b[0].region_rows, b[0].region_cols), (3, 6));
+        assert_eq!(b[1].nodes, 6.0);
+        assert_eq!((b[1].region_rows, b[1].region_cols), (3, 1));
+        assert_eq!(b[2].nodes, 18.0);
+        assert_eq!((b[2].region_rows, b[2].region_cols), (1, 1));
+    }
+
+    #[test]
+    fn validate_rejects_bad_allocation() {
+        let err = Format::new(
+            vec![lv(Prim::B, Axis::Row, 2), lv(Prim::B, Axis::Col, 6)],
+            3,
+            6,
+        )
+        .unwrap_err();
+        assert_eq!(err, FormatError::AxisMismatch { axis: Axis::Row, got: 2, want: 3 });
+    }
+
+    #[test]
+    fn validate_rejects_empty_and_zero() {
+        assert_eq!(Format::new(vec![], 2, 2).unwrap_err(), FormatError::Empty);
+        let err = Format::new(vec![lv(Prim::B, Axis::Row, 0)], 0, 1);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn multi_level_split_allocation() {
+        // UOP(N1,3)-CP(M,3)-CP(N2,2) over 3 x 6 — the paper's §III-B example.
+        let f = Format::new(
+            vec![
+                lv(Prim::UOP, Axis::Col, 3),
+                lv(Prim::CP, Axis::Row, 3),
+                lv(Prim::CP, Axis::Col, 2),
+            ],
+            3,
+            6,
+        )
+        .unwrap();
+        assert_eq!(f.depth(), 3);
+        let b = f.boundaries();
+        assert_eq!((b[1].region_rows, b[1].region_cols), (3, 2));
+        assert_eq!((b[3].region_rows, b[3].region_cols), (1, 1));
+    }
+
+    #[test]
+    fn widths() {
+        let f = Format::new(
+            vec![lv(Prim::CP, Axis::Col, 1024), lv(Prim::RLE, Axis::Row, 16)],
+            16,
+            1024,
+        )
+        .unwrap();
+        assert_eq!(f.level_width_bits(0), 10);
+        // RLE run can be 0..=16 -> 17 values -> 5 bits.
+        assert_eq!(f.level_width_bits(1), 5);
+    }
+
+    #[test]
+    fn compressing_depth_ignores_none() {
+        let f = Format::new(
+            vec![
+                lv(Prim::B, Axis::Row, 4),
+                lv(Prim::None, Axis::Col, 8),
+                lv(Prim::B, Axis::Col, 2),
+            ],
+            4,
+            16,
+        )
+        .unwrap();
+        assert_eq!(f.depth(), 3);
+        assert_eq!(f.compressing_depth(), 2);
+    }
+
+    #[test]
+    fn display_pattern() {
+        let p = CompPat::new(vec![(Prim::UOP, Axis::Col), (Prim::CP, Axis::Row)]);
+        assert_eq!(p.to_string(), "UOP(N)-CP(M)");
+        assert_eq!(p.compressing_depth(), 2);
+    }
+}

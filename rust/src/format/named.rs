@@ -1,0 +1,166 @@
+//! The classic named formats as instances of the hierarchical encoding
+//! (paper §II-B3, Fig. 4b and the four baselines of §IV-A2).
+
+use super::{Axis, Format, Level, Prim};
+
+fn lv(prim: Prim, axis: Axis, size: u64) -> Level {
+    Level { prim, axis, size }
+}
+
+/// Flat bitmap over the whole tensor: `B(M)-B-less` — encoded as a single
+/// bitmap level over rows then an uncompressed column level is *not* how a
+/// bitmap works; the canonical one-level bitmap is a presence bit per
+/// element: `None(M)-B(N)` (rows materialized, bit per element).
+pub fn bitmap(rows: u64, cols: u64) -> Format {
+    Format::new(
+        vec![lv(Prim::None, Axis::Row, rows), lv(Prim::B, Axis::Col, cols)],
+        rows,
+        cols,
+    )
+    .expect("bitmap")
+}
+
+/// Row-major RLE over the flattened element stream (per-row runs):
+/// `None(M)-RLE(N)`.
+pub fn rle(rows: u64, cols: u64) -> Format {
+    Format::new(
+        vec![lv(Prim::None, Axis::Row, rows), lv(Prim::RLE, Axis::Col, cols)],
+        rows,
+        cols,
+    )
+    .expect("rle")
+}
+
+/// CSR: row-pointer array + column coordinates: `UOP(M)-CP(N)`.
+pub fn csr(rows: u64, cols: u64) -> Format {
+    Format::new(
+        vec![lv(Prim::UOP, Axis::Row, rows), lv(Prim::CP, Axis::Col, cols)],
+        rows,
+        cols,
+    )
+    .expect("csr")
+}
+
+/// CSC: column-pointer array + row coordinates: `UOP(N)-CP(M)` (Fig. 4b,
+/// Flexagon).
+pub fn csc(rows: u64, cols: u64) -> Format {
+    Format::new(
+        vec![lv(Prim::UOP, Axis::Col, cols), lv(Prim::CP, Axis::Row, rows)],
+        rows,
+        cols,
+    )
+    .expect("csc")
+}
+
+/// COO: full coordinates per non-zero: `CP(M)-CP(N)`.
+pub fn coo(rows: u64, cols: u64) -> Format {
+    Format::new(
+        vec![lv(Prim::CP, Axis::Row, rows), lv(Prim::CP, Axis::Col, cols)],
+        rows,
+        cols,
+    )
+    .expect("coo")
+}
+
+/// CSB (Compressed Sparse Block, Fig. 4b / Procrustes): coordinates of
+/// non-empty `br x bc` blocks, bitmap within each block.
+pub fn csb(rows: u64, cols: u64, br: u64, bc: u64) -> Format {
+    assert!(rows % br == 0 && cols % bc == 0, "block must divide tensor");
+    Format::new(
+        vec![
+            lv(Prim::CP, Axis::Row, rows / br),
+            lv(Prim::CP, Axis::Col, cols / bc),
+            lv(Prim::None, Axis::Row, br),
+            lv(Prim::B, Axis::Col, bc),
+        ],
+        rows,
+        cols,
+    )
+    .expect("csb")
+}
+
+/// The paper's Fig. 5 discovery: three-level bitmap `B(M)-B(N1)-B(N2)`
+/// with the column dimension split as `cols = n1 * n2`.
+pub fn b3(rows: u64, cols: u64, n1: u64) -> Format {
+    assert!(cols % n1 == 0);
+    Format::new(
+        vec![
+            lv(Prim::B, Axis::Row, rows),
+            lv(Prim::B, Axis::Col, n1),
+            lv(Prim::B, Axis::Col, cols / n1),
+        ],
+        rows,
+        cols,
+    )
+    .expect("b3")
+}
+
+/// The paper's §IV-E BERT pick: `UOP(M)-B(N)` — CSR's CP replaced by a
+/// lower-overhead bitmap.
+pub fn uop_b(rows: u64, cols: u64) -> Format {
+    Format::new(
+        vec![lv(Prim::UOP, Axis::Row, rows), lv(Prim::B, Axis::Col, cols)],
+        rows,
+        cols,
+    )
+    .expect("uop_b")
+}
+
+/// Fully dense (no compression) — the degenerate reference point.
+pub fn dense(rows: u64, cols: u64) -> Format {
+    Format::new(
+        vec![lv(Prim::None, Axis::Row, rows), lv(Prim::None, Axis::Col, cols)],
+        rows,
+        cols,
+    )
+    .expect("dense")
+}
+
+/// The four widely-used baselines of §IV-A2, by name.
+pub fn baselines(rows: u64, cols: u64) -> Vec<(&'static str, Format)> {
+    vec![
+        ("Bitmap", bitmap(rows, cols)),
+        ("RLE", rle(rows, cols)),
+        ("CSR", csr(rows, cols)),
+        ("COO", coo(rows, cols)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_formats_validate() {
+        for (_, f) in baselines(64, 128) {
+            f.validate().unwrap();
+        }
+        csb(64, 128, 8, 16).validate().unwrap();
+        b3(64, 126, 7).validate().unwrap();
+        uop_b(64, 128).validate().unwrap();
+        dense(64, 128).validate().unwrap();
+        csc(64, 128).validate().unwrap();
+    }
+
+    #[test]
+    fn csr_display() {
+        assert_eq!(csr(4, 8).to_string(), "UOP(M,4)-CP(N,8)");
+        assert_eq!(coo(4, 8).to_string(), "CP(M,4)-CP(N,8)");
+        assert_eq!(csc(4, 8).to_string(), "UOP(N,8)-CP(M,4)");
+    }
+
+    #[test]
+    fn csb_block_geometry() {
+        let f = csb(64, 64, 8, 8);
+        let b = f.boundaries();
+        // After the two CP levels: one 8x8 block region per node.
+        assert_eq!((b[2].region_rows, b[2].region_cols), (8, 8));
+        assert_eq!(b[2].nodes, 64.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "block must divide")]
+    fn csb_rejects_nondividing_block() {
+        csb(64, 64, 7, 8);
+    }
+}

@@ -1,0 +1,253 @@
+//! The compression-format exploration space (paper Definitions 1 & 2):
+//! enumeration of compression patterns and of dimension allocations.
+//!
+//! The full space is huge (the paper reports >400k candidates for a 4096²
+//! tensor at depth ≤ 4); the adaptive engine prunes it with the
+//! complexity-based penalty, but the raw enumerators here are also used
+//! by the Fig. 6 ablation to measure the unpruned space.
+
+use super::{Axis, CompPat, Format, Level, PatternLevel, Prim};
+use crate::util::mathx::ordered_factorizations;
+
+/// Which primitives pattern enumeration draws from.
+pub const SEARCH_PRIMS: [Prim; 5] = [Prim::None, Prim::B, Prim::CP, Prim::RLE, Prim::UOP];
+
+/// Configuration of the pattern space.
+#[derive(Clone, Debug)]
+pub struct SpaceConfig {
+    /// Maximum number of levels (paper uses small depths; penalty keeps
+    /// selected formats at 2-3).
+    pub max_depth: usize,
+    /// Maximum number of levels per axis (subdimension splits).
+    pub max_splits_per_axis: usize,
+    /// Disallow size-1 levels in allocations (degenerate duplicates).
+    pub forbid_unit_levels: bool,
+}
+
+impl Default for SpaceConfig {
+    fn default() -> Self {
+        SpaceConfig { max_depth: 4, max_splits_per_axis: 2, forbid_unit_levels: true }
+    }
+}
+
+/// Is a pattern structurally sensible for a 2-D tensor?
+///
+/// Rules: both axes must appear (so allocation can cover the tensor);
+/// at least one level must compress; `UOP` needs a level *below* it to
+/// point at (it is a pointer array into child payloads); two consecutive
+/// `None` levels on the same axis are a duplicate of one.
+pub fn pattern_is_valid(pat: &CompPat) -> bool {
+    let n = pat.levels.len();
+    if n == 0 {
+        return false;
+    }
+    let has_row = pat.levels.iter().any(|l| l.axis == Axis::Row);
+    let has_col = pat.levels.iter().any(|l| l.axis == Axis::Col);
+    if !has_row || !has_col {
+        return false;
+    }
+    if pat.compressing_depth() == 0 {
+        return false;
+    }
+    if matches!(pat.levels[n - 1].prim, Prim::UOP) {
+        return false;
+    }
+    for w in pat.levels.windows(2) {
+        if w[0].prim == Prim::None && w[1].prim == Prim::None && w[0].axis == w[1].axis {
+            return false;
+        }
+    }
+    true
+}
+
+/// Enumerate all valid compression patterns up to the configured depth.
+pub fn enumerate_patterns(cfg: &SpaceConfig) -> Vec<CompPat> {
+    let mut out = Vec::new();
+    let mut stack: Vec<PatternLevel> = Vec::new();
+    fn rec(
+        cfg: &SpaceConfig,
+        stack: &mut Vec<PatternLevel>,
+        out: &mut Vec<CompPat>,
+    ) {
+        if stack.len() >= 1 {
+            let pat = CompPat { levels: stack.clone() };
+            if pattern_is_valid(&pat) {
+                out.push(pat);
+            }
+        }
+        if stack.len() == cfg.max_depth {
+            return;
+        }
+        for prim in SEARCH_PRIMS.iter() {
+            for axis in [Axis::Row, Axis::Col] {
+                let splits = stack.iter().filter(|l| l.axis == axis).count();
+                if splits >= cfg.max_splits_per_axis {
+                    continue;
+                }
+                stack.push(PatternLevel { prim: prim.clone(), axis });
+                rec(cfg, stack, out);
+                stack.pop();
+            }
+        }
+    }
+    rec(cfg, &mut stack, &mut out);
+    out
+}
+
+/// Enumerate every dimension allocation of `pat` over an `rows x cols`
+/// tensor (paper Definition 2): all ordered factorizations of each axis
+/// extent across that axis's levels.
+pub fn enumerate_allocations(
+    pat: &CompPat,
+    rows: u64,
+    cols: u64,
+    cfg: &SpaceConfig,
+) -> Vec<Format> {
+    let row_slots: Vec<usize> = pat
+        .levels
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.axis == Axis::Row)
+        .map(|(i, _)| i)
+        .collect();
+    let col_slots: Vec<usize> = pat
+        .levels
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.axis == Axis::Col)
+        .map(|(i, _)| i)
+        .collect();
+    if row_slots.is_empty() || col_slots.is_empty() {
+        return Vec::new();
+    }
+    let row_allocs = ordered_factorizations(rows, row_slots.len());
+    let col_allocs = ordered_factorizations(cols, col_slots.len());
+    // Degenerate axes (extent 1, e.g. single-token decode activations)
+    // can only use unit levels; allow them there.
+    let ok = |alloc: &[u64], extent: u64| {
+        !cfg.forbid_unit_levels || extent == 1 || alloc.iter().all(|&s| s > 1)
+    };
+
+    let mut out = Vec::new();
+    for ra in row_allocs.iter().filter(|a| ok(a, rows)) {
+        for ca in col_allocs.iter().filter(|a| ok(a, cols)) {
+            let mut levels: Vec<Level> = pat
+                .levels
+                .iter()
+                .map(|l| Level { prim: l.prim.clone(), axis: l.axis, size: 0 })
+                .collect();
+            for (slot, &size) in row_slots.iter().zip(ra) {
+                levels[*slot].size = size;
+            }
+            for (slot, &size) in col_slots.iter().zip(ca) {
+                levels[*slot].size = size;
+            }
+            if let Ok(f) = Format::new(levels, rows, cols) {
+                out.push(f);
+            }
+        }
+    }
+    out
+}
+
+/// Size of the full (pattern x allocation) space without building it —
+/// used by the Fig. 6 ablation to report the unpruned candidate count.
+pub fn full_space_size(rows: u64, cols: u64, cfg: &SpaceConfig) -> u64 {
+    let mut total = 0u64;
+    for pat in enumerate_patterns(cfg) {
+        let kr = pat.levels.iter().filter(|l| l.axis == Axis::Row).count();
+        let kc = pat.levels.iter().filter(|l| l.axis == Axis::Col).count();
+        let count = |n: u64, k: usize| -> u64 {
+            ordered_factorizations(n, k)
+                .iter()
+                .filter(|a| !cfg.forbid_unit_levels || a.iter().all(|&s| s > 1))
+                .count() as u64
+        };
+        total += count(rows, kr) * count(cols, kc);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn patterns_all_valid_and_unique() {
+        let cfg = SpaceConfig::default();
+        let pats = enumerate_patterns(&cfg);
+        assert!(!pats.is_empty());
+        for p in &pats {
+            assert!(pattern_is_valid(p), "{p}");
+            assert!(p.depth() <= cfg.max_depth);
+        }
+        // Uniqueness.
+        let mut seen = std::collections::HashSet::new();
+        for p in &pats {
+            assert!(seen.insert(p.to_string()), "duplicate {p}");
+        }
+    }
+
+    #[test]
+    fn pattern_validity_rules() {
+        // Missing Col axis.
+        assert!(!pattern_is_valid(&CompPat::new(vec![(Prim::B, Axis::Row)])));
+        // All-None.
+        assert!(!pattern_is_valid(&CompPat::new(vec![
+            (Prim::None, Axis::Row),
+            (Prim::None, Axis::Col)
+        ])));
+        // UOP at leaf.
+        assert!(!pattern_is_valid(&CompPat::new(vec![
+            (Prim::CP, Axis::Row),
+            (Prim::UOP, Axis::Col)
+        ])));
+        // CSR shape is valid.
+        assert!(pattern_is_valid(&CompPat::new(vec![
+            (Prim::UOP, Axis::Row),
+            (Prim::CP, Axis::Col)
+        ])));
+    }
+
+    #[test]
+    fn allocations_cover_tensor() {
+        let pat = CompPat::new(vec![
+            (Prim::B, Axis::Row),
+            (Prim::B, Axis::Col),
+            (Prim::B, Axis::Col),
+        ]);
+        let cfg = SpaceConfig::default();
+        let allocs = enumerate_allocations(&pat, 8, 16, &cfg);
+        assert!(!allocs.is_empty());
+        for f in &allocs {
+            f.validate().unwrap();
+            assert_eq!(f.depth(), 3);
+        }
+        // Col split into two >1 factors of 16: (2,8),(4,4),(8,2) = 3; row 1 way.
+        assert_eq!(allocs.len(), 3);
+    }
+
+    #[test]
+    fn unit_levels_filtered() {
+        // Two Col levels over cols=4: with unit levels forbidden only the
+        // (2,2) split survives; without, (1,4)/(2,2)/(4,1) all appear.
+        let pat = CompPat::new(vec![
+            (Prim::B, Axis::Row),
+            (Prim::B, Axis::Col),
+            (Prim::B, Axis::Col),
+        ]);
+        let cfg = SpaceConfig { forbid_unit_levels: true, ..Default::default() };
+        let allocs = enumerate_allocations(&pat, 4, 4, &cfg);
+        assert_eq!(allocs.len(), 1);
+        let cfg2 = SpaceConfig { forbid_unit_levels: false, ..Default::default() };
+        assert_eq!(enumerate_allocations(&pat, 4, 4, &cfg2).len(), 3);
+    }
+
+    #[test]
+    fn space_is_large_for_4096_squared() {
+        // The paper reports >400k raw candidates at depth <= 4 for 4096².
+        let cfg = SpaceConfig::default();
+        let size = full_space_size(4096, 4096, &cfg);
+        assert!(size > 100_000, "space size {size}");
+    }
+}

@@ -1,0 +1,31 @@
+//! # SnipSnap
+//!
+//! A joint compression-format and dataflow co-optimization framework for
+//! efficient sparse LLM accelerator design — reproduction of Wu, Fang &
+//! Wang (ASP-DAC 2026) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! - [`format`] — hierarchical compression-format encoding (§III-B)
+//! - [`sparsity`] — sparsity patterns, the Sparsity Analyzer and the
+//!   computation-reduction model (§III-A, §II-B2)
+//! - [`dataflow`] — loop tiling / ordering / spatial mapping (§II-B1)
+//! - [`cost`] — energy/latency/EDP cost model over memory hierarchies
+//! - [`arch`] — hardware configurations (Table II, SCNN, DSTC)
+//! - [`workload`] — LLM and CNN workload zoo (§IV-A2)
+//! - [`engine`] — the adaptive compression engine (§III-C)
+//! - [`search`] — the progressive co-search workflow (§III-D)
+//! - [`baselines`] — Sparseloop-like and DiMO-like comparison workflows
+//! - [`runtime`] — PJRT loader/executor for the AOT XLA artifacts
+//! - [`util`] — offline substrates (PRNG, JSON, tables, property tests)
+
+pub mod arch;
+pub mod baselines;
+pub mod config;
+pub mod cost;
+pub mod dataflow;
+pub mod engine;
+pub mod format;
+pub mod runtime;
+pub mod search;
+pub mod sparsity;
+pub mod util;
+pub mod workload;

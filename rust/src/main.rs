@@ -1,0 +1,276 @@
+//! `snipsnap` — CLI launcher for the SnipSnap co-optimization framework.
+//!
+//! Subcommands:
+//!   search    co-optimize format + dataflow for a workload on an arch
+//!   formats   show the adaptive engine's top formats for one tensor
+//!   validate  run the Fig. 8 / Fig. 9 model-validation studies
+//!   xla       self-test the PJRT runtime against the AOT artifacts
+//!   list      list available arch / workload presets
+
+use anyhow::{bail, Context, Result};
+use snipsnap::config::typed::{arch_by_name, metric_by_name, workload_by_name};
+use snipsnap::engine::{search_formats, EngineConfig};
+use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig};
+use snipsnap::sparsity::SparsityPattern;
+use snipsnap::util::table::{fmt_f, fmt_pct, Table};
+
+fn usage() -> ! {
+    eprintln!(
+        "snipsnap — joint compression-format & dataflow co-optimization\n\
+         \n\
+         USAGE:\n\
+           snipsnap search   [--config F.toml] [--arch A] [--workload W]\n\
+                             [--metric M] [--mode search|fixed] [--max-mappings N]\n\
+           snipsnap formats  --rows R --cols C --density D [--gamma G] [--depth N]\n\
+           snipsnap validate [--study scnn|dstc]\n\
+           snipsnap xla      [--artifacts DIR]\n\
+           snipsnap list\n"
+    );
+    std::process::exit(2);
+}
+
+/// Tiny argv parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = &argv[i];
+            if !k.starts_with("--") {
+                bail!("unexpected argument '{k}'");
+            }
+            let key = k.trim_start_matches("--").to_string();
+            let val = argv
+                .get(i + 1)
+                .with_context(|| format!("--{key} needs a value"))?
+                .clone();
+            flags.insert(key, val);
+            i += 2;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| v.parse::<f64>().with_context(|| format!("--{key}")))
+            .transpose()
+    }
+
+    fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.get(key)
+            .map(|v| v.parse::<u64>().with_context(|| format!("--{key}")))
+            .transpose()
+    }
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let mut cfg;
+    let arch;
+    let workload;
+    if let Some(path) = args.get("config") {
+        let src = std::fs::read_to_string(path).with_context(|| path.to_string())?;
+        let run = snipsnap::config::load_run_config(&src)?;
+        arch = run.arch;
+        workload = run.workload;
+        cfg = run.search;
+    } else {
+        arch = arch_by_name(args.get("arch").unwrap_or("arch3"))?;
+        workload = workload_by_name(args.get("workload").unwrap_or("opt-125m"))?;
+        cfg = SearchConfig::default();
+    }
+    if let Some(m) = args.get("metric") {
+        cfg.metric = metric_by_name(m)?;
+    }
+    if let Some(mode) = args.get("mode") {
+        cfg.mode = match mode {
+            "search" => FormatMode::Search,
+            "fixed" => FormatMode::Fixed,
+            other => bail!("unknown mode '{other}'"),
+        };
+    }
+    if let Some(n) = args.get_u64("max-mappings")? {
+        cfg.mapper.max_candidates = n as usize;
+    }
+
+    eprintln!("arch: {}", arch.name);
+    eprintln!("workload: {} ({} ops)", workload.name, workload.op_count());
+    let r = cosearch_workload(&arch, &workload, &cfg);
+
+    let mut t = Table::new(vec![
+        "op", "I format", "W format", "energy (pJ)", "cycles",
+    ])
+    .with_title(format!(
+        "SnipSnap co-search: {} on {} [{:?}, {:?}]",
+        workload.name, arch.name, cfg.metric, cfg.mode
+    ));
+    for d in &r.designs {
+        t.add_row(vec![
+            d.op_name.clone(),
+            d.input_format.to_string(),
+            d.weight_format.to_string(),
+            fmt_f(d.report.total_energy_pj()),
+            fmt_f(d.report.latency_cycles()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "totals: energy {} pJ | memory energy {} pJ | cycles {} | EDP {}",
+        fmt_f(r.total_energy_pj()),
+        fmt_f(r.memory_energy_pj()),
+        fmt_f(r.total_cycles()),
+        fmt_f(r.edp()),
+    );
+    println!(
+        "search: {} cost-model evaluations in {:.2}s",
+        r.evaluations,
+        r.elapsed.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_formats(args: &Args) -> Result<()> {
+    let rows = args.get_u64("rows")?.context("--rows required")?;
+    let cols = args.get_u64("cols")?.context("--cols required")?;
+    let density = args.get_f64("density")?.context("--density required")?;
+    let mut cfg = EngineConfig::default();
+    if let Some(g) = args.get_f64("gamma")? {
+        cfg.gamma = g;
+    }
+    if let Some(d) = args.get_u64("depth")? {
+        cfg.space.max_depth = d as usize;
+    }
+    let pattern = SparsityPattern::Unstructured { density };
+    let (top, stats) = search_formats(rows, cols, &pattern, None, &cfg);
+    let full = snipsnap::format::space::full_space_size(rows, cols, &cfg.space);
+    let mut t = Table::new(vec!["format", "total bits", "ratio", "metadata", "payload"])
+        .with_title(format!(
+            "Top formats for {rows}x{cols} @ density {density} (space {full} -> evaluated {})",
+            stats.evaluated
+        ));
+    for s in &top {
+        t.add_row(vec![
+            s.format.to_string(),
+            fmt_f(s.cost.total_bits()),
+            fmt_pct(s.cost.ratio()),
+            fmt_f(s.cost.metadata_bits),
+            fmt_f(s.cost.payload_bits),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let study = args.get("study").unwrap_or("scnn");
+    match study {
+        "scnn" => {
+            let (mre, rows) = snipsnap::arch::validation::scnn_energy_validation();
+            let mut t = Table::new(vec!["layer", "case", "reported", "modeled", "rel err"])
+                .with_title("Fig. 8 — SCNN energy validation");
+            for r in rows {
+                t.add_row(vec![
+                    r.layer.to_string(),
+                    r.case.to_string(),
+                    fmt_f(r.reported),
+                    fmt_f(r.modeled),
+                    fmt_pct(r.rel_err),
+                ]);
+            }
+            println!("{}", t.render());
+            println!("mean relative error: {}", fmt_pct(mre));
+        }
+        "dstc" => {
+            let (mre, rows) = snipsnap::arch::validation::dstc_latency_validation();
+            let mut t = Table::new(vec!["density", "reported", "modeled", "rel err"])
+                .with_title("Fig. 9 — DSTC latency validation (4096x4096 MatMul)");
+            for r in rows {
+                t.add_row(vec![
+                    format!("{:.2}", r.density),
+                    fmt_f(r.reported),
+                    fmt_f(r.modeled),
+                    fmt_pct(r.rel_err),
+                ]);
+            }
+            println!("{}", t.render());
+            println!("mean relative error: {}", fmt_pct(mre));
+        }
+        other => bail!("unknown study '{other}' (scnn|dstc)"),
+    }
+    Ok(())
+}
+
+fn cmd_xla(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(snipsnap::runtime::Runtime::default_dir);
+    let mut rt = snipsnap::runtime::Runtime::load(&dir)?;
+    println!("artifacts: {}", dir.display());
+    for a in rt.manifest.artifacts.clone() {
+        print!("  {} ... ", a.name);
+        // Execute with zero inputs of the right shapes.
+        let fbufs: Vec<Vec<f32>> = a.inputs.iter().map(|s| vec![0.0; s.elements()]).collect();
+        let ibufs: Vec<Vec<i32>> = a.inputs.iter().map(|s| vec![0; s.elements()]).collect();
+        let inputs: Vec<snipsnap::runtime::InputBuf> = a
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                if s.dtype == "i32" {
+                    snipsnap::runtime::InputBuf::I32(&ibufs[i])
+                } else {
+                    snipsnap::runtime::InputBuf::F32(&fbufs[i])
+                }
+            })
+            .collect();
+        let outs = rt.exec(&a.name, &inputs)?;
+        println!("ok ({} outputs)", outs.len());
+    }
+    println!("xla runtime self-test passed");
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("arch presets:    arch1 arch2 arch3 arch4 scnn dstc");
+    println!(
+        "workload presets: llama2-7b llama2-13b opt-125m opt-6.7b opt-13b opt-30b \
+         bert-base alexnet vgg-16 resnet-18"
+    );
+    println!("metrics:         energy memory-energy latency edp");
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else { usage() };
+    let args = match Args::parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+        }
+    };
+    let result = match cmd.as_str() {
+        "search" => cmd_search(&args),
+        "formats" => cmd_formats(&args),
+        "validate" => cmd_validate(&args),
+        "xla" => cmd_xla(&args),
+        "list" => cmd_list(),
+        _ => {
+            eprintln!("unknown subcommand '{cmd}'");
+            usage();
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,289 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! Interchange is HLO **text** — `HloModuleProto::from_text_file` +
+//! `XlaComputation::from_proto` — because jax >= 0.5 serializes protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects (see
+//! /opt/xla-example/README.md).  One compiled executable per model
+//! variant, compiled lazily and cached.
+
+pub mod stats;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one artifact I/O slot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Manifest entry for one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub params: HashMap<String, f64>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn parse_iospec(j: &Json) -> Result<IoSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| anyhow!("missing shape"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = j
+        .get("dtype")
+        .and_then(|d| d.as_str())
+        .ok_or_else(|| anyhow!("missing dtype"))?
+        .to_string();
+    Ok(IoSpec { shape, dtype })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json")?;
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("artifact missing file"))?
+                .to_string();
+            let inputs = a
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| anyhow!("artifact missing inputs"))?
+                .iter()
+                .map(parse_iospec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| anyhow!("artifact missing outputs"))?
+                .iter()
+                .map(parse_iospec)
+                .collect::<Result<Vec<_>>>()?;
+            let mut params = HashMap::new();
+            if let Some(Json::Obj(m)) = a.get("params") {
+                for (k, v) in m {
+                    if let Some(x) = v.as_f64() {
+                        params.insert(k.clone(), x);
+                    }
+                }
+            }
+            artifacts.push(ArtifactMeta { name, file, inputs, outputs, params });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// The PJRT runtime: CPU client + lazily-compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Default artifacts directory: `$SNIPSNAP_ARTIFACTS` or `artifacts/`
+    /// relative to the workspace root.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("SNIPSNAP_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        // Tests run from the workspace root; binaries may not.
+        let candidates = [
+            PathBuf::from("artifacts"),
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        ];
+        for c in &candidates {
+            if c.join("manifest.json").exists() {
+                return c.clone();
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let mtext = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let manifest = Manifest::parse(&mtext)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, cache: HashMap::new() })
+    }
+
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&Self::default_dir())
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact with f32/i32 input buffers (shapes validated
+    /// against the manifest).  Returns the flattened f32 outputs.
+    pub fn exec(&mut self, name: &str, inputs: &[InputBuf<'_>]) -> Result<Vec<Vec<f32>>> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (buf, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if buf.len() != spec.elements() {
+                bail!(
+                    "{name} input {i}: expected {} elements, got {}",
+                    spec.elements(),
+                    buf.len()
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (buf, spec.dtype.as_str()) {
+                (InputBuf::F32(v), "f32") => {
+                    let l = xla::Literal::vec1(v);
+                    if dims.is_empty() {
+                        l.reshape(&[]).map_err(|e| anyhow!("{e:?}"))?
+                    } else {
+                        l.reshape(&dims).map_err(|e| anyhow!("{e:?}"))?
+                    }
+                }
+                (InputBuf::I32(v), "i32") => {
+                    let l = xla::Literal::vec1(v);
+                    if dims.is_empty() {
+                        l.reshape(&[]).map_err(|e| anyhow!("{e:?}"))?
+                    } else {
+                        l.reshape(&dims).map_err(|e| anyhow!("{e:?}"))?
+                    }
+                }
+                (_, dt) => bail!("{name} input {i}: dtype mismatch (manifest says {dt})"),
+            };
+            literals.push(lit);
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        let parts = result.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                meta.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?);
+        }
+        Ok(out)
+    }
+}
+
+/// Typed input view for [`Runtime::exec`].
+pub enum InputBuf<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl InputBuf<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            InputBuf::F32(v) => v.len(),
+            InputBuf::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let src = r#"{"artifacts":[{"name":"m","file":"m.hlo.txt",
+            "inputs":[{"shape":[4,4],"dtype":"f32"}],
+            "outputs":[{"shape":[],"dtype":"f32"}],
+            "params":{"rows":4}}]}"#;
+        let m = Manifest::parse(src).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("m").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![4, 4]);
+        assert_eq!(a.inputs[0].elements(), 16);
+        assert_eq!(a.outputs[0].elements(), 1); // scalar
+        assert_eq!(a.params["rows"], 4.0);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts":[{"name":"x"}]}"#).is_err());
+    }
+}

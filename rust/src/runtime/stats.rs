@@ -1,0 +1,249 @@
+//! Empirical Sparsity Analyzer: XLA-accelerated occupancy statistics.
+//!
+//! One `sparsity_stats` call per tensor produces the base block lattice
+//! (per-16x16-tile nnz, via the L1 Pallas kernel), per-row and per-column
+//! counts.  [`empirical_ne`] aggregates those into non-empty node counts
+//! for any format whose boundaries align with the lattice (whole-block
+//! regions), full rows/columns or single elements — exact in all those
+//! cases — and falls back to the analytical iid estimate (at the
+//! *measured* density) for sub-block boundaries.
+
+use super::{InputBuf, Runtime};
+use crate::format::Format;
+use crate::sparsity::analyzer::{cost_from_ne, FormatCost};
+use crate::sparsity::exact::DenseMask;
+use crate::util::mathx::p_nonempty_iid;
+use anyhow::{anyhow, Result};
+
+/// Occupancy statistics of one concrete tensor.
+#[derive(Clone, Debug)]
+pub struct TensorStats {
+    pub rows: u64,
+    pub cols: u64,
+    /// Lattice tile shape (e.g. 16x16).
+    pub block_r: u64,
+    pub block_c: u64,
+    /// Per-tile nnz, row-major (rows/block_r x cols/block_c).
+    pub block_counts: Vec<f32>,
+    pub row_counts: Vec<f32>,
+    pub col_counts: Vec<f32>,
+    pub total_nnz: f64,
+}
+
+impl TensorStats {
+    pub fn density(&self) -> f64 {
+        self.total_nnz / (self.rows * self.cols) as f64
+    }
+
+    fn lattice_dims(&self) -> (u64, u64) {
+        (self.rows / self.block_r, self.cols / self.block_c)
+    }
+
+    /// Count of non-empty `gr x gc` regions (gr, gc multiples of the
+    /// block shape): coarsen the lattice.
+    fn nonempty_regions(&self, gr: u64, gc: u64) -> f64 {
+        let (lr, lc) = self.lattice_dims();
+        let sr = gr / self.block_r; // lattice tiles per region row
+        let sc = gc / self.block_c;
+        debug_assert!(sr >= 1 && sc >= 1);
+        let mut count = 0u64;
+        for r0 in (0..lr).step_by(sr as usize) {
+            'cell: for c0 in (0..lc).step_by(sc as usize) {
+                for r in r0..r0 + sr {
+                    for c in c0..c0 + sc {
+                        if self.block_counts[(r * lc + c) as usize] > 0.0 {
+                            count += 1;
+                            continue 'cell;
+                        }
+                    }
+                }
+            }
+        }
+        count as f64
+    }
+}
+
+/// Artifact name for a tensor shape, if one is shipped.
+pub fn stats_artifact_for(rows: u64, cols: u64) -> Option<(&'static str, u64)> {
+    match (rows, cols) {
+        (512, 512) => Some(("sparsity_stats_512x512_b16", 16)),
+        (1024, 1024) => Some(("sparsity_stats_1024x1024_b16", 16)),
+        (2048, 2048) => Some(("sparsity_stats_2048x2048_b32", 32)),
+        _ => None,
+    }
+}
+
+/// Run the XLA sparsity analyzer on a concrete mask.
+pub fn analyze_mask(rt: &mut Runtime, mask: &DenseMask) -> Result<TensorStats> {
+    let (name, block) = stats_artifact_for(mask.rows, mask.cols)
+        .ok_or_else(|| anyhow!("no sparsity_stats artifact for {}x{}", mask.rows, mask.cols))?;
+    let data = mask.to_f32();
+    let outs = rt.exec(name, &[InputBuf::F32(&data)])?;
+    let [block_counts, row_counts, col_counts, total]: [Vec<f32>; 4] = outs
+        .try_into()
+        .map_err(|_| anyhow!("unexpected output arity"))?;
+    Ok(TensorStats {
+        rows: mask.rows,
+        cols: mask.cols,
+        block_r: block,
+        block_c: block,
+        block_counts,
+        row_counts,
+        col_counts,
+        total_nnz: total[0] as f64,
+    })
+}
+
+/// Empirical non-empty counts per boundary of `format`.
+///
+/// Exactness by boundary region shape (gr x gc):
+/// - whole-lattice-block regions (block_r | gr, block_c | gc): exact;
+/// - full-row fibers (gr = 1, gc = cols): exact via row counts;
+/// - full-col fibers (gr = rows, gc = 1): exact via col counts;
+/// - single elements (1 x 1): exact (= total nnz);
+/// - otherwise: iid estimate at the measured density.
+pub fn empirical_ne(format: &Format, stats: &TensorStats) -> Vec<f64> {
+    assert_eq!((format.rows, format.cols), (stats.rows, stats.cols));
+    let density = stats.density();
+    format
+        .boundaries()
+        .iter()
+        .map(|b| {
+            let (gr, gc) = (b.region_rows, b.region_cols);
+            if gr == 0 || gc == 0 {
+                return 0.0;
+            }
+            if gr == 1 && gc == 1 {
+                return stats.total_nnz;
+            }
+            if gr == 1 && gc == stats.cols {
+                return stats.row_counts.iter().filter(|&&c| c > 0.0).count() as f64;
+            }
+            if gr == stats.rows && gc == 1 {
+                return stats.col_counts.iter().filter(|&&c| c > 0.0).count() as f64;
+            }
+            if gr % stats.block_r == 0 && gc % stats.block_c == 0 {
+                return stats.nonempty_regions(gr, gc);
+            }
+            // Fallback: iid at measured density.
+            b.nodes * p_nonempty_iid(density, (gr * gc) as f64)
+        })
+        .collect()
+}
+
+/// Empirical format cost from XLA statistics.
+pub fn empirical_cost(format: &Format, stats: &TensorStats, data_bits: u32) -> FormatCost {
+    cost_from_ne(format, &empirical_ne(format, stats), data_bits)
+}
+
+/// Pure-Rust fallback analyzer (no XLA): identical statistics computed
+/// from the mask directly.  Used for cross-validation and when artifacts
+/// are unavailable.
+pub fn analyze_mask_native(mask: &DenseMask, block: u64) -> TensorStats {
+    let (lr, lc) = (mask.rows / block, mask.cols / block);
+    let mut block_counts = vec![0f32; (lr * lc) as usize];
+    let mut row_counts = vec![0f32; mask.rows as usize];
+    let mut col_counts = vec![0f32; mask.cols as usize];
+    let mut total = 0f64;
+    for r in 0..mask.rows {
+        for c in 0..mask.cols {
+            if mask.get(r, c) {
+                block_counts[((r / block) * lc + c / block) as usize] += 1.0;
+                row_counts[r as usize] += 1.0;
+                col_counts[c as usize] += 1.0;
+                total += 1.0;
+            }
+        }
+    }
+    TensorStats {
+        rows: mask.rows,
+        cols: mask.cols,
+        block_r: block,
+        block_c: block,
+        block_counts,
+        row_counts,
+        col_counts,
+        total_nnz: total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::named;
+    use crate::sparsity::exact::exact_ne;
+    use crate::sparsity::sample::sample_mask;
+    use crate::sparsity::SparsityPattern;
+
+    #[test]
+    fn native_stats_consistency() {
+        let mask = sample_mask(
+            &SparsityPattern::Unstructured { density: 0.3 },
+            64,
+            64,
+            5,
+        );
+        let st = analyze_mask_native(&mask, 16);
+        assert_eq!(st.total_nnz, mask.nnz() as f64);
+        assert_eq!(
+            st.block_counts.iter().map(|&c| c as f64).sum::<f64>(),
+            st.total_nnz
+        );
+        assert!((st.density() - mask.density()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empirical_ne_exact_for_aligned_formats() {
+        let mask = sample_mask(
+            &SparsityPattern::Block { br: 16, bc: 16, block_density: 0.3 },
+            64,
+            64,
+            9,
+        );
+        let st = analyze_mask_native(&mask, 16);
+        // CSB with 16x16 blocks: every boundary is lattice-aligned, a full
+        // fiber, or an element — all exact.
+        let f = named::csb(64, 64, 16, 16);
+        let emp = empirical_ne(&f, &st);
+        let exact = exact_ne(&f, &mask);
+        for (i, (e, x)) in emp.iter().zip(&exact).enumerate() {
+            // Boundaries 0..=2 and the element boundary are exact;
+            // the within-block row boundary (region 1 x 16) is estimated.
+            if i != 3 {
+                assert_eq!(e, x, "boundary {i}: {emp:?} vs {exact:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn empirical_ne_exact_for_csr_fibers() {
+        let mask = sample_mask(
+            &SparsityPattern::Unstructured { density: 0.05 },
+            64,
+            64,
+            11,
+        );
+        let st = analyze_mask_native(&mask, 16);
+        let f = named::csr(64, 64);
+        let emp = empirical_ne(&f, &st);
+        let exact = exact_ne(&f, &mask);
+        assert_eq!(emp, exact);
+    }
+
+    #[test]
+    fn empirical_cost_close_to_exact_generally() {
+        let mask = sample_mask(
+            &SparsityPattern::Unstructured { density: 0.2 },
+            64,
+            64,
+            13,
+        );
+        let st = analyze_mask_native(&mask, 16);
+        for f in [named::bitmap(64, 64), named::coo(64, 64), named::csb(64, 64, 16, 16)] {
+            let emp = empirical_cost(&f, &st, 16).total_bits();
+            let exact = crate::sparsity::exact::exact_cost(&f, &mask, 16).total_bits();
+            let rel = (emp - exact).abs() / exact;
+            assert!(rel < 0.05, "{f}: emp {emp} vs exact {exact}");
+        }
+    }
+}

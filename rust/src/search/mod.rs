@@ -1,0 +1,140 @@
+//! The Progressive Co-Search Workflow (paper §III-D, Fig. 7).
+//!
+//! Per operator, the workflow interleaves dataflow and format search:
+//!
+//! 1. **Upfront estimation of computation reduction** (§III-D1): the
+//!    reduction strategy's cycle/energy fractions are modeled *before*
+//!    dataflow generation (inside every evaluation — never as a post-hoc
+//!    correction pass).
+//! 2. **Format generation**: the adaptive compression engine proposes
+//!    top-k format pairs for (I, W), steered by tile hints from a quick
+//!    dense probe mapping (efficiency-oriented allocation, §III-C2).
+//! 3. **Compression-aware loop allocation** (§III-D2): tiling protos are
+//!    legality-filtered against the *compressed* operand footprints
+//!    before loop-order assignment — illegal dataflows are never
+//!    generated, so no repair iterations are needed.
+//! 4. **Greedy loop ordering**: per memory level (outermost first), pick
+//!    the order minimizing the optimization metric given outer choices —
+//!    boundary-`b` traffic is independent of deeper levels' orders, so
+//!    the greedy pass is locally exact per boundary.
+//!
+//! Contrast with the Sparseloop-style stepwise workflow in
+//! [`crate::baselines::sparseloop_like`].
+
+pub mod progressive;
+
+use crate::arch::Accelerator;
+use crate::cost::{CostReport, Metric};
+use crate::dataflow::Mapping;
+use crate::engine::EngineConfig;
+use crate::format::Format;
+use std::time::Duration;
+
+pub use progressive::{
+    cosearch_op, cosearch_workload, evaluate_with_formats, probe_tile_hints,
+};
+
+/// Format selection mode (Table I columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FormatMode {
+    /// Use the accelerator's preset native format (Table I "Fixed").
+    Fixed,
+    /// Run the adaptive compression engine (Table I "Search").
+    Search,
+}
+
+/// Co-search configuration.
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    pub metric: Metric,
+    pub mode: FormatMode,
+    pub engine: EngineConfig,
+    pub mapper: crate::dataflow::mapper::MapperConfig,
+    /// Format pairs receiving a full mapping search (the rest are scored
+    /// on the winner's mapping).
+    pub pairs_to_map: usize,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            metric: Metric::Energy,
+            mode: FormatMode::Search,
+            engine: EngineConfig::default(),
+            mapper: crate::dataflow::mapper::MapperConfig {
+                max_candidates: 40_000,
+                ..Default::default()
+            },
+            pairs_to_map: 2,
+        }
+    }
+}
+
+/// The chosen design for one operator.
+#[derive(Clone, Debug)]
+pub struct OpDesign {
+    pub op_name: String,
+    pub input_format: Format,
+    pub weight_format: Format,
+    pub mapping: Mapping,
+    pub report: CostReport,
+    pub metric_value: f64,
+    pub count: u64,
+}
+
+/// Aggregated result over a workload.
+#[derive(Clone, Debug)]
+pub struct WorkloadResult {
+    pub workload: String,
+    pub designs: Vec<OpDesign>,
+    pub elapsed: Duration,
+    /// Cost-model evaluations performed (the exploration-effort metric).
+    pub evaluations: u64,
+}
+
+impl WorkloadResult {
+    /// Total energy over all op instances (pJ).
+    pub fn total_energy_pj(&self) -> f64 {
+        self.designs
+            .iter()
+            .map(|d| d.report.total_energy_pj() * d.count as f64)
+            .sum()
+    }
+
+    /// Total memory energy over all op instances (pJ) — the Fig. 10 metric.
+    pub fn memory_energy_pj(&self) -> f64 {
+        self.designs
+            .iter()
+            .map(|d| d.report.memory_energy_pj() * d.count as f64)
+            .sum()
+    }
+
+    /// Total latency in cycles (ops execute sequentially).
+    pub fn total_cycles(&self) -> f64 {
+        self.designs
+            .iter()
+            .map(|d| d.report.latency_cycles() * d.count as f64)
+            .sum()
+    }
+
+    /// Total EDP.
+    pub fn edp(&self) -> f64 {
+        self.total_energy_pj() * self.total_cycles()
+    }
+
+    pub fn metric_total(&self, metric: Metric) -> f64 {
+        match metric {
+            Metric::Energy => self.total_energy_pj(),
+            Metric::MemoryEnergy => self.memory_energy_pj(),
+            Metric::Latency => self.total_cycles(),
+            Metric::Edp => self.edp(),
+        }
+    }
+}
+
+/// Convenience: run the co-search with the accelerator's native format
+/// (Fixed mode) — used by benches and the Sparseloop comparison.
+pub fn fixed_format_config(arch: &Accelerator) -> SearchConfig {
+    let _ = arch;
+    SearchConfig { mode: FormatMode::Fixed, ..Default::default() }
+}

@@ -1,0 +1,275 @@
+//! The Sparsity Analyzer's costing core (paper §III-A Evaluator).
+//!
+//! [`cost_from_ne`] turns a format plus a vector of non-empty node counts
+//! (one per level boundary) into metadata/payload bit counts.  The
+//! analytical provider [`expected_ne`] computes those counts from a
+//! statistical [`SparsityPattern`]; exact and empirical providers live in
+//! [`super::exact`] and `crate::runtime::stats`.
+
+use super::SparsityPattern;
+use crate::format::{Format, Prim};
+
+/// Bit cost of a compression format applied to one tensor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FormatCost {
+    pub metadata_bits: f64,
+    pub payload_bits: f64,
+    /// Dense storage footprint of the same tensor, for the ratio.
+    pub dense_bits: f64,
+}
+
+impl FormatCost {
+    pub fn total_bits(&self) -> f64 {
+        self.metadata_bits + self.payload_bits
+    }
+
+    /// Compressed / dense size ratio (< 1.0 means compression wins).
+    pub fn ratio(&self) -> f64 {
+        self.total_bits() / self.dense_bits
+    }
+}
+
+/// Expected non-empty node counts per boundary (length = depth + 1) for a
+/// statistical sparsity pattern.  `ne[0]` is the root (1 if the tensor is
+/// non-empty at all), `ne[i]` the expected count after fixing levels 1..=i.
+pub fn expected_ne(format: &Format, pattern: &SparsityPattern) -> Vec<f64> {
+    format
+        .boundaries()
+        .iter()
+        .map(|b| b.nodes * pattern.p_region_nonempty(b.region_rows, b.region_cols))
+        .collect()
+}
+
+/// Per-level operand arrays for the shared costing formulas — also the
+/// exact payload of one XLA `format_cost_batch` candidate row.
+#[derive(Clone, Debug)]
+pub struct CostOperands {
+    /// Active (materialized) parent count per level.
+    pub parents: Vec<f64>,
+    /// Non-empty child count per level.
+    pub children: Vec<f64>,
+    /// Fanout per level.
+    pub fanouts: Vec<f64>,
+    /// Metadata word width per level (bits).
+    pub widths: Vec<f64>,
+    /// Primitive kind id per level (shared with python/compile/model.py).
+    pub kinds: Vec<i32>,
+    /// Active leaves (payload element count).
+    pub leaf_count: f64,
+}
+
+/// Derive the costing operands from a non-empty-count vector.
+///
+/// Active counts follow the recurrence: `A_0 = 1`; a compressing level
+/// keeps only non-empty children (`A_i = NE_i` — a non-empty node's
+/// ancestors are all non-empty, hence kept everywhere above); a `None`
+/// level materializes all children (`A_i = A_{i-1} * size_i`).
+pub fn operands_from_ne(format: &Format, ne: &[f64]) -> CostOperands {
+    let depth = format.depth();
+    assert_eq!(ne.len(), depth + 1, "ne must have depth+1 entries");
+    let mut parents = Vec::with_capacity(depth);
+    let mut children = Vec::with_capacity(depth);
+    let mut fanouts = Vec::with_capacity(depth);
+    let mut widths = Vec::with_capacity(depth);
+    let mut kinds = Vec::with_capacity(depth);
+    let mut active = 1.0f64;
+    for (i, l) in format.levels.iter().enumerate() {
+        parents.push(active);
+        fanouts.push(l.size as f64);
+        widths.push(format.level_width_bits(i) as f64);
+        // The XLA scorer has no delimiter flag; an undelimited CP level
+        // shares RLE's (children + parents) * width formula, so pack it
+        // with the RLE kind id.
+        let kind = if matches!(l.prim, Prim::CP) && !level_is_delimited(format, i) {
+            Prim::RLE.kind_id()
+        } else {
+            l.prim.kind_id()
+        };
+        kinds.push(kind);
+        if l.prim.compresses() {
+            // NE can only shrink relative to the active frontier.
+            active = ne[i + 1].min(active * l.size as f64);
+        } else {
+            active *= l.size as f64;
+        }
+        children.push(active);
+    }
+    CostOperands { parents, children, fanouts, widths, kinds, leaf_count: active }
+}
+
+/// Metadata bits of one level given its operands — the single source of
+/// truth for primitive cost formulas (mirrored by the XLA scorer).
+///
+/// `delimited` reflects whether the enclosing level already delimits this
+/// level's per-parent entry lists.  `CP` is the only primitive whose
+/// encoding is a *variable-length* coordinate list: unless a `UOP` level
+/// sits directly above (its offset array gives each parent's list
+/// extent), every active parent needs a child-count field — without it
+/// the stream is undecodable.  `B` (fixed bitmap), `UOP` (fixed-size
+/// offset array) and `RLE` (terminator included in its formula) are
+/// self-delimiting.
+pub fn level_metadata_bits(
+    prim: &Prim,
+    parents: f64,
+    children: f64,
+    fanout: f64,
+    width: f64,
+    delimited: bool,
+) -> f64 {
+    match prim {
+        Prim::None => 0.0,
+        Prim::B => parents * fanout,
+        Prim::CP => {
+            let count_field = if delimited { 0.0 } else { parents * width };
+            children * width + count_field
+        }
+        Prim::RLE => (children + parents) * width,
+        Prim::UOP => parents * (fanout + 1.0) * width,
+        Prim::Custom { bits_per_parent, bits_per_child, .. } => {
+            parents * bits_per_parent + children * bits_per_child
+        }
+    }
+}
+
+/// Is level `i` of `format` delimited by its enclosing level?
+pub fn level_is_delimited(format: &Format, i: usize) -> bool {
+    i > 0 && matches!(format.levels[i - 1].prim, Prim::UOP)
+}
+
+/// Full format cost from a non-empty-count vector.
+pub fn cost_from_ne(format: &Format, ne: &[f64], data_bits: u32) -> FormatCost {
+    let ops = operands_from_ne(format, ne);
+    let mut metadata = 0.0;
+    for (i, l) in format.levels.iter().enumerate() {
+        metadata += level_metadata_bits(
+            &l.prim,
+            ops.parents[i],
+            ops.children[i],
+            ops.fanouts[i],
+            ops.widths[i],
+            level_is_delimited(format, i),
+        );
+    }
+    FormatCost {
+        metadata_bits: metadata,
+        payload_bits: ops.leaf_count * data_bits as f64,
+        dense_bits: (format.rows * format.cols) as f64 * data_bits as f64,
+    }
+}
+
+/// Analytical format cost for a statistical pattern — the DSE hot path.
+pub fn analytical_cost(
+    format: &Format,
+    pattern: &SparsityPattern,
+    data_bits: u32,
+) -> FormatCost {
+    cost_from_ne(format, &expected_ne(format, pattern), data_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::named;
+    use crate::sparsity::SparsityPattern;
+
+    const BITS: u32 = 16;
+
+    #[test]
+    fn dense_pattern_bitmap_cost_is_exact() {
+        // 8x8 dense tensor under a bitmap: every bit set, payload full.
+        let f = named::bitmap(8, 8);
+        let c = analytical_cost(&f, &SparsityPattern::Dense, BITS);
+        // None(M,8): no metadata; B(N,8): 8 rows active x 8 bits.
+        assert_eq!(c.metadata_bits, 64.0);
+        assert_eq!(c.payload_bits, 64.0 * BITS as f64);
+        assert!(c.ratio() > 1.0); // bitmap on dense data costs extra
+    }
+
+    #[test]
+    fn bitmap_payload_tracks_density() {
+        let f = named::bitmap(64, 64);
+        let d = SparsityPattern::Unstructured { density: 0.25 };
+        let c = analytical_cost(&f, &d, BITS);
+        // Metadata fixed: 64 rows x 64 bits.
+        assert_eq!(c.metadata_bits, 64.0 * 64.0);
+        // Payload ~ expected nnz x 16.
+        let expect = 64.0 * 64.0 * 0.25 * BITS as f64;
+        assert!((c.payload_bits - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn csr_cheaper_than_bitmap_at_high_sparsity() {
+        let (r, c) = (256, 256);
+        let sparse = SparsityPattern::Unstructured { density: 0.02 };
+        let bm = analytical_cost(&named::bitmap(r, c), &sparse, BITS);
+        let csr = analytical_cost(&named::csr(r, c), &sparse, BITS);
+        assert!(
+            csr.total_bits() < bm.total_bits(),
+            "csr {} vs bitmap {}",
+            csr.total_bits(),
+            bm.total_bits()
+        );
+    }
+
+    #[test]
+    fn bitmap_beats_coo_at_moderate_sparsity() {
+        let (r, c) = (256, 256);
+        let moderate = SparsityPattern::Unstructured { density: 0.5 };
+        let bm = analytical_cost(&named::bitmap(r, c), &moderate, BITS);
+        let coo = analytical_cost(&named::coo(r, c), &moderate, BITS);
+        assert!(bm.total_bits() < coo.total_bits());
+    }
+
+    #[test]
+    fn empty_tensor_costs_only_fixed_metadata() {
+        let f = named::csr(64, 64);
+        let c = analytical_cost(&f, &SparsityPattern::Unstructured { density: 0.0 }, BITS);
+        assert_eq!(c.payload_bits, 0.0);
+        // UOP pointer array survives (static structure), CP entries vanish.
+        assert!(c.metadata_bits > 0.0);
+    }
+
+    #[test]
+    fn hierarchical_bitmap_wins_on_block_sparsity() {
+        // The Fig. 5 phenomenon: with whole blocks empty, a coarse bitmap
+        // level prunes fine-level bitmap storage.
+        let (r, c) = (64, 64);
+        let pat = SparsityPattern::Block { br: 8, bc: 8, block_density: 0.2 };
+        let flat = analytical_cost(&named::bitmap(r, c), &pat, BITS);
+        let hier = analytical_cost(&named::csb(r, c, 8, 8), &pat, BITS);
+        assert!(
+            hier.total_bits() < flat.total_bits(),
+            "hier {} vs flat {}",
+            hier.total_bits(),
+            flat.total_bits()
+        );
+    }
+
+    #[test]
+    fn operands_respect_none_levels() {
+        // B(M,4)-None(N,8): the None level materializes all 8 children of
+        // every non-empty row.
+        let f = crate::format::Format::new(
+            vec![
+                crate::format::Level { prim: Prim::B, axis: crate::format::Axis::Row, size: 4 },
+                crate::format::Level { prim: Prim::None, axis: crate::format::Axis::Col, size: 8 },
+            ],
+            4,
+            8,
+        )
+        .unwrap();
+        let ne = expected_ne(&f, &SparsityPattern::Unstructured { density: 0.1 });
+        let ops = operands_from_ne(&f, &ne);
+        // Leaves = non-empty rows x 8 (dense within row).
+        assert!((ops.leaf_count - ne[1] * 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ne_is_monotone_down_the_tree() {
+        let f = named::csb(64, 64, 8, 8);
+        let ne = expected_ne(&f, &SparsityPattern::Unstructured { density: 0.3 });
+        for w in ne.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "ne not monotone: {ne:?}");
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Sparsity modeling: statistical patterns, the Sparsity Analyzer's
+//! analytical expectations, exact counting on concrete masks, synthetic
+//! tensor sampling and the computation-reduction model.
+//!
+//! One shared costing core ([`analyzer::cost_from_ne`]) consumes a vector
+//! of non-empty node counts per format boundary; three providers feed it:
+//! the analytical expectation (this module), exact counts from a dense
+//! mask ([`exact`]) and empirical counts aggregated from the XLA block
+//! lattice (`crate::runtime::stats`).
+
+pub mod analyzer;
+pub mod exact;
+pub mod reduction;
+pub mod sample;
+
+use crate::util::mathx::{ln_choose, p_nonempty_iid};
+
+/// Statistical sparsity pattern of one tensor operand.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SparsityPattern {
+    /// iid Bernoulli zeros with the given non-zero density.
+    Unstructured { density: f64 },
+    /// N:M structured sparsity along the column axis: exactly `n` non-zeros
+    /// per aligned group of `m` (e.g. 2:4).
+    NM { n: u32, m: u32 },
+    /// Block sparsity: the tensor is tiled into `br x bc` blocks; each
+    /// block is entirely non-zero with probability `block_density`.
+    Block { br: u64, bc: u64, block_density: f64 },
+    /// Fully dense.
+    Dense,
+}
+
+impl SparsityPattern {
+    /// Expected fraction of non-zero elements.
+    pub fn density(&self) -> f64 {
+        match *self {
+            SparsityPattern::Unstructured { density } => density,
+            SparsityPattern::NM { n, m } => n as f64 / m as f64,
+            SparsityPattern::Block { block_density, .. } => block_density,
+            SparsityPattern::Dense => 1.0,
+        }
+    }
+
+    /// Probability that an axis-aligned `gr x gc` region (a format-tree
+    /// node's remaining extent) contains at least one non-zero.
+    ///
+    /// Regions produced by nested contiguous dimension splits are assumed
+    /// aligned with the pattern's structure (group/block boundaries),
+    /// which holds for power-of-two splits over power-of-two groups — the
+    /// common case in both the paper and our workloads.
+    pub fn p_region_nonempty(&self, gr: u64, gc: u64) -> f64 {
+        if gr == 0 || gc == 0 {
+            return 0.0;
+        }
+        match *self {
+            SparsityPattern::Dense => 1.0,
+            SparsityPattern::Unstructured { density } => {
+                p_nonempty_iid(density, (gr as f64) * (gc as f64))
+            }
+            SparsityPattern::NM { n, m } => {
+                if n == 0 {
+                    return 0.0;
+                }
+                let (n, m) = (n as u64, m as u64);
+                if gc >= m {
+                    // Covers at least one full group per row; every group
+                    // holds exactly n >= 1 non-zeros.
+                    return 1.0;
+                }
+                // Aligned sub-group of size gc inside one m-group:
+                // P(empty) = C(m-gc, n) / C(m, n), independent across rows.
+                let p_row_empty = if m - gc < n {
+                    0.0
+                } else {
+                    (ln_choose(m - gc, n) - ln_choose(m, n)).exp()
+                };
+                1.0 - p_row_empty.powf(gr as f64)
+            }
+            SparsityPattern::Block { br, bc, block_density } => {
+                // Blocks covered by the region (fractional coverage for
+                // sub-block regions clamps to one block).
+                let nb_r = (gr as f64 / br as f64).max(1.0);
+                let nb_c = (gc as f64 / bc as f64).max(1.0);
+                let nb = if gr >= br || gc >= bc { (nb_r * nb_c).round() } else { 1.0 };
+                p_nonempty_iid(block_density, nb)
+            }
+        }
+    }
+}
+
+/// Sparsity specification for one MatMul operator: input-activation and
+/// weight patterns (outputs are produced dense).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SparsitySpec {
+    pub input: SparsityPattern,
+    pub weight: SparsityPattern,
+}
+
+impl SparsitySpec {
+    pub fn dense() -> Self {
+        SparsitySpec { input: SparsityPattern::Dense, weight: SparsityPattern::Dense }
+    }
+
+    pub fn unstructured(input_density: f64, weight_density: f64) -> Self {
+        SparsitySpec {
+            input: SparsityPattern::Unstructured { density: input_density },
+            weight: SparsityPattern::Unstructured { density: weight_density },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn densities() {
+        assert_eq!(SparsityPattern::Dense.density(), 1.0);
+        assert_eq!(SparsityPattern::NM { n: 2, m: 4 }.density(), 0.5);
+        assert_eq!(
+            SparsityPattern::Block { br: 2, bc: 2, block_density: 0.3 }.density(),
+            0.3
+        );
+    }
+
+    #[test]
+    fn unstructured_region_probability() {
+        let p = SparsityPattern::Unstructured { density: 0.5 };
+        assert!((p.p_region_nonempty(1, 1) - 0.5).abs() < 1e-12);
+        assert!((p.p_region_nonempty(1, 2) - 0.75).abs() < 1e-12);
+        assert_eq!(p.p_region_nonempty(0, 5), 0.0);
+    }
+
+    #[test]
+    fn nm_region_probability() {
+        let p = SparsityPattern::NM { n: 2, m: 4 };
+        // Full group always non-empty.
+        assert_eq!(p.p_region_nonempty(1, 4), 1.0);
+        assert_eq!(p.p_region_nonempty(3, 8), 1.0);
+        // Single element: P = density = 1/2.
+        assert!((p.p_region_nonempty(1, 1) - 0.5).abs() < 1e-12);
+        // Two of four slots: P(empty) = C(2,2)/C(4,2) = 1/6.
+        assert!((p.p_region_nonempty(1, 2) - (1.0 - 1.0 / 6.0)).abs() < 1e-12);
+        // 1:4 single element: P = 1/4.
+        let p14 = SparsityPattern::NM { n: 1, m: 4 };
+        assert!((p14.p_region_nonempty(1, 1) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn block_region_probability() {
+        let p = SparsityPattern::Block { br: 4, bc: 4, block_density: 0.3 };
+        // Sub-block region: probability the enclosing block is live.
+        assert!((p.p_region_nonempty(2, 2) - 0.3).abs() < 1e-12);
+        // Exactly one block.
+        assert!((p.p_region_nonempty(4, 4) - 0.3).abs() < 1e-12);
+        // Four blocks: 1 - 0.7^4.
+        assert!((p.p_region_nonempty(8, 8) - (1.0 - 0.7f64.powi(4))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nm_monotone_in_region_size() {
+        let p = SparsityPattern::NM { n: 2, m: 8 };
+        let mut last = 0.0;
+        for gc in 1..=8 {
+            let v = p.p_region_nonempty(1, gc);
+            assert!(v >= last - 1e-12, "gc={gc} v={v} last={last}");
+            last = v;
+        }
+        assert_eq!(last, 1.0);
+    }
+}

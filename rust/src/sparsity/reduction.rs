@@ -1,0 +1,150 @@
+//! Computation-reduction strategies (paper §II-B2, Fig. 2, Table II).
+//!
+//! *Gating* idles MAC units on zero operands — saves compute **energy**
+//! but not cycles.  *Skipping* bypasses the operation entirely — saves
+//! both.  Either can check a single operand (unidirectional, e.g.
+//! `Skipping I→W`: execute only if the input is non-zero) or both
+//! (bidirectional `I↔W`).
+
+use super::SparsitySpec;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReductionKind {
+    /// No sparsity mechanism: all MACs execute and burn energy.
+    None,
+    Gating,
+    Skipping,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Direction {
+    /// Check the input/activation operand only (paper `I→W`).
+    InputOnly,
+    /// Check the weight operand only (`W→I`).
+    WeightOnly,
+    /// Check both operands (`I↔W`).
+    Both,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ReductionStrategy {
+    pub kind: ReductionKind,
+    pub direction: Direction,
+}
+
+impl ReductionStrategy {
+    pub const NONE: ReductionStrategy =
+        ReductionStrategy { kind: ReductionKind::None, direction: Direction::Both };
+
+    pub fn gating(direction: Direction) -> Self {
+        ReductionStrategy { kind: ReductionKind::Gating, direction }
+    }
+
+    pub fn skipping(direction: Direction) -> Self {
+        ReductionStrategy { kind: ReductionKind::Skipping, direction }
+    }
+
+    /// Fraction of MAC operations whose *checked operands* are all
+    /// non-zero (operand zeros assumed independent).
+    fn effective_fraction(&self, spec: &SparsitySpec) -> f64 {
+        let di = spec.input.density();
+        let dw = spec.weight.density();
+        match self.direction {
+            Direction::InputOnly => di,
+            Direction::WeightOnly => dw,
+            Direction::Both => di * dw,
+        }
+    }
+
+    /// Fraction of peak MAC **cycles** actually spent (paper §III-D1's
+    /// upfront estimate shrinks temporal loop bounds by this factor).
+    pub fn cycle_fraction(&self, spec: &SparsitySpec) -> f64 {
+        match self.kind {
+            ReductionKind::Skipping => self.effective_fraction(spec),
+            // Gating and None still issue every cycle.
+            ReductionKind::Gating | ReductionKind::None => 1.0,
+        }
+    }
+
+    /// Fraction of peak MAC **energy** actually consumed.
+    pub fn energy_fraction(&self, spec: &SparsitySpec) -> f64 {
+        match self.kind {
+            ReductionKind::Skipping | ReductionKind::Gating => self.effective_fraction(spec),
+            ReductionKind::None => 1.0,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        let dir = match self.direction {
+            Direction::InputOnly => "I->W",
+            Direction::WeightOnly => "W->I",
+            Direction::Both => "I<->W",
+        };
+        match self.kind {
+            ReductionKind::None => "None".to_string(),
+            ReductionKind::Gating => format!("Gating {dir}"),
+            ReductionKind::Skipping => format!("Skipping {dir}"),
+        }
+    }
+}
+
+/// The five practical strategies of §II-B2 ("with only five strategies and
+/// skipping typically performing best, this dimension requires little
+/// exploration") — exposed for completeness and the ablation bench.
+pub fn all_strategies() -> Vec<ReductionStrategy> {
+    vec![
+        ReductionStrategy::NONE,
+        ReductionStrategy::gating(Direction::InputOnly),
+        ReductionStrategy::gating(Direction::Both),
+        ReductionStrategy::skipping(Direction::InputOnly),
+        ReductionStrategy::skipping(Direction::Both),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::SparsitySpec;
+
+    #[test]
+    fn skipping_saves_cycles_gating_does_not() {
+        let spec = SparsitySpec::unstructured(0.5, 0.4);
+        let skip = ReductionStrategy::skipping(Direction::Both);
+        let gate = ReductionStrategy::gating(Direction::Both);
+        assert!((skip.cycle_fraction(&spec) - 0.2).abs() < 1e-12);
+        assert_eq!(gate.cycle_fraction(&spec), 1.0);
+        assert!((gate.energy_fraction(&spec) - 0.2).abs() < 1e-12);
+        assert!((skip.energy_fraction(&spec) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unidirectional_checks_one_operand() {
+        let spec = SparsitySpec::unstructured(0.5, 0.4);
+        let skip_i = ReductionStrategy::skipping(Direction::InputOnly);
+        let skip_w = ReductionStrategy::skipping(Direction::WeightOnly);
+        assert!((skip_i.cycle_fraction(&spec) - 0.5).abs() < 1e-12);
+        assert!((skip_w.cycle_fraction(&spec) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let spec = SparsitySpec::unstructured(0.1, 0.1);
+        assert_eq!(ReductionStrategy::NONE.cycle_fraction(&spec), 1.0);
+        assert_eq!(ReductionStrategy::NONE.energy_fraction(&spec), 1.0);
+    }
+
+    #[test]
+    fn dense_spec_yields_no_reduction() {
+        let spec = SparsitySpec::dense();
+        for s in all_strategies() {
+            assert_eq!(s.cycle_fraction(&spec), 1.0);
+            assert_eq!(s.energy_fraction(&spec), 1.0);
+        }
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(ReductionStrategy::skipping(Direction::Both).name(), "Skipping I<->W");
+        assert_eq!(ReductionStrategy::gating(Direction::InputOnly).name(), "Gating I->W");
+    }
+}

@@ -1,0 +1,117 @@
+//! Synthetic sparse-tensor sampler.
+//!
+//! The paper's experiments consume sparse LLM tensors from [4], [5]; the
+//! framework itself only needs their occupancy structure.  This sampler
+//! draws masks matching a [`SparsityPattern`] exactly (N:M) or in
+//! distribution (unstructured, block), which exercises the identical
+//! analyzer code paths (see DESIGN.md §5 Substitutions).
+
+use super::{exact::DenseMask, SparsityPattern};
+use crate::util::prng::Pcg32;
+
+/// Sample a concrete mask following `pattern`.
+pub fn sample_mask(pattern: &SparsityPattern, rows: u64, cols: u64, seed: u64) -> DenseMask {
+    let mut rng = Pcg32::new(seed);
+    match *pattern {
+        SparsityPattern::Dense => DenseMask::from_fn(rows, cols, |_, _| true),
+        SparsityPattern::Unstructured { density } => {
+            let mut m = DenseMask::new(rows, cols);
+            for r in 0..rows {
+                for c in 0..cols {
+                    if rng.bernoulli(density) {
+                        m.set(r, c, true);
+                    }
+                }
+            }
+            m
+        }
+        SparsityPattern::NM { n, m } => {
+            assert!(cols % m as u64 == 0, "cols {cols} not divisible by m {m}");
+            let mut mask = DenseMask::new(rows, cols);
+            let mut slots: Vec<u32> = (0..m).collect();
+            for r in 0..rows {
+                for g in 0..cols / m as u64 {
+                    rng.shuffle(&mut slots);
+                    for &s in slots.iter().take(n as usize) {
+                        mask.set(r, g * m as u64 + s as u64, true);
+                    }
+                }
+            }
+            mask
+        }
+        SparsityPattern::Block { br, bc, block_density } => {
+            assert!(rows % br == 0 && cols % bc == 0, "block must divide tensor");
+            let mut mask = DenseMask::new(rows, cols);
+            for rb in 0..rows / br {
+                for cb in 0..cols / bc {
+                    if rng.bernoulli(block_density) {
+                        for r in 0..br {
+                            for c in 0..bc {
+                                mask.set(rb * br + r, cb * bc + c, true);
+                            }
+                        }
+                    }
+                }
+            }
+            mask
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unstructured_density_is_close() {
+        let p = SparsityPattern::Unstructured { density: 0.3 };
+        let m = sample_mask(&p, 128, 128, 7);
+        let d = m.density();
+        assert!((d - 0.3).abs() < 0.02, "density {d}");
+    }
+
+    #[test]
+    fn nm_is_exact() {
+        let p = SparsityPattern::NM { n: 2, m: 4 };
+        let mask = sample_mask(&p, 64, 64, 9);
+        assert_eq!(mask.nnz(), 64 * 64 / 2);
+        // Every aligned group of 4 holds exactly 2.
+        for r in 0..64 {
+            for g in 0..16 {
+                let cnt = (0..4).filter(|&i| mask.get(r, g * 4 + i)).count();
+                assert_eq!(cnt, 2, "row {r} group {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_sampling_produces_full_blocks() {
+        let p = SparsityPattern::Block { br: 8, bc: 8, block_density: 0.4 };
+        let m = sample_mask(&p, 64, 64, 3);
+        for rb in 0..8 {
+            for cb in 0..8 {
+                let cnt = (0..8)
+                    .flat_map(|r| (0..8).map(move |c| (r, c)))
+                    .filter(|&(r, c)| m.get(rb * 8 + r, cb * 8 + c))
+                    .count();
+                assert!(cnt == 0 || cnt == 64, "partial block at ({rb},{cb}): {cnt}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = SparsityPattern::Unstructured { density: 0.5 };
+        let a = sample_mask(&p, 32, 32, 42);
+        let b = sample_mask(&p, 32, 32, 42);
+        assert_eq!(a.to_f32(), b.to_f32());
+        let c = sample_mask(&p, 32, 32, 43);
+        assert_ne!(a.to_f32(), c.to_f32());
+    }
+
+    #[test]
+    fn dense_is_full() {
+        let m = sample_mask(&SparsityPattern::Dense, 16, 16, 0);
+        assert_eq!(m.nnz(), 256);
+    }
+}

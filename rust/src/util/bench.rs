@@ -1,0 +1,59 @@
+//! Tiny benchmark harness (criterion is unavailable offline).
+//!
+//! Each bench target is a `harness = false` binary that prints the
+//! corresponding paper table/figure as an ASCII table and appends a
+//! machine-readable record to `results/<bench>.json`.
+
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// Measure wall-clock seconds of one closure run.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Median-of-n timing for fast operations.
+pub fn time_median<T>(n: usize, mut f: impl FnMut() -> T) -> f64 {
+    assert!(n >= 1);
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    crate::util::stats::median(&samples)
+}
+
+/// Write a bench result record to `results/<name>.json`.
+pub fn write_result(name: &str, payload: Json) {
+    let dir = std::path::Path::new("results");
+    if std::fs::create_dir_all(dir).is_err() {
+        return;
+    }
+    let path = dir.join(format!("{name}.json"));
+    let record = Json::obj(vec![("bench", Json::str(name)), ("data", payload)]);
+    let _ = std::fs::write(path, record.to_string());
+}
+
+/// Standard bench banner.
+pub fn banner(id: &str, what: &str) {
+    println!("\n================================================================");
+    println!("{id} — {what}");
+    println!("================================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_positive() {
+        let (v, t) = time_once(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499500);
+        assert!(t >= 0.0);
+        let m = time_median(3, || (0..100).product::<u128>());
+        assert!(m >= 0.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Small math helpers used across the analyzer, format and dataflow code:
+//! integer factorization, divisor enumeration, ceil-log2, binomial terms.
+
+/// `ceil(log2(x))` for x >= 1; coordinate width in bits for a fanout.
+/// By convention a fanout of 1 still needs 1 bit (degenerate coordinate).
+pub fn ceil_log2(x: u64) -> u32 {
+    debug_assert!(x >= 1);
+    if x <= 2 {
+        1
+    } else {
+        64 - (x - 1).leading_zeros()
+    }
+}
+
+/// All divisors of `n`, ascending.
+pub fn divisors(n: u64) -> Vec<u64> {
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            small.push(d);
+            if d * d != n {
+                large.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// Prime factorization as (prime, multiplicity) pairs, ascending primes.
+pub fn factorize(mut n: u64) -> Vec<(u64, u32)> {
+    let mut out = Vec::new();
+    let mut p = 2;
+    while p * p <= n {
+        if n % p == 0 {
+            let mut m = 0;
+            while n % p == 0 {
+                n /= p;
+                m += 1;
+            }
+            out.push((p, m));
+        }
+        p += if p == 2 { 1 } else { 2 };
+    }
+    if n > 1 {
+        out.push((n, 1));
+    }
+    out
+}
+
+/// All ordered ways to write `n` as a product of exactly `k` factors >= 1.
+/// Used for subdimension decomposition in the dimension-allocation space.
+pub fn ordered_factorizations(n: u64, k: usize) -> Vec<Vec<u64>> {
+    fn rec(n: u64, k: usize, acc: &mut Vec<u64>, out: &mut Vec<Vec<u64>>) {
+        if k == 1 {
+            acc.push(n);
+            out.push(acc.clone());
+            acc.pop();
+            return;
+        }
+        for d in divisors(n) {
+            acc.push(d);
+            rec(n / d, k - 1, acc, out);
+            acc.pop();
+        }
+    }
+    let mut out = Vec::new();
+    if k >= 1 {
+        rec(n, k, &mut Vec::new(), &mut out);
+    }
+    out
+}
+
+/// ln(n!) — exact summation for small n, Stirling series beyond (relative
+/// error < 1e-12 for n > 256).
+pub fn ln_factorial(n: u64) -> f64 {
+    if n < 2 {
+        return 0.0;
+    }
+    if n <= 256 {
+        return (2..=n).map(|i| (i as f64).ln()).sum();
+    }
+    let x = (n + 1) as f64;
+    // Stirling series for ln Gamma(x).
+    let inv = 1.0 / x;
+    let inv2 = inv * inv;
+    (x - 0.5) * x.ln() - x + 0.5 * (2.0 * std::f64::consts::PI).ln()
+        + inv / 12.0 * (1.0 - inv2 / 30.0 * (1.0 - inv2 * 2.0 / 7.0))
+}
+
+/// ln C(n, k).
+pub fn ln_choose(n: u64, k: u64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    ln_factorial(n) - ln_factorial(k) - ln_factorial(n - k)
+}
+
+/// Probability that a group of `g` elements drawn iid Bernoulli(density)
+/// contains at least one non-zero: `1 - (1-d)^g`, numerically stable.
+pub fn p_nonempty_iid(density: f64, g: f64) -> f64 {
+    if density <= 0.0 {
+        return 0.0;
+    }
+    if density >= 1.0 {
+        return 1.0;
+    }
+    -(g * (1.0 - density).ln()).exp_m1()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_known_values() {
+        assert_eq!(ceil_log2(1), 1);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(1024), 10);
+        assert_eq!(ceil_log2(1025), 11);
+    }
+
+    #[test]
+    fn divisors_of_12() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(7), vec![1, 7]);
+        assert_eq!(divisors(36), vec![1, 2, 3, 4, 6, 9, 12, 18, 36]);
+    }
+
+    #[test]
+    fn factorize_known() {
+        assert_eq!(factorize(12), vec![(2, 2), (3, 1)]);
+        assert_eq!(factorize(4096), vec![(2, 12)]);
+        // 11008 = 2^7 * 86 = 2^8 * 43
+        assert_eq!(factorize(11008), vec![(2, 8), (43, 1)]);
+    }
+
+    #[test]
+    fn ordered_factorizations_product_invariant() {
+        for f in ordered_factorizations(24, 3) {
+            assert_eq!(f.iter().product::<u64>(), 24);
+            assert_eq!(f.len(), 3);
+        }
+        assert_eq!(ordered_factorizations(6, 2).len(), 4); // (1,6),(2,3),(3,2),(6,1)
+    }
+
+    #[test]
+    fn ln_factorial_matches_direct() {
+        let direct: f64 = (1..=20u64).map(|i| (i as f64).ln()).sum();
+        assert!((ln_factorial(20) - direct).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ln_choose_symmetry() {
+        assert!((ln_choose(10, 3) - ln_choose(10, 7)).abs() < 1e-9);
+        assert!((ln_choose(10, 3).exp() - 120.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn p_nonempty_limits() {
+        assert_eq!(p_nonempty_iid(0.0, 100.0), 0.0);
+        assert_eq!(p_nonempty_iid(1.0, 100.0), 1.0);
+        let p = p_nonempty_iid(0.5, 1.0);
+        assert!((p - 0.5).abs() < 1e-12);
+        let p = p_nonempty_iid(0.1, 2.0);
+        assert!((p - 0.19).abs() < 1e-12);
+    }
+}

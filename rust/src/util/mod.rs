@@ -1,0 +1,11 @@
+//! Utility substrates hand-rolled for offline builds (no serde / rand /
+//! criterion / proptest available): PRNG, math helpers, statistics, ASCII
+//! tables, a minimal JSON reader/writer and a property-testing harness.
+
+pub mod bench;
+pub mod json;
+pub mod mathx;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,179 @@
+//! Deterministic PRNG: PCG-XSH-RR 64/32 plus a SplitMix64 seeder.
+//!
+//! Used by the synthetic tensor sampler, the Monte-Carlo validation tests
+//! and the property-test harness.  Deterministic across platforms so test
+//! failures reproduce from their reported seed.
+
+/// PCG-XSH-RR 64/32 (O'Neill 2014). 64-bit state, 32-bit output.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Seed with SplitMix64 so nearby seeds decorrelate.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let state = sm.next_u64();
+        let inc = sm.next_u64() | 1;
+        let mut rng = Pcg32 { state: 0, inc };
+        rng.state = state.wrapping_add(inc);
+        rng.next_u32();
+        rng
+    }
+
+    /// Independent stream `stream` of the same seed.
+    pub fn new_stream(seed: u64, stream: u64) -> Self {
+        Self::new(seed ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Unbiased uniform integer in [0, bound) (Lemire rejection).
+    #[inline]
+    pub fn next_bounded(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64).wrapping_mul(bound as u64);
+            let l = m as u32;
+            if l >= bound || l >= (u32::MAX - bound + 1) % bound {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.next_bounded((hi - lo + 1) as u32) as usize
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_bounded((i + 1) as u32) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose one element uniformly.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.next_bounded(xs.len() as u32) as usize]
+    }
+}
+
+/// SplitMix64 — seeding helper and a fast standalone generator.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Pcg32::new(123);
+        let mut b = Pcg32::new(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg32::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn bounded_is_in_range_and_roughly_uniform() {
+        let mut r = Pcg32::new(99);
+        let mut hist = [0u32; 10];
+        for _ in 0..100_000 {
+            hist[r.next_bounded(10) as usize] += 1;
+        }
+        for &h in &hist {
+            assert!((8_000..12_000).contains(&h), "hist {hist:?}");
+        }
+    }
+
+    #[test]
+    fn bernoulli_mean_close_to_p() {
+        let mut r = Pcg32::new(5);
+        let hits = (0..100_000).filter(|_| r.bernoulli(0.3)).count();
+        let mean = hits as f64 / 100_000.0;
+        assert!((mean - 0.3).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut r = Pcg32::new(11);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

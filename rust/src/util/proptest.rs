@@ -1,0 +1,143 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! A property is a closure over a [`Gen`]; the runner executes it for a
+//! configurable number of cases with deterministic per-case seeds and, on
+//! failure, reports the seed so the case reproduces exactly:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath in this image)
+//! use snipsnap::util::proptest::{run, Gen};
+//! run("addition commutes", 100, |g: &mut Gen| {
+//!     let a = g.u64_in(0, 1000);
+//!     let b = g.u64_in(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::prng::Pcg32;
+
+/// Per-case value source with convenience generators.
+pub struct Gen {
+    pub rng: Pcg32,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        lo + (self.rng.next_u64() % (hi - lo + 1))
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    /// A density in [0,1] biased toward interesting extremes.
+    pub fn density(&mut self) -> f64 {
+        match self.rng.next_bounded(5) {
+            0 => 0.0,
+            1 => 1.0,
+            2 => self.f64_in(0.0, 0.1),
+            3 => self.f64_in(0.9, 1.0),
+            _ => self.f64_in(0.0, 1.0),
+        }
+    }
+
+    /// A "nice" dimension size: a product of small primes, up to `max`.
+    pub fn dim(&mut self, max: u64) -> u64 {
+        let mut n = 1u64;
+        loop {
+            let f = *self.rng.choose(&[2u64, 2, 2, 3, 4, 5, 7, 8]);
+            if n * f > max {
+                return n;
+            }
+            n *= f;
+            if self.rng.bernoulli(0.3) {
+                return n;
+            }
+        }
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+}
+
+/// Run `cases` instances of `prop` with deterministic seeds derived from
+/// `name`.  Panics (with the reproducing seed) if any case panics.
+pub fn run<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Pcg32::new(seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        run("trivial", 50, |_g| n += 1);
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            run("fails", 10, |g: &mut Gen| {
+                assert!(g.u64_in(0, 9) < 100, "impossible");
+                if g.case == 3 {
+                    panic!("boom");
+                }
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string>".to_string());
+        assert!(msg.contains("case 3"), "{msg}");
+        assert!(msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn gen_ranges_hold() {
+        run("ranges", 200, |g: &mut Gen| {
+            let x = g.u64_in(5, 10);
+            assert!((5..=10).contains(&x));
+            let d = g.density();
+            assert!((0.0..=1.0).contains(&d));
+            let n = g.dim(4096);
+            assert!(n >= 1 && n <= 4096);
+        });
+    }
+}

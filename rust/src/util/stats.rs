@@ -1,0 +1,128 @@
+//! Summary statistics and error metrics used by the validation benches
+//! (mean relative error à la Figs. 8–9) and the perf harness.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Geometric mean; panics on non-positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let s: f64 = xs.iter().map(|&x| {
+        assert!(x > 0.0, "geomean needs positive values, got {x}");
+        x.ln()
+    }).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Sample standard deviation (n-1 denominator); 0.0 if n < 2.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Median (averages the middle pair for even n); 0.0 for empty input.
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// |est - ref| / |ref| — the paper's per-point relative error.
+pub fn relative_error(estimate: f64, reference: f64) -> f64 {
+    if reference == 0.0 {
+        if estimate == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (estimate - reference).abs() / reference.abs()
+    }
+}
+
+/// Mean relative error across paired series (Figs. 8–9 headline metric).
+pub fn mean_relative_error(estimates: &[f64], references: &[f64]) -> f64 {
+    assert_eq!(estimates.len(), references.len());
+    mean(
+        &estimates
+            .iter()
+            .zip(references)
+            .map(|(&e, &r)| relative_error(e, r))
+            .collect::<Vec<_>>(),
+    )
+}
+
+/// Percentile via linear interpolation, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_stddev() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        let sd = stddev(&xs);
+        assert!((sd - 1.2909944487358056).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_of_powers() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relative_error_basic() {
+        assert!((relative_error(110.0, 100.0) - 0.1).abs() < 1e-12);
+        assert_eq!(relative_error(0.0, 0.0), 0.0);
+        assert!(relative_error(1.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn mre_matches_hand_computation() {
+        let e = [90.0, 110.0];
+        let r = [100.0, 100.0];
+        assert!((mean_relative_error(&e, &r) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 0.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 10.0).abs() < 1e-12);
+    }
+}

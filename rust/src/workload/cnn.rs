@@ -1,0 +1,150 @@
+//! CNN workloads for the DiMO-Sparse comparison (§IV-D): AlexNet, VGG-16
+//! and ResNet-18 convolutions lowered to im2col MatMuls
+//! (M = output pixels, N = C_in·k·k reduction, K = C_out).
+//!
+//! Layer shapes are the standard ImageNet configurations; sparsity uses
+//! typical magnitude-pruned CNN densities (weights ~30-50% dense, ReLU
+//! activations ~50% dense).
+
+use super::{MatMulOp, Workload};
+use crate::dataflow::ProblemDims;
+use crate::sparsity::SparsitySpec;
+
+fn conv(name: &str, out_hw: u64, cin: u64, k: u64, cout: u64, act_d: f64, wgt_d: f64) -> MatMulOp {
+    MatMulOp {
+        name: name.to_string(),
+        dims: ProblemDims::new(out_hw * out_hw, cin * k * k, cout),
+        spec: SparsitySpec::unstructured(act_d, wgt_d),
+        count: 1,
+    }
+}
+
+pub fn alexnet() -> Workload {
+    Workload {
+        name: "AlexNet".to_string(),
+        ops: vec![
+            conv("alexnet/conv1", 55, 3, 11, 96, 1.0, 0.85),
+            conv("alexnet/conv2", 27, 96, 5, 256, 0.55, 0.40),
+            conv("alexnet/conv3", 13, 256, 3, 384, 0.50, 0.35),
+            conv("alexnet/conv4", 13, 384, 3, 384, 0.50, 0.35),
+            conv("alexnet/conv5", 13, 384, 3, 256, 0.50, 0.35),
+            // FC layers as 1xNxK MatMuls.
+            MatMulOp {
+                name: "alexnet/fc6".into(),
+                dims: ProblemDims::new(1, 9216, 4096),
+                spec: SparsitySpec::unstructured(0.5, 0.09),
+                count: 1,
+            },
+            MatMulOp {
+                name: "alexnet/fc7".into(),
+                dims: ProblemDims::new(1, 4096, 4096),
+                spec: SparsitySpec::unstructured(0.5, 0.09),
+                count: 1,
+            },
+            MatMulOp {
+                name: "alexnet/fc8".into(),
+                dims: ProblemDims::new(1, 4096, 1000),
+                spec: SparsitySpec::unstructured(0.5, 0.25),
+                count: 1,
+            },
+        ],
+    }
+}
+
+pub fn vgg16() -> Workload {
+    let cfg: &[(&str, u64, u64, u64)] = &[
+        ("conv1_1", 224, 3, 64),
+        ("conv1_2", 224, 64, 64),
+        ("conv2_1", 112, 64, 128),
+        ("conv2_2", 112, 128, 128),
+        ("conv3_1", 56, 128, 256),
+        ("conv3_2", 56, 256, 256),
+        ("conv3_3", 56, 256, 256),
+        ("conv4_1", 28, 256, 512),
+        ("conv4_2", 28, 512, 512),
+        ("conv4_3", 28, 512, 512),
+        ("conv5_1", 14, 512, 512),
+        ("conv5_2", 14, 512, 512),
+        ("conv5_3", 14, 512, 512),
+    ];
+    Workload {
+        name: "VGG-16".to_string(),
+        ops: cfg
+            .iter()
+            .map(|&(n, hw, cin, cout)| {
+                let act_d = if cin == 3 { 1.0 } else { 0.5 };
+                conv(&format!("vgg16/{n}"), hw, cin, 3, cout, act_d, 0.35)
+            })
+            .collect(),
+    }
+}
+
+pub fn resnet18() -> Workload {
+    let cfg: &[(&str, u64, u64, u64, u64)] = &[
+        ("conv1", 112, 3, 7, 64),
+        ("layer1_0a", 56, 64, 3, 64),
+        ("layer1_0b", 56, 64, 3, 64),
+        ("layer1_1a", 56, 64, 3, 64),
+        ("layer1_1b", 56, 64, 3, 64),
+        ("layer2_0a", 28, 64, 3, 128),
+        ("layer2_0b", 28, 128, 3, 128),
+        ("layer2_1a", 28, 128, 3, 128),
+        ("layer2_1b", 28, 128, 3, 128),
+        ("layer3_0a", 14, 128, 3, 256),
+        ("layer3_0b", 14, 256, 3, 256),
+        ("layer3_1a", 14, 256, 3, 256),
+        ("layer3_1b", 14, 256, 3, 256),
+        ("layer4_0a", 7, 256, 3, 512),
+        ("layer4_0b", 7, 512, 3, 512),
+        ("layer4_1a", 7, 512, 3, 512),
+        ("layer4_1b", 7, 512, 3, 512),
+    ];
+    Workload {
+        name: "ResNet-18".to_string(),
+        ops: cfg
+            .iter()
+            .map(|&(n, hw, cin, k, cout)| {
+                let act_d = if cin == 3 { 1.0 } else { 0.55 };
+                conv(&format!("resnet18/{n}"), hw, cin, k, cout, act_d, 0.40)
+            })
+            .collect(),
+    }
+}
+
+/// The three CNNs of the §IV-D DiMO-Sparse comparison.
+pub fn all_cnns() -> Vec<Workload> {
+    vec![alexnet(), vgg16(), resnet18()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_are_im2col_consistent() {
+        let a = alexnet();
+        let c2 = &a.ops[1];
+        assert_eq!(c2.dims.m, 27 * 27);
+        assert_eq!(c2.dims.n, 96 * 25);
+        assert_eq!(c2.dims.k, 256);
+    }
+
+    #[test]
+    fn vgg_has_13_convs() {
+        assert_eq!(vgg16().ops.len(), 13);
+        assert_eq!(resnet18().ops.len(), 17);
+    }
+
+    #[test]
+    fn first_layers_have_dense_activations() {
+        for w in all_cnns() {
+            let first = &w.ops[0];
+            assert_eq!(first.spec.input.density(), 1.0, "{}", first.name);
+        }
+    }
+
+    #[test]
+    fn vgg_macs_larger_than_alexnet() {
+        assert!(vgg16().total_macs() > alexnet().total_macs());
+    }
+}

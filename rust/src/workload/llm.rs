@@ -1,0 +1,285 @@
+//! LLM workloads: transformer-block MatMuls with per-module sparsity.
+//!
+//! Model shapes follow the public configs (hidden size, FFN intermediate,
+//! layers, heads).  Per-module density pairs are synthetic specifications
+//! in the ranges the paper cites from [4], [5] (§II-A: FC2 activation
+//! sparsity up to 97%, FC1 35–70%; larger models sparser) — see DESIGN.md
+//! §5 Substitutions.
+
+use super::{MatMulOp, Workload};
+use crate::dataflow::ProblemDims;
+use crate::sparsity::{SparsityPattern, SparsitySpec};
+
+/// Inference phase parameters (paper §IV-C: 2048-token prefill +
+/// 128-token decoding, following LLMCompass).
+#[derive(Clone, Copy, Debug)]
+pub struct Phase {
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+}
+
+impl Phase {
+    pub fn default_prefill_decode() -> Self {
+        Phase { prefill_tokens: 2048, decode_tokens: 128 }
+    }
+
+    pub fn prefill_only(tokens: u64) -> Self {
+        Phase { prefill_tokens: tokens, decode_tokens: 0 }
+    }
+}
+
+/// Transformer architecture shape.
+#[derive(Clone, Copy, Debug)]
+pub struct LlmShape {
+    pub hidden: u64,
+    pub intermediate: u64,
+    pub layers: u64,
+    pub heads: u64,
+}
+
+/// Per-module sparsity levels (densities).
+#[derive(Clone, Copy, Debug)]
+pub struct LlmSparsity {
+    /// Activation density into Q/K/V/O projections.
+    pub act_proj: f64,
+    /// Activation density into FC1 (post-attention).
+    pub act_fc1: f64,
+    /// Activation density into FC2 (post-ReLU/GeLU — the heavy one).
+    pub act_fc2: f64,
+    /// Density of post-softmax attention probabilities fed to the A x V
+    /// MatMul (weak-attention sparsity, cf. DOTA [30]).
+    pub attn: f64,
+    /// Weight density across all projection/FFN weights.
+    pub weight: f64,
+}
+
+fn unstr(d: f64) -> SparsityPattern {
+    SparsityPattern::Unstructured { density: d }
+}
+
+/// Build the operator list for one transformer model.
+pub fn build_llm(name: &str, shape: LlmShape, sp: LlmSparsity, phase: Phase) -> Workload {
+    let h = shape.hidden;
+    let f = shape.intermediate;
+    let l = shape.layers;
+    let heads = shape.heads;
+    let dh = h / heads;
+    let mut ops = Vec::new();
+
+    let mut push = |nm: &str, m: u64, n: u64, k: u64, act: f64, wgt: f64, count: u64| {
+        if m == 0 || count == 0 {
+            return;
+        }
+        ops.push(MatMulOp {
+            name: format!("{name}/{nm}"),
+            dims: ProblemDims::new(m, n, k),
+            spec: SparsitySpec { input: unstr(act), weight: unstr(wgt) },
+            count,
+        });
+    };
+
+    // --- Prefill phase (batch of S tokens) -----------------------------
+    let s = phase.prefill_tokens;
+    if s > 0 {
+        // QKV fused: X(SxH) x Wqkv(Hx3H); O-proj separate.
+        push("prefill/qkv", s, h, 3 * h, sp.act_proj, sp.weight, l);
+        // Attention scores and context (per head, dense operands).
+        push("prefill/qk", s, dh, s, sp.act_proj, 1.0, l * heads);
+        push("prefill/av", s, s, dh, sp.attn, 1.0, l * heads);
+        push("prefill/o_proj", s, h, h, sp.act_proj, sp.weight, l);
+        push("prefill/fc1", s, h, f, sp.act_fc1, sp.weight, l);
+        push("prefill/fc2", s, f, h, sp.act_fc2, sp.weight, l);
+    }
+
+    // --- Decode phase: one token per step, weights re-streamed every
+    // step (the weight-bound regime; KV length = mean over steps) -------
+    let d = phase.decode_tokens;
+    if d > 0 {
+        let kv = s + d / 2;
+        push("decode/qkv", 1, h, 3 * h, sp.act_proj, sp.weight, l * d);
+        push("decode/qk", 1, dh, kv, sp.act_proj, 1.0, l * heads * d);
+        push("decode/av", 1, kv, dh, sp.attn, 1.0, l * heads * d);
+        push("decode/o_proj", 1, h, h, sp.act_proj, sp.weight, l * d);
+        push("decode/fc1", 1, h, f, sp.act_fc1, sp.weight, l * d);
+        push("decode/fc2", 1, f, h, sp.act_fc2, sp.weight, l * d);
+    }
+
+    Workload { name: name.to_string(), ops }
+}
+
+// --- The paper's model zoo (§IV-A2) ------------------------------------
+
+pub fn llama2_7b(phase: Phase) -> Workload {
+    build_llm(
+        "LLaMA2-7B",
+        LlmShape { hidden: 4096, intermediate: 11008, layers: 32, heads: 32 },
+        LlmSparsity { act_proj: 0.55, act_fc1: 0.50, act_fc2: 0.25, attn: 0.30, weight: 0.35 },
+        phase,
+    )
+}
+
+pub fn llama2_13b(phase: Phase) -> Workload {
+    build_llm(
+        "LLaMA2-13B",
+        LlmShape { hidden: 5120, intermediate: 13824, layers: 40, heads: 40 },
+        LlmSparsity { act_proj: 0.50, act_fc1: 0.45, act_fc2: 0.20, attn: 0.28, weight: 0.30 },
+        phase,
+    )
+}
+
+pub fn opt_125m(phase: Phase) -> Workload {
+    build_llm(
+        "OPT-125M",
+        LlmShape { hidden: 768, intermediate: 3072, layers: 12, heads: 12 },
+        LlmSparsity { act_proj: 0.60, act_fc1: 0.55, act_fc2: 0.12, attn: 0.35, weight: 0.45 },
+        phase,
+    )
+}
+
+pub fn opt_6_7b(phase: Phase) -> Workload {
+    build_llm(
+        "OPT-6.7B",
+        LlmShape { hidden: 4096, intermediate: 16384, layers: 32, heads: 32 },
+        LlmSparsity { act_proj: 0.40, act_fc1: 0.35, act_fc2: 0.05, attn: 0.25, weight: 0.30 },
+        phase,
+    )
+}
+
+pub fn opt_13b(phase: Phase) -> Workload {
+    build_llm(
+        "OPT-13B",
+        LlmShape { hidden: 5120, intermediate: 20480, layers: 40, heads: 40 },
+        LlmSparsity { act_proj: 0.35, act_fc1: 0.33, act_fc2: 0.04, attn: 0.22, weight: 0.28 },
+        phase,
+    )
+}
+
+pub fn opt_30b(phase: Phase) -> Workload {
+    build_llm(
+        "OPT-30B",
+        LlmShape { hidden: 7168, intermediate: 28672, layers: 48, heads: 56 },
+        LlmSparsity { act_proj: 0.30, act_fc1: 0.30, act_fc2: 0.03, attn: 0.20, weight: 0.25 },
+        phase,
+    )
+}
+
+pub fn bert_base(tokens: u64) -> Workload {
+    build_llm(
+        "BERT-Base",
+        LlmShape { hidden: 768, intermediate: 3072, layers: 12, heads: 12 },
+        LlmSparsity { act_proj: 0.30, act_fc1: 0.28, act_fc2: 0.08, attn: 0.22, weight: 0.25 },
+        Phase::prefill_only(tokens),
+    )
+}
+
+/// The five LLMs of Table I / Fig. 10 plus the small models of Fig. 11.
+pub fn all_llms() -> Vec<Workload> {
+    let ph = Phase::default_prefill_decode();
+    vec![
+        llama2_7b(ph),
+        llama2_13b(ph),
+        opt_6_7b(ph),
+        opt_13b(ph),
+        opt_30b(ph),
+        opt_125m(Phase { prefill_tokens: 256, decode_tokens: 32 }),
+        bert_base(256),
+    ]
+}
+
+/// The five large LLMs used in Table I (density overridden to 0.75/0.75
+/// by the bench per the paper's setup).
+pub fn table1_llms() -> Vec<Workload> {
+    let ph = Phase::default_prefill_decode();
+    vec![llama2_7b(ph), llama2_13b(ph), opt_6_7b(ph), opt_13b(ph), opt_30b(ph)]
+}
+
+/// Override every op's sparsity to a fixed unstructured density pair
+/// (Table I sets both densities to 0.75).
+pub fn with_uniform_density(mut w: Workload, act: f64, wgt: f64) -> Workload {
+    for op in &mut w.ops {
+        op.spec = SparsitySpec::unstructured(act, wgt);
+    }
+    w
+}
+
+/// Activation-sparsity variant (paper §IV-C evaluates activation and
+/// weight sparsity separately): weights dense, activations keep the
+/// model's per-module densities.
+pub fn activation_sparse_variant(mut w: Workload) -> Workload {
+    w.name = format!("{} (SA)", w.name);
+    for op in &mut w.ops {
+        op.spec.weight = SparsityPattern::Dense;
+    }
+    w
+}
+
+/// Weight-sparsity variant: activations dense; weights pruned with the
+/// model's density as *clustered* block sparsity (global magnitude
+/// pruning of LLMs produces correlated zero regions — see [5] and
+/// DESIGN.md §5), which is what makes hierarchical formats like the
+/// paper's `B(M)-B(N)-B(N)` (§IV-E) pay off.
+pub fn weight_sparse_variant(mut w: Workload, block: u64) -> Workload {
+    w.name = format!("{} (SW)", w.name);
+    for op in &mut w.ops {
+        let d = op.spec.weight.density();
+        op.spec.input = SparsityPattern::Dense;
+        op.spec.weight = if d < 1.0 {
+            SparsityPattern::Block { br: block, bc: block, block_density: d }
+        } else {
+            SparsityPattern::Dense
+        };
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama7b_structure() {
+        let w = llama2_7b(Phase::default_prefill_decode());
+        // 6 prefill + 6 decode op groups.
+        assert_eq!(w.ops.len(), 12);
+        let qkv = &w.ops[0];
+        assert_eq!(qkv.dims, ProblemDims::new(2048, 4096, 3 * 4096));
+        assert_eq!(qkv.count, 32);
+        // Attention ops occur per layer per head.
+        let qk = &w.ops[1];
+        assert_eq!(qk.count, 32 * 32);
+        assert_eq!(qk.dims.n, 128); // head dim
+    }
+
+    #[test]
+    fn prefill_only_has_no_decode_ops() {
+        let w = bert_base(256);
+        assert_eq!(w.ops.len(), 6);
+        assert!(w.ops.iter().all(|o| o.name.contains("prefill")));
+    }
+
+    #[test]
+    fn fc2_is_sparsest_activation() {
+        let w = opt_6_7b(Phase::default_prefill_decode());
+        let fc2 = w.ops.iter().find(|o| o.name.contains("prefill/fc2")).unwrap();
+        let fc1 = w.ops.iter().find(|o| o.name.contains("prefill/fc1")).unwrap();
+        assert!(fc2.spec.input.density() < fc1.spec.input.density());
+    }
+
+    #[test]
+    fn uniform_density_override() {
+        let w = with_uniform_density(llama2_7b(Phase::default_prefill_decode()), 0.75, 0.75);
+        for op in &w.ops {
+            assert_eq!(op.spec.input.density(), 0.75);
+            assert_eq!(op.spec.weight.density(), 0.75);
+        }
+    }
+
+    #[test]
+    fn macs_scale_of_7b_prefill_is_plausible() {
+        // ~2 * params * tokens for the projection/FFN MACs; 7B params,
+        // 2048 tokens -> ~1.4e13 MACs. Attention adds more.
+        let w = llama2_7b(Phase::prefill_only(2048));
+        let macs = w.total_macs();
+        assert!(macs > 5e12 && macs < 5e13, "macs = {macs:.3e}");
+    }
+}

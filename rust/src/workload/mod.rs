@@ -1,0 +1,74 @@
+//! Workload zoo (paper §IV-A2): sparse LLMs (LLaMA2, OPT, BERT) and the
+//! CNNs used in the DiMO-Sparse comparison (AlexNet, VGG-16, ResNet-18),
+//! expressed as lists of MatMul operators with per-operator sparsity.
+//!
+//! Every operator follows the paper's MatMul convention
+//! `O[M][K] = Σ_N I[M][N] × W[N][K]` — N is the reduction dim, `I` holds
+//! activations (M×N), `W` holds weights (N×K).
+
+pub mod cnn;
+pub mod llm;
+
+use crate::dataflow::ProblemDims;
+use crate::sparsity::SparsitySpec;
+
+/// One MatMul operator instance of a workload.
+#[derive(Clone, Debug)]
+pub struct MatMulOp {
+    pub name: String,
+    pub dims: ProblemDims,
+    pub spec: SparsitySpec,
+    /// Times this op executes per end-to-end inference (layers x steps x
+    /// heads collapsed into one multiplier).
+    pub count: u64,
+}
+
+impl MatMulOp {
+    pub fn total_macs(&self) -> f64 {
+        self.dims.macs() as f64 * self.count as f64
+    }
+}
+
+/// A complete workload: a named list of operators.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    pub ops: Vec<MatMulOp>,
+}
+
+impl Workload {
+    pub fn total_macs(&self) -> f64 {
+        self.ops.iter().map(|o| o.total_macs()).sum()
+    }
+
+    /// Unique weight-tensor shapes (used by the format engine: formats are
+    /// chosen per weight/activation tensor family, not per op instance).
+    pub fn op_count(&self) -> usize {
+        self.ops.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_is_populated() {
+        let all = llm::all_llms();
+        assert!(all.len() >= 7);
+        for w in &all {
+            assert!(!w.ops.is_empty(), "{} has no ops", w.name);
+            assert!(w.total_macs() > 0.0);
+        }
+        let cnns = cnn::all_cnns();
+        assert_eq!(cnns.len(), 3);
+    }
+
+    #[test]
+    fn bigger_models_have_more_macs() {
+        let m125 = llm::opt_125m(llm::Phase::default_prefill_decode()).total_macs();
+        let m67 = llm::opt_6_7b(llm::Phase::default_prefill_decode()).total_macs();
+        let m30 = llm::opt_30b(llm::Phase::default_prefill_decode()).total_macs();
+        assert!(m125 < m67 && m67 < m30);
+    }
+}

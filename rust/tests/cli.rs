@@ -1,0 +1,98 @@
+//! CLI integration: drive the `snipsnap` binary end to end.
+
+use std::process::Command;
+
+fn snipsnap() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_snipsnap"))
+}
+
+#[test]
+fn list_prints_presets() {
+    let out = snipsnap().arg("list").output().expect("run");
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("arch3"));
+    assert!(stdout.contains("llama2-7b"));
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = snipsnap().output().expect("run");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("USAGE"));
+}
+
+#[test]
+fn formats_subcommand_reports_top_formats() {
+    let out = snipsnap()
+        .args(["formats", "--rows", "256", "--cols", "256", "--density", "0.1"])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("Top formats"), "{stdout}");
+    assert!(stdout.contains("ratio"));
+}
+
+#[test]
+fn search_with_inline_config() {
+    let dir = std::env::temp_dir().join("snipsnap_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("run.toml");
+    std::fs::write(
+        &cfg,
+        r#"
+[run]
+arch = "arch3"
+metric = "energy"
+mode = "fixed"
+[search]
+max_mappings = 300
+[op.g]
+m = 64
+n = 64
+k = 64
+act_density = 0.5
+wgt_density = 0.5
+"#,
+    )
+    .unwrap();
+    let out = snipsnap()
+        .args(["search", "--config", cfg.to_str().unwrap()])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("totals:"), "{stdout}");
+    assert!(stdout.contains("evaluations"));
+}
+
+#[test]
+fn bad_flags_fail_cleanly() {
+    let out = snipsnap()
+        .args(["search", "--arch", "not-an-arch"])
+        .output()
+        .expect("run");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown arch"), "{stderr}");
+
+    let out = snipsnap().args(["formats", "--rows", "64"]).output().expect("run");
+    assert!(!out.status.success());
+}
+
+#[test]
+fn xla_selftest_runs_when_artifacts_exist() {
+    let dir = snipsnap::runtime::Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let out = snipsnap()
+        .args(["xla", "--artifacts", dir.to_str().unwrap()])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("self-test passed"));
+}

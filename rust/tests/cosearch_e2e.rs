@@ -1,0 +1,134 @@
+//! End-to-end co-search integration: SnipSnap vs the baselines on real
+//! (reduced) workloads across the Table II architectures.
+
+use snipsnap::arch::presets;
+use snipsnap::baselines::sparseloop_like::stepwise_workload;
+use snipsnap::cost::Metric;
+use snipsnap::dataflow::mapper::MapperConfig;
+use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig};
+use snipsnap::workload::llm;
+
+fn reduced_llm() -> snipsnap::workload::Workload {
+    // OPT-125M with a short prefill keeps dims real but the search quick.
+    llm::opt_125m(llm::Phase { prefill_tokens: 64, decode_tokens: 0 })
+}
+
+fn quick(mode: FormatMode) -> SearchConfig {
+    SearchConfig {
+        mode,
+        mapper: MapperConfig { max_candidates: 1_500, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn cosearch_runs_on_all_table2_archs() {
+    let w = reduced_llm();
+    for arch in presets::all_table2() {
+        let r = cosearch_workload(&arch, &w, &quick(FormatMode::Fixed));
+        assert_eq!(r.designs.len(), w.ops.len(), "{}", arch.name);
+        assert!(r.total_energy_pj() > 0.0);
+        for d in &r.designs {
+            d.mapping
+                .validate(&w.ops.iter().find(|o| o.name == d.op_name).unwrap().dims)
+                .unwrap();
+        }
+    }
+}
+
+#[test]
+fn format_search_never_loses_to_fixed() {
+    let w = reduced_llm();
+    for arch in [presets::arch1(), presets::arch3()] {
+        let fixed = cosearch_workload(&arch, &w, &quick(FormatMode::Fixed));
+        let search = cosearch_workload(&arch, &w, &quick(FormatMode::Search));
+        assert!(
+            search.total_energy_pj() <= fixed.total_energy_pj() * 1.001,
+            "{}: search {} vs fixed {}",
+            arch.name,
+            search.total_energy_pj(),
+            fixed.total_energy_pj()
+        );
+    }
+}
+
+#[test]
+fn progressive_beats_stepwise_on_speed_same_space() {
+    let w = reduced_llm();
+    let arch = presets::arch3();
+    let mapper = MapperConfig { max_candidates: 400, ..Default::default() };
+    let snip = cosearch_workload(
+        &arch,
+        &w,
+        &SearchConfig { mode: FormatMode::Fixed, mapper: mapper.clone(), ..Default::default() },
+    );
+    let sl = stepwise_workload(&arch, &w, &mapper, Metric::Energy);
+    // Workflow claim: strictly fewer evaluations (the wall-clock speedup
+    // in Table I follows; evaluations are the deterministic proxy).
+    assert!(
+        sl.evaluations * 2 > 3 * snip.evaluations,
+        "stepwise {} vs progressive {}",
+        sl.evaluations,
+        snip.evaluations
+    );
+    // Quality must remain comparable.
+    let ratio = snip.total_energy_pj() / sl.total_energy_pj();
+    assert!(ratio < 1.25, "quality ratio {ratio}");
+}
+
+#[test]
+fn search_is_deterministic() {
+    let w = reduced_llm();
+    let arch = presets::arch3();
+    let a = cosearch_workload(&arch, &w, &quick(FormatMode::Search));
+    let b = cosearch_workload(&arch, &w, &quick(FormatMode::Search));
+    assert_eq!(a.total_energy_pj(), b.total_energy_pj());
+    assert_eq!(a.evaluations, b.evaluations);
+    for (da, db) in a.designs.iter().zip(&b.designs) {
+        assert_eq!(da.input_format, db.input_format);
+        assert_eq!(da.mapping, db.mapping);
+    }
+}
+
+#[test]
+fn metric_priority_changes_the_winner_sensibly() {
+    let w = reduced_llm();
+    let arch = presets::arch3();
+    let for_energy = cosearch_workload(
+        &arch,
+        &w,
+        &SearchConfig { metric: Metric::Energy, ..quick(FormatMode::Fixed) },
+    );
+    let for_latency = cosearch_workload(
+        &arch,
+        &w,
+        &SearchConfig { metric: Metric::Latency, ..quick(FormatMode::Fixed) },
+    );
+    // Each specialist must win (or tie) its own metric.
+    assert!(for_energy.total_energy_pj() <= for_latency.total_energy_pj() * 1.001);
+    assert!(for_latency.total_cycles() <= for_energy.total_cycles() * 1.001);
+}
+
+#[test]
+fn config_file_end_to_end() {
+    let cfg = snipsnap::config::load_run_config(
+        r#"
+[run]
+arch = "arch3"
+metric = "memory-energy"
+mode = "fixed"
+[search]
+max_mappings = 500
+[op.fc]
+m = 64
+n = 128
+k = 64
+act_density = 0.3
+wgt_density = 0.4
+"#,
+    )
+    .expect("config");
+    let r = cosearch_workload(&cfg.arch, &cfg.workload, &cfg.search);
+    assert_eq!(r.designs.len(), 1);
+    assert!(r.memory_energy_pj() > 0.0);
+}

@@ -1,0 +1,147 @@
+//! Cross-module integration tests: format engine x analyzer x workloads.
+
+use snipsnap::engine::{search_formats, EngineConfig};
+use snipsnap::format::named;
+use snipsnap::format::space::SpaceConfig;
+use snipsnap::sparsity::analyzer::{analytical_cost, cost_from_ne};
+use snipsnap::sparsity::exact::{exact_cost, exact_ne};
+use snipsnap::sparsity::sample::sample_mask;
+use snipsnap::sparsity::SparsityPattern;
+use snipsnap::workload::{cnn, llm};
+
+/// The analytical expectation must track ground truth on sampled tensors
+/// for every named format across densities and pattern families.
+#[test]
+fn analytical_matches_sampled_ground_truth() {
+    let (r, c) = (128, 128);
+    let patterns = [
+        SparsityPattern::Unstructured { density: 0.05 },
+        SparsityPattern::Unstructured { density: 0.3 },
+        SparsityPattern::Unstructured { density: 0.8 },
+        SparsityPattern::NM { n: 2, m: 4 },
+        // 8x8 blocks: 256 blocks keeps per-sample occupancy variance low
+        // enough for a 5-sample mean comparison.
+        SparsityPattern::Block { br: 8, bc: 8, block_density: 0.25 },
+    ];
+    for pattern in patterns {
+        for f in [
+            named::bitmap(r, c),
+            named::rle(r, c),
+            named::csr(r, c),
+            named::coo(r, c),
+            named::csb(r, c, 16, 16),
+        ] {
+            // Average exact cost over several sampled masks.
+            let mut exact_bits = 0.0;
+            let n_samples = 5;
+            for seed in 0..n_samples {
+                let mask = sample_mask(&pattern, r, c, 1000 + seed);
+                exact_bits += exact_cost(&f, &mask, 16).total_bits();
+            }
+            exact_bits /= n_samples as f64;
+            let analytic = analytical_cost(&f, &pattern, 16).total_bits();
+            let rel = (analytic - exact_bits).abs() / exact_bits;
+            assert!(
+                rel < 0.05,
+                "{f} under {pattern:?}: analytic {analytic:.0} vs sampled {exact_bits:.0} ({rel:.3})"
+            );
+        }
+    }
+}
+
+/// The engine's chosen format must also win on *sampled* tensors, not
+/// just in expectation (no overfitting to the analytical model).
+#[test]
+fn engine_choice_wins_on_concrete_tensors() {
+    let cfg = EngineConfig {
+        space: SpaceConfig { max_depth: 3, ..Default::default() },
+        ..Default::default()
+    };
+    let pattern = SparsityPattern::Block { br: 16, bc: 16, block_density: 0.2 };
+    let (top, _) = search_formats(128, 128, &pattern, None, &cfg);
+    let mask = sample_mask(&pattern, 128, 128, 77);
+    let chosen_bits = exact_cost(&top[0].format, &mask, 16).total_bits();
+    let bitmap_bits = exact_cost(&named::bitmap(128, 128), &mask, 16).total_bits();
+    assert!(
+        chosen_bits < bitmap_bits,
+        "engine pick {} ({chosen_bits}) lost to bitmap ({bitmap_bits}) on a real tensor",
+        top[0].format
+    );
+}
+
+/// cost_from_ne is provider-agnostic: feeding exact counts reproduces
+/// exact_cost for every named format.
+#[test]
+fn costing_core_is_provider_agnostic() {
+    let mask = sample_mask(&SparsityPattern::Unstructured { density: 0.2 }, 64, 64, 3);
+    for f in [named::bitmap(64, 64), named::csr(64, 64), named::csb(64, 64, 8, 8)] {
+        let via_ne = cost_from_ne(&f, &exact_ne(&f, &mask), 16);
+        let direct = exact_cost(&f, &mask, 16);
+        assert_eq!(via_ne, direct, "{f}");
+    }
+}
+
+/// Workload zoo structural invariants across the whole model list.
+#[test]
+fn workload_zoo_invariants() {
+    for w in llm::all_llms().iter().chain(cnn::all_cnns().iter()) {
+        assert!(!w.ops.is_empty());
+        for op in &w.ops {
+            assert!(op.dims.m > 0 && op.dims.n > 0 && op.dims.k > 0, "{}", op.name);
+            assert!(op.count > 0);
+            let di = op.spec.input.density();
+            let dw = op.spec.weight.density();
+            assert!((0.0..=1.0).contains(&di) && (0.0..=1.0).contains(&dw));
+        }
+    }
+}
+
+/// SA/SW variants transform sparsity as the paper's §IV-C setup requires.
+#[test]
+fn sa_sw_variants() {
+    let base = llm::opt_6_7b(llm::Phase::prefill_only(128));
+    let sa = llm::activation_sparse_variant(base.clone());
+    let sw = llm::weight_sparse_variant(base.clone(), 8);
+    for op in &sa.ops {
+        assert_eq!(op.spec.weight.density(), 1.0, "{}", op.name);
+    }
+    for (op, base_op) in sw.ops.iter().zip(&base.ops) {
+        assert_eq!(op.spec.input.density(), 1.0, "{}", op.name);
+        if base_op.spec.weight.density() < 1.0 {
+            assert!(matches!(op.spec.weight, SparsityPattern::Block { .. }));
+        }
+    }
+}
+
+/// Named formats instantiate and validate across many tensor shapes
+/// (including non-powers of two).
+#[test]
+fn named_formats_across_shapes() {
+    for (r, c) in [(3, 6), (7, 11), (64, 48), (1000, 24), (4096, 11008)] {
+        for (_, f) in named::baselines(r, c) {
+            f.validate().unwrap();
+        }
+        named::uop_b(r, c).validate().unwrap();
+        named::dense(r, c).validate().unwrap();
+    }
+}
+
+/// Engine statistics: the full space must dwarf the evaluated subset on
+/// paper-sized tensors (the Fig. 6 claim at small scale).
+#[test]
+fn penalty_prunes_hard_at_scale() {
+    let cfg = EngineConfig::default();
+    let (_, stats) = search_formats(
+        1024,
+        1024,
+        &SparsityPattern::Unstructured { density: 0.1 },
+        None,
+        &cfg,
+    );
+    let full = snipsnap::format::space::full_space_size(1024, 1024, &cfg.space);
+    assert!(
+        full > 50 * stats.evaluated,
+        "space {full} vs evaluated {}",
+        stats.evaluated
+    );
+}

@@ -1,0 +1,107 @@
+//! PJRT runtime integration: the AOT XLA artifacts vs the native Rust
+//! analyzers.  Requires `make artifacts` (skipped with a clear message if
+//! the artifacts are missing).
+
+use snipsnap::format::named;
+use snipsnap::runtime::stats::{
+    analyze_mask, analyze_mask_native, empirical_cost, empirical_ne,
+};
+use snipsnap::runtime::{InputBuf, Runtime};
+use snipsnap::sparsity::exact::exact_cost;
+use snipsnap::sparsity::sample::sample_mask;
+use snipsnap::sparsity::SparsityPattern;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime"))
+}
+
+#[test]
+fn xla_stats_match_native_analyzer() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    for pattern in [
+        SparsityPattern::Unstructured { density: 0.2 },
+        SparsityPattern::NM { n: 2, m: 4 },
+        SparsityPattern::Block { br: 32, bc: 32, block_density: 0.3 },
+    ] {
+        let mask = sample_mask(&pattern, 512, 512, 41);
+        let xla = analyze_mask(&mut rt, &mask).expect("xla stats");
+        let native = analyze_mask_native(&mask, 16);
+        assert_eq!(xla.total_nnz, native.total_nnz, "{pattern:?}");
+        assert_eq!(xla.block_counts, native.block_counts);
+        assert_eq!(xla.row_counts, native.row_counts);
+        assert_eq!(xla.col_counts, native.col_counts);
+    }
+}
+
+#[test]
+fn xla_empirical_cost_matches_exact_for_aligned_formats() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let pattern = SparsityPattern::Unstructured { density: 0.1 };
+    let mask = sample_mask(&pattern, 1024, 1024, 97);
+    let stats = analyze_mask(&mut rt, &mask).expect("stats");
+    // CSR: all boundaries exact (fibers + elements).
+    let csr = named::csr(1024, 1024);
+    let emp = empirical_cost(&csr, &stats, 16).total_bits();
+    let exact = exact_cost(&csr, &mask, 16).total_bits();
+    assert!(
+        (emp - exact).abs() / exact < 1e-9,
+        "csr: empirical {emp} vs exact {exact}"
+    );
+    // CSB at lattice granularity: exact except the within-block row level.
+    let csb = named::csb(1024, 1024, 16, 16);
+    let emp = empirical_cost(&csb, &stats, 16).total_bits();
+    let exact = exact_cost(&csb, &mask, 16).total_bits();
+    assert!(
+        (emp - exact).abs() / exact < 0.02,
+        "csb: empirical {emp} vs exact {exact}"
+    );
+}
+
+#[test]
+fn xla_nm_conformance_flags_violations() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // Conforming 2:4 tensor -> 0 violations.
+    let ok = sample_mask(&SparsityPattern::NM { n: 2, m: 4 }, 1024, 1024, 7);
+    let outs = rt
+        .exec("nm_conformance_1024x1024_2_4", &[InputBuf::F32(&ok.to_f32())])
+        .expect("exec");
+    assert_eq!(outs[0][0], 0.0);
+    // Dense tensor -> every group violates by 2.
+    let dense = sample_mask(&SparsityPattern::Dense, 1024, 1024, 0);
+    let outs = rt
+        .exec("nm_conformance_1024x1024_2_4", &[InputBuf::F32(&dense.to_f32())])
+        .expect("exec");
+    assert_eq!(outs[0][0] as u64, 2 * 1024 * 256);
+}
+
+#[test]
+fn xla_rejects_wrong_shapes_and_names() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    assert!(rt.exec("nonexistent", &[]).is_err());
+    let too_small = vec![0f32; 16];
+    assert!(rt
+        .exec("sparsity_stats_512x512_b16", &[InputBuf::F32(&too_small)])
+        .is_err());
+}
+
+#[test]
+fn empirical_ne_consistency_across_scales() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // Same density, two artifact scales: per-element expected occupancy
+    // must agree within sampling noise.
+    let pattern = SparsityPattern::Unstructured { density: 0.15 };
+    let m512 = sample_mask(&pattern, 512, 512, 21);
+    let m1024 = sample_mask(&pattern, 1024, 1024, 22);
+    let s512 = analyze_mask(&mut rt, &m512).expect("512");
+    let s1024 = analyze_mask(&mut rt, &m1024).expect("1024");
+    let f512 = named::bitmap(512, 512);
+    let f1024 = named::bitmap(1024, 1024);
+    let r512 = empirical_ne(&f512, &s512).last().copied().unwrap() / (512.0 * 512.0);
+    let r1024 = empirical_ne(&f1024, &s1024).last().copied().unwrap() / (1024.0 * 1024.0);
+    assert!((r512 - r1024).abs() < 0.01, "density est {r512} vs {r1024}");
+}
