@@ -14,7 +14,9 @@
 //! searched format vs the best standard baseline — and is recorded in
 //! EXPERIMENTS.md.
 //!
-//! Run with: `make artifacts && cargo run --release --example e2e_codesign`
+//! Run with: `python python/compile/aot.py && cargo run --release --features pjrt --example e2e_codesign`
+//! (the `pjrt` feature needs the `xla` bindings crate added to Cargo.toml
+//! first — see README.md "snipsnap xla"; without it stages 2-3 error out)
 
 use snipsnap::arch::presets;
 use snipsnap::engine::ScoredFormat;

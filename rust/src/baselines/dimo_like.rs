@@ -124,7 +124,7 @@ pub fn dimo_op(
 
     // Full sparse evaluation with exhaustive order expansion — DiMO's
     // inner objective is evaluated on every candidate move.
-    let mut eval_all_orders =
+    let eval_all_orders =
         |m: &Mapping, evals: &mut u64| -> Option<(Mapping, crate::cost::CostReport, f64)> {
             if !mapping_is_legal(arch, m, &CompressionRatios::DENSE) {
                 return None;

@@ -168,15 +168,31 @@ pub struct BoundaryGeom {
     pub region_cols: u64,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+/// Structural validation errors for [`Format::new`] / [`Format::validate`].
+#[derive(Debug, PartialEq)]
 pub enum FormatError {
-    #[error("level sizes over {axis:?} multiply to {got}, tensor has {want}")]
+    /// The sizes of the levels on one axis do not multiply to the tensor
+    /// extent on that axis.
     AxisMismatch { axis: Axis, got: u64, want: u64 },
-    #[error("level {index} has size 0")]
+    /// A level was given a zero fanout.
     ZeroSize { index: usize },
-    #[error("format must have at least one level")]
+    /// The format has no levels at all.
     Empty,
 }
+
+impl fmt::Display for FormatError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FormatError::AxisMismatch { axis, got, want } => {
+                write!(f, "level sizes over {axis:?} multiply to {got}, tensor has {want}")
+            }
+            FormatError::ZeroSize { index } => write!(f, "level {index} has size 0"),
+            FormatError::Empty => write!(f, "format must have at least one level"),
+        }
+    }
+}
+
+impl std::error::Error for FormatError {}
 
 impl Format {
     pub fn new(levels: Vec<Level>, rows: u64, cols: u64) -> Result<Self, FormatError> {

@@ -69,7 +69,7 @@ pub fn enumerate_patterns(cfg: &SpaceConfig) -> Vec<CompPat> {
         stack: &mut Vec<PatternLevel>,
         out: &mut Vec<CompPat>,
     ) {
-        if stack.len() >= 1 {
+        if !stack.is_empty() {
             let pat = CompPat { levels: stack.clone() };
             if pattern_is_valid(&pat) {
                 out.push(pat);

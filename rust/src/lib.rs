@@ -16,6 +16,14 @@
 //! - [`baselines`] — Sparseloop-like and DiMO-like comparison workflows
 //! - [`runtime`] — PJRT loader/executor for the AOT XLA artifacts
 //! - [`util`] — offline substrates (PRNG, JSON, tables, property tests)
+//!
+//! # Cargo features
+//!
+//! - `pjrt` (off by default): enables the XLA/PJRT executor in
+//!   [`runtime`].  Requires the external `xla` bindings crate and a local
+//!   xla_extension install; the default build substitutes a stub
+//!   executor so the rest of the crate (including the pure-Rust
+//!   analyzers) builds with `anyhow` as the only dependency.
 
 pub mod arch;
 pub mod baselines;

@@ -213,7 +213,7 @@ fn cmd_xla(args: &Args) -> Result<()> {
         .map(std::path::PathBuf::from)
         .unwrap_or_else(snipsnap::runtime::Runtime::default_dir);
     let mut rt = snipsnap::runtime::Runtime::load(&dir)?;
-    println!("artifacts: {}", dir.display());
+    println!("artifacts: {}", rt.dir().display());
     for a in rt.manifest.artifacts.clone() {
         print!("  {} ... ", a.name);
         // Execute with zero inputs of the right shapes.

@@ -3,9 +3,16 @@
 //!
 //! Interchange is HLO **text** — `HloModuleProto::from_text_file` +
 //! `XlaComputation::from_proto` — because jax >= 0.5 serializes protos
-//! with 64-bit instruction ids that xla_extension 0.5.1 rejects (see
-//! /opt/xla-example/README.md).  One compiled executable per model
-//! variant, compiled lazily and cached.
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects.  One
+//! compiled executable per model variant, compiled lazily and cached.
+//!
+//! The executor depends on the external `xla` bindings crate and is
+//! gated behind the **`pjrt`** cargo feature (off by default, since the
+//! bindings and a local xla_extension install are not vendored with this
+//! repository).  Without the feature, manifest parsing, [`IoSpec`] /
+//! [`InputBuf`] and the pure-Rust analyzer in [`stats`] all work
+//! normally; [`Runtime::exec`] returns an error explaining how to enable
+//! execution.
 
 pub mod stats;
 
@@ -110,11 +117,14 @@ impl Manifest {
     }
 }
 
-/// The PJRT runtime: CPU client + lazily-compiled executables.
+/// The PJRT runtime: parsed manifest plus (with the `pjrt` feature) a
+/// CPU client and lazily-compiled executables.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
@@ -138,20 +148,35 @@ impl Runtime {
         PathBuf::from("artifacts")
     }
 
-    /// Load the manifest and create the PJRT CPU client.
+    /// Load the manifest and (with the `pjrt` feature) create the PJRT
+    /// CPU client.
     pub fn load(dir: &Path) -> Result<Runtime> {
         let mtext = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+            .with_context(|| format!("reading {}/manifest.json (run python/compile/aot.py)", dir.display()))?;
         let manifest = Manifest::parse(&mtext)?;
+        #[cfg(feature = "pjrt")]
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, cache: HashMap::new() })
+        Ok(Runtime {
+            #[cfg(feature = "pjrt")]
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            #[cfg(feature = "pjrt")]
+            cache: HashMap::new(),
+        })
     }
 
     pub fn load_default() -> Result<Runtime> {
         Self::load(&Self::default_dir())
     }
 
+    /// The artifacts directory this runtime was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
     /// Compile (or fetch cached) an artifact by name.
+    #[cfg(feature = "pjrt")]
     fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
         if !self.cache.contains_key(name) {
             let meta = self
@@ -175,6 +200,7 @@ impl Runtime {
 
     /// Execute an artifact with f32/i32 input buffers (shapes validated
     /// against the manifest).  Returns the flattened f32 outputs.
+    #[cfg(feature = "pjrt")]
     pub fn exec(&mut self, name: &str, inputs: &[InputBuf<'_>]) -> Result<Vec<Vec<f32>>> {
         let meta = self
             .manifest
@@ -239,6 +265,20 @@ impl Runtime {
             out.push(p.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?);
         }
         Ok(out)
+    }
+
+    /// Stub executor for builds without the `pjrt` feature: always an
+    /// error.  Keeps the call sites (CLI `xla` subcommand, the e2e
+    /// example, the runtime tests) compiling against the same API.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn exec(&mut self, name: &str, inputs: &[InputBuf<'_>]) -> Result<Vec<Vec<f32>>> {
+        let _ = inputs;
+        bail!(
+            "cannot execute artifact '{name}': snipsnap was built without the `pjrt` \
+             feature. Enabling it requires first adding the `xla` bindings crate to \
+             Cargo.toml (it is not vendored) plus a local xla_extension install, \
+             then rebuilding with `--features pjrt`"
+        )
     }
 }
 

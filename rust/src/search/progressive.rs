@@ -8,7 +8,6 @@ use crate::dataflow::{LoopDim, Mapping, ProblemDims};
 use crate::engine::allocate::TileHints;
 use crate::engine::{search_formats, ScoredFormat};
 use crate::format::{named, Format};
-use crate::sparsity::analyzer::analytical_cost;
 use crate::sparsity::{SparsityPattern, SparsitySpec};
 use crate::workload::{MatMulOp, Workload};
 use std::time::Instant;

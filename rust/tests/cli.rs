@@ -6,13 +6,19 @@ fn snipsnap() -> Command {
     Command::new(env!("CARGO_BIN_EXE_snipsnap"))
 }
 
+/// Smoke test keeping the binary target wired into `cargo test`: `snipsnap
+/// list` must exit 0 and name at least one arch preset, one workload
+/// preset and the metric list.
 #[test]
-fn list_prints_presets() {
+fn smoke_list_exits_zero_and_names_presets() {
     let out = snipsnap().arg("list").output().expect("run");
-    assert!(out.status.success());
+    assert_eq!(out.status.code(), Some(0), "non-zero exit: {:?}", out.status);
     let stdout = String::from_utf8_lossy(&out.stdout);
-    assert!(stdout.contains("arch3"));
-    assert!(stdout.contains("llama2-7b"));
+    assert!(stdout.contains("arch1"), "no arch preset named:\n{stdout}");
+    assert!(stdout.contains("arch3"), "no arch preset named:\n{stdout}");
+    assert!(stdout.contains("llama2-7b"), "no workload preset named:\n{stdout}");
+    assert!(stdout.contains("opt-125m"), "no workload preset named:\n{stdout}");
+    assert!(stdout.contains("metrics:"), "no metric list:\n{stdout}");
 }
 
 #[test]

@@ -1,6 +1,7 @@
 //! PJRT runtime integration: the AOT XLA artifacts vs the native Rust
-//! analyzers.  Requires `make artifacts` (skipped with a clear message if
-//! the artifacts are missing).
+//! analyzers.  Requires artifacts built by `python/compile/aot.py` and
+//! the `pjrt` feature (skipped with a clear message if the artifacts
+//! are missing).
 
 use snipsnap::format::named;
 use snipsnap::runtime::stats::{
@@ -12,9 +13,13 @@ use snipsnap::sparsity::sample::sample_mask;
 use snipsnap::sparsity::SparsityPattern;
 
 fn runtime_or_skip() -> Option<Runtime> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("SKIP: built without the `pjrt` feature (Runtime::exec is a stub)");
+        return None;
+    }
     let dir = Runtime::default_dir();
     if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        eprintln!("SKIP: no artifacts at {} (run python/compile/aot.py)", dir.display());
         return None;
     }
     Some(Runtime::load(&dir).expect("runtime"))
