@@ -11,7 +11,7 @@ use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig};
 use snipsnap::sparsity::{reduction::ReductionStrategy, SparsityPattern, SparsitySpec};
 use snipsnap::util::bench::{time_median, write_result};
 use snipsnap::util::json::Json;
-use snipsnap::workload::{MatMulOp, Workload};
+use snipsnap::workload::{llm, MatMulOp, Workload};
 
 fn main() {
     let arch = presets::arch3();
@@ -90,6 +90,40 @@ fn main() {
     println!("cosearch op (fixed):  {:>8.2} ms", t_fixed * 1e3);
     println!("cosearch op (search): {:>8.2} ms", t_search * 1e3);
 
+    // 5) parallel co-search + memoized evaluation: the Fig. 10 LLaMA2-7B
+    //    activation-sparsity workload, serial vs 4 worker threads.  The
+    //    two runs are bit-identical by the docs/SEARCH.md contract; the
+    //    probe asserts it alongside the timing.
+    let w10 = llm::activation_sparse_variant(llm::llama2_7b(llm::Phase::prefill_only(2048)));
+    let cfg10 = |threads: usize| SearchConfig {
+        metric: Metric::MemoryEnergy,
+        mode: FormatMode::Search,
+        mapper: MapperConfig { max_candidates: 1_200, ..Default::default() },
+        threads,
+        ..Default::default()
+    };
+    let mut serial = None;
+    let t_serial = time_median(3, || serial = Some(cosearch_workload(&arch, &w10, &cfg10(1))));
+    let mut par = None;
+    let t_par = time_median(3, || par = Some(cosearch_workload(&arch, &w10, &cfg10(4))));
+    let (serial, par) = (serial.unwrap(), par.unwrap());
+    assert_eq!(serial.evaluations, par.evaluations, "parallel run diverged from serial");
+    assert_eq!(
+        serial.total_energy_pj().to_bits(),
+        par.total_energy_pj().to_bits(),
+        "parallel run is not bit-identical to serial"
+    );
+    assert!(par.cache.hits > 0, "access-counts cache never hit");
+    let speedup = t_serial / t_par;
+    println!("cosearch fig10 1 thr: {:>8.2} s", t_serial);
+    println!("cosearch fig10 4 thr: {:>8.2} s  ({speedup:.2}x speedup)", t_par);
+    println!(
+        "access-counts cache:  {} hits / {} misses ({:.1}% hit rate)",
+        par.cache.hits,
+        par.cache.misses,
+        100.0 * par.cache.hit_rate()
+    );
+
     write_result(
         "perf_l3",
         Json::obj(vec![
@@ -98,6 +132,12 @@ fn main() {
             ("search_formats_ms", Json::num(t_fs * 1e3)),
             ("cosearch_fixed_ms", Json::num(t_fixed * 1e3)),
             ("cosearch_search_ms", Json::num(t_search * 1e3)),
+            ("fig10_serial_s", Json::num(t_serial)),
+            ("fig10_threads4_s", Json::num(t_par)),
+            ("fig10_speedup_4t", Json::num(speedup)),
+            ("cache_hits", Json::num(par.cache.hits as f64)),
+            ("cache_misses", Json::num(par.cache.misses as f64)),
+            ("cache_hit_rate", Json::num(par.cache.hit_rate())),
         ]),
     );
 }

@@ -35,6 +35,7 @@ fn run_variant(
     label: &str,
     workloads: &[Workload],
     records: &mut Vec<Json>,
+    cache_totals: &mut snipsnap::cost::CacheStats,
 ) -> (Vec<f64>, Vec<f64>) {
     let arch = presets::arch3();
     let mut t = Table::new(vec![
@@ -67,6 +68,7 @@ fn run_variant(
             energies.push(r.memory_energy_pj());
         }
         let snip = cosearch_workload(&arch, w, &cfg(FormatMode::Search));
+        cache_totals.merge(snip.cache);
         let bitmap_e = energies[0];
         let saving = 1.0 - snip.memory_energy_pj() / bitmap_e;
         let speedup = bitmap_cycles / snip.total_cycles();
@@ -125,8 +127,11 @@ fn main() {
     .collect();
 
     let mut records = Vec::new();
-    let (sa_savings, sa_speedups) = run_variant("Activation sparsity (SA)", &sa, &mut records);
-    let (sw_savings, sw_speedups) = run_variant("Weight sparsity (SW)", &sw, &mut records);
+    let mut cache_totals = snipsnap::cost::CacheStats::default();
+    let (sa_savings, sa_speedups) =
+        run_variant("Activation sparsity (SA)", &sa, &mut records, &mut cache_totals);
+    let (sw_savings, sw_speedups) =
+        run_variant("Weight sparsity (SW)", &sw, &mut records, &mut cache_totals);
 
     println!(
         "SA: mean saving {} (paper 14.53%), mean speedup {} (paper 1.18x)",
@@ -146,6 +151,12 @@ fn main() {
         mean(&sw_savings) > mean(&sa_savings) * 0.8,
         "SW should benefit at least comparably to SA"
     );
+    println!(
+        "access-counts cache (co-searches): {} hits / {} misses ({:.1}% hit rate)",
+        cache_totals.hits,
+        cache_totals.misses,
+        100.0 * cache_totals.hit_rate()
+    );
     write_result(
         "fig10_single_llm",
         Json::obj(vec![
@@ -153,6 +164,8 @@ fn main() {
             ("sw_mean_saving", Json::num(mean(&sw_savings))),
             ("sa_mean_speedup", Json::num(mean(&sa_speedups))),
             ("sw_mean_speedup", Json::num(mean(&sw_speedups))),
+            ("cache_hits", Json::num(cache_totals.hits as f64)),
+            ("cache_misses", Json::num(cache_totals.misses as f64)),
             ("rows", Json::arr(records)),
         ]),
     );

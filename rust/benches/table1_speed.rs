@@ -31,10 +31,12 @@ fn main() {
 
     let mut t = Table::new(vec![
         "arch", "model", "fixed (s)", "speedup", "search (s)", "speedup", "stepwise (s)",
+        "cache hit%",
     ]);
     let mut fixed_speedups = Vec::new();
     let mut search_speedups = Vec::new();
     let mut records = Vec::new();
+    let mut cache_totals = snipsnap::cost::CacheStats::default();
     for arch in &archs {
         for w in &workloads {
             let fixed = cosearch_workload(
@@ -65,6 +67,9 @@ fn main() {
             let sp_s = t_sl / t_s;
             fixed_speedups.push(sp_f);
             search_speedups.push(sp_s);
+            cache_totals.merge(fixed.cache);
+            cache_totals.merge(search.cache);
+            cache_totals.merge(stepwise.cache);
             t.add_row(vec![
                 arch.name.split(' ').take(2).collect::<Vec<_>>().join(" "),
                 w.name.clone(),
@@ -73,6 +78,7 @@ fn main() {
                 format!("{t_s:.2}"),
                 fmt_x(sp_s),
                 format!("{t_sl:.2}"),
+                format!("{:.1}", 100.0 * search.cache.hit_rate()),
             ]);
             records.push(Json::obj(vec![
                 ("arch", Json::str(&arch.name)),
@@ -82,6 +88,8 @@ fn main() {
                 ("stepwise_s", Json::num(t_sl)),
                 ("fixed_speedup", Json::num(sp_f)),
                 ("search_speedup", Json::num(sp_s)),
+                ("search_cache_hits", Json::num(search.cache.hits as f64)),
+                ("search_cache_misses", Json::num(search.cache.misses as f64)),
             ]));
             // Quality parity on the shared space.
             let q = fixed.total_energy_pj() / stepwise.total_energy_pj();
@@ -103,11 +111,19 @@ fn main() {
     // reproducible claim is: Search costs a bounded multiple of Fixed
     // while exploring a strictly larger (format x dataflow) space.
     assert!(gs > 0.05, "search mode unreasonably slow vs stepwise: {gs}");
+    println!(
+        "access-counts cache (all runs): {} hits / {} misses ({:.1}% hit rate)",
+        cache_totals.hits,
+        cache_totals.misses,
+        100.0 * cache_totals.hit_rate()
+    );
     write_result(
         "table1_speed",
         Json::obj(vec![
             ("geomean_fixed_speedup", Json::num(gf)),
             ("geomean_search_speedup", Json::num(gs)),
+            ("cache_hits", Json::num(cache_totals.hits as f64)),
+            ("cache_misses", Json::num(cache_totals.misses as f64)),
             ("rows", Json::arr(records)),
         ]),
     );

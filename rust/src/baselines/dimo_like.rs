@@ -227,6 +227,9 @@ pub fn dimo_workload(
         designs,
         elapsed: start.elapsed(),
         evaluations: evals,
+        // DiMO evaluates uncached by design (its evaluation count is the
+        // §IV-D comparison metric; a cache would only change wall time).
+        cache: crate::cost::CacheStats::default(),
     }
 }
 

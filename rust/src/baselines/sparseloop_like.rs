@@ -18,25 +18,31 @@
 //! The SnipSnap progressive workflow (`crate::search`) removes all three.
 
 use crate::arch::Accelerator;
-use crate::cost::{evaluate, mapping_is_legal, CompressionRatios, Metric};
+use crate::cost::{mapping_is_legal, CompressionRatios, EvalContext, Metric};
 use crate::dataflow::mapper::{all_orders, for_each_proto, MapperConfig};
 use crate::dataflow::{Mapping, ProblemDims};
 use crate::engine::ScoredFormat;
 use crate::search::progressive::native_format;
-use crate::search::{OpDesign, WorkloadResult};
+use crate::search::{OpDesign, SearchTelemetry, WorkloadResult};
 use crate::sparsity::reduction::ReductionStrategy;
 use crate::sparsity::SparsitySpec;
 use crate::workload::{MatMulOp, Workload};
 use std::time::Instant;
 
 /// Stepwise search for one operator with the accelerator's fixed native
-/// format.  Returns the best sparse design plus the evaluation count.
+/// format.  Returns the best sparse design; evaluation counts and cache
+/// statistics accumulate into `tel`.  The workflow stays single-threaded
+/// by construction (it is the Table I comparison target), but it now
+/// evaluates through an [`EvalContext`]: the dense pass and the sparse
+/// re-modeling of the same mapping share one cached `access_counts`
+/// result, so even the baseline's structural double-modeling no longer
+/// recounts traffic twice.
 pub fn stepwise_op(
     arch: &Accelerator,
     op: &MatMulOp,
     mapper: &MapperConfig,
     metric: Metric,
-    evals: &mut u64,
+    tel: &mut SearchTelemetry,
 ) -> Option<OpDesign> {
     let p = op.dims;
     let dense_spec = SparsitySpec::dense();
@@ -56,6 +62,7 @@ pub fn stepwise_op(
     };
 
     let orders = all_orders();
+    let mut ctx = EvalContext::new(arch, p, metric);
     let mut best: Option<(Mapping, crate::cost::CostReport, f64)> = None;
 
     for_each_proto(
@@ -88,16 +95,19 @@ pub fn stepwise_op(
                 }
                 // Step 1: dense dataflow modeling (its result only ranks;
                 // the work is structurally wasted — Fig. 7's green pass).
-                let dense_r =
-                    evaluate(arch, &p, &m, &dense_spec, &ReductionStrategy::NONE, &CompressionRatios::DENSE);
-                *evals += 1;
+                let dense_r = ctx.evaluate(
+                    &m,
+                    &dense_spec,
+                    &ReductionStrategy::NONE,
+                    &CompressionRatios::DENSE,
+                );
                 let _ = metric.of(&dense_r);
 
                 // Step 2: sparse feature modeling + legality re-check
-                // (Fig. 7's blue pass).
+                // (Fig. 7's blue pass).  Same mapping as step 1, so the
+                // access counts come straight from the cache.
                 if mapping_is_legal(arch, &m, &ratios) {
-                    let sparse_r = evaluate(arch, &p, &m, &op.spec, &arch.reduction, &ratios);
-                    *evals += 1;
+                    let sparse_r = ctx.evaluate(&m, &op.spec, &arch.reduction, &ratios);
                     let v = metric.of(&sparse_r);
                     if best.as_ref().map(|(_, _, b)| v < *b).unwrap_or(true) {
                         best = Some((m, sparse_r, v));
@@ -123,6 +133,7 @@ pub fn stepwise_op(
         },
     );
 
+    tel.absorb(&ctx);
     best.map(|(mapping, report, v)| OpDesign {
         op_name: op.name.clone(),
         input_format: fi.format.clone(),
@@ -142,10 +153,10 @@ pub fn stepwise_workload(
     metric: Metric,
 ) -> WorkloadResult {
     let start = Instant::now();
-    let mut evals = 0u64;
+    let mut tel = SearchTelemetry::default();
     let mut designs = Vec::new();
     for op in &w.ops {
-        let d = stepwise_op(arch, op, mapper, metric, &mut evals)
+        let d = stepwise_op(arch, op, mapper, metric, &mut tel)
             .unwrap_or_else(|| panic!("no legal mapping for {}", op.name));
         designs.push(d);
     }
@@ -153,7 +164,8 @@ pub fn stepwise_workload(
         workload: w.name.clone(),
         designs,
         elapsed: start.elapsed(),
-        evaluations: evals,
+        evaluations: tel.evaluations,
+        cache: tel.cache,
     }
 }
 

@@ -15,6 +15,7 @@
 //! top_k = 4
 //! max_depth = 4
 //! max_mappings = 40000
+//! threads = 4               # co-search worker threads (0 = all cores)
 //!
 //! # Optional custom workload:
 //! [op.fc1]
@@ -263,6 +264,9 @@ pub fn load_run_config(src: &str) -> Result<RunConfig> {
         if let Some(p) = sec.get("pairs_to_map").and_then(|v| v.as_u64()) {
             search.pairs_to_map = p as usize;
         }
+        if let Some(t) = sec.get("threads").and_then(|v| v.as_u64()) {
+            search.threads = t as usize;
+        }
     }
     search.engine.data_bits = arch.data_bits;
     Ok(RunConfig { arch, workload, search })
@@ -294,6 +298,7 @@ mode = "fixed"
 [search]
 top_k = 2
 max_mappings = 1000
+threads = 4
 "#,
         )
         .unwrap();
@@ -301,6 +306,20 @@ max_mappings = 1000
         assert_eq!(cfg.search.metric, Metric::MemoryEnergy);
         assert_eq!(cfg.search.mode, FormatMode::Fixed);
         assert_eq!(cfg.search.mapper.max_candidates, 1000);
+        assert_eq!(cfg.search.threads, 4);
+    }
+
+    #[test]
+    fn threads_defaults_to_serial() {
+        let cfg = load_run_config(
+            r#"
+[run]
+arch = "arch3"
+workload = "opt-125m"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.search.threads, 1);
     }
 
     #[test]

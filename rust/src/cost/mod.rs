@@ -9,10 +9,26 @@
 //! Latency: max of compute cycles (skipping shrinks the effective MAC
 //! count) and each boundary's bandwidth-limited cycles — the perfectly
 //! double-buffered roofline.  EDP: product.
+//!
+//! # Memoized evaluation
+//!
+//! [`access_counts`] depends only on the mapping and problem dims —
+//! never on sparsity, reduction strategy or compression ratios — while
+//! the search re-evaluates the same mapping once per candidate
+//! format/ratio pair (and the order sweep / tile refinement revisit
+//! mappings many times within one pair).  [`EvalContext`] exploits that:
+//! it owns a per-(tiling, order) cache of [`access_counts`] results
+//! keyed by the full [`Mapping`], bundles the per-op invariants (arch,
+//! dims, metric) that every evaluator entry point used to thread as
+//! separate arguments, and reports [`CacheStats`] hit/miss counters
+//! surfaced by the CLI and the bench binaries.  The cached path is
+//! bit-identical to [`evaluate`]: both funnel into
+//! [`evaluate_from_counts`].
 
 use crate::arch::Accelerator;
-use crate::dataflow::{access_counts, LoopDim, Mapping, Operand, ProblemDims};
+use crate::dataflow::{access_counts, AccessCounts, LoopDim, Mapping, Operand, ProblemDims};
 use crate::sparsity::{reduction::ReductionStrategy, SparsitySpec};
+use std::collections::HashMap;
 
 /// Compressed/dense traffic ratios per operand (outputs move dense).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -132,7 +148,7 @@ pub fn mapping_is_legal(
         && mapping.spatial.unroll_cols <= arch.mac.spatial_cols
 }
 
-/// Evaluate one design point.
+/// Evaluate one design point (uncached: recomputes [`access_counts`]).
 pub fn evaluate(
     arch: &Accelerator,
     p: &ProblemDims,
@@ -142,6 +158,20 @@ pub fn evaluate(
     ratios: &CompressionRatios,
 ) -> CostReport {
     let ac = access_counts(mapping, p);
+    evaluate_from_counts(arch, p, mapping, spec, reduction, ratios, &ac)
+}
+
+/// Evaluate one design point from precomputed [`access_counts`] — the
+/// memoization seam shared by [`evaluate`] and [`EvalContext`].
+pub fn evaluate_from_counts(
+    arch: &Accelerator,
+    p: &ProblemDims,
+    mapping: &Mapping,
+    spec: &SparsitySpec,
+    reduction: &ReductionStrategy,
+    ratios: &CompressionRatios,
+    ac: &AccessCounts,
+) -> CostReport {
     let data_bits = arch.data_bits as f64;
 
     // --- MAC compute --------------------------------------------------
@@ -173,6 +203,120 @@ pub fn evaluate(
     }
 
     CostReport { mac_energy_pj, mem_energy_pj, compute_cycles, mem_cycles }
+}
+
+/// Hit/miss counters of the memoized [`access_counts`] cache.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Evaluations served from the cache.
+    pub hits: u64,
+    /// Evaluations that had to recompute (and then cached) the counts.
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn merge(&mut self, other: CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served from the cache (0.0 when none ran).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// Cached mappings per context before the cache is cleared and rebuilt.
+/// At roughly 250 bytes/entry this bounds a context to a few tens of MB;
+/// clearing (rather than evicting) keeps the hot recent protos warm on
+/// the very next insert and costs one extra miss per retained mapping.
+const EVAL_CACHE_CAP: usize = 1 << 17;
+
+/// Per-operator evaluation context: the invariants every cost-model call
+/// shares (accelerator, problem dims, optimization metric) plus a
+/// memoized [`access_counts`] cache keyed by the full [`Mapping`]
+/// (tiling factors, loop orders and spatial unroll).
+///
+/// The cache is sound because `access_counts` is a pure function of
+/// `(mapping, dims)`: sparsity spec, reduction strategy and compression
+/// ratios only scale the counts downstream, in
+/// [`evaluate_from_counts`].  A cached evaluation is therefore
+/// bit-identical to the uncached [`evaluate`] path, which is what lets
+/// the parallel co-search keep one private context per worker without
+/// affecting results (see `docs/SEARCH.md`).
+pub struct EvalContext<'a> {
+    pub arch: &'a Accelerator,
+    pub p: ProblemDims,
+    pub metric: Metric,
+    cache: HashMap<Mapping, AccessCounts>,
+    stats: CacheStats,
+}
+
+impl<'a> EvalContext<'a> {
+    pub fn new(arch: &'a Accelerator, p: ProblemDims, metric: Metric) -> Self {
+        EvalContext {
+            arch,
+            p,
+            metric,
+            cache: HashMap::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Logical cost-model evaluations requested (cache hits included) —
+    /// the exploration-effort metric reported as `evaluations`.  Derived
+    /// from the cache counters: every evaluation is exactly one hit or
+    /// one miss.
+    pub fn evals(&self) -> u64 {
+        self.stats.lookups()
+    }
+
+    /// Evaluate `mapping`, reusing cached access counts when available.
+    pub fn evaluate(
+        &mut self,
+        mapping: &Mapping,
+        spec: &SparsitySpec,
+        reduction: &ReductionStrategy,
+        ratios: &CompressionRatios,
+    ) -> CostReport {
+        if let Some(ac) = self.cache.get(mapping) {
+            self.stats.hits += 1;
+            return evaluate_from_counts(self.arch, &self.p, mapping, spec, reduction, ratios, ac);
+        }
+        self.stats.misses += 1;
+        if self.cache.len() >= EVAL_CACHE_CAP {
+            self.cache.clear();
+        }
+        let ac = access_counts(mapping, &self.p);
+        let r = evaluate_from_counts(self.arch, &self.p, mapping, spec, reduction, ratios, &ac);
+        self.cache.insert(mapping.clone(), ac);
+        r
+    }
+
+    /// Evaluate and score with the context's metric in one call.
+    pub fn value(
+        &mut self,
+        mapping: &Mapping,
+        spec: &SparsitySpec,
+        reduction: &ReductionStrategy,
+        ratios: &CompressionRatios,
+    ) -> (CostReport, f64) {
+        let r = self.evaluate(mapping, spec, reduction, ratios);
+        let v = self.metric.of(&r);
+        (r, v)
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.stats
+    }
 }
 
 #[cfg(test)]
@@ -267,7 +411,10 @@ mod tests {
             levels: vec![
                 TileLevel { factors: [1, 1, 1], order: [LoopDim::M, LoopDim::N, LoopDim::K] },
                 TileLevel { factors: [1, 1, 1], order: [LoopDim::M, LoopDim::N, LoopDim::K] },
-                TileLevel { factors: [256, 1024, 256], order: [LoopDim::M, LoopDim::N, LoopDim::K] },
+                TileLevel {
+                    factors: [256, 1024, 256],
+                    order: [LoopDim::M, LoopDim::N, LoopDim::K],
+                },
             ],
             spatial: Spatial {
                 dim_rows: LoopDim::M,
@@ -294,6 +441,54 @@ mod tests {
         );
         assert!(Metric::Energy.of(&r) >= Metric::MemoryEnergy.of(&r));
         assert_eq!(Metric::Edp.of(&r), r.total_energy_pj() * r.latency_cycles());
+    }
+
+    #[test]
+    fn eval_context_matches_uncached_path_exactly() {
+        let (arch, p, mapping) = toy_setup();
+        let spec = SparsitySpec::unstructured(0.4, 0.6);
+        let ratios = CompressionRatios { input: 0.5, weight: 0.7 };
+        let mut ctx = EvalContext::new(&arch, p, Metric::Edp);
+
+        let direct = evaluate(&arch, &p, &mapping, &spec, &arch.reduction, &ratios);
+        let first = ctx.evaluate(&mapping, &spec, &arch.reduction, &ratios);
+        let second = ctx.evaluate(&mapping, &spec, &arch.reduction, &ratios);
+        assert_eq!(first, direct, "cold (miss) path diverged from evaluate()");
+        assert_eq!(second, direct, "warm (hit) path diverged from evaluate()");
+        assert_eq!(ctx.cache_stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(ctx.evals(), 2);
+
+        // Different spec/reduction/ratios share the same cached counts
+        // and must still match the uncached path bit for bit.
+        let dense_direct = evaluate(
+            &arch,
+            &p,
+            &mapping,
+            &SparsitySpec::dense(),
+            &ReductionStrategy::NONE,
+            &CompressionRatios::DENSE,
+        );
+        let dense_cached = ctx.evaluate(
+            &mapping,
+            &SparsitySpec::dense(),
+            &ReductionStrategy::NONE,
+            &CompressionRatios::DENSE,
+        );
+        assert_eq!(dense_cached, dense_direct);
+        assert_eq!(ctx.cache_stats(), CacheStats { hits: 2, misses: 1 });
+
+        // A different mapping (order flip) is a distinct cache key.
+        let mut other = mapping.clone();
+        other.levels[0].order = [LoopDim::K, LoopDim::N, LoopDim::M];
+        let other_direct = evaluate(&arch, &p, &other, &spec, &arch.reduction, &ratios);
+        let other_cached = ctx.evaluate(&other, &spec, &arch.reduction, &ratios);
+        assert_eq!(other_cached, other_direct);
+        assert_eq!(ctx.cache_stats(), CacheStats { hits: 2, misses: 2 });
+
+        // value() reports the context metric of the same report.
+        let (r, v) = ctx.value(&mapping, &spec, &arch.reduction, &ratios);
+        assert_eq!(v, Metric::Edp.of(&r));
+        assert!(ctx.cache_stats().hit_rate() > 0.5);
     }
 
     #[test]

@@ -100,7 +100,7 @@ impl Operand {
 
 /// Per-memory-level temporal tiling: the factor by which each dim is
 /// split at this level, plus the loop order (outermost first).
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct TileLevel {
     pub factors: [u64; 3], // indexed by LoopDim order M, N, K
     pub order: [LoopDim; 3],
@@ -118,7 +118,7 @@ impl TileLevel {
 
 /// Spatial unrolling over the MAC array: dims mapped to the two array
 /// axes with their unroll factors.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Spatial {
     pub dim_rows: LoopDim,
     pub unroll_rows: u64,
@@ -142,7 +142,11 @@ impl Spatial {
 /// A complete mapping: temporal tiling per memory level (outermost DRAM
 /// level first, same order as `Accelerator::levels`) plus the spatial
 /// unrolling at the array.  The innermost implicit level is a single MAC.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// `Eq + Hash` (all fields are integers/enums) lets a mapping serve as
+/// the key of the memoized `access_counts` cache in
+/// [`crate::cost::EvalContext`].
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct Mapping {
     pub levels: Vec<TileLevel>,
     pub spatial: Spatial,

@@ -23,7 +23,14 @@ pub struct WeightedWorkload<'a> {
 /// Traffic-weighted compressed bits of every operand tensor of `w` under
 /// pattern `pat` (per-tensor allocation chosen by the engine).  Falls
 /// back to dense bits when the pattern cannot allocate on a shape.
+///
+/// Identical (shape, sparsity) tensors recur across a transformer's
+/// layers and phases, so the per-tensor allocation + costing is memoized
+/// within one call — the same idea as the co-search's `access_counts`
+/// cache, one layer up.
 pub fn workload_format_bits(w: &Workload, pat: &CompPat, cfg: &EngineConfig) -> f64 {
+    let mut memo: std::collections::HashMap<(u64, u64, String), f64> =
+        std::collections::HashMap::new();
     let mut total = 0.0;
     for op in &w.ops {
         let tensors: [(u64, u64, &SparsityPattern); 2] = [
@@ -31,10 +38,13 @@ pub fn workload_format_bits(w: &Workload, pat: &CompPat, cfg: &EngineConfig) -> 
             (op.dims.n, op.dims.k, &op.spec.weight),
         ];
         for (rows, cols, pattern) in tensors {
-            let bits = match allocate::choose_allocation(pat, rows, cols, pattern, None, cfg) {
-                Some(f) => analytical_cost(&f, pattern, cfg.data_bits).total_bits(),
-                None => (rows * cols) as f64 * cfg.data_bits as f64,
-            };
+            let key = (rows, cols, format!("{pattern:?}"));
+            let bits = *memo.entry(key).or_insert_with(|| {
+                match allocate::choose_allocation(pat, rows, cols, pattern, None, cfg) {
+                    Some(f) => analytical_cost(&f, pattern, cfg.data_bits).total_bits(),
+                    None => (rows * cols) as f64 * cfg.data_bits as f64,
+                }
+            });
             total += bits * op.count as f64;
         }
     }
@@ -112,7 +122,11 @@ pub fn select_shared_pattern(
             .map(|b| weighted < b.weighted_bits)
             .unwrap_or(true)
         {
-            best = Some(SharedSelection { pattern: pat, per_workload_bits: per, weighted_bits: weighted });
+            best = Some(SharedSelection {
+                pattern: pat,
+                per_workload_bits: per,
+                weighted_bits: weighted,
+            });
         }
     }
     best.unwrap()

@@ -21,6 +21,8 @@ fn usage() -> ! {
          USAGE:\n\
            snipsnap search   [--config F.toml] [--arch A] [--workload W]\n\
                              [--metric M] [--mode search|fixed] [--max-mappings N]\n\
+                             [--threads N]  (0 = all cores; results are\n\
+                             bit-identical for any thread count)\n\
            snipsnap formats  --rows R --cols C --density D [--gamma G] [--depth N]\n\
            snipsnap validate [--study scnn|dstc]\n\
            snipsnap xla      [--artifacts DIR]\n\
@@ -99,6 +101,9 @@ fn cmd_search(args: &Args) -> Result<()> {
     if let Some(n) = args.get_u64("max-mappings")? {
         cfg.mapper.max_candidates = n as usize;
     }
+    if let Some(t) = args.get_u64("threads")? {
+        cfg.threads = t as usize;
+    }
 
     eprintln!("arch: {}", arch.name);
     eprintln!("workload: {} ({} ops)", workload.name, workload.op_count());
@@ -129,9 +134,16 @@ fn cmd_search(args: &Args) -> Result<()> {
         fmt_f(r.edp()),
     );
     println!(
-        "search: {} cost-model evaluations in {:.2}s",
+        "search: {} cost-model evaluations in {:.2}s ({} threads)",
         r.evaluations,
-        r.elapsed.as_secs_f64()
+        r.elapsed.as_secs_f64(),
+        snipsnap::util::pool::resolve_threads(cfg.threads),
+    );
+    println!(
+        "cache: access-counts {} hits / {} misses ({:.1}% hit rate)",
+        r.cache.hits,
+        r.cache.misses,
+        100.0 * r.cache.hit_rate(),
     );
     Ok(())
 }

@@ -18,13 +18,29 @@
 //!    boundary-`b` traffic is independent of deeper levels' orders, so
 //!    the greedy pass is locally exact per boundary.
 //!
+//! # Parallel execution and memoized evaluation
+//!
+//! The per-op searches are independent, so [`cosearch_workload`] shards
+//! operators across a scoped worker pool ([`crate::util::pool`]); when
+//! [`SearchConfig::threads`] exceeds the operator count, the
+//! [`for_each_proto`](crate::dataflow::mapper::for_each_proto)
+//! enumeration *within* an op is sharded too.  Partial bests are merged
+//! by a total order on `(metric value, proto id)`, which makes results
+//! **bit-identical** to the serial path for any thread count — the
+//! contract, and why it holds, is documented in `docs/SEARCH.md`.
+//! Every worker owns a private [`EvalContext`](crate::cost::EvalContext)
+//! that memoizes `access_counts` per (tiling, order) proto across
+//! candidate format/ratio pairs; aggregated
+//! [`CacheStats`](crate::cost::CacheStats) land in
+//! [`WorkloadResult::cache`].
+//!
 //! Contrast with the Sparseloop-style stepwise workflow in
 //! [`crate::baselines::sparseloop_like`].
 
 pub mod progressive;
 
 use crate::arch::Accelerator;
-use crate::cost::{CostReport, Metric};
+use crate::cost::{CacheStats, CostReport, EvalContext, Metric};
 use crate::dataflow::Mapping;
 use crate::engine::EngineConfig;
 use crate::format::Format;
@@ -33,6 +49,30 @@ use std::time::Duration;
 pub use progressive::{
     cosearch_op, cosearch_workload, evaluate_with_formats, probe_tile_hints,
 };
+
+/// Per-search telemetry: logical cost-model evaluations plus the
+/// hit/miss counters of the memoized `access_counts` cache.  Hits still
+/// count as evaluations (the exploration-effort metric is unchanged by
+/// caching); the cache counters measure how much recomputation the
+/// memoization removed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SearchTelemetry {
+    pub evaluations: u64,
+    pub cache: CacheStats,
+}
+
+impl SearchTelemetry {
+    /// Fold one worker's evaluation context into this telemetry.
+    pub fn absorb(&mut self, ctx: &EvalContext<'_>) {
+        self.evaluations += ctx.evals();
+        self.cache.merge(ctx.cache_stats());
+    }
+
+    pub fn merge(&mut self, other: SearchTelemetry) {
+        self.evaluations += other.evaluations;
+        self.cache.merge(other.cache);
+    }
+}
 
 /// Format selection mode (Table I columns).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -53,6 +93,12 @@ pub struct SearchConfig {
     /// Format pairs receiving a full mapping search (the rest are scored
     /// on the winner's mapping).
     pub pairs_to_map: usize,
+    /// Worker threads for the parallel co-search: operators shard across
+    /// threads, and when threads exceed the operator count the proto
+    /// enumeration within an operator is sharded too.  `1` (the default)
+    /// runs fully serial; `0` uses all available cores.  Results are
+    /// bit-identical for any value (see docs/SEARCH.md).
+    pub threads: usize,
 }
 
 impl Default for SearchConfig {
@@ -66,6 +112,7 @@ impl Default for SearchConfig {
                 ..Default::default()
             },
             pairs_to_map: 2,
+            threads: 1,
         }
     }
 }
@@ -88,8 +135,11 @@ pub struct WorkloadResult {
     pub workload: String,
     pub designs: Vec<OpDesign>,
     pub elapsed: Duration,
-    /// Cost-model evaluations performed (the exploration-effort metric).
+    /// Cost-model evaluations performed (the exploration-effort metric;
+    /// cache hits included, so the count is thread- and cache-invariant).
     pub evaluations: u64,
+    /// Aggregated `access_counts` cache hit/miss counters.
+    pub cache: CacheStats,
 }
 
 impl WorkloadResult {

@@ -1,14 +1,23 @@
 //! Core of the progressive co-search (see module docs in [`super`]).
+//!
+//! The hot path is parallel and memoized: operators shard across a
+//! scoped worker pool, the proto enumeration within an operator shards
+//! across threads with a deterministic `(metric value, proto id)`
+//! reduction, and every worker evaluates through a private
+//! [`EvalContext`] that caches `access_counts` per (tiling, order)
+//! proto across candidate format pairs.  `docs/SEARCH.md` walks the
+//! whole pipeline and states the determinism contract.
 
-use super::{FormatMode, OpDesign, SearchConfig, WorkloadResult};
+use super::{FormatMode, OpDesign, SearchConfig, SearchTelemetry, WorkloadResult};
 use crate::arch::Accelerator;
-use crate::cost::{evaluate, mapping_is_legal, CompressionRatios, CostReport};
+use crate::cost::{mapping_is_legal, CompressionRatios, CostReport, EvalContext};
 use crate::dataflow::mapper::{all_orders, for_each_proto};
 use crate::dataflow::{LoopDim, Mapping, ProblemDims};
 use crate::engine::allocate::TileHints;
 use crate::engine::{search_formats, ScoredFormat};
 use crate::format::{named, Format};
 use crate::sparsity::{SparsityPattern, SparsitySpec};
+use crate::util::pool;
 use crate::workload::{MatMulOp, Workload};
 use std::time::Instant;
 
@@ -111,16 +120,16 @@ fn pair_ratios(
 /// levels ≤ b, so the first sweep is already locally exact per boundary;
 /// later sweeps catch cross-boundary interactions that a single greedy
 /// pass misses — at ~2x the evaluations of one pass, still an order of
-/// magnitude below exhaustive 6^L expansion.
+/// magnitude below exhaustive 6^L expansion.  The sweep revisits the
+/// same (tiling, order) points repeatedly, which is exactly what the
+/// context's `access_counts` cache absorbs.
 fn choose_orders_greedy(
     proto: &Mapping,
-    arch: &Accelerator,
-    p: &ProblemDims,
+    ctx: &mut EvalContext<'_>,
     spec: &SparsitySpec,
     ratios: &CompressionRatios,
-    metric: crate::cost::Metric,
-    evals: &mut u64,
 ) -> (Mapping, CostReport) {
+    let arch = ctx.arch;
     let mut m = proto.clone();
     let orders = all_orders();
     let mut current = f64::INFINITY;
@@ -135,9 +144,7 @@ fn choose_orders_greedy(
             let mut best: Option<([LoopDim; 3], f64)> = None;
             for &ord in &orders {
                 m.levels[lvl].order = ord;
-                let r = evaluate(arch, p, &m, spec, &arch.reduction, ratios);
-                *evals += 1;
-                let v = metric.of(&r);
+                let (_, v) = ctx.value(&m, spec, &arch.reduction, ratios);
                 if best.map(|(_, b)| v < b).unwrap_or(true) {
                     best = Some((ord, v));
                 }
@@ -153,8 +160,7 @@ fn choose_orders_greedy(
             break;
         }
     }
-    let r = evaluate(arch, p, &m, spec, &arch.reduction, ratios);
-    *evals += 1;
+    let r = ctx.evaluate(&m, spec, &arch.reduction, ratios);
     (m, r)
 }
 
@@ -162,16 +168,15 @@ fn choose_orders_greedy(
 /// proto, moving prime-ish factors {2,3,5,7} between memory levels per
 /// dim.  Catches optima the capped divisor enumeration truncates away on
 /// divisor-rich (CNN im2col) problem dims; each accepted move re-runs the
-/// order sweep.
+/// order sweep.  Runs serially after the sharded enumeration has been
+/// reduced, so it never affects the determinism contract.
 fn refine_tiles(
     best: (Mapping, CostReport, f64),
-    arch: &Accelerator,
-    p: &ProblemDims,
+    ctx: &mut EvalContext<'_>,
     spec: &SparsitySpec,
     ratios: &CompressionRatios,
-    metric: crate::cost::Metric,
-    evals: &mut u64,
 ) -> (Mapping, CostReport, f64) {
+    let arch = ctx.arch;
     let (mut mapping, mut report, mut value) = best;
     for _iter in 0..40 {
         let mut improved = false;
@@ -192,10 +197,8 @@ fn refine_tiles(
                         if !mapping_is_legal(arch, &cand, ratios) {
                             continue;
                         }
-                        let (m2, r2) = choose_orders_greedy(
-                            &cand, arch, p, spec, ratios, metric, evals,
-                        );
-                        let v2 = metric.of(&r2);
+                        let (m2, r2) = choose_orders_greedy(&cand, ctx, spec, ratios);
+                        let v2 = ctx.metric.of(&r2);
                         if v2 < value {
                             mapping = m2;
                             report = r2;
@@ -214,40 +217,119 @@ fn refine_tiles(
     (mapping, report, value)
 }
 
-/// Progressive co-search for one operator.  Returns `None` only if no
-/// legal mapping exists for any candidate format pair.
-pub fn cosearch_op(
+/// One shard's best over the proto enumeration: the metric value, the
+/// proto's position in the (deterministic) enumeration order, and the
+/// ordered mapping with its report.
+struct PairBest {
+    value: f64,
+    proto_id: u64,
+    mapping: Mapping,
+    report: CostReport,
+}
+
+/// Run the proto enumeration for one (op, format pair), processing only
+/// protos with `id % nshards == shard`.  Every shard replays the *full*
+/// enumeration and legality filter, so proto ids and the candidate
+/// budget are identical across shards — only the expensive order sweep
+/// is divided.  In-shard ties keep the earliest proto (strict `<`).
+fn search_pair_shard(
+    shard: usize,
+    nshards: usize,
+    ctx: &mut EvalContext<'_>,
+    op: &MatMulOp,
+    cfg: &SearchConfig,
+    ratios: &CompressionRatios,
+) -> Option<PairBest> {
+    let arch = ctx.arch;
+    let mut proto_id = 0u64;
+    let mut best: Option<PairBest> = None;
+    for_each_proto(
+        &op.dims,
+        arch.levels.len(),
+        arch.mac.spatial_rows,
+        arch.mac.spatial_cols,
+        &cfg.mapper,
+        // §III-D2: compressed-footprint legality BEFORE ordering.
+        |proto| mapping_is_legal(arch, proto, ratios),
+        |proto| {
+            let id = proto_id;
+            proto_id += 1;
+            if id % nshards as u64 != shard as u64 {
+                return;
+            }
+            let (m, r) = choose_orders_greedy(proto, ctx, &op.spec, ratios);
+            let v = ctx.metric.of(&r);
+            if best.as_ref().map(|b| v < b.value).unwrap_or(true) {
+                best = Some(PairBest { value: v, proto_id: id, mapping: m, report: r });
+            }
+        },
+    );
+    best
+}
+
+/// Sharded mapping search for one (op, ratios) pair: fan the enumeration
+/// out over the contexts' threads, merge the partial bests by the total
+/// order on `(value, proto id)` — bit-identical to the serial pass for
+/// any shard count — then refine tiles serially from the winner.
+fn map_search(
+    ctxs: &mut [EvalContext<'_>],
+    op: &MatMulOp,
+    cfg: &SearchConfig,
+    ratios: &CompressionRatios,
+) -> Option<(Mapping, CostReport, f64)> {
+    let nshards = ctxs.len();
+    let partials: Vec<Option<PairBest>> = if nshards <= 1 {
+        vec![search_pair_shard(0, 1, &mut ctxs[0], op, cfg, ratios)]
+    } else {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = ctxs
+                .iter_mut()
+                .enumerate()
+                .map(|(i, ctx)| {
+                    s.spawn(move || search_pair_shard(i, nshards, ctx, op, cfg, ratios))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("proto-search worker panicked"))
+                .collect()
+        })
+    };
+    // Deterministic reduction: minimize (value, proto id).  The id
+    // tie-break reproduces the serial rule "first strictly better wins"
+    // exactly, independent of shard count and scheduling.
+    let pb = partials.into_iter().flatten().min_by(|a, b| {
+        a.value
+            .partial_cmp(&b.value)
+            .expect("metric value was NaN")
+            .then(a.proto_id.cmp(&b.proto_id))
+    })?;
+    Some(refine_tiles(
+        (pb.mapping, pb.report, pb.value),
+        &mut ctxs[0],
+        &op.spec,
+        ratios,
+    ))
+}
+
+/// Progressive co-search for one operator over `shards` proto-level
+/// threads.  The per-shard evaluation contexts persist across format
+/// pairs, so the `access_counts` cache pays off a second time when the
+/// same proto recurs under a different candidate ratio pair.
+fn cosearch_op_sharded(
     arch: &Accelerator,
     op: &MatMulOp,
     cfg: &SearchConfig,
-    evals: &mut u64,
+    shards: usize,
+    tel: &mut SearchTelemetry,
 ) -> Option<OpDesign> {
-    let nlevels = arch.levels.len();
+    let mut ctxs: Vec<EvalContext<'_>> = (0..shards.max(1))
+        .map(|_| EvalContext::new(arch, op.dims, cfg.metric))
+        .collect();
     let mut best: Option<OpDesign> = None;
     for (fi, fw) in format_pairs(arch, op, cfg) {
         let ratios = pair_ratios(&fi, &fw, &op.spec);
-        let mut pair_best: Option<(Mapping, CostReport, f64)> = None;
-        for_each_proto(
-            &op.dims,
-            nlevels,
-            arch.mac.spatial_rows,
-            arch.mac.spatial_cols,
-            &cfg.mapper,
-            // §III-D2: compressed-footprint legality BEFORE ordering.
-            |proto| mapping_is_legal(arch, proto, &ratios),
-            |proto| {
-                let (m, r) = choose_orders_greedy(
-                    proto, arch, &op.dims, &op.spec, &ratios, cfg.metric, evals,
-                );
-                let v = cfg.metric.of(&r);
-                if pair_best.as_ref().map(|(_, _, b)| v < *b).unwrap_or(true) {
-                    pair_best = Some((m, r, v));
-                }
-            },
-        );
-        if let Some(pb) = pair_best {
-            let (mapping, report, v) =
-                refine_tiles(pb, arch, &op.dims, &op.spec, &ratios, cfg.metric, evals);
+        if let Some((mapping, report, v)) = map_search(&mut ctxs, op, cfg, &ratios) {
             if best.as_ref().map(|b| v < b.metric_value).unwrap_or(true) {
                 best = Some(OpDesign {
                     op_name: op.name.clone(),
@@ -261,76 +343,111 @@ pub fn cosearch_op(
             }
         }
     }
+    for ctx in &ctxs {
+        tel.absorb(ctx);
+    }
     best
 }
 
-/// Progressive co-search across a whole workload.
-pub fn cosearch_workload(
+/// Progressive co-search for one operator.  Returns `None` only if no
+/// legal mapping exists for any candidate format pair.  Uses
+/// `cfg.threads` proto-level shards; evaluation counts and cache
+/// statistics accumulate into `tel`.
+pub fn cosearch_op(
+    arch: &Accelerator,
+    op: &MatMulOp,
+    cfg: &SearchConfig,
+    tel: &mut SearchTelemetry,
+) -> Option<OpDesign> {
+    cosearch_op_sharded(arch, op, cfg, pool::resolve_threads(cfg.threads), tel)
+}
+
+/// Split `threads` between op-level workers and proto-level shards:
+/// operators first (coarser tasks, no redundant enumeration), leftover
+/// parallelism goes inside each op.  The split is an integer division,
+/// so `threads % workers` of the requested threads stay idle when the
+/// count divides unevenly (e.g. 6 threads over 4 ops → 4 workers × 1
+/// shard); full saturation needs `threads <= #ops` or a multiple of it.
+fn split_threads(threads: usize, nops: usize) -> (usize, usize) {
+    let workers = threads.clamp(1, nops.max(1));
+    (workers, (threads / workers).max(1))
+}
+
+/// Fold per-op `(design, telemetry)` results — already in workload op
+/// order — into a [`WorkloadResult`], panicking with the op name when an
+/// op found no legal mapping (tiny on-chip memory; a dense worst-case
+/// fallback with trivially legal minimal tiles is a possible future
+/// softening).
+fn collect_workload(
     arch: &Accelerator,
     w: &Workload,
-    cfg: &SearchConfig,
+    start: Instant,
+    per_op: Vec<(Option<OpDesign>, SearchTelemetry)>,
 ) -> WorkloadResult {
-    let start = Instant::now();
-    let mut evals = 0u64;
+    let mut tel = SearchTelemetry::default();
     let mut designs = Vec::with_capacity(w.ops.len());
-    for op in &w.ops {
-        if let Some(d) = cosearch_op(arch, op, cfg, &mut evals) {
-            designs.push(d);
-        } else {
-            // No legal mapping (tiny on-chip memory): fall back to a dense
-            // worst-case evaluation with trivially legal minimal tiles.
-            panic!("no legal mapping for op {} on {}", op.name, arch.name);
+    for (i, (d, t)) in per_op.into_iter().enumerate() {
+        tel.merge(t);
+        match d {
+            Some(d) => designs.push(d),
+            None => panic!("no legal mapping for op {} on {}", w.ops[i].name, arch.name),
         }
     }
     WorkloadResult {
         workload: w.name.clone(),
         designs,
         elapsed: start.elapsed(),
-        evaluations: evals,
+        evaluations: tel.evaluations,
+        cache: tel.cache,
     }
+}
+
+/// Progressive co-search across a whole workload, parallelized over
+/// `cfg.threads` worker threads (serial when 1).  Results — designs,
+/// scores and the `evaluations` count — are bit-identical for any
+/// thread count; see `docs/SEARCH.md`.
+pub fn cosearch_workload(
+    arch: &Accelerator,
+    w: &Workload,
+    cfg: &SearchConfig,
+) -> WorkloadResult {
+    let start = Instant::now();
+    let (workers, shards) = split_threads(pool::resolve_threads(cfg.threads), w.ops.len());
+    let per_op = pool::parallel_map(workers, &w.ops, |_, op| {
+        let mut tel = SearchTelemetry::default();
+        let d = cosearch_op_sharded(arch, op, cfg, shards, &mut tel);
+        (d, tel)
+    });
+    collect_workload(arch, w, start, per_op)
 }
 
 /// Evaluate a workload with FIXED formats and a FIXED per-op mapping
 /// chosen by the co-search once — utility for format-comparison benches
-/// (Fig. 10): same dataflow search, only the format differs.
+/// (Fig. 10): same dataflow search, only the format differs.  Shares the
+/// workload/op sharding of [`cosearch_workload`], so `make_formats` must
+/// be callable from worker threads (`Sync`).
 pub fn evaluate_with_formats(
     arch: &Accelerator,
     w: &Workload,
-    make_formats: impl Fn(&MatMulOp) -> (Format, Format),
+    make_formats: impl Fn(&MatMulOp) -> (Format, Format) + Sync,
     cfg: &SearchConfig,
 ) -> WorkloadResult {
     let start = Instant::now();
-    let mut evals = 0u64;
-    let mut designs = Vec::with_capacity(w.ops.len());
-    for op in &w.ops {
+    let (workers, shards) = split_threads(pool::resolve_threads(cfg.threads), w.ops.len());
+    let per_op = pool::parallel_map(workers, &w.ops, |_, op| {
         let (f_i, f_w) = make_formats(op);
         let fi = ScoredFormat::score(f_i, &op.spec.input, &cfg.engine);
         let fw = ScoredFormat::score(f_w, &op.spec.weight, &cfg.engine);
         let ratios = pair_ratios(&fi, &fw, &op.spec);
-        let mut best: Option<(Mapping, CostReport, f64)> = None;
-        for_each_proto(
-            &op.dims,
-            arch.levels.len(),
-            arch.mac.spatial_rows,
-            arch.mac.spatial_cols,
-            &cfg.mapper,
-            |proto| mapping_is_legal(arch, proto, &ratios),
-            |proto| {
-                let (m, r) = choose_orders_greedy(
-                    proto, arch, &op.dims, &op.spec, &ratios, cfg.metric, &mut evals,
-                );
-                let v = cfg.metric.of(&r);
-                if best.as_ref().map(|(_, _, b)| v < *b).unwrap_or(true) {
-                    best = Some((m, r, v));
-                }
-            },
-        );
-        let best = best.unwrap_or_else(|| {
-            panic!("no legal mapping for {} on {}", op.name, arch.name)
-        });
-        let (mapping, report, v) =
-            refine_tiles(best, arch, &op.dims, &op.spec, &ratios, cfg.metric, &mut evals);
-        designs.push(OpDesign {
+        let mut ctxs: Vec<EvalContext<'_>> = (0..shards)
+            .map(|_| EvalContext::new(arch, op.dims, cfg.metric))
+            .collect();
+        let found = map_search(&mut ctxs, op, cfg, &ratios);
+        let mut tel = SearchTelemetry::default();
+        for ctx in &ctxs {
+            tel.absorb(ctx);
+        }
+        let design = found.map(|(mapping, report, v)| OpDesign {
             op_name: op.name.clone(),
             input_format: fi.format,
             weight_format: fw.format,
@@ -339,13 +456,9 @@ pub fn evaluate_with_formats(
             metric_value: v,
             count: op.count,
         });
-    }
-    WorkloadResult {
-        workload: w.name.clone(),
-        designs,
-        elapsed: start.elapsed(),
-        evaluations: evals,
-    }
+        (design, tel)
+    });
+    collect_workload(arch, w, start, per_op)
 }
 
 /// Check the compressed tensors of a design still satisfy the analytical
@@ -386,10 +499,12 @@ mod tests {
     fn fixed_mode_finds_a_design() {
         let arch = presets::arch3();
         let op = small_op("t", 64, 64, 64, 0.5, 0.5);
-        let mut evals = 0;
-        let d = cosearch_op(&arch, &op, &fast_cfg(FormatMode::Fixed), &mut evals).unwrap();
+        let mut tel = SearchTelemetry::default();
+        let d = cosearch_op(&arch, &op, &fast_cfg(FormatMode::Fixed), &mut tel).unwrap();
         assert!(design_is_sane(&d));
-        assert!(evals > 0);
+        assert!(tel.evaluations > 0);
+        // The order sweep's final re-evaluation alone guarantees hits.
+        assert!(tel.cache.hits > 0, "memoization never fired: {:?}", tel.cache);
         d.mapping.validate(&op.dims).unwrap();
         // Fixed mode uses the native bitmap.
         assert!(d.input_format.to_string().contains("B(N"), "{}", d.input_format);
@@ -399,10 +514,10 @@ mod tests {
     fn search_mode_not_worse_than_fixed() {
         let arch = presets::arch3();
         let op = small_op("t", 64, 128, 64, 0.15, 0.3);
-        let mut e1 = 0;
-        let mut e2 = 0;
-        let fixed = cosearch_op(&arch, &op, &fast_cfg(FormatMode::Fixed), &mut e1).unwrap();
-        let search = cosearch_op(&arch, &op, &fast_cfg(FormatMode::Search), &mut e2).unwrap();
+        let mut t1 = SearchTelemetry::default();
+        let mut t2 = SearchTelemetry::default();
+        let fixed = cosearch_op(&arch, &op, &fast_cfg(FormatMode::Fixed), &mut t1).unwrap();
+        let search = cosearch_op(&arch, &op, &fast_cfg(FormatMode::Search), &mut t2).unwrap();
         assert!(
             search.metric_value <= fixed.metric_value * 1.0001,
             "search {} vs fixed {}",
@@ -427,6 +542,7 @@ mod tests {
         assert!(r.memory_energy_pj() < r.total_energy_pj());
         assert!(r.total_cycles() > 0.0);
         assert!(r.evaluations > 0);
+        assert_eq!(r.cache.lookups(), r.evaluations);
         assert_eq!(
             r.metric_total(Metric::Edp),
             r.total_energy_pj() * r.total_cycles()
@@ -453,6 +569,15 @@ mod tests {
         assert_eq!(hi.col.iter().product::<u64>(), 128);
         assert_eq!(hw.row.iter().product::<u64>(), 128);
         assert_eq!(hw.col.iter().product::<u64>(), 256);
+    }
+
+    #[test]
+    fn split_threads_prefers_op_workers() {
+        assert_eq!(split_threads(1, 6), (1, 1));
+        assert_eq!(split_threads(4, 6), (4, 1));
+        assert_eq!(split_threads(4, 1), (1, 4));
+        assert_eq!(split_threads(8, 2), (2, 4));
+        assert_eq!(split_threads(3, 0), (1, 3));
     }
 
     #[test]

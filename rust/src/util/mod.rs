@@ -1,10 +1,13 @@
 //! Utility substrates hand-rolled for offline builds (no serde / rand /
-//! criterion / proptest available): PRNG, math helpers, statistics, ASCII
-//! tables, a minimal JSON reader/writer and a property-testing harness.
+//! criterion / rayon / proptest available): PRNG, math helpers,
+//! statistics, ASCII tables, a minimal JSON reader/writer, a
+//! property-testing harness and the scoped worker [`pool`] driving the
+//! parallel co-search.
 
 pub mod bench;
 pub mod json;
 pub mod mathx;
+pub mod pool;
 pub mod prng;
 pub mod proptest;
 pub mod stats;

@@ -1,0 +1,125 @@
+//! Scoped worker pool for the parallel co-search.
+//!
+//! Offline builds cannot take a `rayon` dependency, so this module
+//! provides the one primitive the search needs: map a closure over a
+//! slice on up to `n` OS threads ([`parallel_map`]), with results
+//! returned **in input order** regardless of which worker processed
+//! which item.  Workers pull items off a shared atomic cursor (work
+//! stealing), so heterogeneous item costs balance automatically;
+//! determinism is preserved because the output slot of item `i` is fixed
+//! by `i`, never by scheduling.
+//!
+//! The co-search layers two levels of sharding on top of this primitive
+//! (see [`crate::search`]): operators across pool workers, and — when
+//! threads outnumber operators — the
+//! [`for_each_proto`](crate::dataflow::mapper::for_each_proto)
+//! enumeration within an operator across shards, merged by a
+//! deterministic `(metric value, proto id)` total order.  The full
+//! determinism contract is documented in `docs/SEARCH.md`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Resolve a configured thread count: `0` means "use all available
+/// cores"; any other value is taken literally.
+pub fn resolve_threads(configured: usize) -> usize {
+    if configured == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        configured
+    }
+}
+
+/// Map `f` over `items` on up to `threads` scoped OS threads, returning
+/// the results in input order.  `f` receives `(index, &item)`.
+///
+/// With `threads <= 1` (or fewer than two items) everything runs inline
+/// on the caller's thread — the serial path spawns nothing, so
+/// `threads = 1` is exactly the pre-parallel code path.
+///
+/// A panic in `f` propagates to the caller once all workers have
+/// stopped.
+pub fn parallel_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = threads.clamp(1, items.len().max(1));
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        local.push((i, f(i, &items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pool worker panicked"))
+            .collect()
+    });
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    for (i, r) in parts.into_iter().flatten() {
+        debug_assert!(out[i].is_none(), "item {i} produced twice");
+        out[i] = Some(r);
+    }
+    out.into_iter()
+        .map(|r| r.expect("pool dropped an item"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<u64> = (0..257).collect();
+        let serial = parallel_map(1, &items, |i, &x| x * 2 + i as u64);
+        let par = parallel_map(4, &items, |i, &x| x * 2 + i as u64);
+        assert_eq!(serial, par);
+        assert_eq!(par[10], 30);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let items = [1u32, 2];
+        assert_eq!(parallel_map(8, &items, |_, &x| x + 1), vec![2, 3]);
+        let empty: [u32; 0] = [];
+        assert!(parallel_map(4, &empty, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn work_stealing_covers_every_item_once() {
+        // Uneven per-item cost: early items are expensive, so a static
+        // block split would leave workers idle; the cursor must still
+        // yield each index exactly once.
+        let items: Vec<u32> = (0..64).collect();
+        let out = parallel_map(3, &items, |i, &x| {
+            if i < 4 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            x
+        });
+        assert_eq!(out, items);
+    }
+
+    #[test]
+    fn zero_threads_resolves_to_available_cores() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+}

@@ -29,6 +29,23 @@ fn no_args_prints_usage() {
     assert!(stderr.contains("USAGE"));
 }
 
+/// Regression: an unknown subcommand must print usage to stderr and exit
+/// non-zero (never 0 — scripts rely on the exit code).
+#[test]
+fn unknown_subcommand_prints_usage_and_exits_nonzero() {
+    let out = snipsnap().arg("frobnicate").output().expect("run");
+    assert!(
+        !out.status.success(),
+        "unknown subcommand exited with success: {:?}",
+        out.status
+    );
+    assert_eq!(out.status.code(), Some(2), "usage errors exit 2");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown subcommand 'frobnicate'"), "{stderr}");
+    assert!(stderr.contains("USAGE"), "usage must go to stderr:\n{stderr}");
+    assert!(out.stdout.is_empty(), "nothing belongs on stdout here");
+}
+
 #[test]
 fn formats_subcommand_reports_top_formats() {
     let out = snipsnap()
@@ -65,13 +82,15 @@ wgt_density = 0.5
     )
     .unwrap();
     let out = snipsnap()
-        .args(["search", "--config", cfg.to_str().unwrap()])
+        .args(["search", "--config", cfg.to_str().unwrap(), "--threads", "2"])
         .output()
         .expect("run");
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let stdout = String::from_utf8_lossy(&out.stdout);
     assert!(stdout.contains("totals:"), "{stdout}");
     assert!(stdout.contains("evaluations"));
+    assert!(stdout.contains("(2 threads)"), "{stdout}");
+    assert!(stdout.contains("cache: access-counts"), "{stdout}");
 }
 
 #[test]

@@ -76,6 +76,91 @@ fn progressive_beats_stepwise_on_speed_same_space() {
     assert!(ratio < 1.25, "quality ratio {ratio}");
 }
 
+/// Bit-identical equality of two workload results: same designs, same
+/// scores (compared as raw f64 bits), same evaluation counts.
+fn assert_bit_identical(
+    a: &snipsnap::search::WorkloadResult,
+    b: &snipsnap::search::WorkloadResult,
+) {
+    assert_eq!(a.evaluations, b.evaluations, "evaluation counts diverged");
+    assert_eq!(a.designs.len(), b.designs.len());
+    for (da, db) in a.designs.iter().zip(&b.designs) {
+        assert_eq!(da.op_name, db.op_name);
+        assert_eq!(da.mapping, db.mapping, "{}: mappings diverged", da.op_name);
+        assert_eq!(
+            da.metric_value.to_bits(),
+            db.metric_value.to_bits(),
+            "{}: {} vs {}",
+            da.op_name,
+            da.metric_value,
+            db.metric_value
+        );
+        assert_eq!(da.input_format.to_string(), db.input_format.to_string());
+        assert_eq!(da.weight_format.to_string(), db.weight_format.to_string());
+        assert_eq!(da.report, db.report, "{}: cost reports diverged", da.op_name);
+    }
+}
+
+/// The determinism contract of docs/SEARCH.md: `threads = 1` and
+/// `threads = 4` return identical best mappings and scores, on both an
+/// LLM and a CNN example workload.  With more ops than threads this
+/// exercises the op-level sharding path.
+#[test]
+fn parallel_cosearch_is_bit_identical_to_serial() {
+    let arch = presets::arch3();
+
+    // LLM workload, full format search.
+    let w = reduced_llm();
+    let mk = |threads: usize| SearchConfig {
+        threads,
+        mapper: MapperConfig { max_candidates: 800, ..Default::default() },
+        ..Default::default()
+    };
+    let serial = cosearch_workload(&arch, &w, &mk(1));
+    let par = cosearch_workload(&arch, &w, &mk(4));
+    assert_bit_identical(&serial, &par);
+    assert!(par.cache.hits > 0, "memoization never fired: {:?}", par.cache);
+
+    // CNN workload (im2col convs; Fixed mode keeps the test quick).
+    let mut cnn = snipsnap::workload::cnn::alexnet();
+    cnn.ops.truncate(3);
+    let mkf = |threads: usize| SearchConfig {
+        threads,
+        mode: FormatMode::Fixed,
+        mapper: MapperConfig { max_candidates: 600, ..Default::default() },
+        ..Default::default()
+    };
+    let serial = cosearch_workload(&arch, &cnn, &mkf(1));
+    let par = cosearch_workload(&arch, &cnn, &mkf(3));
+    assert_bit_identical(&serial, &par);
+}
+
+/// A single-op workload with threads > 1 forces the within-op
+/// `for_each_proto` sharding and its `(value, proto-id)` reduction.
+#[test]
+fn proto_sharding_within_one_op_is_bit_identical() {
+    let arch = presets::arch3();
+    let w = snipsnap::workload::Workload {
+        name: "one-op".into(),
+        ops: vec![snipsnap::workload::MatMulOp {
+            name: "fc".into(),
+            dims: snipsnap::dataflow::ProblemDims::new(128, 256, 128),
+            spec: snipsnap::sparsity::SparsitySpec::unstructured(0.3, 0.5),
+            count: 1,
+        }],
+    };
+    let mk = |threads: usize| SearchConfig {
+        threads,
+        mapper: MapperConfig { max_candidates: 1_000, ..Default::default() },
+        ..Default::default()
+    };
+    let serial = cosearch_workload(&arch, &w, &mk(1));
+    for threads in [2, 4, 7] {
+        let par = cosearch_workload(&arch, &w, &mk(threads));
+        assert_bit_identical(&serial, &par);
+    }
+}
+
 #[test]
 fn search_is_deterministic() {
     let w = reduced_llm();
