@@ -31,7 +31,7 @@ use snipsnap::util::table::{fmt_f, fmt_pct, Table};
 use snipsnap::workload::llm;
 
 fn main() -> anyhow::Result<()> {
-    let workload = llm::opt_125m(llm::Phase { prefill_tokens: 256, decode_tokens: 32 });
+    let workload = llm::opt_125m(llm::Phase::new(256, 32));
     println!("== SnipSnap end-to-end co-design: {} ==", workload.name);
     println!("{} ops, {:.3e} total MACs\n", workload.op_count(), workload.total_macs());
 

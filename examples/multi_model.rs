@@ -64,11 +64,11 @@ fn run_case(case: &str, a: &snipsnap::workload::Workload, b: &snipsnap::workload
 fn main() {
     // Case 1: NLU + generation.
     let bert = llm::bert_base(256);
-    let opt125 = llm::opt_125m(llm::Phase { prefill_tokens: 256, decode_tokens: 32 });
+    let opt125 = llm::opt_125m(llm::Phase::new(256, 32));
     run_case("Case 1 (BERT-Base + OPT-125M)", &bert, &opt125);
 
     // Case 2: speculative decoding (draft + verify).
-    let opt67 = llm::opt_6_7b(llm::Phase { prefill_tokens: 256, decode_tokens: 32 });
+    let opt67 = llm::opt_6_7b(llm::Phase::new(256, 32));
     run_case("Case 2 (speculative decoding: OPT-125M + OPT-6.7B)", &opt125, &opt67);
 
     println!("multi-model co-design OK");

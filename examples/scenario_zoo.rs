@@ -1,0 +1,46 @@
+//! Scenario-zoo walkthrough: build one workload per scenario family
+//! (dense-shaped MHA, GQA, MoE, batched decode, N:M weights) and run a
+//! quick fixed-format co-search on each, printing what makes the family
+//! distinctive (op structure, sparsity patterns) and what it costs.
+//!
+//! Run with: `cargo run --release --example scenario_zoo`
+
+use snipsnap::arch::presets;
+use snipsnap::dataflow::mapper::MapperConfig;
+use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig};
+use snipsnap::util::table::{fmt_f, Table};
+use snipsnap::workload::scenario_zoo;
+
+fn main() {
+    let arch = presets::arch3();
+    let cfg = SearchConfig {
+        mode: FormatMode::Fixed,
+        mapper: MapperConfig { max_candidates: 300, ..Default::default() },
+        ..Default::default()
+    };
+
+    let mut t = Table::new(vec!["scenario", "ops", "GMACs", "energy (pJ)", "cycles"]);
+    for w in scenario_zoo() {
+        // What makes the family distinctive, visible in the op list:
+        let marker = w
+            .ops
+            .iter()
+            .map(|o| o.name.as_str())
+            .find(|n| n.contains("kv_proj") || n.contains("expert_"))
+            .unwrap_or("dense transformer block");
+        println!("{}: {} ops (e.g. {marker})", w.name, w.op_count());
+        let r = cosearch_workload(&arch, &w, &cfg);
+        t.add_row(vec![
+            w.name.clone(),
+            w.op_count().to_string(),
+            format!("{:.2}", w.total_macs() / 1e9),
+            fmt_f(r.total_energy_pj()),
+            fmt_f(r.total_cycles()),
+        ]);
+    }
+    println!("\n{}", t.render());
+    println!(
+        "Every scenario is also a CLI preset — try `snipsnap list`, then e.g.\n\
+         `snipsnap search --arch arch3 --workload gqa-tiny --nm 2:4 --batch 2`."
+    );
+}

@@ -127,8 +127,8 @@ fn run_case(
 fn main() {
     banner("Fig. 11", "multi-model shared format with importance scoring");
     let bert = llm::bert_base(256);
-    let opt125 = llm::opt_125m(llm::Phase { prefill_tokens: 256, decode_tokens: 32 });
-    let opt67 = llm::opt_6_7b(llm::Phase { prefill_tokens: 256, decode_tokens: 32 });
+    let opt125 = llm::opt_125m(llm::Phase::new(256, 32));
+    let opt67 = llm::opt_6_7b(llm::Phase::new(256, 32));
     let sweeps = [(99.0, 1.0), (75.0, 25.0), (50.0, 50.0), (25.0, 75.0), (1.0, 99.0)];
 
     let mut records = Vec::new();

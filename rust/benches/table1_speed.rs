@@ -25,7 +25,7 @@ fn main() {
     let mapper = MapperConfig { max_candidates: 300, ..Default::default() };
     let workloads: Vec<_> = llm::table1_llms()
         .into_iter()
-        .map(|w| llm::with_uniform_density(w, 0.75, 0.75))
+        .map(|w| llm::with_uniform_density(w, 0.75, 0.75).expect("densities in range"))
         .collect();
     let archs = presets::all_table2();
 

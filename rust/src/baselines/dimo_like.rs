@@ -268,10 +268,7 @@ mod tests {
     #[should_panic(expected = "limited to CNNs")]
     fn dimo_rejects_llms() {
         let arch = presets::arch1();
-        let w = crate::workload::llm::opt_125m(crate::workload::llm::Phase {
-            prefill_tokens: 16,
-            decode_tokens: 0,
-        });
+        let w = crate::workload::llm::opt_125m(crate::workload::llm::Phase::prefill_only(16));
         dimo_workload(&arch, &w, &quick(), Metric::Energy);
     }
 

@@ -38,6 +38,10 @@ impl TomlValue {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as u64)
     }
 
+    pub fn as_u32(&self) -> Option<u32> {
+        self.as_u64().filter(|n| *n <= u32::MAX as u64).map(|n| n as u32)
+    }
+
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             TomlValue::Bool(b) => Some(*b),
@@ -259,5 +263,13 @@ dims = [2048, 4096, 4_096]
         assert_eq!(doc.get("", "a").unwrap().as_u64(), None);
         assert_eq!(doc.get("", "b").unwrap().as_u64(), None);
         assert_eq!(doc.get("", "c").unwrap().as_u64(), Some(3));
+    }
+
+    #[test]
+    fn u32_bounds() {
+        let doc = TomlDoc::parse("a = 4\nb = 4294967296\nc = -2\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_u32(), Some(4));
+        assert_eq!(doc.get("", "b").unwrap().as_u32(), None);
+        assert_eq!(doc.get("", "c").unwrap().as_u32(), None);
     }
 }

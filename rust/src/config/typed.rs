@@ -17,6 +17,15 @@
 //! max_mappings = 40000
 //! threads = 4               # co-search worker threads (0 = all cores)
 //!
+//! # Optional preset modifiers (scenario knobs):
+//! [workload]
+//! preset = "llama3-8b"      # overrides [run] workload when present
+//! prefill_tokens = 512
+//! decode_tokens = 64
+//! batch = 4                 # concurrent sequences (batched decode)
+//! kv_density = 0.5          # KV-cache density on the A x V op, (0, 1]
+//! nm = "2:4"                # N:M weight sparsity (also: nm = [2, 4])
+//!
 //! # Optional custom workload:
 //! [op.fc1]
 //! m = 2048
@@ -48,8 +57,8 @@ use crate::cost::Metric;
 use crate::dataflow::ProblemDims;
 use crate::search::{FormatMode, SearchConfig};
 use crate::sparsity::reduction::{Direction, ReductionStrategy};
-use crate::sparsity::SparsitySpec;
-use crate::workload::{llm, MatMulOp, Workload};
+use crate::sparsity::{validate_density, SparsitySpec};
+use crate::workload::{gqa, llm, moe, MatMulOp, Workload};
 use anyhow::{anyhow, bail, Context, Result};
 
 /// A fully-resolved run configuration.
@@ -72,23 +81,135 @@ pub fn arch_by_name(name: &str) -> Result<Accelerator> {
     })
 }
 
-/// Resolve a workload preset by name.
-pub fn workload_by_name(name: &str) -> Result<Workload> {
-    let ph = llm::Phase::default_prefill_decode();
-    let small = llm::Phase { prefill_tokens: 256, decode_tokens: 32 };
-    Ok(match name.to_ascii_lowercase().as_str() {
-        "llama2-7b" => llm::llama2_7b(ph),
+/// Scenario modifiers applied on top of a workload preset (from CLI
+/// flags or the `[workload]` TOML section).  `None` keeps the preset's
+/// default for that knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WorkloadOpts {
+    pub prefill_tokens: Option<u64>,
+    pub decode_tokens: Option<u64>,
+    /// Concurrent sequences (batched decode; must be >= 1).
+    pub batch: Option<u64>,
+    /// KV-cache density on the A x V op (must lie in `(0, 1]`).
+    pub kv_density: Option<f64>,
+    /// N:M structured weight sparsity applied after building.
+    pub nm: Option<(u32, u32)>,
+}
+
+impl WorkloadOpts {
+    fn is_default(&self) -> bool {
+        *self == WorkloadOpts::default()
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.batch == Some(0) {
+            bail!("batch must be >= 1");
+        }
+        if let Some(d) = self.kv_density {
+            validate_density(d).map_err(|e| anyhow!("kv_density: {e}"))?;
+        }
+        if let Some((n, m)) = self.nm {
+            if n == 0 || n > m {
+                bail!("N:M sparsity needs 1 <= N <= M, got {n}:{m}");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse an `N:M` sparsity spec like `"2:4"`.
+pub fn parse_nm(s: &str) -> Result<(u32, u32)> {
+    let (n, m) = s
+        .split_once(':')
+        .with_context(|| format!("N:M spec '{s}' must look like '2:4'"))?;
+    let n: u32 = n.trim().parse().with_context(|| format!("N in '{s}'"))?;
+    let m: u32 = m.trim().parse().with_context(|| format!("M in '{s}'"))?;
+    Ok((n, m))
+}
+
+/// Resolve a workload preset by name with scenario modifiers applied.
+/// The modifier knobs only make sense for the transformer presets; using
+/// them with a CNN preset is an error rather than a silent no-op.
+pub fn resolve_workload(name: &str, opts: &WorkloadOpts) -> Result<Workload> {
+    opts.validate()?;
+    let lname = name.to_ascii_lowercase();
+
+    // Per-preset default phase; the small models and the tiny scenario
+    // presets default to short sequences.
+    let base = match lname.as_str() {
+        "opt-125m" | "gqa-tiny" | "moe-tiny" => llm::Phase::new(256, 32),
+        "bert-base" => llm::Phase::prefill_only(256),
+        "decode-tiny" => llm::Phase::new(0, 16).with_batch(4).with_kv_density(0.5),
+        "llama2-7b-batch8" => llm::Phase::default_prefill_decode().with_batch(8),
+        _ => llm::Phase::default_prefill_decode(),
+    };
+    let mut ph = base;
+    if let Some(p) = opts.prefill_tokens {
+        ph.prefill_tokens = p;
+    }
+    if let Some(d) = opts.decode_tokens {
+        ph.decode_tokens = d;
+    }
+    if let Some(b) = opts.batch {
+        ph.batch = b;
+    }
+    if let Some(d) = opts.kv_density {
+        ph.kv_density = d;
+    }
+    if ph.prefill_tokens == 0 && ph.decode_tokens == 0 {
+        bail!("workload '{name}' would have no tokens (prefill and decode both 0)");
+    }
+
+    let cnn_guard = || -> Result<()> {
+        if !opts.is_default() {
+            bail!(
+                "workload modifiers (--prefill/--decode/--batch/--kv-density/--nm) \
+                 only apply to transformer presets, not '{name}'"
+            );
+        }
+        Ok(())
+    };
+    let mut w = match lname.as_str() {
+        "llama2-7b" | "llama2-7b-batch8" => llm::llama2_7b(ph),
+        "llama2-7b-nm24" => llm::weight_nm_variant(llm::llama2_7b(ph), 2, 4),
         "llama2-13b" => llm::llama2_13b(ph),
-        "opt-125m" => llm::opt_125m(small),
+        "opt-125m" => llm::opt_125m(ph),
         "opt-6.7b" => llm::opt_6_7b(ph),
         "opt-13b" => llm::opt_13b(ph),
         "opt-30b" => llm::opt_30b(ph),
-        "bert-base" => llm::bert_base(256),
-        "alexnet" => crate::workload::cnn::alexnet(),
-        "vgg-16" | "vgg16" => crate::workload::cnn::vgg16(),
-        "resnet-18" | "resnet18" => crate::workload::cnn::resnet18(),
+        "bert-base" => llm::bert_base_phase(ph),
+        "decode-tiny" if opts.is_default() => llm::decode_tiny(),
+        // Overridden phase: rebuild the same shape/sparsity around it.
+        "decode-tiny" => llm::decode_tiny_phase("Decode-Tiny (custom)", ph),
+        "llama3-8b" => gqa::llama3_8b(ph),
+        "llama3-70b" => gqa::llama3_70b(ph),
+        "mistral-7b" => gqa::mistral_7b(ph),
+        "gqa-tiny" => gqa::gqa_tiny(ph),
+        "mixtral-8x7b" => moe::mixtral_8x7b(ph),
+        "moe-tiny" => moe::moe_tiny(ph),
+        "alexnet" => {
+            cnn_guard()?;
+            crate::workload::cnn::alexnet()
+        }
+        "vgg-16" | "vgg16" => {
+            cnn_guard()?;
+            crate::workload::cnn::vgg16()
+        }
+        "resnet-18" | "resnet18" => {
+            cnn_guard()?;
+            crate::workload::cnn::resnet18()
+        }
         other => bail!("unknown workload preset '{other}'"),
-    })
+    };
+    if let Some((n, m)) = opts.nm {
+        w = llm::weight_nm_variant(w, n, m);
+    }
+    Ok(w)
+}
+
+/// Resolve a workload preset by name with its default scenario knobs.
+pub fn workload_by_name(name: &str) -> Result<Workload> {
+    resolve_workload(name, &WorkloadOpts::default())
 }
 
 pub fn metric_by_name(name: &str) -> Result<Metric> {
@@ -199,15 +320,17 @@ fn parse_inline_workload(doc: &TomlDoc) -> Result<Option<Workload>> {
                 .and_then(|v| v.as_u64())
                 .ok_or_else(|| anyhow!("[{name}] missing integer '{k}'"))
         };
-        let get_f = |k: &str, default: f64| -> f64 {
-            sec.get(k).and_then(|v| v.as_f64()).unwrap_or(default)
+        let get_density = |k: &str| -> Result<f64> {
+            let d = sec.get(k).and_then(|v| v.as_f64()).unwrap_or(1.0);
+            validate_density(d).map_err(|e| anyhow!("[{name}] {k}: {e}"))?;
+            Ok(d)
         };
         ops.push(MatMulOp {
             name: name.trim_start_matches("op.").to_string(),
             dims: ProblemDims::new(get_u("m")?, get_u("n")?, get_u("k")?),
             spec: SparsitySpec::unstructured(
-                get_f("act_density", 1.0),
-                get_f("wgt_density", 1.0),
+                get_density("act_density")?,
+                get_density("wgt_density")?,
             ),
             count: sec.get("count").and_then(|v| v.as_u64()).unwrap_or(1),
         });
@@ -230,11 +353,46 @@ pub fn load_run_config(src: &str) -> Result<RunConfig> {
     };
     let workload = match parse_inline_workload(&doc)? {
         Some(w) => w,
-        None => workload_by_name(
-            run.get("workload")
+        None => {
+            let wsec = doc.section("workload");
+            let preset = wsec
+                .and_then(|s| s.get("preset"))
                 .and_then(|v| v.as_str())
-                .context("[run] workload missing (or provide [op.*])")?,
-        )?,
+                .or_else(|| run.get("workload").and_then(|v| v.as_str()))
+                .context(
+                    "[run] workload / [workload] preset missing (or provide [op.*])",
+                )?;
+            let mut opts = WorkloadOpts::default();
+            if let Some(sec) = wsec {
+                if let Some(v) = sec.get("prefill_tokens") {
+                    opts.prefill_tokens =
+                        Some(v.as_u64().context("[workload] prefill_tokens must be an integer")?);
+                }
+                if let Some(v) = sec.get("decode_tokens") {
+                    opts.decode_tokens =
+                        Some(v.as_u64().context("[workload] decode_tokens must be an integer")?);
+                }
+                if let Some(v) = sec.get("batch") {
+                    opts.batch = Some(v.as_u64().context("[workload] batch must be an integer")?);
+                }
+                if let Some(v) = sec.get("kv_density") {
+                    opts.kv_density =
+                        Some(v.as_f64().context("[workload] kv_density must be a number")?);
+                }
+                if let Some(v) = sec.get("nm") {
+                    opts.nm = Some(match v {
+                        TomlValue::Str(s) => parse_nm(s)?,
+                        TomlValue::Arr(a) if a.len() == 2 => {
+                            let n = a[0].as_u32().context("[workload] nm N")?;
+                            let m = a[1].as_u32().context("[workload] nm M")?;
+                            (n, m)
+                        }
+                        _ => bail!("[workload] nm must be \"N:M\" or [N, M]"),
+                    });
+                }
+            }
+            resolve_workload(preset, &opts)?
+        }
     };
 
     let mut search = SearchConfig::default();
@@ -284,6 +442,74 @@ mod tests {
         assert!(workload_by_name("resnet-18").is_ok());
         assert!(workload_by_name("gpt-5").is_err());
         assert!(metric_by_name("edp").is_ok());
+    }
+
+    #[test]
+    fn scenario_presets_resolve() {
+        for name in [
+            "llama3-8b",
+            "llama3-70b",
+            "mistral-7b",
+            "gqa-tiny",
+            "mixtral-8x7b",
+            "moe-tiny",
+            "decode-tiny",
+            "llama2-7b-batch8",
+            "llama2-7b-nm24",
+        ] {
+            let w = workload_by_name(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!w.ops.is_empty(), "{name}");
+            assert!(w.total_macs() > 0.0, "{name}");
+        }
+        let nm = workload_by_name("llama2-7b-nm24").unwrap();
+        assert!(nm.name.contains("W2:4"));
+        let batched = workload_by_name("llama2-7b-batch8").unwrap();
+        let qkv = batched.ops.iter().find(|o| o.name.contains("decode/qkv")).unwrap();
+        assert_eq!(qkv.dims.m, 8);
+    }
+
+    #[test]
+    fn workload_opts_apply_and_validate() {
+        let opts = WorkloadOpts {
+            prefill_tokens: Some(64),
+            decode_tokens: Some(8),
+            batch: Some(4),
+            kv_density: Some(0.5),
+            nm: Some((2, 4)),
+        };
+        let w = resolve_workload("gqa-tiny", &opts).unwrap();
+        assert!(w.name.contains("W2:4"), "{}", w.name);
+        let qk = w.ops.iter().find(|o| o.name.contains("prefill/qk")).unwrap();
+        // batch scales the per-sequence attention op counts.
+        assert_eq!(qk.count, 2 * 8 * 4); // layers x heads x batch
+
+        let bad = |o: WorkloadOpts| resolve_workload("gqa-tiny", &o);
+        assert!(bad(WorkloadOpts { batch: Some(0), ..Default::default() }).is_err());
+        assert!(bad(WorkloadOpts { kv_density: Some(0.0), ..Default::default() }).is_err());
+        assert!(bad(WorkloadOpts { kv_density: Some(1.5), ..Default::default() }).is_err());
+        assert!(bad(WorkloadOpts { nm: Some((0, 4)), ..Default::default() }).is_err());
+        assert!(bad(WorkloadOpts { nm: Some((5, 4)), ..Default::default() }).is_err());
+        assert!(bad(WorkloadOpts {
+            prefill_tokens: Some(0),
+            decode_tokens: Some(0),
+            ..Default::default()
+        })
+        .is_err());
+        // Modifiers are transformer-only.
+        assert!(resolve_workload(
+            "alexnet",
+            &WorkloadOpts { batch: Some(2), ..Default::default() }
+        )
+        .is_err());
+        assert!(resolve_workload("alexnet", &WorkloadOpts::default()).is_ok());
+    }
+
+    #[test]
+    fn parse_nm_forms() {
+        assert_eq!(parse_nm("2:4").unwrap(), (2, 4));
+        assert_eq!(parse_nm("1:8").unwrap(), (1, 8));
+        assert!(parse_nm("24").is_err());
+        assert!(parse_nm("a:4").is_err());
     }
 
     #[test]
@@ -352,6 +578,64 @@ count = 2
         assert_eq!(cfg.workload.ops.len(), 1);
         assert_eq!(cfg.workload.ops[0].count, 2);
         assert_eq!(cfg.workload.ops[0].name, "gemm");
+    }
+
+    #[test]
+    fn workload_section_modifies_preset() {
+        let cfg = load_run_config(
+            r#"
+[run]
+arch = "arch3"
+[workload]
+preset = "gqa-tiny"
+prefill_tokens = 64
+decode_tokens = 8
+batch = 2
+kv_density = 0.5
+nm = "2:4"
+"#,
+        )
+        .unwrap();
+        assert!(cfg.workload.name.contains("W2:4"), "{}", cfg.workload.name);
+        let av = cfg.workload.ops.iter().find(|o| o.name.contains("prefill/av")).unwrap();
+        // The NM variant re-densifies activations but must not touch the
+        // V operand — the kv_density knob survives the variant.
+        assert_eq!(av.spec.input.density(), 1.0);
+        assert_eq!(av.spec.weight.density(), 0.5);
+
+        // Array form of nm, preset via [run].
+        let cfg = load_run_config(
+            r#"
+[run]
+arch = "arch3"
+workload = "opt-125m"
+[workload]
+nm = [1, 4]
+"#,
+        )
+        .unwrap();
+        assert!(cfg.workload.name.contains("W1:4"), "{}", cfg.workload.name);
+    }
+
+    #[test]
+    fn out_of_range_densities_are_rejected() {
+        let base = |act: &str, wgt: &str| {
+            format!(
+                "[run]\narch = \"arch3\"\n[op.g]\nm = 4\nn = 4\nk = 4\nact_density = {act}\nwgt_density = {wgt}\n"
+            )
+        };
+        assert!(load_run_config(&base("0.5", "0.5")).is_ok());
+        assert!(load_run_config(&base("0.0", "0.5")).is_err());
+        assert!(load_run_config(&base("-0.3", "0.5")).is_err());
+        assert!(load_run_config(&base("0.5", "1.2")).is_err());
+        let kv_bad = r#"
+[run]
+arch = "arch3"
+[workload]
+preset = "gqa-tiny"
+kv_density = 1.5
+"#;
+        assert!(load_run_config(kv_bad).is_err());
     }
 
     #[test]

@@ -149,7 +149,7 @@ mod tests {
     #[test]
     fn selection_minimizes_weighted_objective() {
         let cfg = fast_cfg();
-        let a = llm::opt_125m(llm::Phase { prefill_tokens: 256, decode_tokens: 32 });
+        let a = llm::opt_125m(llm::Phase::new(256, 32));
         let b = llm::bert_base(256);
         let ws = [
             WeightedWorkload { workload: &a, importance: 99.0 },
@@ -174,7 +174,7 @@ mod tests {
         // With all weight on workload A, the shared metric equals A's own;
         // per-workload bits are still reported for both.
         let cfg = fast_cfg();
-        let a = llm::opt_125m(llm::Phase { prefill_tokens: 256, decode_tokens: 32 });
+        let a = llm::opt_125m(llm::Phase::new(256, 32));
         let b = llm::bert_base(256);
         let ws_a = [
             WeightedWorkload { workload: &a, importance: 1.0 },
@@ -183,6 +183,43 @@ mod tests {
         let sel_a = select_shared_pattern(&ws_a, &cfg);
         assert_eq!(sel_a.per_workload_bits.len(), 2);
         assert!((sel_a.weighted_bits - sel_a.per_workload_bits[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shared_selection_spans_gqa_and_moe_scenarios() {
+        // Scenario-zoo coverage: one shared pattern must score finite,
+        // positive bits on a GQA model and a routed-expert MoE model at
+        // once (the multi-model accelerator serving both).
+        use crate::workload::{gqa, moe};
+        let cfg = fast_cfg();
+        let a = gqa::gqa_tiny(llm::Phase::new(64, 8));
+        let b = moe::moe_tiny(llm::Phase::new(64, 8));
+        let ws = [
+            WeightedWorkload { workload: &a, importance: 2.0 },
+            WeightedWorkload { workload: &b, importance: 1.0 },
+        ];
+        let sel = select_shared_pattern(&ws, &cfg);
+        assert_eq!(sel.per_workload_bits.len(), 2);
+        assert!(sel.weighted_bits.is_finite() && sel.weighted_bits > 0.0);
+        for bits in &sel.per_workload_bits {
+            assert!(bits.is_finite() && *bits > 0.0);
+        }
+    }
+
+    #[test]
+    fn nm_weight_tensors_score_under_shared_patterns() {
+        // N:M weights flow through the importance-based scoring: the
+        // bitmap pattern must cost less on 2:8 weights than on the same
+        // workload with dense weights (fewer payload words).
+        let cfg = fast_cfg();
+        let base = llm::opt_125m(llm::Phase::prefill_only(64));
+        let nm = llm::weight_nm_variant(base.clone(), 2, 8);
+        let pat = crate::format::named::bitmap(4, 4).pattern();
+        let dense_w = llm::activation_sparse_variant(base); // dense weights, sparse acts
+        let bits_nm = workload_format_bits(&nm, &pat, &cfg);
+        let bits_dense = workload_format_bits(&dense_w, &pat, &cfg);
+        assert!(bits_nm.is_finite() && bits_nm > 0.0);
+        assert!(bits_nm < bits_dense, "nm {bits_nm} vs dense-weight {bits_dense}");
     }
 
     #[test]

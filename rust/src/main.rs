@@ -8,7 +8,9 @@
 //!   list      list available arch / workload presets
 
 use anyhow::{bail, Context, Result};
-use snipsnap::config::typed::{arch_by_name, metric_by_name, workload_by_name};
+use snipsnap::config::typed::{
+    arch_by_name, metric_by_name, parse_nm, resolve_workload, WorkloadOpts,
+};
 use snipsnap::engine::{search_formats, EngineConfig};
 use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig};
 use snipsnap::sparsity::SparsityPattern;
@@ -23,6 +25,9 @@ fn usage() -> ! {
                              [--metric M] [--mode search|fixed] [--max-mappings N]\n\
                              [--threads N]  (0 = all cores; results are\n\
                              bit-identical for any thread count)\n\
+                             workload modifiers (transformer presets only):\n\
+                             [--prefill N] [--decode N] [--batch B]\n\
+                             [--kv-density D] [--nm N:M]\n\
            snipsnap formats  --rows R --cols C --density D [--gamma G] [--depth N]\n\
            snipsnap validate [--study scnn|dstc]\n\
            snipsnap xla      [--artifacts DIR]\n\
@@ -78,6 +83,14 @@ fn cmd_search(args: &Args) -> Result<()> {
     let arch;
     let workload;
     if let Some(path) = args.get("config") {
+        for flag in ["prefill", "decode", "batch", "kv-density", "nm"] {
+            if args.get(flag).is_some() {
+                bail!(
+                    "--{flag} cannot be combined with --config; \
+                     set it in the config's [workload] section instead"
+                );
+            }
+        }
         let src = std::fs::read_to_string(path).with_context(|| path.to_string())?;
         let run = snipsnap::config::load_run_config(&src)?;
         arch = run.arch;
@@ -85,7 +98,14 @@ fn cmd_search(args: &Args) -> Result<()> {
         cfg = run.search;
     } else {
         arch = arch_by_name(args.get("arch").unwrap_or("arch3"))?;
-        workload = workload_by_name(args.get("workload").unwrap_or("opt-125m"))?;
+        let opts = WorkloadOpts {
+            prefill_tokens: args.get_u64("prefill")?,
+            decode_tokens: args.get_u64("decode")?,
+            batch: args.get_u64("batch")?,
+            kv_density: args.get_f64("kv-density")?,
+            nm: args.get("nm").map(parse_nm).transpose()?,
+        };
+        workload = resolve_workload(args.get("workload").unwrap_or("opt-125m"), &opts)?;
         cfg = SearchConfig::default();
     }
     if let Some(m) = args.get("metric") {
@@ -252,9 +272,18 @@ fn cmd_xla(args: &Args) -> Result<()> {
 
 fn cmd_list() -> Result<()> {
     println!("arch presets:    arch1 arch2 arch3 arch4 scnn dstc");
+    println!("workload presets:");
     println!(
-        "workload presets: llama2-7b llama2-13b opt-125m opt-6.7b opt-13b opt-30b \
-         bert-base alexnet vgg-16 resnet-18"
+        "  MHA transformers:  llama2-7b llama2-13b opt-125m opt-6.7b opt-13b opt-30b bert-base"
+    );
+    println!("  GQA attention:     llama3-8b llama3-70b mistral-7b gqa-tiny");
+    println!("  MoE (routed FFN):  mixtral-8x7b moe-tiny");
+    println!("  batched decode:    llama2-7b-batch8 decode-tiny");
+    println!("  N:M weights:       llama2-7b-nm24 (or any transformer preset + --nm N:M)");
+    println!("  CNN (im2col):      alexnet vgg-16 resnet-18");
+    println!(
+        "workload modifiers (transformer presets): --prefill N --decode N --batch B \
+         --kv-density D --nm N:M"
     );
     println!("metrics:         energy memory-energy latency edp");
     Ok(())

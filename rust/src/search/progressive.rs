@@ -527,6 +527,41 @@ mod tests {
     }
 
     #[test]
+    fn nm_weight_op_cosearches_end_to_end() {
+        // ROADMAP item: N:M weight sparsity driven through the co-search.
+        // A 2:4 op must find a sane design in Search mode, and must never
+        // cost more than the identical op with dense weights (skipping
+        // reduction + compressed footprints only help).
+        let arch = presets::arch3();
+        let nm_op = MatMulOp {
+            name: "nm".to_string(),
+            dims: ProblemDims::new(64, 64, 64),
+            spec: SparsitySpec {
+                input: SparsityPattern::Dense,
+                weight: SparsityPattern::NM { n: 2, m: 4 },
+            },
+            count: 1,
+        };
+        let dense_op = MatMulOp {
+            name: "dense".to_string(),
+            spec: SparsitySpec::dense(),
+            ..nm_op.clone()
+        };
+        let mut tel = SearchTelemetry::default();
+        let cfg = fast_cfg(FormatMode::Search);
+        let nm = cosearch_op(&arch, &nm_op, &cfg, &mut tel).unwrap();
+        let dense = cosearch_op(&arch, &dense_op, &cfg, &mut tel).unwrap();
+        assert!(design_is_sane(&nm));
+        nm.mapping.validate(&nm_op.dims).unwrap();
+        assert!(
+            nm.metric_value <= dense.metric_value * 1.0001,
+            "2:4 {} vs dense {}",
+            nm.metric_value,
+            dense.metric_value
+        );
+    }
+
+    #[test]
     fn workload_result_aggregates() {
         let arch = presets::arch3();
         let w = Workload {

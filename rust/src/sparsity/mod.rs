@@ -88,6 +88,18 @@ impl SparsityPattern {
     }
 }
 
+/// Check a density knob lies in the valid range `(0, 1]`.  Zero (or
+/// negative) densities silently zero the computation-reduction model and
+/// densities above 1 inflate every cost, so config and CLI boundaries
+/// reject them up front.  NaN fails the comparison and is rejected too.
+pub fn validate_density(d: f64) -> Result<(), String> {
+    if d > 0.0 && d <= 1.0 {
+        Ok(())
+    } else {
+        Err(format!("density {d} out of range (0, 1]"))
+    }
+}
+
 /// Sparsity specification for one MatMul operator: input-activation and
 /// weight patterns (outputs are produced dense).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -155,6 +167,17 @@ mod tests {
         assert!((p.p_region_nonempty(4, 4) - 0.3).abs() < 1e-12);
         // Four blocks: 1 - 0.7^4.
         assert!((p.p_region_nonempty(8, 8) - (1.0 - 0.7f64.powi(4))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn density_validation_bounds() {
+        assert!(validate_density(0.5).is_ok());
+        assert!(validate_density(1.0).is_ok());
+        assert!(validate_density(1e-9).is_ok());
+        assert!(validate_density(0.0).is_err());
+        assert!(validate_density(-0.2).is_err());
+        assert!(validate_density(1.0001).is_err());
+        assert!(validate_density(f64::NAN).is_err());
     }
 
     #[test]

@@ -1,0 +1,101 @@
+//! Grouped-query-attention (GQA) workloads: LLaMA3/Mistral-style models
+//! where `kv_heads < heads`, so the K/V projections shrink by
+//! `heads / kv_heads` and the KV cache read by decode steps is smaller.
+//!
+//! The score/context MatMuls (QK^T, A x V) keep the full query-head
+//! count — GQA shares K/V *across* query heads, it does not remove
+//! query work — so only the `kv_proj` ops (and the decode KV traffic)
+//! differ from the MHA zoo in [`super::llm`].
+
+use super::llm::{build_llm, LlmShape, LlmSparsity, Phase};
+use super::Workload;
+
+/// LLaMA3-8B: 32 query heads over 8 KV heads.
+pub fn llama3_8b(phase: Phase) -> Workload {
+    build_llm(
+        "LLaMA3-8B",
+        LlmShape { hidden: 4096, intermediate: 14336, layers: 32, heads: 32, kv_heads: 8 },
+        LlmSparsity { act_proj: 0.55, act_fc1: 0.50, act_fc2: 0.22, attn: 0.30, weight: 0.35 },
+        phase,
+    )
+}
+
+/// LLaMA3-70B: 64 query heads over 8 KV heads.
+pub fn llama3_70b(phase: Phase) -> Workload {
+    build_llm(
+        "LLaMA3-70B",
+        LlmShape { hidden: 8192, intermediate: 28672, layers: 80, heads: 64, kv_heads: 8 },
+        LlmSparsity { act_proj: 0.45, act_fc1: 0.40, act_fc2: 0.12, attn: 0.25, weight: 0.30 },
+        phase,
+    )
+}
+
+/// Mistral-7B: 32 query heads over 8 KV heads.
+pub fn mistral_7b(phase: Phase) -> Workload {
+    build_llm(
+        "Mistral-7B",
+        LlmShape { hidden: 4096, intermediate: 14336, layers: 32, heads: 32, kv_heads: 8 },
+        LlmSparsity { act_proj: 0.50, act_fc1: 0.45, act_fc2: 0.18, attn: 0.28, weight: 0.32 },
+        phase,
+    )
+}
+
+/// A reduced GQA shape for tests and the golden suite: real 4:1
+/// query-to-KV grouping, dims small enough for a sub-second co-search.
+pub fn gqa_tiny(phase: Phase) -> Workload {
+    build_llm(
+        "GQA-Tiny",
+        LlmShape { hidden: 256, intermediate: 512, layers: 2, heads: 8, kv_heads: 2 },
+        LlmSparsity { act_proj: 0.55, act_fc1: 0.50, act_fc2: 0.20, attn: 0.30, weight: 0.40 },
+        phase,
+    )
+}
+
+/// The GQA members of the scenario zoo.
+pub fn all_gqa() -> Vec<Workload> {
+    let ph = Phase::default_prefill_decode();
+    vec![llama3_8b(ph), llama3_70b(ph), mistral_7b(ph), gqa_tiny(Phase::new(256, 32))]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gqa_zoo_is_populated() {
+        for w in all_gqa() {
+            assert!(!w.ops.is_empty(), "{} has no ops", w.name);
+            assert!(w.total_macs() > 0.0);
+            assert!(
+                w.ops.iter().any(|o| o.name.contains("kv_proj")),
+                "{} has no split K/V projection",
+                w.name
+            );
+        }
+    }
+
+    #[test]
+    fn llama3_kv_projection_is_quarter_of_q() {
+        let w = llama3_8b(Phase::prefill_only(128));
+        let q = w.ops.iter().find(|o| o.name.contains("prefill/q_proj")).unwrap();
+        let kv = w.ops.iter().find(|o| o.name.contains("prefill/kv_proj")).unwrap();
+        // 8/32 grouping: K/V output columns = 2 x (kv_heads/heads) x H
+        // = H/2, i.e. half the Q projection's H columns.
+        assert_eq!(kv.dims.k * 2, q.dims.k);
+    }
+
+    #[test]
+    fn gqa_never_exceeds_mha_macs() {
+        // Same shape with kv_heads == heads must dominate the GQA MACs.
+        let ph = Phase::new(64, 8);
+        let gqa = gqa_tiny(ph).total_macs();
+        let mha = build_llm(
+            "mha-ref",
+            LlmShape::mha(256, 512, 2, 8),
+            LlmSparsity { act_proj: 0.55, act_fc1: 0.50, act_fc2: 0.20, attn: 0.30, weight: 0.40 },
+            ph,
+        )
+        .total_macs();
+        assert!(gqa < mha, "gqa {gqa} vs mha {mha}");
+    }
+}

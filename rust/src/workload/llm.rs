@@ -1,30 +1,63 @@
 //! LLM workloads: transformer-block MatMuls with per-module sparsity.
 //!
 //! Model shapes follow the public configs (hidden size, FFN intermediate,
-//! layers, heads).  Per-module density pairs are synthetic specifications
-//! in the ranges the paper cites from [4], [5] (§II-A: FC2 activation
-//! sparsity up to 97%, FC1 35–70%; larger models sparser) — see DESIGN.md
-//! §5 Substitutions.
+//! layers, heads, KV heads).  Per-module density pairs are synthetic
+//! specifications in the ranges the paper cites from [4], [5] (§II-A:
+//! FC2 activation sparsity up to 97%, FC1 35–70%; larger models sparser)
+//! — see DESIGN.md §5 Substitutions.
+//!
+//! The builders here cover the dense-shaped MHA zoo of the paper
+//! (§IV-A2) plus the scenario knobs the co-search exercises beyond it:
+//! grouped-query attention ([`LlmShape::kv_heads`], presets in
+//! [`super::gqa`]), routed-expert FFNs ([`super::moe`]), batched decode
+//! and KV-cache density ([`Phase::batch`], [`Phase::kv_density`]), and
+//! N:M structured weight sparsity ([`weight_nm_variant`]).
 
 use super::{MatMulOp, Workload};
 use crate::dataflow::ProblemDims;
-use crate::sparsity::{SparsityPattern, SparsitySpec};
+use crate::sparsity::{validate_density, SparsityPattern, SparsitySpec};
+use anyhow::{anyhow, Result};
 
 /// Inference phase parameters (paper §IV-C: 2048-token prefill +
-/// 128-token decoding, following LLMCompass).
+/// 128-token decoding, following LLMCompass), extended with the batch
+/// size and KV-cache density scenario knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct Phase {
     pub prefill_tokens: u64,
     pub decode_tokens: u64,
+    /// Concurrent sequences.  Prefill token batches flatten into the M
+    /// dim (`M = batch x prefill_tokens`); decode projections become
+    /// M = batch MatMuls per step instead of degenerate M = 1 GEMVs.
+    pub batch: u64,
+    /// Density of the V operand of the A x V MatMul, modeling a
+    /// quantized/pruned KV cache (1.0 = full-precision cache).
+    pub kv_density: f64,
 }
 
 impl Phase {
+    /// A phase with the given token counts, batch 1 and a dense KV cache.
+    pub fn new(prefill_tokens: u64, decode_tokens: u64) -> Self {
+        Phase { prefill_tokens, decode_tokens, batch: 1, kv_density: 1.0 }
+    }
+
     pub fn default_prefill_decode() -> Self {
-        Phase { prefill_tokens: 2048, decode_tokens: 128 }
+        Phase::new(2048, 128)
     }
 
     pub fn prefill_only(tokens: u64) -> Self {
-        Phase { prefill_tokens: tokens, decode_tokens: 0 }
+        Phase::new(tokens, 0)
+    }
+
+    /// Set the number of concurrent sequences (must be >= 1).
+    pub fn with_batch(mut self, batch: u64) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Set the KV-cache density knob (must lie in `(0, 1]`).
+    pub fn with_kv_density(mut self, kv_density: f64) -> Self {
+        self.kv_density = kv_density;
+        self
     }
 }
 
@@ -34,7 +67,20 @@ pub struct LlmShape {
     pub hidden: u64,
     pub intermediate: u64,
     pub layers: u64,
+    /// Query heads.
     pub heads: u64,
+    /// K/V heads; `kv_heads == heads` is classic MHA, `kv_heads < heads`
+    /// is grouped-query attention — the K/V projections shrink by
+    /// `heads / kv_heads` while the score/context MatMuls are unchanged
+    /// (every query head still attends over its group's K/V).
+    pub kv_heads: u64,
+}
+
+impl LlmShape {
+    /// Classic multi-head attention shape (`kv_heads == heads`).
+    pub fn mha(hidden: u64, intermediate: u64, layers: u64, heads: u64) -> Self {
+        LlmShape { hidden, intermediate, layers, heads, kv_heads: heads }
+    }
 }
 
 /// Per-module sparsity levels (densities).
@@ -57,53 +103,132 @@ fn unstr(d: f64) -> SparsityPattern {
     SparsityPattern::Unstructured { density: d }
 }
 
-/// Build the operator list for one transformer model.
-pub fn build_llm(name: &str, shape: LlmShape, sp: LlmSparsity, phase: Phase) -> Workload {
+// The argument list mirrors the op-table row (dims + densities + count);
+// a params struct would just rename the same nine fields.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn push_op(
+    ops: &mut Vec<MatMulOp>,
+    model: &str,
+    nm: &str,
+    m: u64,
+    n: u64,
+    k: u64,
+    act: f64,
+    wgt: f64,
+    count: u64,
+) {
+    if m == 0 || count == 0 {
+        return;
+    }
+    ops.push(MatMulOp {
+        name: format!("{model}/{nm}"),
+        dims: ProblemDims::new(m, n, k),
+        spec: SparsitySpec { input: unstr(act), weight: unstr(wgt) },
+        count,
+    });
+}
+
+fn check_shape_and_phase(shape: &LlmShape, phase: &Phase) {
+    assert!(
+        shape.kv_heads >= 1 && shape.kv_heads <= shape.heads && shape.heads % shape.kv_heads == 0,
+        "kv_heads {} must divide heads {}",
+        shape.kv_heads,
+        shape.heads
+    );
+    assert!(shape.heads >= 1 && shape.hidden % shape.heads == 0, "heads must divide hidden");
+    assert!(phase.batch >= 1, "batch must be >= 1");
+    assert!(
+        phase.kv_density > 0.0 && phase.kv_density <= 1.0,
+        "kv_density {} out of range (0, 1]",
+        phase.kv_density
+    );
+}
+
+/// Attention-path operators (Q/K/V projections, QK^T scores, A x V
+/// context, O projection) for both phases.  With `kv_heads == heads`
+/// the Q/K/V projections fuse into one `H x 3H` MatMul; under GQA they
+/// split into a Q projection and a smaller K/V projection of
+/// `2 x kv_heads x head_dim` output columns.
+pub fn attention_ops(
+    model: &str,
+    shape: &LlmShape,
+    sp: &LlmSparsity,
+    phase: &Phase,
+) -> Vec<MatMulOp> {
+    check_shape_and_phase(shape, phase);
+    let h = shape.hidden;
+    let l = shape.layers;
+    let heads = shape.heads;
+    let kvh = shape.kv_heads;
+    let dh = h / heads;
+    // GQA K/V projection output columns: K and V for each KV head.
+    let kvc = 2 * kvh * dh;
+    let b = phase.batch;
+    let mut ops = Vec::new();
+
+    // --- Prefill phase (batch of B x S tokens) -------------------------
+    let s = phase.prefill_tokens;
+    if s > 0 {
+        let m = b * s;
+        if kvh == heads {
+            // QKV fused: X(MxH) x Wqkv(Hx3H); O-proj separate.
+            push_op(&mut ops, model, "prefill/qkv", m, h, 3 * h, sp.act_proj, sp.weight, l);
+        } else {
+            push_op(&mut ops, model, "prefill/q_proj", m, h, h, sp.act_proj, sp.weight, l);
+            push_op(&mut ops, model, "prefill/kv_proj", m, h, kvc, sp.act_proj, sp.weight, l);
+        }
+        // Attention scores and context (per head, per sequence).
+        push_op(&mut ops, model, "prefill/qk", s, dh, s, sp.act_proj, 1.0, l * heads * b);
+        push_op(&mut ops, model, "prefill/av", s, s, dh, sp.attn, phase.kv_density, l * heads * b);
+        push_op(&mut ops, model, "prefill/o_proj", m, h, h, sp.act_proj, sp.weight, l);
+    }
+
+    // --- Decode phase: `batch` tokens per step, weights re-streamed
+    // every step (the weight-bound regime; KV length = mean over steps) -
+    let d = phase.decode_tokens;
+    if d > 0 {
+        let kv = (s + d / 2).max(1);
+        if kvh == heads {
+            push_op(&mut ops, model, "decode/qkv", b, h, 3 * h, sp.act_proj, sp.weight, l * d);
+        } else {
+            push_op(&mut ops, model, "decode/q_proj", b, h, h, sp.act_proj, sp.weight, l * d);
+            push_op(&mut ops, model, "decode/kv_proj", b, h, kvc, sp.act_proj, sp.weight, l * d);
+        }
+        push_op(&mut ops, model, "decode/qk", 1, dh, kv, sp.act_proj, 1.0, l * heads * d * b);
+        let kv_d = phase.kv_density;
+        push_op(&mut ops, model, "decode/av", 1, kv, dh, sp.attn, kv_d, l * heads * d * b);
+        push_op(&mut ops, model, "decode/o_proj", b, h, h, sp.act_proj, sp.weight, l * d);
+    }
+    ops
+}
+
+/// Dense-FFN operators (FC1/FC2) for both phases.  MoE models replace
+/// these with routed per-expert ops — see [`super::moe`].
+pub fn ffn_ops(model: &str, shape: &LlmShape, sp: &LlmSparsity, phase: &Phase) -> Vec<MatMulOp> {
+    check_shape_and_phase(shape, phase);
     let h = shape.hidden;
     let f = shape.intermediate;
     let l = shape.layers;
-    let heads = shape.heads;
-    let dh = h / heads;
+    let b = phase.batch;
     let mut ops = Vec::new();
-
-    let mut push = |nm: &str, m: u64, n: u64, k: u64, act: f64, wgt: f64, count: u64| {
-        if m == 0 || count == 0 {
-            return;
-        }
-        ops.push(MatMulOp {
-            name: format!("{name}/{nm}"),
-            dims: ProblemDims::new(m, n, k),
-            spec: SparsitySpec { input: unstr(act), weight: unstr(wgt) },
-            count,
-        });
-    };
-
-    // --- Prefill phase (batch of S tokens) -----------------------------
     let s = phase.prefill_tokens;
     if s > 0 {
-        // QKV fused: X(SxH) x Wqkv(Hx3H); O-proj separate.
-        push("prefill/qkv", s, h, 3 * h, sp.act_proj, sp.weight, l);
-        // Attention scores and context (per head, dense operands).
-        push("prefill/qk", s, dh, s, sp.act_proj, 1.0, l * heads);
-        push("prefill/av", s, s, dh, sp.attn, 1.0, l * heads);
-        push("prefill/o_proj", s, h, h, sp.act_proj, sp.weight, l);
-        push("prefill/fc1", s, h, f, sp.act_fc1, sp.weight, l);
-        push("prefill/fc2", s, f, h, sp.act_fc2, sp.weight, l);
+        push_op(&mut ops, model, "prefill/fc1", b * s, h, f, sp.act_fc1, sp.weight, l);
+        push_op(&mut ops, model, "prefill/fc2", b * s, f, h, sp.act_fc2, sp.weight, l);
     }
-
-    // --- Decode phase: one token per step, weights re-streamed every
-    // step (the weight-bound regime; KV length = mean over steps) -------
     let d = phase.decode_tokens;
     if d > 0 {
-        let kv = s + d / 2;
-        push("decode/qkv", 1, h, 3 * h, sp.act_proj, sp.weight, l * d);
-        push("decode/qk", 1, dh, kv, sp.act_proj, 1.0, l * heads * d);
-        push("decode/av", 1, kv, dh, sp.attn, 1.0, l * heads * d);
-        push("decode/o_proj", 1, h, h, sp.act_proj, sp.weight, l * d);
-        push("decode/fc1", 1, h, f, sp.act_fc1, sp.weight, l * d);
-        push("decode/fc2", 1, f, h, sp.act_fc2, sp.weight, l * d);
+        push_op(&mut ops, model, "decode/fc1", b, h, f, sp.act_fc1, sp.weight, l * d);
+        push_op(&mut ops, model, "decode/fc2", b, f, h, sp.act_fc2, sp.weight, l * d);
     }
+    ops
+}
 
+/// Build the operator list for one dense-FFN transformer model
+/// (attention ops first, then the FFN ops).
+pub fn build_llm(name: &str, shape: LlmShape, sp: LlmSparsity, phase: Phase) -> Workload {
+    let mut ops = attention_ops(name, &shape, &sp, &phase);
+    ops.extend(ffn_ops(name, &shape, &sp, &phase));
     Workload { name: name.to_string(), ops }
 }
 
@@ -112,7 +237,7 @@ pub fn build_llm(name: &str, shape: LlmShape, sp: LlmSparsity, phase: Phase) -> 
 pub fn llama2_7b(phase: Phase) -> Workload {
     build_llm(
         "LLaMA2-7B",
-        LlmShape { hidden: 4096, intermediate: 11008, layers: 32, heads: 32 },
+        LlmShape::mha(4096, 11008, 32, 32),
         LlmSparsity { act_proj: 0.55, act_fc1: 0.50, act_fc2: 0.25, attn: 0.30, weight: 0.35 },
         phase,
     )
@@ -121,7 +246,7 @@ pub fn llama2_7b(phase: Phase) -> Workload {
 pub fn llama2_13b(phase: Phase) -> Workload {
     build_llm(
         "LLaMA2-13B",
-        LlmShape { hidden: 5120, intermediate: 13824, layers: 40, heads: 40 },
+        LlmShape::mha(5120, 13824, 40, 40),
         LlmSparsity { act_proj: 0.50, act_fc1: 0.45, act_fc2: 0.20, attn: 0.28, weight: 0.30 },
         phase,
     )
@@ -130,7 +255,7 @@ pub fn llama2_13b(phase: Phase) -> Workload {
 pub fn opt_125m(phase: Phase) -> Workload {
     build_llm(
         "OPT-125M",
-        LlmShape { hidden: 768, intermediate: 3072, layers: 12, heads: 12 },
+        LlmShape::mha(768, 3072, 12, 12),
         LlmSparsity { act_proj: 0.60, act_fc1: 0.55, act_fc2: 0.12, attn: 0.35, weight: 0.45 },
         phase,
     )
@@ -139,7 +264,7 @@ pub fn opt_125m(phase: Phase) -> Workload {
 pub fn opt_6_7b(phase: Phase) -> Workload {
     build_llm(
         "OPT-6.7B",
-        LlmShape { hidden: 4096, intermediate: 16384, layers: 32, heads: 32 },
+        LlmShape::mha(4096, 16384, 32, 32),
         LlmSparsity { act_proj: 0.40, act_fc1: 0.35, act_fc2: 0.05, attn: 0.25, weight: 0.30 },
         phase,
     )
@@ -148,7 +273,7 @@ pub fn opt_6_7b(phase: Phase) -> Workload {
 pub fn opt_13b(phase: Phase) -> Workload {
     build_llm(
         "OPT-13B",
-        LlmShape { hidden: 5120, intermediate: 20480, layers: 40, heads: 40 },
+        LlmShape::mha(5120, 20480, 40, 40),
         LlmSparsity { act_proj: 0.35, act_fc1: 0.33, act_fc2: 0.04, attn: 0.22, weight: 0.28 },
         phase,
     )
@@ -157,18 +282,45 @@ pub fn opt_13b(phase: Phase) -> Workload {
 pub fn opt_30b(phase: Phase) -> Workload {
     build_llm(
         "OPT-30B",
-        LlmShape { hidden: 7168, intermediate: 28672, layers: 48, heads: 56 },
+        LlmShape::mha(7168, 28672, 48, 56),
         LlmSparsity { act_proj: 0.30, act_fc1: 0.30, act_fc2: 0.03, attn: 0.20, weight: 0.25 },
         phase,
     )
 }
 
-pub fn bert_base(tokens: u64) -> Workload {
+/// BERT-Base over an arbitrary phase (encoder models normally run
+/// prefill-only — see [`bert_base`]).
+pub fn bert_base_phase(phase: Phase) -> Workload {
     build_llm(
         "BERT-Base",
-        LlmShape { hidden: 768, intermediate: 3072, layers: 12, heads: 12 },
+        LlmShape::mha(768, 3072, 12, 12),
         LlmSparsity { act_proj: 0.30, act_fc1: 0.28, act_fc2: 0.08, attn: 0.22, weight: 0.25 },
-        Phase::prefill_only(tokens),
+        phase,
+    )
+}
+
+pub fn bert_base(tokens: u64) -> Workload {
+    bert_base_phase(Phase::prefill_only(tokens))
+}
+
+/// The Decode-Tiny shape/sparsity over an arbitrary phase (used by the
+/// config layer when the preset's phase knobs are overridden).
+pub fn decode_tiny_phase(name: &str, phase: Phase) -> Workload {
+    build_llm(
+        name,
+        LlmShape::mha(256, 512, 2, 4),
+        LlmSparsity { act_proj: 0.60, act_fc1: 0.55, act_fc2: 0.20, attn: 0.35, weight: 0.45 },
+        phase,
+    )
+}
+
+/// A small decode-only batched scenario: 4 concurrent sequences, a
+/// quantized (0.5-density) KV cache, tiny shape — quick enough for tests
+/// and the golden suite while exercising the batch > 1 decode path.
+pub fn decode_tiny() -> Workload {
+    decode_tiny_phase(
+        "Decode-Tiny (b=4, KV 0.5)",
+        Phase::new(0, 16).with_batch(4).with_kv_density(0.5),
     )
 }
 
@@ -181,7 +333,7 @@ pub fn all_llms() -> Vec<Workload> {
         opt_6_7b(ph),
         opt_13b(ph),
         opt_30b(ph),
-        opt_125m(Phase { prefill_tokens: 256, decode_tokens: 32 }),
+        opt_125m(Phase::new(256, 32)),
         bert_base(256),
     ]
 }
@@ -194,12 +346,16 @@ pub fn table1_llms() -> Vec<Workload> {
 }
 
 /// Override every op's sparsity to a fixed unstructured density pair
-/// (Table I sets both densities to 0.75).
-pub fn with_uniform_density(mut w: Workload, act: f64, wgt: f64) -> Workload {
+/// (Table I sets both densities to 0.75).  Densities outside `(0, 1]`
+/// are rejected — a zero or negative density would silently zero the
+/// compute-reduction model, and a density above 1 inflates costs.
+pub fn with_uniform_density(mut w: Workload, act: f64, wgt: f64) -> Result<Workload> {
+    validate_density(act).map_err(|e| anyhow!("activation {e}"))?;
+    validate_density(wgt).map_err(|e| anyhow!("weight {e}"))?;
     for op in &mut w.ops {
         op.spec = SparsitySpec::unstructured(act, wgt);
     }
-    w
+    Ok(w)
 }
 
 /// Activation-sparsity variant (paper §IV-C evaluates activation and
@@ -213,18 +369,54 @@ pub fn activation_sparse_variant(mut w: Workload) -> Workload {
     w
 }
 
+/// The attention score/context MatMuls carry K/V tensors — activations
+/// from the KV cache — in their weight-operand slot, so weight-pruning
+/// variants must leave them alone (in particular, a [`Phase::kv_density`]
+/// knob must survive the variant transforms).
+fn weight_is_kv_tensor(op_name: &str) -> bool {
+    op_name.ends_with("/qk") || op_name.ends_with("/av")
+}
+
 /// Weight-sparsity variant: activations dense; weights pruned with the
 /// model's density as *clustered* block sparsity (global magnitude
 /// pruning of LLMs produces correlated zero regions — see [5] and
 /// DESIGN.md §5), which is what makes hierarchical formats like the
-/// paper's `B(M)-B(N)-B(N)` (§IV-E) pay off.
+/// paper's `B(M)-B(N)-B(N)` (§IV-E) pay off.  The K/V operands of the
+/// attention MatMuls are not weights and keep their pattern.
 pub fn weight_sparse_variant(mut w: Workload, block: u64) -> Workload {
     w.name = format!("{} (SW)", w.name);
     for op in &mut w.ops {
-        let d = op.spec.weight.density();
         op.spec.input = SparsityPattern::Dense;
+        if weight_is_kv_tensor(&op.name) {
+            continue;
+        }
+        let d = op.spec.weight.density();
         op.spec.weight = if d < 1.0 {
             SparsityPattern::Block { br: block, bc: block, block_density: d }
+        } else {
+            SparsityPattern::Dense
+        };
+    }
+    w
+}
+
+/// N:M structured weight-sparsity variant (the pattern deployed on real
+/// accelerators, e.g. 2:4 sparse tensor cores): activations dense;
+/// every pruned weight tensor carries exactly `n` non-zeros per aligned
+/// group of `m` along the reduction axis.  The K/V operands of the
+/// attention MatMuls are not weights and keep their pattern (so a
+/// KV-cache density knob composes with this variant).
+pub fn weight_nm_variant(mut w: Workload, n: u32, m: u32) -> Workload {
+    assert!(n >= 1 && n <= m, "N:M sparsity needs 1 <= N <= M, got {n}:{m}");
+    w.name = format!("{} (W{n}:{m})", w.name);
+    for op in &mut w.ops {
+        op.spec.input = SparsityPattern::Dense;
+        if weight_is_kv_tensor(&op.name) {
+            continue;
+        }
+        let d = op.spec.weight.density();
+        op.spec.weight = if d < 1.0 {
+            SparsityPattern::NM { n, m }
         } else {
             SparsityPattern::Dense
         };
@@ -239,7 +431,7 @@ mod tests {
     #[test]
     fn llama7b_structure() {
         let w = llama2_7b(Phase::default_prefill_decode());
-        // 6 prefill + 6 decode op groups.
+        // 8 attention + 4 FFN op groups (prefill + decode).
         assert_eq!(w.ops.len(), 12);
         let qkv = &w.ops[0];
         assert_eq!(qkv.dims, ProblemDims::new(2048, 4096, 3 * 4096));
@@ -267,11 +459,23 @@ mod tests {
 
     #[test]
     fn uniform_density_override() {
-        let w = with_uniform_density(llama2_7b(Phase::default_prefill_decode()), 0.75, 0.75);
+        let w =
+            with_uniform_density(llama2_7b(Phase::default_prefill_decode()), 0.75, 0.75).unwrap();
         for op in &w.ops {
             assert_eq!(op.spec.input.density(), 0.75);
             assert_eq!(op.spec.weight.density(), 0.75);
         }
+    }
+
+    #[test]
+    fn uniform_density_rejects_out_of_range() {
+        let w = || llama2_7b(Phase::prefill_only(64));
+        assert!(with_uniform_density(w(), 0.0, 0.5).is_err());
+        assert!(with_uniform_density(w(), -0.1, 0.5).is_err());
+        assert!(with_uniform_density(w(), 0.5, 1.2).is_err());
+        assert!(with_uniform_density(w(), f64::NAN, 0.5).is_err());
+        assert!(with_uniform_density(w(), 0.5, 0.5).is_ok());
+        assert!(with_uniform_density(w(), 1.0, 1.0).is_ok());
     }
 
     #[test]
@@ -281,5 +485,73 @@ mod tests {
         let w = llama2_7b(Phase::prefill_only(2048));
         let macs = w.total_macs();
         assert!(macs > 5e12 && macs < 5e13, "macs = {macs:.3e}");
+    }
+
+    #[test]
+    fn batch_scales_prefill_rows_and_attention_counts() {
+        let b1 = llama2_7b(Phase::prefill_only(64));
+        let b4 = llama2_7b(Phase::prefill_only(64).with_batch(4));
+        let qkv1 = &b1.ops[0];
+        let qkv4 = &b4.ops[0];
+        assert_eq!(qkv4.dims.m, 4 * qkv1.dims.m);
+        let qk1 = b1.ops.iter().find(|o| o.name.contains("prefill/qk")).unwrap();
+        let qk4 = b4.ops.iter().find(|o| o.name.contains("prefill/qk")).unwrap();
+        assert_eq!(qk4.count, 4 * qk1.count);
+        assert_eq!(qk4.dims, qk1.dims);
+        assert!((b4.total_macs() - 4.0 * b1.total_macs()).abs() < 1e-6 * b1.total_macs());
+    }
+
+    #[test]
+    fn batched_decode_widens_projection_rows() {
+        let w = decode_tiny();
+        assert!(w.ops.iter().all(|o| o.name.contains("decode")));
+        let qkv = w.ops.iter().find(|o| o.name.contains("decode/qkv")).unwrap();
+        assert_eq!(qkv.dims.m, 4);
+        let av = w.ops.iter().find(|o| o.name.contains("decode/av")).unwrap();
+        assert_eq!(av.spec.weight.density(), 0.5); // the KV-cache knob
+        assert_eq!(av.count, 2 * 4 * 16 * 4); // layers x heads x steps x batch
+    }
+
+    #[test]
+    fn gqa_splits_and_shrinks_kv_projection() {
+        let sp =
+            LlmSparsity { act_proj: 0.5, act_fc1: 0.5, act_fc2: 0.2, attn: 0.3, weight: 0.4 };
+        let shape = LlmShape { hidden: 256, intermediate: 512, layers: 2, heads: 8, kv_heads: 2 };
+        let w = build_llm("gqa", shape, sp, Phase::prefill_only(64));
+        let q = w.ops.iter().find(|o| o.name.contains("q_proj")).unwrap();
+        let kv = w.ops.iter().find(|o| o.name.contains("kv_proj")).unwrap();
+        assert_eq!(q.dims.k, 256);
+        // 2 kv_heads x head_dim 32 x (K and V) = 128 output columns.
+        assert_eq!(kv.dims.k, 128);
+        assert!(w.ops.iter().all(|o| !o.name.contains("/qkv")));
+    }
+
+    #[test]
+    fn nm_variant_marks_pruned_weights_only() {
+        let base = opt_6_7b(Phase::prefill_only(128));
+        let w = weight_nm_variant(base.clone(), 2, 4);
+        assert!(w.name.contains("W2:4"));
+        for (op, base_op) in w.ops.iter().zip(&base.ops) {
+            assert_eq!(op.spec.input.density(), 1.0, "{}", op.name);
+            if op.name.ends_with("/qk") || op.name.ends_with("/av") {
+                // K/V operands are activations, not weights: untouched.
+                assert_eq!(op.spec.weight, base_op.spec.weight, "{}", op.name);
+            } else if base_op.spec.weight.density() < 1.0 {
+                assert_eq!(op.spec.weight, SparsityPattern::NM { n: 2, m: 4 }, "{}", op.name);
+            } else {
+                assert_eq!(op.spec.weight, SparsityPattern::Dense, "{}", op.name);
+            }
+        }
+    }
+
+    #[test]
+    fn nm_variant_preserves_kv_cache_density() {
+        // The README's flag combination: --kv-density + --nm must compose.
+        let base = decode_tiny_phase("t", Phase::new(0, 8).with_batch(2).with_kv_density(0.9));
+        let w = weight_nm_variant(base, 2, 4);
+        let av = w.ops.iter().find(|o| o.name.ends_with("/av")).unwrap();
+        assert_eq!(av.spec.weight, SparsityPattern::Unstructured { density: 0.9 });
+        let qkv = w.ops.iter().find(|o| o.name.contains("/qkv")).unwrap();
+        assert_eq!(qkv.spec.weight, SparsityPattern::NM { n: 2, m: 4 });
     }
 }

@@ -1,13 +1,19 @@
-//! Workload zoo (paper §IV-A2): sparse LLMs (LLaMA2, OPT, BERT) and the
-//! CNNs used in the DiMO-Sparse comparison (AlexNet, VGG-16, ResNet-18),
-//! expressed as lists of MatMul operators with per-operator sparsity.
+//! Workload zoo: the paper's sparse LLMs (LLaMA2, OPT, BERT — §IV-A2)
+//! and DiMO-comparison CNNs (AlexNet, VGG-16, ResNet-18), plus the
+//! scenario families beyond the paper's evaluation — grouped-query
+//! attention ([`gqa`]), routed-expert FFNs ([`moe`]), batched decode
+//! with a KV-cache density knob ([`llm::Phase`]) and N:M structured
+//! weight sparsity ([`llm::weight_nm_variant`]) — all expressed as
+//! lists of MatMul operators with per-operator sparsity.
 //!
 //! Every operator follows the paper's MatMul convention
 //! `O[M][K] = Σ_N I[M][N] × W[N][K]` — N is the reduction dim, `I` holds
 //! activations (M×N), `W` holds weights (N×K).
 
 pub mod cnn;
+pub mod gqa;
 pub mod llm;
+pub mod moe;
 
 use crate::dataflow::ProblemDims;
 use crate::sparsity::SparsitySpec;
@@ -48,6 +54,20 @@ impl Workload {
     }
 }
 
+/// One representative per scenario family, at reduced sizes — the set
+/// the `fig12_scenario_zoo` bench and the golden regression suite run:
+/// dense-shaped MHA, GQA, MoE, batched decode, and N:M weight sparsity.
+pub fn scenario_zoo() -> Vec<Workload> {
+    let small = llm::Phase::new(256, 32);
+    vec![
+        llm::opt_125m(small),
+        gqa::gqa_tiny(small),
+        moe::moe_tiny(small),
+        llm::decode_tiny(),
+        llm::weight_nm_variant(llm::opt_125m(small), 2, 4),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -56,12 +76,27 @@ mod tests {
     fn zoo_is_populated() {
         let all = llm::all_llms();
         assert!(all.len() >= 7);
-        for w in &all {
+        for w in all.iter().chain(gqa::all_gqa().iter()).chain(moe::all_moe().iter()) {
             assert!(!w.ops.is_empty(), "{} has no ops", w.name);
             assert!(w.total_macs() > 0.0);
         }
         let cnns = cnn::all_cnns();
         assert_eq!(cnns.len(), 3);
+    }
+
+    #[test]
+    fn scenario_zoo_covers_every_family() {
+        let zoo = scenario_zoo();
+        assert_eq!(zoo.len(), 5);
+        let names: Vec<&str> = zoo.iter().map(|w| w.name.as_str()).collect();
+        assert!(names.iter().any(|n| n.contains("OPT-125M") && !n.contains("W2:4")));
+        assert!(names.iter().any(|n| n.contains("GQA-Tiny")));
+        assert!(names.iter().any(|n| n.contains("MoE-Tiny")));
+        assert!(names.iter().any(|n| n.contains("Decode-Tiny")));
+        assert!(names.iter().any(|n| n.contains("W2:4")));
+        for w in &zoo {
+            assert!(w.total_macs() > 0.0, "{}", w.name);
+        }
     }
 
     #[test]

@@ -1,0 +1,147 @@
+//! Mixture-of-experts (MoE) workloads: Mixtral-style routed FFNs.
+//!
+//! The attention path is identical to a dense transformer (built by
+//! [`super::llm::attention_ops`], including GQA grouping); the FFN is
+//! replaced by per-expert FC1/FC2 operators whose token counts follow
+//! top-k routing.  With uniform routing each expert processes
+//! `tokens x top_k / experts` tokens per layer in prefill; decode steps
+//! route each of the `batch` tokens to `top_k` experts, so the expert
+//! MatMuls stay M = batch with their count scaled by `top_k`.  Total
+//! expert MACs therefore scale linearly with `top_k` — the invariant
+//! the property suite pins.
+
+use super::llm::{attention_ops, push_op, LlmShape, LlmSparsity, Phase};
+use super::Workload;
+
+/// MoE transformer shape: the attention backbone plus routing.
+#[derive(Clone, Copy, Debug)]
+pub struct MoeShape {
+    /// Backbone shape; `base.intermediate` is the *per-expert* FFN width.
+    pub base: LlmShape,
+    /// Routed expert count per layer.
+    pub experts: u64,
+    /// Experts activated per token.
+    pub top_k: u64,
+}
+
+/// Build the operator list for one MoE model.
+pub fn build_moe(name: &str, shape: MoeShape, sp: LlmSparsity, phase: Phase) -> Workload {
+    assert!(
+        shape.experts >= 1 && shape.top_k >= 1 && shape.top_k <= shape.experts,
+        "need 1 <= top_k {} <= experts {}",
+        shape.top_k,
+        shape.experts
+    );
+    let h = shape.base.hidden;
+    let f = shape.base.intermediate;
+    let l = shape.base.layers;
+    let b = phase.batch;
+    let mut ops = attention_ops(name, &shape.base, &sp, &phase);
+
+    // --- Prefill: each expert sees tokens x top_k / experts tokens
+    // (uniform routing; rounded up when the split is uneven) -----------
+    let s = phase.prefill_tokens;
+    if s > 0 {
+        let routed = b * s * shape.top_k;
+        let pe = (routed + shape.experts - 1) / shape.experts;
+        let count = l * shape.experts;
+        push_op(&mut ops, name, "prefill/expert_fc1", pe, h, f, sp.act_fc1, sp.weight, count);
+        push_op(&mut ops, name, "prefill/expert_fc2", pe, f, h, sp.act_fc2, sp.weight, count);
+    }
+
+    // --- Decode: batch tokens per step, each routed to top_k experts ---
+    let d = phase.decode_tokens;
+    if d > 0 {
+        let count = l * d * shape.top_k;
+        push_op(&mut ops, name, "decode/expert_fc1", b, h, f, sp.act_fc1, sp.weight, count);
+        push_op(&mut ops, name, "decode/expert_fc2", b, f, h, sp.act_fc2, sp.weight, count);
+    }
+    Workload { name: name.to_string(), ops }
+}
+
+/// Mixtral-8x7B: LLaMA-style GQA backbone, 8 routed experts, top-2.
+pub fn mixtral_8x7b(phase: Phase) -> Workload {
+    build_moe(
+        "Mixtral-8x7B",
+        MoeShape {
+            base: LlmShape {
+                hidden: 4096,
+                intermediate: 14336,
+                layers: 32,
+                heads: 32,
+                kv_heads: 8,
+            },
+            experts: 8,
+            top_k: 2,
+        },
+        LlmSparsity { act_proj: 0.50, act_fc1: 0.45, act_fc2: 0.18, attn: 0.28, weight: 0.32 },
+        phase,
+    )
+}
+
+/// A reduced MoE shape for tests and the golden suite: 4 experts, top-2,
+/// MHA backbone, dims small enough for a sub-second co-search.
+pub fn moe_tiny(phase: Phase) -> Workload {
+    build_moe(
+        "MoE-Tiny",
+        MoeShape { base: LlmShape::mha(128, 256, 2, 4), experts: 4, top_k: 2 },
+        LlmSparsity { act_proj: 0.55, act_fc1: 0.50, act_fc2: 0.20, attn: 0.30, weight: 0.40 },
+        phase,
+    )
+}
+
+/// The MoE members of the scenario zoo.
+pub fn all_moe() -> Vec<Workload> {
+    vec![mixtral_8x7b(Phase::default_prefill_decode()), moe_tiny(Phase::new(256, 32))]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moe_zoo_is_populated() {
+        for w in all_moe() {
+            assert!(!w.ops.is_empty(), "{} has no ops", w.name);
+            assert!(w.total_macs() > 0.0);
+            assert!(
+                w.ops.iter().any(|o| o.name.contains("expert_fc1")),
+                "{} has no expert ops",
+                w.name
+            );
+            assert!(
+                w.ops.iter().all(|o| !o.name.ends_with("/fc1")),
+                "{} still has a dense FFN",
+                w.name
+            );
+        }
+    }
+
+    #[test]
+    fn expert_tokens_follow_topk_routing() {
+        // 256 tokens x top-2 over 4 experts -> 128 tokens per expert.
+        let w = moe_tiny(Phase::prefill_only(256));
+        let fc1 = w.ops.iter().find(|o| o.name.contains("expert_fc1")).unwrap();
+        assert_eq!(fc1.dims.m, 128);
+        assert_eq!(fc1.count, 2 * 4); // layers x experts
+    }
+
+    #[test]
+    fn decode_expert_count_scales_with_topk() {
+        let w = moe_tiny(Phase::new(0, 8).with_batch(2));
+        let fc1 = w.ops.iter().find(|o| o.name.contains("decode/expert_fc1")).unwrap();
+        assert_eq!(fc1.dims.m, 2); // batch
+        assert_eq!(fc1.count, 2 * 8 * 2); // layers x steps x top_k
+    }
+
+    #[test]
+    #[should_panic(expected = "top_k")]
+    fn topk_beyond_experts_is_rejected() {
+        build_moe(
+            "bad",
+            MoeShape { base: LlmShape::mha(64, 128, 1, 2), experts: 2, top_k: 3 },
+            LlmSparsity { act_proj: 0.5, act_fc1: 0.5, act_fc2: 0.2, attn: 0.3, weight: 0.4 },
+            Phase::prefill_only(16),
+        );
+    }
+}

@@ -19,6 +19,53 @@ fn smoke_list_exits_zero_and_names_presets() {
     assert!(stdout.contains("llama2-7b"), "no workload preset named:\n{stdout}");
     assert!(stdout.contains("opt-125m"), "no workload preset named:\n{stdout}");
     assert!(stdout.contains("metrics:"), "no metric list:\n{stdout}");
+    // The scenario zoo families must all be advertised.
+    assert!(stdout.contains("llama3-8b"), "no GQA preset:\n{stdout}");
+    assert!(stdout.contains("mixtral-8x7b"), "no MoE preset:\n{stdout}");
+    assert!(stdout.contains("batched decode"), "no batched-decode family:\n{stdout}");
+    assert!(stdout.contains("decode-tiny"), "no batched-decode preset:\n{stdout}");
+    assert!(stdout.contains("--nm N:M"), "no N:M modifier:\n{stdout}");
+    assert!(stdout.contains("llama2-7b-nm24"), "no N:M preset:\n{stdout}");
+}
+
+/// Scenario presets drive the whole pipeline from the CLI, including
+/// the workload modifier flags.
+#[test]
+fn search_scenario_preset_with_modifiers() {
+    let out = snipsnap()
+        .args([
+            "search", "--arch", "arch3", "--workload", "moe-tiny", "--mode", "fixed",
+            "--max-mappings", "200", "--prefill", "32", "--decode", "4", "--batch", "2",
+            "--kv-density", "0.5", "--nm", "2:4",
+        ])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("expert_fc1"), "no MoE expert ops:\n{stdout}");
+    assert!(stdout.contains("totals:"), "{stdout}");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("W2:4"), "N:M variant not applied:\n{stderr}");
+}
+
+/// Out-of-range scenario knobs must fail with a clear message, not
+/// silently produce nonsense costs.
+#[test]
+fn bad_scenario_modifiers_fail_cleanly() {
+    let run = |args: &[&str]| {
+        let out = snipsnap().args(args).output().expect("run");
+        assert!(!out.status.success(), "{args:?} unexpectedly succeeded");
+        String::from_utf8_lossy(&out.stderr).to_string()
+    };
+    let e = run(&["search", "--workload", "gqa-tiny", "--kv-density", "1.5"]);
+    assert!(e.contains("kv_density"), "{e}");
+    let e = run(&["search", "--workload", "gqa-tiny", "--nm", "junk"]);
+    assert!(e.contains("N:M"), "{e}");
+    let e = run(&["search", "--workload", "alexnet", "--batch", "2"]);
+    assert!(e.contains("transformer"), "{e}");
+    // Modifier flags cannot silently lose against a --config file.
+    let e = run(&["search", "--config", "nonexistent.toml", "--nm", "2:4"]);
+    assert!(e.contains("cannot be combined"), "{e}");
 }
 
 #[test]

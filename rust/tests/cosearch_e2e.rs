@@ -10,7 +10,7 @@ use snipsnap::workload::llm;
 
 fn reduced_llm() -> snipsnap::workload::Workload {
     // OPT-125M with a short prefill keeps dims real but the search quick.
-    llm::opt_125m(llm::Phase { prefill_tokens: 64, decode_tokens: 0 })
+    llm::opt_125m(llm::Phase::prefill_only(64))
 }
 
 fn quick(mode: FormatMode) -> SearchConfig {

@@ -1,0 +1,151 @@
+//! Golden co-search regression suite.
+//!
+//! One small fixed workload per scenario family — MHA, GQA, MoE,
+//! batched decode, N:M weights — is co-searched and the winning design
+//! (format pair names, full mapping incl. loop orders, metric value to
+//! 6 decimals, evaluation count) is rendered to a canonical text form.
+//!
+//! Two layers of protection:
+//!
+//! 1. **Thread determinism** (always on): the render must be identical
+//!    at `threads ∈ {1, 3, 4}` — 3 exercises the non-divisor sharding
+//!    split (`threads % workers != 0`) that `cosearch_e2e` never covers.
+//! 2. **Golden fixtures** (when present): the render is compared against
+//!    `rust/tests/golden/<scenario>.txt`.  Regenerate intentionally
+//!    changed fixtures with
+//!    `SNIPSNAP_BLESS=1 cargo test --test golden_cosearch`; a missing
+//!    fixture is reported as a skip (with the bless command) rather than
+//!    a failure so fresh checkouts stay green until blessed fixtures are
+//!    committed.
+
+use snipsnap::arch::presets;
+use snipsnap::dataflow::mapper::MapperConfig;
+use snipsnap::search::{cosearch_workload, SearchConfig, WorkloadResult};
+use snipsnap::workload::llm::{build_llm, LlmShape, LlmSparsity, Phase};
+use snipsnap::workload::moe::{build_moe, MoeShape};
+use snipsnap::workload::{llm, Workload};
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+const SP: LlmSparsity =
+    LlmSparsity { act_proj: 0.55, act_fc1: 0.50, act_fc2: 0.20, attn: 0.30, weight: 0.40 };
+
+fn mha_small() -> Workload {
+    build_llm("mha-small", LlmShape::mha(64, 128, 1, 4), SP, Phase::new(16, 4))
+}
+
+fn gqa_small() -> Workload {
+    build_llm(
+        "gqa-small",
+        LlmShape { hidden: 64, intermediate: 128, layers: 1, heads: 4, kv_heads: 2 },
+        SP,
+        Phase::new(16, 4),
+    )
+}
+
+fn moe_small() -> Workload {
+    build_moe(
+        "moe-small",
+        MoeShape { base: LlmShape::mha(64, 128, 1, 4), experts: 4, top_k: 2 },
+        SP,
+        Phase::new(16, 4),
+    )
+}
+
+fn batched_decode_small() -> Workload {
+    build_llm(
+        "batched-small",
+        LlmShape::mha(64, 128, 1, 4),
+        SP,
+        Phase::new(0, 8).with_batch(4).with_kv_density(0.5),
+    )
+}
+
+fn nm_small() -> Workload {
+    llm::weight_nm_variant(mha_small(), 2, 4)
+}
+
+/// Canonical text render of a co-search result: everything the golden
+/// contract pins, nothing time- or machine-dependent.
+fn render(r: &WorkloadResult) -> String {
+    let mut s = String::new();
+    for d in &r.designs {
+        writeln!(
+            s,
+            "{} | I={} | W={} | map={} | value={:.6e}",
+            d.op_name, d.input_format, d.weight_format, d.mapping, d.metric_value
+        )
+        .unwrap();
+    }
+    writeln!(s, "evaluations={}", r.evaluations).unwrap();
+    s
+}
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden")
+        .join(format!("{name}.txt"))
+}
+
+fn check(name: &str, w: &Workload) {
+    let arch = presets::arch3();
+    let mk = |threads: usize| SearchConfig {
+        threads,
+        mapper: MapperConfig { max_candidates: 600, ..Default::default() },
+        ..Default::default()
+    };
+    let serial = render(&cosearch_workload(&arch, w, &mk(1)));
+    for threads in [3usize, 4] {
+        let par = render(&cosearch_workload(&arch, w, &mk(threads)));
+        assert_eq!(
+            serial, par,
+            "{name}: threads={threads} result diverged from serial"
+        );
+    }
+
+    let path = golden_path(name);
+    if std::env::var("SNIPSNAP_BLESS").map(|v| v == "1").unwrap_or(false) {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &serial).unwrap();
+        eprintln!("BLESSED {}", path.display());
+        return;
+    }
+    match std::fs::read_to_string(&path) {
+        Ok(want) => assert_eq!(
+            serial, want,
+            "{name}: co-search result changed vs {}.\n\
+             If intended, regenerate with `SNIPSNAP_BLESS=1 cargo test --test golden_cosearch`.",
+            path.display()
+        ),
+        Err(_) => eprintln!(
+            "SKIP golden compare for '{name}': {} missing \
+             (create with `SNIPSNAP_BLESS=1 cargo test --test golden_cosearch`)",
+            path.display()
+        ),
+    }
+}
+
+#[test]
+fn golden_mha() {
+    check("mha", &mha_small());
+}
+
+#[test]
+fn golden_gqa() {
+    check("gqa", &gqa_small());
+}
+
+#[test]
+fn golden_moe() {
+    check("moe", &moe_small());
+}
+
+#[test]
+fn golden_batched_decode() {
+    check("batched_decode", &batched_decode_small());
+}
+
+#[test]
+fn golden_nm() {
+    check("nm", &nm_small());
+}

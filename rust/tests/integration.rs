@@ -7,7 +7,7 @@ use snipsnap::sparsity::analyzer::{analytical_cost, cost_from_ne};
 use snipsnap::sparsity::exact::{exact_cost, exact_ne};
 use snipsnap::sparsity::sample::sample_mask;
 use snipsnap::sparsity::SparsityPattern;
-use snipsnap::workload::{cnn, llm};
+use snipsnap::workload::{cnn, gqa, llm, moe};
 
 /// The analytical expectation must track ground truth on sampled tensors
 /// for every named format across densities and pattern families.
@@ -81,10 +81,17 @@ fn costing_core_is_provider_agnostic() {
     }
 }
 
-/// Workload zoo structural invariants across the whole model list.
+/// Workload zoo structural invariants across the whole model list,
+/// including the GQA/MoE/batched-decode/N:M scenario families.
 #[test]
 fn workload_zoo_invariants() {
-    for w in llm::all_llms().iter().chain(cnn::all_cnns().iter()) {
+    for w in llm::all_llms()
+        .iter()
+        .chain(cnn::all_cnns().iter())
+        .chain(gqa::all_gqa().iter())
+        .chain(moe::all_moe().iter())
+        .chain(snipsnap::workload::scenario_zoo().iter())
+    {
         assert!(!w.ops.is_empty());
         for op in &w.ops {
             assert!(op.dims.m > 0 && op.dims.n > 0 && op.dims.k > 0, "{}", op.name);

@@ -10,6 +10,9 @@ use snipsnap::sparsity::exact::exact_ne;
 use snipsnap::sparsity::sample::sample_mask;
 use snipsnap::sparsity::SparsityPattern;
 use snipsnap::util::proptest::{run, Gen};
+use snipsnap::workload::llm::{build_llm, weight_nm_variant, LlmShape, LlmSparsity, Phase};
+use snipsnap::workload::moe::{build_moe, MoeShape};
+use snipsnap::workload::Workload;
 
 fn random_mapping(g: &mut Gen, p: &ProblemDims, nlevels: usize) -> Mapping {
     let orders = all_orders();
@@ -250,6 +253,141 @@ fn greedy_ordering_not_worse_than_canonical() {
             best = best.min(Metric::Energy.of(&r));
         }
         assert!(best <= Metric::Energy.of(&c) + 1e-9);
+    });
+}
+
+// --- Scenario-zoo builder invariants -----------------------------------
+
+const ZOO_SP: LlmSparsity =
+    LlmSparsity { act_proj: 0.55, act_fc1: 0.50, act_fc2: 0.20, attn: 0.30, weight: 0.40 };
+
+fn random_phase(g: &mut Gen) -> Phase {
+    Phase::new(g.u64_in(1, 64), g.u64_in(0, 8))
+        .with_batch(g.u64_in(1, 3))
+        .with_kv_density(g.f64_in(0.05, 1.0))
+}
+
+fn random_zoo_workload(g: &mut Gen, phase: Phase) -> Workload {
+    let heads = 8;
+    let kv_heads = *g.choose(&[1u64, 2, 4, 8]);
+    let shape = LlmShape { hidden: 64, intermediate: 128, layers: 2, heads, kv_heads };
+    match g.usize_in(0, 2) {
+        0 => build_llm("zoo-llm", shape, ZOO_SP, phase),
+        1 => build_moe(
+            "zoo-moe",
+            MoeShape { base: shape, experts: 4, top_k: g.u64_in(1, 4) },
+            ZOO_SP,
+            phase,
+        ),
+        _ => {
+            let m = *g.choose(&[4u32, 8]);
+            let n = g.u64_in(1, m as u64) as u32;
+            weight_nm_variant(build_llm("zoo-nm", shape, ZOO_SP, phase), n, m)
+        }
+    }
+}
+
+/// Every op a scenario builder emits keeps both operand densities in
+/// `(0, 1]` — the range the cost and reduction models are defined on.
+#[test]
+fn builder_densities_stay_in_unit_interval() {
+    run("builder densities in (0,1]", 40, |g| {
+        let phase = random_phase(g);
+        let w = random_zoo_workload(g, phase);
+        assert!(!w.ops.is_empty(), "{}", w.name);
+        for op in &w.ops {
+            for d in [op.spec.input.density(), op.spec.weight.density()] {
+                assert!(d > 0.0 && d <= 1.0, "{}: density {d}", op.name);
+            }
+        }
+    });
+}
+
+/// Total MACs are monotone non-decreasing in the batch size and in the
+/// decode-token count (more work can never cost fewer operations).
+#[test]
+fn total_macs_monotone_in_batch_and_decode() {
+    run("macs monotone in batch/decode", 30, |g| {
+        let prefill = g.u64_in(1, 32);
+        let decode = g.u64_in(0, 8);
+        let batch = g.u64_in(1, 3);
+        let kv = g.f64_in(0.1, 1.0);
+        let mk = |b: u64, d: u64| {
+            let ph = Phase::new(prefill, d).with_batch(b).with_kv_density(kv);
+            build_llm("mono", LlmShape::mha(64, 128, 2, 8), ZOO_SP, ph).total_macs()
+        };
+        assert!(mk(batch + 1, decode) >= mk(batch, decode), "batch step shrank MACs");
+        assert!(mk(batch, decode + 1) >= mk(batch, decode), "decode step shrank MACs");
+    });
+}
+
+/// GQA K/V-projection MACs equal the MHA K/V share scaled by exactly
+/// `kv_heads / heads` (the defining property of grouped-query attention;
+/// the fused MHA QKV MatMul's K/V share is 2/3 of its MACs).
+#[test]
+fn gqa_kv_projection_macs_scale_with_grouping() {
+    run("gqa kv_proj scaling", 30, |g| {
+        let heads = 8u64;
+        let kv_heads = *g.choose(&[1u64, 2, 4]);
+        let phase = random_phase(g);
+        let gqa = build_llm(
+            "g",
+            LlmShape { hidden: 64, intermediate: 128, layers: 2, heads, kv_heads },
+            ZOO_SP,
+            phase,
+        );
+        let mha = build_llm("m", LlmShape::mha(64, 128, 2, heads), ZOO_SP, phase);
+        let gqa_kv: f64 = gqa
+            .ops
+            .iter()
+            .filter(|o| o.name.contains("kv_proj"))
+            .map(|o| o.total_macs())
+            .sum();
+        let mha_kv: f64 = mha
+            .ops
+            .iter()
+            .filter(|o| o.name.contains("/qkv"))
+            .map(|o| o.total_macs() * 2.0 / 3.0)
+            .sum();
+        let want = mha_kv * kv_heads as f64 / heads as f64;
+        assert!(
+            (gqa_kv - want).abs() <= 1e-9 * want.max(1.0),
+            "kv_heads={kv_heads}: gqa {gqa_kv} vs scaled mha {want}"
+        );
+    });
+}
+
+/// MoE expert MACs scale linearly with top-k under uniform routing
+/// (token counts are chosen divisible so the scaling is exact).
+#[test]
+fn moe_expert_macs_linear_in_topk() {
+    run("moe macs linear in top_k", 30, |g| {
+        let experts = 4u64;
+        // prefill tokens a multiple of `experts` keeps routing exact.
+        let phase = Phase::new(4 * g.u64_in(1, 16), g.u64_in(0, 8)).with_batch(g.u64_in(1, 3));
+        let expert_macs = |top_k: u64| -> f64 {
+            build_moe(
+                "k",
+                MoeShape { base: LlmShape::mha(64, 128, 2, 8), experts, top_k },
+                ZOO_SP,
+                phase,
+            )
+            .ops
+            .iter()
+            .filter(|o| o.name.contains("expert_"))
+            .map(|o| o.total_macs())
+            .sum()
+        };
+        let base = expert_macs(1);
+        assert!(base > 0.0);
+        for k in 2..=experts {
+            let got = expert_macs(k);
+            let want = k as f64 * base;
+            assert!(
+                (got - want).abs() <= 1e-9 * want,
+                "top_k={k}: expert MACs {got} vs {want}"
+            );
+        }
     });
 }
 
