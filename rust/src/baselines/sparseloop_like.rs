@@ -18,8 +18,8 @@
 //! The SnipSnap progressive workflow (`crate::search`) removes all three.
 
 use crate::arch::Accelerator;
-use crate::cost::{mapping_is_legal, CompressionRatios, EvalContext, Metric};
-use crate::dataflow::mapper::{all_orders, for_each_proto, MapperConfig};
+use crate::cost::{mapping_is_legal, tiles_are_legal, CompressionRatios, EvalContext, Metric};
+use crate::dataflow::mapper::{all_orders, MapperConfig, ProtoArena};
 use crate::dataflow::{Mapping, ProblemDims};
 use crate::engine::ScoredFormat;
 use crate::search::progressive::native_format;
@@ -65,73 +65,72 @@ pub fn stepwise_op(
     let mut ctx = EvalContext::new(arch, p, metric);
     let mut best: Option<(Mapping, crate::cost::CostReport, f64)> = None;
 
-    for_each_proto(
-        &p,
-        arch.levels.len(),
-        arch.mac.spatial_rows,
-        arch.mac.spatial_cols,
-        mapper,
-        // Step 1 legality: *dense* footprints (no compression awareness).
-        |proto| mapping_is_legal(arch, proto, &CompressionRatios::DENSE),
-        |proto| {
-            // Exhaustive order expansion per level.
-            let nlevels = proto.levels.len();
-            let order_sets: Vec<usize> = (0..nlevels)
-                .map(|i| {
-                    let nontrivial =
-                        proto.levels[i].factors.iter().filter(|&&f| f > 1).count();
-                    if nontrivial <= 1 {
-                        1
-                    } else {
-                        orders.len()
-                    }
-                })
-                .collect();
-            let mut idx = vec![0usize; nlevels];
-            loop {
-                let mut m = proto.clone();
-                for (i, &oi) in idx.iter().enumerate() {
-                    m.levels[i].order = orders[oi % orders.len()];
-                }
-                // Step 1: dense dataflow modeling (its result only ranks;
-                // the work is structurally wasted — Fig. 7's green pass).
-                let dense_r = ctx.evaluate(
-                    &m,
-                    &dense_spec,
-                    &ReductionStrategy::NONE,
-                    &CompressionRatios::DENSE,
-                );
-                let _ = metric.of(&dense_r);
+    // Step 1 legality: *dense* footprints (no compression awareness) —
+    // evaluated on the packed arena tiles, then every proto's orders are
+    // expanded exhaustively over a reused scratch mapping.  Shares the
+    // progressive search's op→enumeration wiring so both workflows walk
+    // the same proto space (the Table I comparison premise).
+    let en = crate::search::progressive::op_enumeration(arch, &p, mapper);
+    let mut arena = ProtoArena::new();
+    arena.rebuild(&en, mapper, |tiles, spatial| {
+        tiles_are_legal(arch, tiles, spatial, &CompressionRatios::DENSE)
+    });
+    tel.protos += arena.len() as u64;
+    let nlevels = arch.levels.len();
+    let mut m = en.scratch_mapping();
+    let mut order_sets = vec![1usize; nlevels];
+    let mut idx = vec![0usize; nlevels];
+    for proto_id in 0..arena.len() {
+        arena.write_mapping(proto_id, &mut m);
+        // Exhaustive order expansion per level (unit levels collapse to
+        // one order).
+        for (lvl, set) in order_sets.iter_mut().enumerate() {
+            let nontrivial = m.levels[lvl].factors.iter().filter(|&&f| f > 1).count();
+            *set = if nontrivial <= 1 { 1 } else { orders.len() };
+        }
+        idx.iter_mut().for_each(|i| *i = 0);
+        loop {
+            for (i, &oi) in idx.iter().enumerate() {
+                m.levels[i].order = orders[oi % orders.len()];
+            }
+            // Step 1: dense dataflow modeling (its result only ranks;
+            // the work is structurally wasted — Fig. 7's green pass).
+            let dense_r = ctx.evaluate(
+                &m,
+                &dense_spec,
+                &ReductionStrategy::NONE,
+                &CompressionRatios::DENSE,
+            );
+            let _ = metric.of(&dense_r);
 
-                // Step 2: sparse feature modeling + legality re-check
-                // (Fig. 7's blue pass).  Same mapping as step 1, so the
-                // access counts come straight from the cache.
-                if mapping_is_legal(arch, &m, &ratios) {
-                    let sparse_r = ctx.evaluate(&m, &op.spec, &arch.reduction, &ratios);
-                    let v = metric.of(&sparse_r);
-                    if best.as_ref().map(|(_, _, b)| v < *b).unwrap_or(true) {
-                        best = Some((m, sparse_r, v));
-                    }
-                }
-
-                // Odometer over order combinations.
-                let mut i = nlevels;
-                let mut done = true;
-                while i > 0 {
-                    i -= 1;
-                    idx[i] += 1;
-                    if idx[i] < order_sets[i] {
-                        done = false;
-                        break;
-                    }
-                    idx[i] = 0;
-                }
-                if done {
-                    break;
+            // Step 2: sparse feature modeling + legality re-check
+            // (Fig. 7's blue pass).  Same mapping as step 1, so the
+            // access counts come straight from the cache.
+            if mapping_is_legal(arch, &m, &ratios) {
+                let sparse_r = ctx.evaluate(&m, &op.spec, &arch.reduction, &ratios);
+                let v = metric.of(&sparse_r);
+                if best.as_ref().map(|(_, _, b)| v < *b).unwrap_or(true) {
+                    best = Some((m.clone(), sparse_r, v));
                 }
             }
-        },
-    );
+
+            // Odometer over order combinations.
+            let mut i = nlevels;
+            let mut done = true;
+            while i > 0 {
+                i -= 1;
+                idx[i] += 1;
+                if idx[i] < order_sets[i] {
+                    done = false;
+                    break;
+                }
+                idx[i] = 0;
+            }
+            if done {
+                break;
+            }
+        }
+    }
 
     tel.absorb(&ctx);
     best.map(|(mapping, report, v)| OpDesign {
@@ -166,6 +165,9 @@ pub fn stepwise_workload(
         elapsed: start.elapsed(),
         evaluations: tel.evaluations,
         cache: tel.cache,
+        protos: tel.protos,
+        // The stepwise workflow has no lower-bound pruning by design.
+        pruned: 0,
     }
 }
 

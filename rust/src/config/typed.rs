@@ -16,6 +16,8 @@
 //! max_depth = 4
 //! max_mappings = 40000
 //! threads = 4               # co-search worker threads (0 = all cores)
+//! prune = true              # branch-and-bound pruning (results are
+//!                           # identical either way; default true)
 //!
 //! # Optional preset modifiers (scenario knobs):
 //! [workload]
@@ -425,6 +427,9 @@ pub fn load_run_config(src: &str) -> Result<RunConfig> {
         if let Some(t) = sec.get("threads").and_then(|v| v.as_u64()) {
             search.threads = t as usize;
         }
+        if let Some(p) = sec.get("prune").and_then(|v| v.as_bool()) {
+            search.prune = p;
+        }
     }
     search.engine.data_bits = arch.data_bits;
     Ok(RunConfig { arch, workload, search })
@@ -525,6 +530,7 @@ mode = "fixed"
 top_k = 2
 max_mappings = 1000
 threads = 4
+prune = false
 "#,
         )
         .unwrap();
@@ -533,6 +539,7 @@ threads = 4
         assert_eq!(cfg.search.mode, FormatMode::Fixed);
         assert_eq!(cfg.search.mapper.max_candidates, 1000);
         assert_eq!(cfg.search.threads, 4);
+        assert!(!cfg.search.prune);
     }
 
     #[test]
@@ -546,6 +553,7 @@ workload = "opt-125m"
         )
         .unwrap();
         assert_eq!(cfg.search.threads, 1);
+        assert!(cfg.search.prune, "pruning defaults on");
     }
 
     #[test]

@@ -18,16 +18,31 @@
 //! format/ratio pair (and the order sweep / tile refinement revisit
 //! mappings many times within one pair).  [`EvalContext`] exploits that:
 //! it owns a per-(tiling, order) cache of [`access_counts`] results
-//! keyed by the full [`Mapping`], bundles the per-op invariants (arch,
-//! dims, metric) that every evaluator entry point used to thread as
-//! separate arguments, and reports [`CacheStats`] hit/miss counters
-//! surfaced by the CLI and the bench binaries.  The cached path is
-//! bit-identical to [`evaluate`]: both funnel into
-//! [`evaluate_from_counts`].
+//! keyed by the packed [`MapKey`] (a `Copy` `u64`-per-level encoding of
+//! factors + orders — no `Mapping` clone or `Vec` hash on either lookup
+//! or insert), bundles the per-op invariants (arch, dims, metric) that
+//! every evaluator entry point used to thread as separate arguments,
+//! and reports [`CacheStats`] hit/miss counters surfaced by the CLI and
+//! the bench binaries.  The cached path is bit-identical to
+//! [`evaluate`]: both funnel into [`evaluate_from_counts`].
+//!
+//! Two further hot-path services live here:
+//!
+//! - [`EvalContext::sweep_level`] — the incremental order sweep:
+//!   boundary-`b` traffic depends only on orders of levels ≤ `b`, so
+//!   re-evaluating a level-`lvl` order change resumes the fill pass from
+//!   a prefix snapshot instead of recounting the whole nest.
+//! - [`EvalContext::lower_bound`] — an order-independent lower bound on
+//!   the metric from tile footprints alone, used by the search's
+//!   branch-and-bound pruning (derivation in `docs/SEARCH.md`).
 
 use crate::arch::Accelerator;
-use crate::dataflow::{access_counts, AccessCounts, LoopDim, Mapping, Operand, ProblemDims};
+use crate::dataflow::{
+    access_counts, tiles_of, AccessCounts, FillState, LoopDim, Mapping, Operand, ProblemDims,
+    Spatial, TileLevel, MAX_LEVELS,
+};
 use crate::sparsity::{reduction::ReductionStrategy, SparsitySpec};
+use crate::util::inline::InlineVec;
 use std::collections::HashMap;
 
 /// Compressed/dense traffic ratios per operand (outputs move dense).
@@ -54,16 +69,20 @@ impl CompressionRatios {
 const PSUM_RW: f64 = 2.0;
 
 /// Full cost breakdown of one evaluated design point.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// Per-boundary rows use inline storage ([`MAX_LEVELS`] slots, `Copy`),
+/// so producing, moving and keeping a report never heap-allocates — a
+/// requirement of the search's per-proto visitor path.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CostReport {
     /// Energy of all MAC operations (pJ).
     pub mac_energy_pj: f64,
     /// Per-boundary memory transfer energy (pJ), outermost first.
-    pub mem_energy_pj: Vec<f64>,
+    pub mem_energy_pj: InlineVec<f64, MAX_LEVELS>,
     /// Compute-bound cycles.
     pub compute_cycles: f64,
     /// Per-boundary bandwidth-bound cycles, outermost first.
-    pub mem_cycles: Vec<f64>,
+    pub mem_cycles: InlineVec<f64, MAX_LEVELS>,
 }
 
 impl CostReport {
@@ -113,6 +132,17 @@ impl Metric {
     }
 }
 
+/// Compressed footprint (bits) of one tile — shared by the mapping- and
+/// tile-based legality checks so both sum in the same operand order
+/// (bit-identical results).
+fn footprint_bits(tile: [u64; 3], data_bits: u32, ratios: &CompressionRatios) -> f64 {
+    let [tm, tn, tk] = tile;
+    Operand::ALL
+        .iter()
+        .map(|op| op.footprint(tm, tn, tk) as f64 * data_bits as f64 * ratios.get(*op))
+        .sum()
+}
+
 /// Compressed on-chip footprint (bits) of the tile inside mapping level
 /// `b` — the §III-D2 compression-aware legality quantity.
 pub fn tile_footprint_bits(
@@ -122,10 +152,7 @@ pub fn tile_footprint_bits(
     ratios: &CompressionRatios,
 ) -> f64 {
     let (tm, tn, tk) = mapping.tile_at(b);
-    Operand::ALL
-        .iter()
-        .map(|op| op.footprint(tm, tn, tk) as f64 * data_bits as f64 * ratios.get(*op))
-        .sum()
+    footprint_bits([tm, tn, tk], data_bits, ratios)
 }
 
 /// Is `mapping` legal on `arch` given compressed operand sizes?  Double
@@ -146,6 +173,29 @@ pub fn mapping_is_legal(
     // Spatial unrolling must fit the array axes.
     mapping.spatial.unroll_rows <= arch.mac.spatial_rows
         && mapping.spatial.unroll_cols <= arch.mac.spatial_cols
+}
+
+/// [`mapping_is_legal`] evaluated directly on a proto arena row
+/// (precomputed per-level tiles + spatial) without materializing a
+/// `Mapping`: `tiles[b]` must be the mapping's `tile_at(b)` (as the
+/// arena stores them), making this decision bit-identical to the
+/// mapping-based check.
+pub fn tiles_are_legal(
+    arch: &Accelerator,
+    tiles: &[[u64; 3]],
+    spatial: Spatial,
+    ratios: &CompressionRatios,
+) -> bool {
+    debug_assert_eq!(tiles.len(), arch.levels.len());
+    // Tile inside level b is buffered at level b+1 (on-chip) — zip the
+    // tiles with the levels shifted by one.
+    for (tile, level) in tiles.iter().zip(&arch.levels[1..]) {
+        let cap = level.capacity_bits as f64 / 2.0;
+        if footprint_bits(*tile, arch.data_bits, ratios) > cap {
+            return false;
+        }
+    }
+    spatial.unroll_rows <= arch.mac.spatial_rows && spatial.unroll_cols <= arch.mac.spatial_cols
 }
 
 /// Evaluate one design point (uncached: recomputes [`access_counts`]).
@@ -184,8 +234,8 @@ pub fn evaluate_from_counts(
 
     // --- Memory boundaries ---------------------------------------------
     let nb = mapping.levels.len();
-    let mut mem_energy_pj = Vec::with_capacity(nb);
-    let mut mem_cycles = Vec::with_capacity(nb);
+    let mut mem_energy_pj: InlineVec<f64, MAX_LEVELS> = InlineVec::new();
+    let mut mem_cycles: InlineVec<f64, MAX_LEVELS> = InlineVec::new();
     for b in 0..nb {
         let mut bits = 0.0;
         for (oi, op) in Operand::ALL.iter().enumerate() {
@@ -235,14 +285,72 @@ impl CacheStats {
 }
 
 /// Cached mappings per context before the cache is cleared and rebuilt.
-/// At roughly 250 bytes/entry this bounds a context to a few tens of MB;
-/// clearing (rather than evicting) keeps the hot recent protos warm on
-/// the very next insert and costs one extra miss per retained mapping.
+/// At ~280 bytes/entry (72-byte packed key + inline counts) this bounds
+/// a context to a few tens of MB; clearing (rather than evicting) keeps
+/// the hot recent protos warm on the very next insert and costs one
+/// extra miss per retained mapping.
 const EVAL_CACHE_CAP: usize = 1 << 17;
+
+/// Bits per tiling factor in a packed [`MapKey`] level word.
+const FACTOR_BITS: u32 = 20;
+const FACTOR_MAX: u64 = (1 << FACTOR_BITS) - 1;
+
+fn dim_code(d: LoopDim) -> u64 {
+    match d {
+        LoopDim::M => 0,
+        LoopDim::N => 1,
+        LoopDim::K => 2,
+    }
+}
+
+/// One level packed into a `u64`: three 20-bit factors plus the loop
+/// order's first two dims (2 bits each — the third is implied).  Factors
+/// are ≥ 1, so a real level word is never 0 and unused trailing slots
+/// (zero) cannot collide with it.
+fn pack_level(l: &TileLevel) -> u64 {
+    let [m, n, k] = l.factors;
+    assert!(
+        (m | n | k) <= FACTOR_MAX,
+        "tiling factor exceeds 2^{FACTOR_BITS}; MapKey cannot represent it"
+    );
+    m | n << FACTOR_BITS
+        | k << (2 * FACTOR_BITS)
+        | (dim_code(l.order[0]) << 2 | dim_code(l.order[1])) << (3 * FACTOR_BITS)
+}
+
+/// Packed, `Copy` cache key of a full [`Mapping`]: one `u64` per level
+/// (factors + order) plus one for the spatial unroll.  Replaces keying
+/// the memoized-counts cache by a cloned `Mapping` — lookups hash 9
+/// machine words instead of a heap `Vec` of structs, and inserts copy
+/// the key instead of cloning the mapping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MapKey {
+    levels: [u64; MAX_LEVELS],
+    spatial: u64,
+}
+
+/// Pack `mapping` into its cache key.  Panics if the mapping has more
+/// than [`MAX_LEVELS`] levels or any factor ≥ 2^20 (far beyond any
+/// realistic problem dim; [`EvalContext::new`] checks the dims once up
+/// front so the hot path never trips this).
+pub fn pack_key(mapping: &Mapping) -> MapKey {
+    assert!(mapping.levels.len() <= MAX_LEVELS);
+    let mut levels = [0u64; MAX_LEVELS];
+    for (slot, l) in levels.iter_mut().zip(&mapping.levels) {
+        *slot = pack_level(l);
+    }
+    let sp = &mapping.spatial;
+    assert!((sp.unroll_rows | sp.unroll_cols) <= FACTOR_MAX);
+    let spatial = sp.unroll_rows
+        | sp.unroll_cols << FACTOR_BITS
+        | dim_code(sp.dim_rows) << (2 * FACTOR_BITS)
+        | dim_code(sp.dim_cols) << (2 * FACTOR_BITS + 2);
+    MapKey { levels, spatial }
+}
 
 /// Per-operator evaluation context: the invariants every cost-model call
 /// shares (accelerator, problem dims, optimization metric) plus a
-/// memoized [`access_counts`] cache keyed by the full [`Mapping`]
+/// memoized [`access_counts`] cache keyed by the packed [`MapKey`]
 /// (tiling factors, loop orders and spatial unroll).
 ///
 /// The cache is sound because `access_counts` is a pure function of
@@ -256,12 +364,22 @@ pub struct EvalContext<'a> {
     pub arch: &'a Accelerator,
     pub p: ProblemDims,
     pub metric: Metric,
-    cache: HashMap<Mapping, AccessCounts>,
+    cache: HashMap<MapKey, AccessCounts>,
     stats: CacheStats,
 }
 
 impl<'a> EvalContext<'a> {
     pub fn new(arch: &'a Accelerator, p: ProblemDims, metric: Metric) -> Self {
+        assert!(
+            arch.levels.len() <= MAX_LEVELS,
+            "{} has {} memory levels; MAX_LEVELS is {MAX_LEVELS}",
+            arch.name,
+            arch.levels.len()
+        );
+        assert!(
+            (p.m | p.n | p.k) <= FACTOR_MAX,
+            "problem dims {p:?} exceed the 2^{FACTOR_BITS} MapKey factor range"
+        );
         EvalContext {
             arch,
             p,
@@ -287,7 +405,8 @@ impl<'a> EvalContext<'a> {
         reduction: &ReductionStrategy,
         ratios: &CompressionRatios,
     ) -> CostReport {
-        if let Some(ac) = self.cache.get(mapping) {
+        let key = pack_key(mapping);
+        if let Some(ac) = self.cache.get(&key) {
             self.stats.hits += 1;
             return evaluate_from_counts(self.arch, &self.p, mapping, spec, reduction, ratios, ac);
         }
@@ -297,7 +416,7 @@ impl<'a> EvalContext<'a> {
         }
         let ac = access_counts(mapping, &self.p);
         let r = evaluate_from_counts(self.arch, &self.p, mapping, spec, reduction, ratios, &ac);
-        self.cache.insert(mapping.clone(), ac);
+        self.cache.insert(key, ac);
         r
     }
 
@@ -312,6 +431,145 @@ impl<'a> EvalContext<'a> {
         let r = self.evaluate(mapping, spec, reduction, ratios);
         let v = self.metric.of(&r);
         (r, v)
+    }
+
+    /// Try all six loop orders for level `lvl` with every other level
+    /// fixed, leave the best one (first-wins on ties, matching the
+    /// historical sweep) set in `m`, and return its metric value.
+    ///
+    /// This is the **incremental order sweep**: boundary-`b` traffic
+    /// depends only on orders of levels ≤ `b` (see `docs/SEARCH.md`), so
+    /// the fill pass for each trial resumes from a [`FillState`]
+    /// snapshot taken after level `lvl - 1` instead of recounting the
+    /// whole nest.  Every trial still performs exactly one cache lookup
+    /// (and populates the cache on a miss), so `evaluations` and cache
+    /// semantics are unchanged versus six separate [`Self::value`]
+    /// calls, and a resumed count replays the identical f64 operation
+    /// sequence — bit-identical results.
+    pub fn sweep_level(
+        &mut self,
+        m: &mut Mapping,
+        lvl: usize,
+        spec: &SparsitySpec,
+        reduction: &ReductionStrategy,
+        ratios: &CompressionRatios,
+    ) -> f64 {
+        let nlevels = m.levels.len();
+        let tiles = tiles_of(m);
+        // Prefix over levels < lvl: orders there are fixed during this
+        // sweep, so state and fill rows are shared by all six trials.
+        let mut prefix_state = FillState::default();
+        let mut prefix_fills: InlineVec<[f64; 3], MAX_LEVELS> = InlineVec::new();
+        for b in 0..lvl {
+            prefix_state.advance(&m.levels[b]);
+            prefix_fills.push(prefix_state.row(tiles[b]));
+        }
+        let mut best: Option<([LoopDim; 3], f64)> = None;
+        for ord in crate::dataflow::mapper::ALL_ORDERS {
+            m.levels[lvl].order = ord;
+            let key = pack_key(m);
+            let r = if let Some(ac) = self.cache.get(&key) {
+                self.stats.hits += 1;
+                evaluate_from_counts(self.arch, &self.p, m, spec, reduction, ratios, ac)
+            } else {
+                self.stats.misses += 1;
+                if self.cache.len() >= EVAL_CACHE_CAP {
+                    self.cache.clear();
+                }
+                let mut ac = AccessCounts { fills: prefix_fills };
+                let mut state = prefix_state;
+                for b in lvl..nlevels {
+                    state.advance(&m.levels[b]);
+                    ac.fills.push(state.row(tiles[b]));
+                }
+                let r = evaluate_from_counts(self.arch, &self.p, m, spec, reduction, ratios, &ac);
+                self.cache.insert(key, ac);
+                r
+            };
+            let v = self.metric.of(&r);
+            if best.map(|(_, b)| v < b).unwrap_or(true) {
+                best = Some((ord, v));
+            }
+        }
+        let (ord, v) = best.unwrap();
+        m.levels[lvl].order = ord;
+        v
+    }
+
+    /// Order-independent **lower bound** on the context metric over all
+    /// loop-order assignments of the tiling proto described by
+    /// `(factors, tiles, spatial)` (a proto-arena row; `tiles[b]` =
+    /// `tile_at(b)`).
+    ///
+    /// Derivation: at boundary `b`, an operand's fill multiplier is the
+    /// product of all non-unit loop bounds down to its innermost
+    /// *relevant* loop in levels `0..=b` — which is at least the product
+    /// of the operand-relevant factors of those levels, whatever the
+    /// orders.  Everything order-independent in the cost model (MAC
+    /// energy, compute cycles, per-bit energies, footprints, ratios) is
+    /// applied exactly as in [`evaluate_from_counts`], with the same
+    /// operation association, so monotonicity of f64 rounding makes the
+    /// bound safe bit-for-bit: no achievable order evaluates below it.
+    /// The search may therefore skip the order sweep for any proto whose
+    /// bound already reaches the incumbent best without changing the
+    /// result (`docs/SEARCH.md` § pruning).
+    pub fn lower_bound(
+        &self,
+        factors: &[[u64; 3]],
+        tiles: &[[u64; 3]],
+        spatial: Spatial,
+        spec: &SparsitySpec,
+        reduction: &ReductionStrategy,
+        ratios: &CompressionRatios,
+    ) -> f64 {
+        let arch = self.arch;
+        let data_bits = arch.data_bits as f64;
+        let peak_macs = self.p.macs() as f64;
+        let mac_energy = peak_macs * reduction.energy_fraction(spec) * arch.mac.pj_per_mac;
+        let sp = (spatial.factor(LoopDim::M)
+            * spatial.factor(LoopDim::N)
+            * spatial.factor(LoopDim::K)) as f64;
+        let compute_cycles = peak_macs * reduction.cycle_fraction(spec) / sp;
+
+        let mut loads = [1.0f64; 3];
+        let mut mem_energy = 0.0f64;
+        let mut worst_mem_cycles = 0.0f64;
+        for (b, (f, t)) in factors.iter().zip(tiles).enumerate() {
+            for (oi, op) in Operand::ALL.iter().enumerate() {
+                let mut rel = 1.0f64;
+                for (di, d) in LoopDim::ALL.iter().enumerate() {
+                    if op.relevant(*d) {
+                        rel *= f[di] as f64;
+                    }
+                }
+                loads[oi] *= rel;
+            }
+            let [tm, tn, tk] = *t;
+            let mut bits = 0.0f64;
+            for (oi, op) in Operand::ALL.iter().enumerate() {
+                let psum = if *op == Operand::O { PSUM_RW } else { 1.0 };
+                // Same association order as the fills-based path: the
+                // (loads × footprint) product is formed first, exactly
+                // like an `AccessCounts` fill row.
+                let fill = loads[oi] * op.footprint(tm, tn, tk) as f64;
+                bits += fill * data_bits * ratios.get(*op) * psum;
+            }
+            let read_pj = arch.levels[b].read_pj_per_bit;
+            let write_pj = if b + 1 < arch.levels.len() {
+                arch.levels[b + 1].write_pj_per_bit
+            } else {
+                0.0
+            };
+            mem_energy += bits * (read_pj + write_pj);
+            let bw = arch.levels[b].bandwidth_bits_per_cycle;
+            worst_mem_cycles = worst_mem_cycles.max(bits / bw);
+        }
+        match self.metric {
+            Metric::Energy => mac_energy + mem_energy,
+            Metric::MemoryEnergy => mem_energy,
+            Metric::Latency => compute_cycles.max(worst_mem_cycles),
+            Metric::Edp => (mac_energy + mem_energy) * compute_cycles.max(worst_mem_cycles),
+        }
     }
 
     pub fn cache_stats(&self) -> CacheStats {
@@ -489,6 +747,147 @@ mod tests {
         let (r, v) = ctx.value(&mapping, &spec, &arch.reduction, &ratios);
         assert_eq!(v, Metric::Edp.of(&r));
         assert!(ctx.cache_stats().hit_rate() > 0.5);
+    }
+
+    #[test]
+    fn map_key_distinguishes_mappings() {
+        let (_, _, mapping) = toy_setup();
+        let base = pack_key(&mapping);
+        assert_eq!(base, pack_key(&mapping), "packing is not deterministic");
+
+        let mut factor = mapping.clone();
+        factor.levels[1].factors = [8, 2, 4];
+        assert_ne!(base, pack_key(&factor));
+
+        let mut order = mapping.clone();
+        order.levels[0].order = [LoopDim::K, LoopDim::N, LoopDim::M];
+        assert_ne!(base, pack_key(&order));
+
+        let mut spatial = mapping.clone();
+        spatial.spatial.unroll_rows = 2;
+        assert_ne!(base, pack_key(&spatial));
+
+        // All six orders of one level pack distinctly.
+        let keys: std::collections::HashSet<MapKey> = crate::dataflow::mapper::ALL_ORDERS
+            .iter()
+            .map(|&ord| {
+                let mut m = mapping.clone();
+                m.levels[0].order = ord;
+                pack_key(&m)
+            })
+            .collect();
+        assert_eq!(keys.len(), 6);
+
+        // Fewer levels (factors folded into one) ≠ more levels.
+        let shallow = Mapping {
+            levels: vec![TileLevel {
+                factors: [16, 64, 16],
+                order: [LoopDim::M, LoopDim::N, LoopDim::K],
+            }],
+            spatial: mapping.spatial,
+        };
+        assert_ne!(pack_key(&shallow), base);
+    }
+
+    #[test]
+    fn tiles_are_legal_matches_mapping_is_legal() {
+        let (arch, p, legal) = toy_setup();
+        let huge = Mapping {
+            levels: vec![
+                TileLevel { factors: [1, 1, 1], order: [LoopDim::M, LoopDim::N, LoopDim::K] },
+                TileLevel { factors: [1, 1, 1], order: [LoopDim::M, LoopDim::N, LoopDim::K] },
+                TileLevel { factors: [16, 64, 16], order: [LoopDim::M, LoopDim::N, LoopDim::K] },
+            ],
+            spatial: legal.spatial,
+        };
+        huge.validate(&p).unwrap();
+        for ratios in [
+            CompressionRatios::DENSE,
+            CompressionRatios { input: 0.3, weight: 0.6 },
+        ] {
+            for m in [&legal, &huge] {
+                let tiles = tiles_of(m);
+                assert_eq!(
+                    mapping_is_legal(&arch, m, &ratios),
+                    tiles_are_legal(&arch, &tiles, m.spatial, &ratios),
+                    "tile- and mapping-based legality disagree"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lower_bound_never_exceeds_any_order_assignment() {
+        use crate::dataflow::mapper::ALL_ORDERS;
+        let (arch, p, mapping) = toy_setup();
+        let spec = SparsitySpec::unstructured(0.5, 0.4);
+        let ratios = CompressionRatios { input: 0.6, weight: 0.8 };
+        let tiles = tiles_of(&mapping);
+        let factors: Vec<[u64; 3]> = mapping.levels.iter().map(|l| l.factors).collect();
+        for metric in [Metric::Energy, Metric::MemoryEnergy, Metric::Latency, Metric::Edp] {
+            let ctx = EvalContext::new(&arch, p, metric);
+            let lb = ctx.lower_bound(
+                &factors,
+                &tiles,
+                mapping.spatial,
+                &spec,
+                &arch.reduction,
+                &ratios,
+            );
+            assert!(lb > 0.0);
+            // Exhaustive over all 6^2 order combos of the two non-trivial
+            // levels (level 2 has one non-unit loop; include a couple of
+            // its orders anyway).
+            for o0 in ALL_ORDERS {
+                for o1 in ALL_ORDERS {
+                    for o2 in [ALL_ORDERS[0], ALL_ORDERS[5]] {
+                        let mut m = mapping.clone();
+                        m.levels[0].order = o0;
+                        m.levels[1].order = o1;
+                        m.levels[2].order = o2;
+                        let r = evaluate(&arch, &p, &m, &spec, &arch.reduction, &ratios);
+                        let v = metric.of(&r);
+                        assert!(
+                            lb <= v,
+                            "{metric:?}: bound {lb} exceeds achievable {v} at {m}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_level_matches_exhaustive_trials() {
+        use crate::dataflow::mapper::ALL_ORDERS;
+        let (arch, p, mapping) = toy_setup();
+        let spec = SparsitySpec::unstructured(0.4, 0.5);
+        let ratios = CompressionRatios { input: 0.7, weight: 0.5 };
+        for lvl in 0..mapping.levels.len() {
+            // Reference: six plain evaluations, first-wins on ties.
+            let mut want: Option<([LoopDim; 3], f64)> = None;
+            let mut ref_ctx = EvalContext::new(&arch, p, Metric::Edp);
+            for ord in ALL_ORDERS {
+                let mut m = mapping.clone();
+                m.levels[lvl].order = ord;
+                let (_, v) = ref_ctx.value(&m, &spec, &arch.reduction, &ratios);
+                if want.map(|(_, b)| v < b).unwrap_or(true) {
+                    want = Some((ord, v));
+                }
+            }
+            let (want_ord, want_v) = want.unwrap();
+
+            // Incremental sweep (fresh context: all misses) and a second
+            // pass (all hits) must both match bit for bit.
+            let mut ctx = EvalContext::new(&arch, p, Metric::Edp);
+            for _ in 0..2 {
+                let mut m = mapping.clone();
+                let v = ctx.sweep_level(&mut m, lvl, &spec, &arch.reduction, &ratios);
+                assert_eq!(m.levels[lvl].order, want_ord, "level {lvl}");
+                assert_eq!(v.to_bits(), want_v.to_bits(), "level {lvl}");
+            }
+            assert!(ctx.cache_stats().hits >= 6, "second sweep should hit the cache");
+        }
     }
 
     #[test]

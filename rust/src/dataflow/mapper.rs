@@ -32,10 +32,15 @@ impl Default for MapperConfig {
     }
 }
 
-/// All 6 permutations of (M, N, K).
-pub fn all_orders() -> Vec<[LoopDim; 3]> {
+/// The canonical loop order protos are enumerated with; loop ordering is
+/// assigned later by the search's order sweep.
+pub const CANONICAL_ORDER: [LoopDim; 3] = [LoopDim::M, LoopDim::N, LoopDim::K];
+
+/// All 6 permutations of (M, N, K) as a const table — the order sweep
+/// iterates this directly so the per-proto path never allocates.
+pub const ALL_ORDERS: [[LoopDim; 3]; 6] = {
     use LoopDim::*;
-    vec![
+    [
         [M, N, K],
         [M, K, N],
         [N, M, K],
@@ -43,6 +48,11 @@ pub fn all_orders() -> Vec<[LoopDim; 3]> {
         [K, M, N],
         [K, N, M],
     ]
+};
+
+/// All 6 permutations of (M, N, K).
+pub fn all_orders() -> Vec<[LoopDim; 3]> {
+    ALL_ORDERS.to_vec()
 }
 
 /// Candidate spatial unrollings for a problem on an array with the given
@@ -103,11 +113,224 @@ fn splits(total: u64, nlevels: usize) -> Vec<Vec<u64>> {
     all
 }
 
+/// The ratio-independent part of one op's proto enumeration, hoisted so
+/// it is computed **once per op**: the spatial candidates plus the
+/// per-level factor-split tables of every residual dim.  `for_each_proto`
+/// used to recompute `spatial_candidates` and three `splits` calls per
+/// spatial × per shard × per format pair; building an `OpEnumeration`
+/// up front and streaming from it removes that entirely.
+pub struct OpEnumeration {
+    pub nlevels: usize,
+    spatials: Vec<Spatial>,
+    /// Per spatial: indices into `split_tables` for the residual (m, n, k).
+    spatial_splits: Vec<[usize; 3]>,
+    /// Distinct split tables, deduplicated by residual value (many
+    /// spatial candidates share residuals).
+    split_tables: Vec<Vec<Vec<u64>>>,
+}
+
+impl OpEnumeration {
+    pub fn new(p: &ProblemDims, nlevels: usize, rows: u64, cols: u64, cfg: &MapperConfig) -> Self {
+        let spatials = spatial_candidates(p, rows, cols, cfg.min_spatial_utilization);
+        let mut split_tables: Vec<Vec<Vec<u64>>> = Vec::new();
+        let mut by_total: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+        let mut table_for = |total: u64| -> usize {
+            *by_total.entry(total).or_insert_with(|| {
+                split_tables.push(splits(total, nlevels));
+                split_tables.len() - 1
+            })
+        };
+        let spatial_splits = spatials
+            .iter()
+            .map(|sp| {
+                [
+                    table_for(p.m / sp.factor(LoopDim::M)),
+                    table_for(p.n / sp.factor(LoopDim::N)),
+                    table_for(p.k / sp.factor(LoopDim::K)),
+                ]
+            })
+            .collect();
+        OpEnumeration { nlevels, spatials, spatial_splits, split_tables }
+    }
+
+    pub fn spatials(&self) -> &[Spatial] {
+        &self.spatials
+    }
+
+    /// Stream the level-major factor table of every proto in the
+    /// deterministic enumeration order (spatials by utilization, splits
+    /// balanced-first).  `f` receives `(factors, spatial index)` and
+    /// returns whether it kept the proto; only kept protos count against
+    /// the per-spatial candidate budget, exactly as in the historical
+    /// `for_each_proto` semantics (the budget is split across spatial
+    /// configurations so a cap never starves all but the first one).
+    fn stream(&self, cfg: &MapperConfig, mut f: impl FnMut(&[[u64; 3]], u32) -> bool) {
+        let per_spatial = (cfg.max_candidates / self.spatials.len().max(1)).max(1) as u64;
+        let mut fbuf: Vec<[u64; 3]> = vec![[1; 3]; self.nlevels];
+        for (si, &[mi, ni, ki]) in self.spatial_splits.iter().enumerate() {
+            let mut local = 0u64;
+            'this_spatial: for ms in &self.split_tables[mi] {
+                for ns in &self.split_tables[ni] {
+                    for ks in &self.split_tables[ki] {
+                        for (lvl, slot) in fbuf.iter_mut().enumerate() {
+                            *slot = [ms[lvl], ns[lvl], ks[lvl]];
+                        }
+                        if f(&fbuf, si as u32) {
+                            local += 1;
+                            if local >= per_spatial {
+                                break 'this_spatial;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// A canonical-order scratch [`Mapping`] sized for this enumeration —
+    /// the one allocation a search shard makes before iterating an arena.
+    pub fn scratch_mapping(&self) -> Mapping {
+        scratch_mapping(self.nlevels, self.spatials[0])
+    }
+}
+
+/// Shared constructor of the canonical scratch mapping handed to
+/// `write_mapping`: unit factors, canonical orders, a placeholder
+/// spatial.  One definition so [`OpEnumeration`] and [`ProtoArena`]
+/// cannot drift apart.
+fn scratch_mapping(nlevels: usize, spatial: Spatial) -> Mapping {
+    Mapping {
+        levels: vec![TileLevel { factors: [1; 3], order: CANONICAL_ORDER }; nlevels],
+        spatial,
+    }
+}
+
+/// Flat structure-of-arrays table of one op's **legal** protos under one
+/// format pair's compression ratios: packed level-major factor triples,
+/// the per-level inner-tile dims (computed once, shared by legality, the
+/// metric lower bound and the order sweep), and a spatial index.
+///
+/// Built once per (op, format pair) and then iterated by index range
+/// from every search shard — replacing the old scheme where each shard
+/// replayed the entire enumeration and modulo-filtered proto ids.  The
+/// arena build is the only allocation site of the mapping search's inner
+/// loop; `write_mapping` fills a caller-owned scratch in place.
+#[derive(Default)]
+pub struct ProtoArena {
+    nlevels: usize,
+    spatials: Vec<Spatial>,
+    spatial_idx: Vec<u32>,
+    /// `factors[i * nlevels + b]` = level-`b` factor triple of proto `i`.
+    factors: Vec<[u64; 3]>,
+    /// Same layout: tile dims *inside* level `b` (`Mapping::tile_at(b)`).
+    tiles: Vec<[u64; 3]>,
+}
+
+impl ProtoArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Rebuild from `en`, keeping only protos whose `(tiles, spatial)`
+    /// pass `keep` — the §III-D2 compression-aware legality filter runs
+    /// here, before loop ordering, and filtered protos do not count
+    /// against the candidate budget.  Reuses this arena's allocations.
+    pub fn rebuild(
+        &mut self,
+        en: &OpEnumeration,
+        cfg: &MapperConfig,
+        mut keep: impl FnMut(&[[u64; 3]], Spatial) -> bool,
+    ) {
+        let n = en.nlevels;
+        self.nlevels = n;
+        self.spatials.clear();
+        self.spatials.extend_from_slice(&en.spatials);
+        self.spatial_idx.clear();
+        self.factors.clear();
+        self.tiles.clear();
+        let mut tbuf: Vec<[u64; 3]> = vec![[1; 3]; n];
+        en.stream(cfg, |factors, si| {
+            let sp = en.spatials[si as usize];
+            tbuf[n - 1] = [
+                sp.factor(LoopDim::M),
+                sp.factor(LoopDim::N),
+                sp.factor(LoopDim::K),
+            ];
+            // Factor triples share the (M, N, K) component order with
+            // tile triples, so the reverse pass is a plain product.
+            for b in (0..n - 1).rev() {
+                for i in 0..3 {
+                    tbuf[b][i] = tbuf[b + 1][i] * factors[b + 1][i];
+                }
+            }
+            if !keep(&tbuf, sp) {
+                return false;
+            }
+            self.factors.extend_from_slice(factors);
+            self.tiles.extend_from_slice(&tbuf);
+            self.spatial_idx.push(si);
+            true
+        });
+    }
+
+    /// Number of legal protos in the arena; proto ids are `0..len()`.
+    pub fn len(&self) -> usize {
+        self.spatial_idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spatial_idx.is_empty()
+    }
+
+    /// Level-major factor triples of proto `i`.
+    pub fn factors(&self, i: usize) -> &[[u64; 3]] {
+        &self.factors[i * self.nlevels..(i + 1) * self.nlevels]
+    }
+
+    /// Per-level inner-tile dims of proto `i` (`tiles(i)[b]` =
+    /// `tile_at(b)` of the materialized mapping).
+    pub fn tiles(&self, i: usize) -> &[[u64; 3]] {
+        &self.tiles[i * self.nlevels..(i + 1) * self.nlevels]
+    }
+
+    pub fn spatial(&self, i: usize) -> Spatial {
+        self.spatials[self.spatial_idx[i] as usize]
+    }
+
+    /// A canonical-order scratch [`Mapping`] sized for this arena (the
+    /// one allocation a search shard makes before iterating it).  The
+    /// arena must have been rebuilt from a non-degenerate enumeration.
+    pub fn scratch_mapping(&self) -> Mapping {
+        scratch_mapping(self.nlevels, self.spatials[0])
+    }
+
+    /// Materialize proto `i` into `out` (canonical loop orders), reusing
+    /// `out`'s level storage — no allocation when `out` already has the
+    /// right level count (see [`OpEnumeration::scratch_mapping`]).
+    pub fn write_mapping(&self, i: usize, out: &mut Mapping) {
+        if out.levels.len() != self.nlevels {
+            out.levels
+                .resize(self.nlevels, TileLevel { factors: [1; 3], order: CANONICAL_ORDER });
+        }
+        for (lvl, level) in out.levels.iter_mut().enumerate() {
+            level.factors = self.factors(i)[lvl];
+            level.order = CANONICAL_ORDER;
+        }
+        out.spatial = self.spatial(i);
+    }
+}
+
 /// Stream every tiling *proto* (canonical loop order) for `p` over
 /// `nlevels` memory levels to the visitor, without materializing the
 /// space.  Returns the number of protos visited.  The `keep` filter runs
 /// before the visitor — with a compressed-footprint legality check this
 /// is the §III-D2 compression-aware loop allocation.
+///
+/// The visitor is handed a reused scratch mapping; clone it to retain a
+/// proto beyond the callback.  The search no longer calls this (it
+/// builds a [`ProtoArena`] from an [`OpEnumeration`] instead); the
+/// streaming form remains for tests and one-shot tools and shares the
+/// same enumeration order by construction.
 pub fn for_each_proto<K, V>(
     p: &ProblemDims,
     nlevels: usize,
@@ -121,41 +344,22 @@ where
     K: FnMut(&Mapping) -> bool,
     V: FnMut(&Mapping),
 {
+    let en = OpEnumeration::new(p, nlevels, rows, cols, cfg);
+    let mut scratch = en.scratch_mapping();
     let mut visited = 0u64;
-    let spatials = spatial_candidates(p, rows, cols, cfg.min_spatial_utilization);
-    // Split the candidate budget across spatial configurations so a cap
-    // never starves all but the first one.
-    let per_spatial = (cfg.max_candidates / spatials.len()).max(1) as u64;
-    for sp in spatials {
-        let mut local = 0u64;
-        let rm = p.m / sp.factor(LoopDim::M);
-        let rn = p.n / sp.factor(LoopDim::N);
-        let rk = p.k / sp.factor(LoopDim::K);
-        'this_spatial: for ms in splits(rm, nlevels) {
-            for ns in splits(rn, nlevels) {
-                for ks in splits(rk, nlevels) {
-                    let proto = Mapping {
-                        levels: (0..nlevels)
-                            .map(|i| TileLevel {
-                                factors: [ms[i], ns[i], ks[i]],
-                                order: [LoopDim::M, LoopDim::N, LoopDim::K],
-                            })
-                            .collect(),
-                        spatial: sp,
-                    };
-                    if !keep(&proto) {
-                        continue;
-                    }
-                    visit(&proto);
-                    visited += 1;
-                    local += 1;
-                    if local >= per_spatial {
-                        break 'this_spatial;
-                    }
-                }
-            }
+    en.stream(cfg, |factors, si| {
+        for (lvl, level) in scratch.levels.iter_mut().enumerate() {
+            level.factors = factors[lvl];
+            level.order = CANONICAL_ORDER;
         }
-    }
+        scratch.spatial = en.spatials[si as usize];
+        if !keep(&scratch) {
+            return false;
+        }
+        visit(&scratch);
+        visited += 1;
+        true
+    });
     visited
 }
 
@@ -296,6 +500,68 @@ mod tests {
         let cfg = MapperConfig { max_candidates: 100, ..Default::default() };
         let maps = enumerate_mappings(&p, 2, 8, 8, &cfg, |_| true);
         assert!(maps.len() <= 100);
+    }
+
+    #[test]
+    fn arena_matches_streaming_enumeration() {
+        let p = ProblemDims::new(16, 16, 16);
+        let cfg = MapperConfig::default();
+        let mut streamed: Vec<Mapping> = Vec::new();
+        for_each_proto(&p, 2, 4, 4, &cfg, |_| true, |m| streamed.push(m.clone()));
+
+        let en = OpEnumeration::new(&p, 2, 4, 4, &cfg);
+        let mut arena = ProtoArena::new();
+        arena.rebuild(&en, &cfg, |_, _| true);
+        assert_eq!(arena.len(), streamed.len());
+        let mut scratch = en.scratch_mapping();
+        for (i, want) in streamed.iter().enumerate() {
+            arena.write_mapping(i, &mut scratch);
+            assert_eq!(&scratch, want, "proto {i} diverged");
+            scratch.validate(&p).unwrap();
+        }
+    }
+
+    #[test]
+    fn arena_tiles_match_tile_at() {
+        let p = ProblemDims::new(32, 16, 8);
+        let cfg = MapperConfig::default();
+        let en = OpEnumeration::new(&p, 3, 4, 4, &cfg);
+        let mut arena = ProtoArena::new();
+        arena.rebuild(&en, &cfg, |_, _| true);
+        assert!(!arena.is_empty());
+        let mut scratch = en.scratch_mapping();
+        for i in [0, arena.len() / 2, arena.len() - 1] {
+            arena.write_mapping(i, &mut scratch);
+            for (b, t) in arena.tiles(i).iter().enumerate() {
+                let (tm, tn, tk) = scratch.tile_at(b);
+                assert_eq!(*t, [tm, tn, tk], "proto {i} level {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn arena_budget_and_filter() {
+        let p = ProblemDims::new(64, 64, 64);
+        let cfg = MapperConfig { max_candidates: 50, ..Default::default() };
+        let en = OpEnumeration::new(&p, 2, 8, 8, &cfg);
+        let mut arena = ProtoArena::new();
+        arena.rebuild(&en, &cfg, |_, _| true);
+        let unfiltered = arena.len();
+        assert!(unfiltered > 0);
+        // The per-spatial budget bounds the total: at most
+        // max(cap / nspatials, 1) per spatial configuration.
+        let per_spatial = (cfg.max_candidates / en.spatials().len().max(1)).max(1);
+        assert!(unfiltered <= per_spatial * en.spatials().len());
+
+        // A legality filter shrinks the table, and rejected protos do
+        // not count against the budget (filtered build still finds
+        // protos even when the first candidates fail).
+        arena.rebuild(&en, &cfg, |tiles, _| {
+            let [tm, tn, tk] = tiles[0];
+            tm * tn + tn * tk + tm * tk <= 512
+        });
+        assert!(arena.len() < unfiltered, "filter had no effect");
+        assert!(!arena.is_empty());
     }
 
     #[test]

@@ -15,7 +15,14 @@
 pub mod mapper;
 pub mod nest;
 
+use crate::util::inline::InlineVec;
 use std::fmt;
+
+/// Hard cap on mapping/memory levels.  Real hierarchies have 2–4; the
+/// cap lets [`AccessCounts`] (and `cost::CostReport`) keep their
+/// per-level rows in fixed inline storage, making the per-proto
+/// evaluation path allocation-free.
+pub const MAX_LEVELS: usize = 8;
 
 /// MatMul problem dims: `O[M][K] = Σ_N I[M][N] × W[N][K]`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -100,7 +107,7 @@ impl Operand {
 
 /// Per-memory-level temporal tiling: the factor by which each dim is
 /// split at this level, plus the loop order (outermost first).
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct TileLevel {
     pub factors: [u64; 3], // indexed by LoopDim order M, N, K
     pub order: [LoopDim; 3],
@@ -143,9 +150,10 @@ impl Spatial {
 /// level first, same order as `Accelerator::levels`) plus the spatial
 /// unrolling at the array.  The innermost implicit level is a single MAC.
 ///
-/// `Eq + Hash` (all fields are integers/enums) lets a mapping serve as
-/// the key of the memoized `access_counts` cache in
-/// [`crate::cost::EvalContext`].
+/// The memoized `access_counts` cache in [`crate::cost::EvalContext`]
+/// does **not** key on this struct (hashing the `Vec` and cloning it on
+/// insert was a measurable cost): it packs the same information into a
+/// `Copy` [`crate::cost::MapKey`] instead.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct Mapping {
     pub levels: Vec<TileLevel>,
@@ -220,13 +228,91 @@ impl fmt::Display for Mapping {
 
 /// Per-operand, per-level fill counts (elements moved INTO each level from
 /// the level above, per whole-problem execution).
-#[derive(Clone, Debug)]
+///
+/// Inline storage ([`MAX_LEVELS`] rows, `Copy`): computing, caching and
+/// copying access counts never touches the heap.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct AccessCounts {
     /// `fills[lvl][operand]` in elements; `lvl` indexes on-chip levels of
     /// the mapping (0 = the outermost *bounded* level receiving from
     /// DRAM... see `cost::evaluate` for how this maps onto an
     /// `Accelerator`). Length = number of mapping levels.
-    pub fills: Vec<[f64; 3]>,
+    pub fills: InlineVec<[f64; 3], MAX_LEVELS>,
+}
+
+/// Tile dims held inside each mapping level, outermost first:
+/// `tiles_of(m)[b] == m.tile_at(b)` for every level, computed in one
+/// reverse pass (tile at `b` = tile at `b+1` scaled by level `b+1`'s
+/// factors; innermost = spatial tile).  These depend only on the tiling
+/// factors — never on loop orders — so the order sweep and the proto
+/// arena compute them once per proto.
+pub fn tiles_of(mapping: &Mapping) -> InlineVec<[u64; 3], MAX_LEVELS> {
+    let nlevels = mapping.levels.len();
+    assert!(nlevels >= 1 && nlevels <= MAX_LEVELS, "mapping has {nlevels} levels");
+    let mut tiles: InlineVec<[u64; 3], MAX_LEVELS> = InlineVec::new();
+    for _ in 0..nlevels {
+        tiles.push([1u64; 3]);
+    }
+    tiles[nlevels - 1] = [
+        mapping.spatial.factor(LoopDim::M),
+        mapping.spatial.factor(LoopDim::N),
+        mapping.spatial.factor(LoopDim::K),
+    ];
+    for b in (0..nlevels - 1).rev() {
+        for (i, d) in LoopDim::ALL.iter().enumerate() {
+            tiles[b][i] = tiles[b + 1][i] * mapping.levels[b + 1].factor(*d);
+        }
+    }
+    tiles
+}
+
+/// Running state of the outermost→innermost fill-counting pass: `prod`
+/// is the product of all non-unit loop bounds seen so far, `loads[op]`
+/// the product up to the innermost *relevant non-unit* loop so far (the
+/// trailing-irrelevant reuse rule).
+///
+/// Public (to the crate's cost model) because the state after level
+/// `b` depends only on levels `0..=b`: `cost::EvalContext` snapshots it
+/// to re-evaluate order changes at level `lvl` without recounting the
+/// untouched prefix — the incremental order sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct FillState {
+    pub prod: f64,
+    pub loads: [f64; 3],
+}
+
+impl Default for FillState {
+    fn default() -> Self {
+        FillState { prod: 1.0, loads: [1.0; 3] }
+    }
+}
+
+impl FillState {
+    /// Fold one level's loops (in its order) into the running state.
+    pub fn advance(&mut self, level: &TileLevel) {
+        for d in level.order {
+            let bound = level.factor(d) as f64;
+            if bound > 1.0 {
+                self.prod *= bound;
+                for (oi, op) in Operand::ALL.iter().enumerate() {
+                    if op.relevant(d) {
+                        self.loads[oi] = self.prod;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fill row for the boundary whose inner tile is `tile`, given the
+    /// state after that boundary's loops.
+    pub fn row(&self, tile: [u64; 3]) -> [f64; 3] {
+        let [tm, tn, tk] = tile;
+        let mut row = [0f64; 3];
+        for (oi, op) in Operand::ALL.iter().enumerate() {
+            row[oi] = self.loads[oi] * op.footprint(tm, tn, tk) as f64;
+        }
+        row
+    }
 }
 
 /// Exact single-tile-buffer fill counting via the trailing-irrelevant
@@ -244,49 +330,16 @@ pub struct AccessCounts {
 /// with `tile_at(levels.len()-1)` being the spatial/MAC tile.
 pub fn access_counts(mapping: &Mapping, p: &ProblemDims) -> AccessCounts {
     debug_assert!(mapping.validate(p).is_ok());
-    let nlevels = mapping.levels.len();
+    let tiles = tiles_of(mapping);
 
-    // Tiles inside each level, computed in one reverse pass (tile at b =
-    // tile at b+1 scaled by level b+1's factors; innermost = spatial).
-    let mut tiles = vec![[1u64; 3]; nlevels];
-    let spatial = [
-        mapping.spatial.factor(LoopDim::M),
-        mapping.spatial.factor(LoopDim::N),
-        mapping.spatial.factor(LoopDim::K),
-    ];
-    tiles[nlevels - 1] = spatial;
-    for b in (0..nlevels - 1).rev() {
-        for (i, d) in LoopDim::ALL.iter().enumerate() {
-            tiles[b][i] = tiles[b + 1][i] * mapping.levels[b + 1].factor(*d);
-        }
-    }
-
-    // Single outermost→innermost pass: `prod` is the product of all loop
-    // bounds seen so far; `loads[op]` is the product up to the innermost
-    // *relevant non-unit* loop so far (the trailing-irrelevant reuse
-    // rule, exact under single-tile buffering — validated against the
-    // brute-force nest simulator).
-    let mut fills = Vec::with_capacity(nlevels);
-    let mut prod = 1.0f64;
-    let mut loads = [1.0f64; 3];
+    // Single outermost→innermost [`FillState`] pass: exact under
+    // single-tile buffering — validated against the brute-force nest
+    // simulator in `rust/tests/properties.rs`.
+    let mut fills: InlineVec<[f64; 3], MAX_LEVELS> = InlineVec::new();
+    let mut state = FillState::default();
     for (b, level) in mapping.levels.iter().enumerate() {
-        for d in level.order {
-            let bound = level.factor(d) as f64;
-            if bound > 1.0 {
-                prod *= bound;
-                for (oi, op) in Operand::ALL.iter().enumerate() {
-                    if op.relevant(d) {
-                        loads[oi] = prod;
-                    }
-                }
-            }
-        }
-        let [tm, tn, tk] = tiles[b];
-        let mut row = [0f64; 3];
-        for (oi, op) in Operand::ALL.iter().enumerate() {
-            row[oi] = loads[oi] * op.footprint(tm, tn, tk) as f64;
-        }
-        fills.push(row);
+        state.advance(level);
+        fills.push(state.row(tiles[b]));
     }
     AccessCounts { fills }
 }
@@ -329,6 +382,18 @@ mod tests {
         assert_eq!(m.tile_at(0), (4, 4, 4));
         // tile_at(last) = spatial-only tile.
         assert_eq!(m.tile_at(1), (1, 1, 1));
+    }
+
+    #[test]
+    fn tiles_of_matches_tile_at() {
+        let (m, p) = simple_mapping();
+        m.validate(&p).unwrap();
+        let tiles = tiles_of(&m);
+        assert_eq!(tiles.len(), m.levels.len());
+        for (b, t) in tiles.iter().enumerate() {
+            let (tm, tn, tk) = m.tile_at(b);
+            assert_eq!(*t, [tm, tn, tk], "level {b}");
+        }
     }
 
     #[test]

@@ -54,11 +54,11 @@ pub fn simulate_fills(mapping: &Mapping, p: &ProblemDims) -> Vec<[f64; 3]> {
             if pos == 0 {
                 // Done: convert loads to element fills.
                 let mut out = Vec::with_capacity(nlevels);
-                for b in 0..nlevels {
+                for (b, lb) in loads.iter().enumerate() {
                     let (tm, tn, tk) = mapping.tile_at(b);
                     let mut row = [0f64; 3];
                     for (oi, op) in Operand::ALL.iter().enumerate() {
-                        row[oi] = loads[b][oi] as f64 * op.footprint(tm, tn, tk) as f64;
+                        row[oi] = lb[oi] as f64 * op.footprint(tm, tn, tk) as f64;
                     }
                     out.push(row);
                 }

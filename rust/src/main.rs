@@ -23,8 +23,10 @@ fn usage() -> ! {
          USAGE:\n\
            snipsnap search   [--config F.toml] [--arch A] [--workload W]\n\
                              [--metric M] [--mode search|fixed] [--max-mappings N]\n\
-                             [--threads N]  (0 = all cores; results are\n\
+                             [--threads N]  (0 = all cores; designs are\n\
                              bit-identical for any thread count)\n\
+                             [--prune on|off]  (branch-and-bound pruning;\n\
+                             identical results either way, default on)\n\
                              workload modifiers (transformer presets only):\n\
                              [--prefill N] [--decode N] [--batch B]\n\
                              [--kv-density D] [--nm N:M]\n\
@@ -124,6 +126,13 @@ fn cmd_search(args: &Args) -> Result<()> {
     if let Some(t) = args.get_u64("threads")? {
         cfg.threads = t as usize;
     }
+    if let Some(p) = args.get("prune") {
+        cfg.prune = match p {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            other => bail!("--prune takes on|off, got '{other}'"),
+        };
+    }
 
     eprintln!("arch: {}", arch.name);
     eprintln!("workload: {} ({} ops)", workload.name, workload.op_count());
@@ -164,6 +173,12 @@ fn cmd_search(args: &Args) -> Result<()> {
         r.cache.hits,
         r.cache.misses,
         100.0 * r.cache.hit_rate(),
+    );
+    println!(
+        "enumeration: {} legal protos, {} pruned by lower bound ({:.1}%)",
+        r.protos,
+        r.pruned,
+        100.0 * r.prune_rate(),
     );
     Ok(())
 }

@@ -18,21 +18,28 @@
 //!    boundary-`b` traffic is independent of deeper levels' orders, so
 //!    the greedy pass is locally exact per boundary.
 //!
-//! # Parallel execution and memoized evaluation
+//! # Parallel execution, memoized evaluation and pruning
 //!
-//! The per-op searches are independent, so [`cosearch_workload`] shards
+//! Per (op, format pair), the legal protos are built **once** into a
+//! flat [`ProtoArena`](crate::dataflow::mapper::ProtoArena) (packed
+//! factor triples + precomputed tiles; the ratio-independent
+//! enumeration tables are hoisted per op into an
+//! [`OpEnumeration`](crate::dataflow::mapper::OpEnumeration)).  The
+//! per-op searches are independent, so [`cosearch_workload`] shards
 //! operators across a scoped worker pool ([`crate::util::pool`]); when
-//! [`SearchConfig::threads`] exceeds the operator count, the
-//! [`for_each_proto`](crate::dataflow::mapper::for_each_proto)
-//! enumeration *within* an op is sharded too.  Partial bests are merged
-//! by a total order on `(metric value, proto id)`, which makes results
-//! **bit-identical** to the serial path for any thread count — the
-//! contract, and why it holds, is documented in `docs/SEARCH.md`.
+//! [`SearchConfig::threads`] exceeds the operator count, the arena is
+//! sharded by index range *within* an op too.  Partial bests are merged
+//! by a total order on `(metric value, proto id)`, which makes designs
+//! and scores **bit-identical** to the serial path for any thread count
+//! — the contract, and why it holds, is documented in `docs/SEARCH.md`.
 //! Every worker owns a private [`EvalContext`](crate::cost::EvalContext)
 //! that memoizes `access_counts` per (tiling, order) proto across
 //! candidate format/ratio pairs; aggregated
 //! [`CacheStats`](crate::cost::CacheStats) land in
-//! [`WorkloadResult::cache`].
+//! [`WorkloadResult::cache`].  With [`SearchConfig::prune`] on
+//! (default), protos whose order-independent metric lower bound already
+//! reaches the incumbent shard best skip the order sweep entirely —
+//! provably-worse candidates only, so results are unchanged.
 //!
 //! Contrast with the Sparseloop-style stepwise workflow in
 //! [`crate::baselines::sparseloop_like`].
@@ -51,14 +58,22 @@ pub use progressive::{
 };
 
 /// Per-search telemetry: logical cost-model evaluations plus the
-/// hit/miss counters of the memoized `access_counts` cache.  Hits still
+/// hit/miss counters of the memoized `access_counts` cache, and the
+/// enumeration-side counters of the branch-and-bound pass.  Hits still
 /// count as evaluations (the exploration-effort metric is unchanged by
 /// caching); the cache counters measure how much recomputation the
-/// memoization removed.
+/// memoization removed; `protos`/`pruned` measure how much of the legal
+/// proto space the lower bound let the search skip entirely.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SearchTelemetry {
     pub evaluations: u64,
     pub cache: CacheStats,
+    /// Legal protos considered by the mapping search (arena rows
+    /// iterated, across all format pairs).
+    pub protos: u64,
+    /// Protos whose order sweep was skipped because their metric lower
+    /// bound already reached the incumbent best.
+    pub pruned: u64,
 }
 
 impl SearchTelemetry {
@@ -71,6 +86,8 @@ impl SearchTelemetry {
     pub fn merge(&mut self, other: SearchTelemetry) {
         self.evaluations += other.evaluations;
         self.cache.merge(other.cache);
+        self.protos += other.protos;
+        self.pruned += other.pruned;
     }
 }
 
@@ -96,9 +113,18 @@ pub struct SearchConfig {
     /// Worker threads for the parallel co-search: operators shard across
     /// threads, and when threads exceed the operator count the proto
     /// enumeration within an operator is sharded too.  `1` (the default)
-    /// runs fully serial; `0` uses all available cores.  Results are
-    /// bit-identical for any value (see docs/SEARCH.md).
+    /// runs fully serial; `0` uses all available cores.  Designs and
+    /// scores are bit-identical for any value (see docs/SEARCH.md).
     pub threads: usize,
+    /// Branch-and-bound pruning of the mapping search: protos whose
+    /// order-independent metric lower bound
+    /// ([`EvalContext::lower_bound`]) already reaches the incumbent best
+    /// skip the order sweep.  Only provably-worse candidates are
+    /// skipped, so designs and scores are bit-identical with pruning on
+    /// or off (and at any thread count); the telemetry counters
+    /// (`evaluations`, cache and prune stats) do depend on this flag and
+    /// — when pruning is on — on the shard count.  Default `true`.
+    pub prune: bool,
 }
 
 impl Default for SearchConfig {
@@ -113,6 +139,7 @@ impl Default for SearchConfig {
             },
             pairs_to_map: 2,
             threads: 1,
+            prune: true,
         }
     }
 }
@@ -136,10 +163,17 @@ pub struct WorkloadResult {
     pub designs: Vec<OpDesign>,
     pub elapsed: Duration,
     /// Cost-model evaluations performed (the exploration-effort metric;
-    /// cache hits included, so the count is thread- and cache-invariant).
+    /// cache hits included).  With pruning disabled the count is thread-
+    /// and cache-invariant; with pruning on it depends on the shard
+    /// count (each shard prunes against its own incumbent), while the
+    /// designs and scores stay bit-identical either way.
     pub evaluations: u64,
     /// Aggregated `access_counts` cache hit/miss counters.
     pub cache: CacheStats,
+    /// Legal protos considered across all ops and format pairs.
+    pub protos: u64,
+    /// Protos skipped by the branch-and-bound lower bound.
+    pub pruned: u64,
 }
 
 impl WorkloadResult {
@@ -170,6 +204,17 @@ impl WorkloadResult {
     /// Total EDP.
     pub fn edp(&self) -> f64 {
         self.total_energy_pj() * self.total_cycles()
+    }
+
+    /// Fraction of considered protos the lower bound pruned (0.0 when
+    /// none were enumerated) — the CLI `enumeration:` line and
+    /// `perf_probe` report this.
+    pub fn prune_rate(&self) -> f64 {
+        if self.protos == 0 {
+            0.0
+        } else {
+            self.pruned as f64 / self.protos as f64
+        }
     }
 
     pub fn metric_total(&self, metric: Metric) -> f64 {

@@ -1,22 +1,29 @@
 //! Core of the progressive co-search (see module docs in [`super`]).
 //!
-//! The hot path is parallel and memoized: operators shard across a
-//! scoped worker pool, the proto enumeration within an operator shards
-//! across threads with a deterministic `(metric value, proto id)`
-//! reduction, and every worker evaluates through a private
-//! [`EvalContext`] that caches `access_counts` per (tiling, order)
-//! proto across candidate format pairs.  `docs/SEARCH.md` walks the
+//! The hot path is parallel, memoized, arena-backed and pruned:
+//! operators shard across a scoped worker pool; per (op, format pair)
+//! the legal protos are built once into a flat [`ProtoArena`] (from the
+//! per-op hoisted [`OpEnumeration`]) which the proto-level shards then
+//! iterate by index with a deterministic `(metric value, proto id)`
+//! reduction; every worker evaluates through a private [`EvalContext`]
+//! that caches `access_counts` per (tiling, order) proto across
+//! candidate format pairs; and with [`SearchConfig::prune`] on, protos
+//! whose order-independent lower bound cannot beat the incumbent skip
+//! the order sweep.  The per-proto visitor path performs no heap
+//! allocation and no `Mapping` clone (shards reuse a scratch mapping;
+//! new bests `clone_from` into place).  `docs/SEARCH.md` walks the
 //! whole pipeline and states the determinism contract.
 
 use super::{FormatMode, OpDesign, SearchConfig, SearchTelemetry, WorkloadResult};
 use crate::arch::Accelerator;
-use crate::cost::{mapping_is_legal, CompressionRatios, CostReport, EvalContext};
-use crate::dataflow::mapper::{all_orders, for_each_proto};
-use crate::dataflow::{LoopDim, Mapping, ProblemDims};
+use crate::cost::{mapping_is_legal, tiles_are_legal, CompressionRatios, CostReport, EvalContext};
+use crate::dataflow::mapper::{MapperConfig, OpEnumeration, ProtoArena};
+use crate::dataflow::{tiles_of, Mapping, ProblemDims, MAX_LEVELS};
 use crate::engine::allocate::TileHints;
 use crate::engine::{search_formats, ScoredFormat};
 use crate::format::{named, Format};
 use crate::sparsity::{SparsityPattern, SparsitySpec};
+use crate::util::inline::InlineVec;
 use crate::util::pool;
 use crate::workload::{MatMulOp, Workload};
 use std::time::Instant;
@@ -104,6 +111,24 @@ fn format_pairs(
     }
 }
 
+/// Hoisted enumeration tables for one op's dims on `arch` — the single
+/// definition of the op→enumeration wiring, shared by the progressive
+/// search, the fixed-format evaluator and the stepwise baseline so all
+/// three walk the same proto space.
+pub(crate) fn op_enumeration(
+    arch: &Accelerator,
+    dims: &ProblemDims,
+    mapper: &MapperConfig,
+) -> OpEnumeration {
+    OpEnumeration::new(
+        dims,
+        arch.levels.len(),
+        arch.mac.spatial_rows,
+        arch.mac.spatial_cols,
+        mapper,
+    )
+}
+
 /// Compression ratios of a format pair for an op.
 fn pair_ratios(
     fi: &ScoredFormat,
@@ -113,44 +138,37 @@ fn pair_ratios(
     CompressionRatios { input: fi.cost.ratio().min(1.0), weight: fw.cost.ratio().min(1.0) }
 }
 
-/// Per-level loop ordering via coordinate descent: sweep the levels
-/// (outermost first), picking for each the order minimizing the metric
-/// with the others fixed; repeat until a sweep brings no improvement
-/// (≤3 sweeps in practice).  Boundary-b traffic depends only on orders of
-/// levels ≤ b, so the first sweep is already locally exact per boundary;
-/// later sweeps catch cross-boundary interactions that a single greedy
-/// pass misses — at ~2x the evaluations of one pass, still an order of
-/// magnitude below exhaustive 6^L expansion.  The sweep revisits the
-/// same (tiling, order) points repeatedly, which is exactly what the
-/// context's `access_counts` cache absorbs.
+/// Per-level loop ordering via coordinate descent **in place**: sweep
+/// the levels (outermost first), picking for each the order minimizing
+/// the metric with the others fixed; repeat until a sweep brings no
+/// improvement (≤3 sweeps in practice).  Boundary-b traffic depends only
+/// on orders of levels ≤ b, so the first sweep is already locally exact
+/// per boundary; later sweeps catch cross-boundary interactions that a
+/// single greedy pass misses — at ~2x the evaluations of one pass, still
+/// an order of magnitude below exhaustive 6^L expansion.  The per-level
+/// trials run through [`EvalContext::sweep_level`], which resumes the
+/// fill pass from the untouched level prefix and absorbs re-trials in
+/// the `access_counts` cache.  `m` is left holding the chosen orders.
 fn choose_orders_greedy(
-    proto: &Mapping,
+    m: &mut Mapping,
     ctx: &mut EvalContext<'_>,
     spec: &SparsitySpec,
     ratios: &CompressionRatios,
-) -> (Mapping, CostReport) {
+) -> CostReport {
     let arch = ctx.arch;
-    let mut m = proto.clone();
-    let orders = all_orders();
+    // Levels with <= 1 non-unit loop need no sweep (order irrelevant);
+    // the set depends only on the factors, which the sweep never moves.
+    let mut sweep_lvls: InlineVec<usize, MAX_LEVELS> = InlineVec::new();
+    for (lvl, level) in m.levels.iter().enumerate() {
+        if level.factors.iter().filter(|&&f| f > 1).count() > 1 {
+            sweep_lvls.push(lvl);
+        }
+    }
     let mut current = f64::INFINITY;
     for _sweep in 0..3 {
         let mut improved = false;
-        for lvl in 0..m.levels.len() {
-            // Skip levels with <= 1 non-unit loop: order irrelevant.
-            let nontrivial = m.levels[lvl].factors.iter().filter(|&&f| f > 1).count();
-            if nontrivial <= 1 {
-                continue;
-            }
-            let mut best: Option<([LoopDim; 3], f64)> = None;
-            for &ord in &orders {
-                m.levels[lvl].order = ord;
-                let (_, v) = ctx.value(&m, spec, &arch.reduction, ratios);
-                if best.map(|(_, b)| v < b).unwrap_or(true) {
-                    best = Some((ord, v));
-                }
-            }
-            let (ord, v) = best.unwrap();
-            m.levels[lvl].order = ord;
+        for &lvl in &sweep_lvls {
+            let v = ctx.sweep_level(m, lvl, spec, &arch.reduction, ratios);
             if v < current - 1e-12 {
                 current = v;
                 improved = true;
@@ -160,8 +178,7 @@ fn choose_orders_greedy(
             break;
         }
     }
-    let r = ctx.evaluate(&m, spec, &arch.reduction, ratios);
-    (m, r)
+    ctx.evaluate(m, spec, &arch.reduction, ratios)
 }
 
 /// Tile refinement: bounded hill climbing from the enumeration's best
@@ -169,12 +186,16 @@ fn choose_orders_greedy(
 /// dim.  Catches optima the capped divisor enumeration truncates away on
 /// divisor-rich (CNN im2col) problem dims; each accepted move re-runs the
 /// order sweep.  Runs serially after the sharded enumeration has been
-/// reduced, so it never affects the determinism contract.
+/// reduced, so it never affects the determinism contract; with `prune`
+/// on, moves whose lower bound cannot strictly beat the incumbent skip
+/// their sweep — refinement accepts strict improvements only, so the
+/// outcome is unchanged.
 fn refine_tiles(
     best: (Mapping, CostReport, f64),
     ctx: &mut EvalContext<'_>,
     spec: &SparsitySpec,
     ratios: &CompressionRatios,
+    prune: bool,
 ) -> (Mapping, CostReport, f64) {
     let arch = ctx.arch;
     let (mut mapping, mut report, mut value) = best;
@@ -182,13 +203,19 @@ fn refine_tiles(
         let mut improved = false;
         let n = mapping.levels.len();
         'moves: for di in 0..3 {
-            for a in 0..n {
+            // Snapshot this dim's factors: `mapping` is only reassigned
+            // on acceptance, which immediately moves to the next dim.
+            let mut fdi: InlineVec<u64, MAX_LEVELS> = InlineVec::new();
+            for l in &mapping.levels {
+                fdi.push(l.factors[di]);
+            }
+            for (a, &fa) in fdi.iter().enumerate() {
                 for b in 0..n {
                     if a == b {
                         continue;
                     }
                     for step in [2u64, 3, 5, 7] {
-                        if mapping.levels[a].factors[di] % step != 0 {
+                        if fa % step != 0 {
                             continue;
                         }
                         let mut cand = mapping.clone();
@@ -197,10 +224,28 @@ fn refine_tiles(
                         if !mapping_is_legal(arch, &cand, ratios) {
                             continue;
                         }
-                        let (m2, r2) = choose_orders_greedy(&cand, ctx, spec, ratios);
+                        if prune {
+                            let tiles = tiles_of(&cand);
+                            let mut factors: InlineVec<[u64; 3], MAX_LEVELS> = InlineVec::new();
+                            for l in &cand.levels {
+                                factors.push(l.factors);
+                            }
+                            let lb = ctx.lower_bound(
+                                &factors,
+                                &tiles,
+                                cand.spatial,
+                                spec,
+                                &arch.reduction,
+                                ratios,
+                            );
+                            if lb >= value {
+                                continue;
+                            }
+                        }
+                        let r2 = choose_orders_greedy(&mut cand, ctx, spec, ratios);
                         let v2 = ctx.metric.of(&r2);
                         if v2 < value {
-                            mapping = m2;
+                            mapping = cand;
                             report = r2;
                             value = v2;
                             improved = true;
@@ -217,9 +262,9 @@ fn refine_tiles(
     (mapping, report, value)
 }
 
-/// One shard's best over the proto enumeration: the metric value, the
-/// proto's position in the (deterministic) enumeration order, and the
-/// ordered mapping with its report.
+/// One shard's best over the proto arena: the metric value, the proto's
+/// arena id (the deterministic enumeration order), and the ordered
+/// mapping with its report.
 struct PairBest {
     value: f64,
     proto_id: u64,
@@ -227,66 +272,110 @@ struct PairBest {
     report: CostReport,
 }
 
-/// Run the proto enumeration for one (op, format pair), processing only
-/// protos with `id % nshards == shard`.  Every shard replays the *full*
-/// enumeration and legality filter, so proto ids and the candidate
-/// budget are identical across shards — only the expensive order sweep
-/// is divided.  In-shard ties keep the earliest proto (strict `<`).
+/// One shard's outcome: the partial best plus the enumeration counters
+/// feeding [`SearchTelemetry`].
+struct ShardOutcome {
+    best: Option<PairBest>,
+    protos: u64,
+    pruned: u64,
+}
+
+/// Run the mapping search over one shard's slice of the prebuilt proto
+/// arena: indices congruent to `shard` mod `nshards` (a balanced
+/// interleave; ids are arena-global, so the reduction is partition-
+/// independent).  The per-proto loop is allocation-free: the shard owns
+/// one scratch mapping the arena writes into, the order sweep mutates it
+/// in place, and a new best `clone_from`s it (reusing the incumbent's
+/// storage).  In-shard ties keep the earliest proto (strict `<`).
+///
+/// With `cfg.prune` on, a proto whose order-independent lower bound
+/// already reaches the shard's incumbent value is skipped before the
+/// sweep.  Any value it could achieve is ≥ that bound, and an equal
+/// value would lose the `(value, proto id)` tie-break to the earlier
+/// incumbent anyway, so pruning can never change the reduced result —
+/// only the evaluation counters.
 fn search_pair_shard(
     shard: usize,
     nshards: usize,
     ctx: &mut EvalContext<'_>,
+    arena: &ProtoArena,
     op: &MatMulOp,
     cfg: &SearchConfig,
     ratios: &CompressionRatios,
-) -> Option<PairBest> {
+) -> ShardOutcome {
+    let mut out = ShardOutcome { best: None, protos: 0, pruned: 0 };
+    if arena.is_empty() || shard >= arena.len() {
+        return out;
+    }
     let arch = ctx.arch;
-    let mut proto_id = 0u64;
-    let mut best: Option<PairBest> = None;
-    for_each_proto(
-        &op.dims,
-        arch.levels.len(),
-        arch.mac.spatial_rows,
-        arch.mac.spatial_cols,
-        &cfg.mapper,
-        // §III-D2: compressed-footprint legality BEFORE ordering.
-        |proto| mapping_is_legal(arch, proto, ratios),
-        |proto| {
-            let id = proto_id;
-            proto_id += 1;
-            if id % nshards as u64 != shard as u64 {
-                return;
+    let mut scratch = arena.scratch_mapping();
+    for id in (shard..arena.len()).step_by(nshards.max(1)) {
+        out.protos += 1;
+        if cfg.prune {
+            if let Some(b) = &out.best {
+                let lb = ctx.lower_bound(
+                    arena.factors(id),
+                    arena.tiles(id),
+                    arena.spatial(id),
+                    &op.spec,
+                    &arch.reduction,
+                    ratios,
+                );
+                if lb >= b.value {
+                    out.pruned += 1;
+                    continue;
+                }
             }
-            let (m, r) = choose_orders_greedy(proto, ctx, &op.spec, ratios);
-            let v = ctx.metric.of(&r);
-            if best.as_ref().map(|b| v < b.value).unwrap_or(true) {
-                best = Some(PairBest { value: v, proto_id: id, mapping: m, report: r });
+        }
+        arena.write_mapping(id, &mut scratch);
+        let r = choose_orders_greedy(&mut scratch, ctx, &op.spec, ratios);
+        let v = ctx.metric.of(&r);
+        match &mut out.best {
+            Some(b) if v < b.value => {
+                b.value = v;
+                b.proto_id = id as u64;
+                b.mapping.clone_from(&scratch);
+                b.report = r;
             }
-        },
-    );
-    best
+            None => {
+                out.best = Some(PairBest {
+                    value: v,
+                    proto_id: id as u64,
+                    mapping: scratch.clone(),
+                    report: r,
+                });
+            }
+            _ => {}
+        }
+    }
+    out
 }
 
-/// Sharded mapping search for one (op, ratios) pair: fan the enumeration
-/// out over the contexts' threads, merge the partial bests by the total
+/// Sharded mapping search for one (op, ratios) pair: fan the arena out
+/// over the contexts' threads, merge the partial bests by the total
 /// order on `(value, proto id)` — bit-identical to the serial pass for
 /// any shard count — then refine tiles serially from the winner.
+/// Enumeration counters accumulate into `tel`.
 fn map_search(
     ctxs: &mut [EvalContext<'_>],
+    arena: &ProtoArena,
     op: &MatMulOp,
     cfg: &SearchConfig,
     ratios: &CompressionRatios,
+    tel: &mut SearchTelemetry,
 ) -> Option<(Mapping, CostReport, f64)> {
     let nshards = ctxs.len();
-    let partials: Vec<Option<PairBest>> = if nshards <= 1 {
-        vec![search_pair_shard(0, 1, &mut ctxs[0], op, cfg, ratios)]
+    let outcomes: Vec<ShardOutcome> = if nshards <= 1 {
+        vec![search_pair_shard(0, 1, &mut ctxs[0], arena, op, cfg, ratios)]
     } else {
         std::thread::scope(|s| {
             let handles: Vec<_> = ctxs
                 .iter_mut()
                 .enumerate()
                 .map(|(i, ctx)| {
-                    s.spawn(move || search_pair_shard(i, nshards, ctx, op, cfg, ratios))
+                    s.spawn(move || {
+                        search_pair_shard(i, nshards, ctx, arena, op, cfg, ratios)
+                    })
                 })
                 .collect();
             handles
@@ -298,24 +387,43 @@ fn map_search(
     // Deterministic reduction: minimize (value, proto id).  The id
     // tie-break reproduces the serial rule "first strictly better wins"
     // exactly, independent of shard count and scheduling.
-    let pb = partials.into_iter().flatten().min_by(|a, b| {
-        a.value
-            .partial_cmp(&b.value)
-            .expect("metric value was NaN")
-            .then(a.proto_id.cmp(&b.proto_id))
-    })?;
+    let mut best: Option<PairBest> = None;
+    for o in outcomes {
+        tel.protos += o.protos;
+        tel.pruned += o.pruned;
+        let Some(pb) = o.best else { continue };
+        let wins = match &best {
+            Some(b) => {
+                match pb.value.partial_cmp(&b.value).expect("metric value was NaN") {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Equal => pb.proto_id < b.proto_id,
+                    std::cmp::Ordering::Greater => false,
+                }
+            }
+            None => true,
+        };
+        if wins {
+            best = Some(pb);
+        }
+    }
+    let pb = best?;
     Some(refine_tiles(
         (pb.mapping, pb.report, pb.value),
         &mut ctxs[0],
         &op.spec,
         ratios,
+        cfg.prune,
     ))
 }
 
 /// Progressive co-search for one operator over `shards` proto-level
-/// threads.  The per-shard evaluation contexts persist across format
-/// pairs, so the `access_counts` cache pays off a second time when the
-/// same proto recurs under a different candidate ratio pair.
+/// threads.  The ratio-independent enumeration tables are hoisted once
+/// per op ([`OpEnumeration`]); per format pair the legal-proto arena is
+/// rebuilt in place (§III-D2 legality on packed tiles, before any
+/// ordering) and the shards iterate it by index.  The per-shard
+/// evaluation contexts persist across format pairs, so the
+/// `access_counts` cache pays off a second time when the same proto
+/// recurs under a different candidate ratio pair.
 fn cosearch_op_sharded(
     arch: &Accelerator,
     op: &MatMulOp,
@@ -326,10 +434,16 @@ fn cosearch_op_sharded(
     let mut ctxs: Vec<EvalContext<'_>> = (0..shards.max(1))
         .map(|_| EvalContext::new(arch, op.dims, cfg.metric))
         .collect();
+    let en = op_enumeration(arch, &op.dims, &cfg.mapper);
+    let mut arena = ProtoArena::new();
     let mut best: Option<OpDesign> = None;
     for (fi, fw) in format_pairs(arch, op, cfg) {
         let ratios = pair_ratios(&fi, &fw, &op.spec);
-        if let Some((mapping, report, v)) = map_search(&mut ctxs, op, cfg, &ratios) {
+        arena.rebuild(&en, &cfg.mapper, |tiles, spatial| {
+            tiles_are_legal(arch, tiles, spatial, &ratios)
+        });
+        let found = map_search(&mut ctxs, &arena, op, cfg, &ratios, tel);
+        if let Some((mapping, report, v)) = found {
             if best.as_ref().map(|b| v < b.metric_value).unwrap_or(true) {
                 best = Some(OpDesign {
                     op_name: op.name.clone(),
@@ -362,15 +476,21 @@ pub fn cosearch_op(
     cosearch_op_sharded(arch, op, cfg, pool::resolve_threads(cfg.threads), tel)
 }
 
-/// Split `threads` between op-level workers and proto-level shards:
-/// operators first (coarser tasks, no redundant enumeration), leftover
-/// parallelism goes inside each op.  The split is an integer division,
-/// so `threads % workers` of the requested threads stay idle when the
-/// count divides unevenly (e.g. 6 threads over 4 ops → 4 workers × 1
-/// shard); full saturation needs `threads <= #ops` or a multiple of it.
-fn split_threads(threads: usize, nops: usize) -> (usize, usize) {
+/// Split `threads` between op-level workers and a per-op proto-shard
+/// plan: operators first (coarser tasks, no redundant arena builds),
+/// leftover parallelism goes inside the ops.  When the count divides
+/// unevenly (e.g. 6 threads over 4 ops), the remainder becomes one
+/// extra shard for each of the first `threads % workers` ops instead of
+/// idling, so the total shard budget equals the requested thread count
+/// whenever ops bound the workers.  The plan is deterministic and
+/// per-op; shard counts never change designs (see docs/SEARCH.md), so
+/// redistribution is purely a wall-clock improvement.
+fn split_threads(threads: usize, nops: usize) -> (usize, Vec<usize>) {
+    let threads = threads.max(1);
     let workers = threads.clamp(1, nops.max(1));
-    (workers, (threads / workers).max(1))
+    let base = threads / workers;
+    let extra = threads % workers;
+    (workers, (0..nops).map(|i| base + usize::from(i < extra)).collect())
 }
 
 /// Fold per-op `(design, telemetry)` results — already in workload op
@@ -399,23 +519,27 @@ fn collect_workload(
         elapsed: start.elapsed(),
         evaluations: tel.evaluations,
         cache: tel.cache,
+        protos: tel.protos,
+        pruned: tel.pruned,
     }
 }
 
 /// Progressive co-search across a whole workload, parallelized over
-/// `cfg.threads` worker threads (serial when 1).  Results — designs,
-/// scores and the `evaluations` count — are bit-identical for any
-/// thread count; see `docs/SEARCH.md`.
+/// `cfg.threads` worker threads (serial when 1).  Designs and scores
+/// are bit-identical for any thread count and with pruning on or off;
+/// the telemetry counters (`evaluations`, cache, prune stats) are
+/// additionally thread-invariant when pruning is off.  See
+/// `docs/SEARCH.md`.
 pub fn cosearch_workload(
     arch: &Accelerator,
     w: &Workload,
     cfg: &SearchConfig,
 ) -> WorkloadResult {
     let start = Instant::now();
-    let (workers, shards) = split_threads(pool::resolve_threads(cfg.threads), w.ops.len());
-    let per_op = pool::parallel_map(workers, &w.ops, |_, op| {
+    let (workers, shard_plan) = split_threads(pool::resolve_threads(cfg.threads), w.ops.len());
+    let per_op = pool::parallel_map(workers, &w.ops, |i, op| {
         let mut tel = SearchTelemetry::default();
-        let d = cosearch_op_sharded(arch, op, cfg, shards, &mut tel);
+        let d = cosearch_op_sharded(arch, op, cfg, shard_plan[i], &mut tel);
         (d, tel)
     });
     collect_workload(arch, w, start, per_op)
@@ -433,17 +557,22 @@ pub fn evaluate_with_formats(
     cfg: &SearchConfig,
 ) -> WorkloadResult {
     let start = Instant::now();
-    let (workers, shards) = split_threads(pool::resolve_threads(cfg.threads), w.ops.len());
-    let per_op = pool::parallel_map(workers, &w.ops, |_, op| {
+    let (workers, shard_plan) = split_threads(pool::resolve_threads(cfg.threads), w.ops.len());
+    let per_op = pool::parallel_map(workers, &w.ops, |i, op| {
         let (f_i, f_w) = make_formats(op);
         let fi = ScoredFormat::score(f_i, &op.spec.input, &cfg.engine);
         let fw = ScoredFormat::score(f_w, &op.spec.weight, &cfg.engine);
         let ratios = pair_ratios(&fi, &fw, &op.spec);
-        let mut ctxs: Vec<EvalContext<'_>> = (0..shards)
+        let mut ctxs: Vec<EvalContext<'_>> = (0..shard_plan[i])
             .map(|_| EvalContext::new(arch, op.dims, cfg.metric))
             .collect();
-        let found = map_search(&mut ctxs, op, cfg, &ratios);
+        let en = op_enumeration(arch, &op.dims, &cfg.mapper);
+        let mut arena = ProtoArena::new();
+        arena.rebuild(&en, &cfg.mapper, |tiles, spatial| {
+            tiles_are_legal(arch, tiles, spatial, &ratios)
+        });
         let mut tel = SearchTelemetry::default();
+        let found = map_search(&mut ctxs, &arena, op, cfg, &ratios, &mut tel);
         for ctx in &ctxs {
             tel.absorb(ctx);
         }
@@ -562,6 +691,31 @@ mod tests {
     }
 
     #[test]
+    fn pruning_does_not_change_op_results() {
+        let arch = presets::arch3();
+        let op = small_op("t", 64, 128, 64, 0.3, 0.5);
+        for mode in [FormatMode::Fixed, FormatMode::Search] {
+            let mut t_on = SearchTelemetry::default();
+            let mut t_off = SearchTelemetry::default();
+            let on = cosearch_op(&arch, &op, &fast_cfg(mode), &mut t_on).unwrap();
+            let off_cfg = SearchConfig { prune: false, ..fast_cfg(mode) };
+            let off = cosearch_op(&arch, &op, &off_cfg, &mut t_off).unwrap();
+            assert_eq!(on.mapping, off.mapping, "{mode:?}");
+            assert_eq!(on.metric_value.to_bits(), off.metric_value.to_bits(), "{mode:?}");
+            assert_eq!(on.report, off.report, "{mode:?}");
+            assert_eq!(t_off.pruned, 0, "prune=false must never prune");
+            assert_eq!(t_on.protos, t_off.protos, "same legal proto space");
+            assert!(t_on.pruned <= t_on.protos);
+            assert!(
+                t_on.evaluations <= t_off.evaluations,
+                "pruning added evaluations: {} vs {}",
+                t_on.evaluations,
+                t_off.evaluations
+            );
+        }
+    }
+
+    #[test]
     fn workload_result_aggregates() {
         let arch = presets::arch3();
         let w = Workload {
@@ -608,11 +762,30 @@ mod tests {
 
     #[test]
     fn split_threads_prefers_op_workers() {
-        assert_eq!(split_threads(1, 6), (1, 1));
-        assert_eq!(split_threads(4, 6), (4, 1));
-        assert_eq!(split_threads(4, 1), (1, 4));
-        assert_eq!(split_threads(8, 2), (2, 4));
-        assert_eq!(split_threads(3, 0), (1, 3));
+        assert_eq!(split_threads(1, 6), (1, vec![1; 6]));
+        assert_eq!(split_threads(4, 6), (4, vec![1; 6]));
+        assert_eq!(split_threads(4, 1), (1, vec![4]));
+        assert_eq!(split_threads(8, 2), (2, vec![4, 4]));
+        assert_eq!(split_threads(3, 0), (1, vec![]));
+    }
+
+    #[test]
+    fn split_threads_redistributes_uneven_remainders() {
+        // 6 threads over 4 ops used to idle 2 threads (4 workers × 1
+        // shard); the remainder now lands as extra shards on the first
+        // ops.
+        assert_eq!(split_threads(6, 4), (4, vec![2, 2, 1, 1]));
+        assert_eq!(split_threads(7, 3), (3, vec![3, 2, 2]));
+        assert_eq!(split_threads(5, 2), (2, vec![3, 2]));
+        assert_eq!(split_threads(0, 2), (1, vec![1, 1]));
+        // Whenever ops bound the workers, the plan spends exactly the
+        // requested thread budget and never hands an op zero shards.
+        for (t, n) in [(6usize, 4usize), (7, 3), (9, 5), (13, 6)] {
+            let (w, plan) = split_threads(t, n);
+            assert_eq!(w, n);
+            assert_eq!(plan.iter().sum::<usize>(), t);
+            assert!(plan.iter().all(|&s| s >= 1));
+        }
     }
 
     #[test]

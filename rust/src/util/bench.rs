@@ -37,6 +37,41 @@ pub fn write_result(name: &str, payload: Json) {
     let _ = std::fs::write(path, record.to_string());
 }
 
+/// Current git revision (short), or `"unknown"` outside a work tree /
+/// without git on PATH.  Used to stamp bench records so result files are
+/// attributable after the fact.
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Write a bench record under the unified schema (ROADMAP "bench JSON
+/// emission"): `{bench, git_rev, wall_time_s, rows}` — bench id, the
+/// git revision the numbers came from, total wall time of the run, and
+/// the per-row payload (an array or object of measurements).  New bench
+/// targets should prefer this over the legacy [`write_result`] shape.
+pub fn write_record(name: &str, wall_time_s: f64, rows: Json) {
+    let dir = std::path::Path::new("results");
+    if std::fs::create_dir_all(dir).is_err() {
+        return;
+    }
+    let path = dir.join(format!("{name}.json"));
+    let record = Json::obj(vec![
+        ("bench", Json::str(name)),
+        ("git_rev", Json::str(&git_rev())),
+        ("wall_time_s", Json::num(wall_time_s)),
+        ("rows", rows),
+    ]);
+    let _ = std::fs::write(path, record.to_string());
+}
+
 /// Standard bench banner.
 pub fn banner(id: &str, what: &str) {
     println!("\n================================================================");
@@ -47,6 +82,13 @@ pub fn banner(id: &str, what: &str) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn git_rev_never_panics_and_is_nonempty() {
+        let rev = git_rev();
+        assert!(!rev.is_empty());
+        assert!(!rev.contains('\n'));
+    }
 
     #[test]
     fn timing_is_positive() {

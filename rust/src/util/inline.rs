@@ -1,0 +1,136 @@
+//! Fixed-capacity inline vector for the cost-model hot path.
+//!
+//! [`AccessCounts`](crate::dataflow::AccessCounts) and
+//! [`CostReport`](crate::cost::CostReport) carry one row per memory
+//! level; memory hierarchies are tiny (≤ [`crate::dataflow::MAX_LEVELS`]
+//! levels), yet `Vec` storage made every cost evaluation heap-allocate.
+//! [`InlineVec`] keeps the rows on the stack, so the per-proto evaluation
+//! path — the hottest loop in the crate — is allocation-free and the
+//! memoized counts cache stores `Copy` values.
+//!
+//! The type derefs to a slice, so indexing, iteration and `len()` read
+//! exactly like the `Vec` code it replaced.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+
+/// A `Vec`-like container with inline storage for up to `N` elements.
+/// Pushing beyond `N` panics — capacity is a structural invariant of the
+/// caller (one row per memory level), not a growth limit.
+#[derive(Clone, Copy)]
+pub struct InlineVec<T, const N: usize> {
+    len: usize,
+    buf: [T; N],
+}
+
+impl<T: Copy + Default, const N: usize> InlineVec<T, N> {
+    pub fn new() -> Self {
+        InlineVec { len: 0, buf: [T::default(); N] }
+    }
+
+    pub fn push(&mut self, v: T) {
+        assert!(self.len < N, "InlineVec capacity {N} exceeded");
+        self.buf[self.len] = v;
+        self.len += 1;
+    }
+
+    /// Drop all elements (capacity is static, so this is just `len = 0`).
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    pub fn from_slice(s: &[T]) -> Self {
+        let mut v = Self::new();
+        for &x in s {
+            v.push(x);
+        }
+        v
+    }
+}
+
+impl<T: Copy + Default, const N: usize> Default for InlineVec<T, N> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T, const N: usize> Deref for InlineVec<T, N> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        &self.buf[..self.len]
+    }
+}
+
+impl<T, const N: usize> DerefMut for InlineVec<T, N> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        &mut self.buf[..self.len]
+    }
+}
+
+impl<T: PartialEq, const N: usize> PartialEq for InlineVec<T, N> {
+    fn eq(&self, other: &Self) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: fmt::Debug, const N: usize> fmt::Debug for InlineVec<T, N> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self[..].fmt(f)
+    }
+}
+
+impl<'a, T, const N: usize> IntoIterator for &'a InlineVec<T, N> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_index_iterate() {
+        let mut v: InlineVec<f64, 4> = InlineVec::new();
+        assert!(v.is_empty());
+        v.push(1.0);
+        v.push(2.5);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[1], 2.5);
+        assert_eq!(v.iter().sum::<f64>(), 3.5);
+        v[0] = 7.0;
+        assert_eq!(v[0], 7.0);
+        v.clear();
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn equality_ignores_spare_capacity() {
+        let a: InlineVec<f64, 8> = InlineVec::from_slice(&[1.0, 2.0]);
+        let mut b: InlineVec<f64, 8> = InlineVec::new();
+        b.push(1.0);
+        b.push(2.0);
+        assert_eq!(a, b);
+        b.push(3.0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn overflow_panics() {
+        let mut v: InlineVec<u32, 2> = InlineVec::new();
+        v.push(1);
+        v.push(2);
+        v.push(3);
+    }
+
+    #[test]
+    fn debug_formats_as_slice() {
+        let v: InlineVec<u32, 4> = InlineVec::from_slice(&[1, 2]);
+        assert_eq!(format!("{v:?}"), "[1, 2]");
+    }
+}

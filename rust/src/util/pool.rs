@@ -11,11 +11,13 @@
 //!
 //! The co-search layers two levels of sharding on top of this primitive
 //! (see [`crate::search`]): operators across pool workers, and — when
-//! threads outnumber operators — the
-//! [`for_each_proto`](crate::dataflow::mapper::for_each_proto)
-//! enumeration within an operator across shards, merged by a
-//! deterministic `(metric value, proto id)` total order.  The full
-//! determinism contract is documented in `docs/SEARCH.md`.
+//! threads outnumber operators — the per-op
+//! [`ProtoArena`](crate::dataflow::mapper::ProtoArena) across index
+//! shards, merged by a deterministic `(metric value, proto id)` total
+//! order.  Uneven thread counts are redistributed as extra shards on
+//! the leading operators (`search::progressive::split_threads`) rather
+//! than left idle.  The full determinism contract is documented in
+//! `docs/SEARCH.md`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

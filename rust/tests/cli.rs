@@ -138,6 +138,8 @@ wgt_density = 0.5
     assert!(stdout.contains("evaluations"));
     assert!(stdout.contains("(2 threads)"), "{stdout}");
     assert!(stdout.contains("cache: access-counts"), "{stdout}");
+    assert!(stdout.contains("enumeration:"), "{stdout}");
+    assert!(stdout.contains("pruned by lower bound"), "{stdout}");
 }
 
 #[test]

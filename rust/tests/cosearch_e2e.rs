@@ -105,6 +105,11 @@ fn assert_bit_identical(
 /// `threads = 4` return identical best mappings and scores, on both an
 /// LLM and a CNN example workload.  With more ops than threads this
 /// exercises the op-level sharding path.
+///
+/// Pruning is disabled here so the *full* telemetry invariant
+/// (`evaluations` identical across thread counts) is exercised; the
+/// prune-on design invariance across threads lives in
+/// `rust/tests/prune_correctness.rs`.
 #[test]
 fn parallel_cosearch_is_bit_identical_to_serial() {
     let arch = presets::arch3();
@@ -113,6 +118,7 @@ fn parallel_cosearch_is_bit_identical_to_serial() {
     let w = reduced_llm();
     let mk = |threads: usize| SearchConfig {
         threads,
+        prune: false,
         mapper: MapperConfig { max_candidates: 800, ..Default::default() },
         ..Default::default()
     };
@@ -126,6 +132,7 @@ fn parallel_cosearch_is_bit_identical_to_serial() {
     cnn.ops.truncate(3);
     let mkf = |threads: usize| SearchConfig {
         threads,
+        prune: false,
         mode: FormatMode::Fixed,
         mapper: MapperConfig { max_candidates: 600, ..Default::default() },
         ..Default::default()
@@ -135,8 +142,9 @@ fn parallel_cosearch_is_bit_identical_to_serial() {
     assert_bit_identical(&serial, &par);
 }
 
-/// A single-op workload with threads > 1 forces the within-op
-/// `for_each_proto` sharding and its `(value, proto-id)` reduction.
+/// A single-op workload with threads > 1 forces the within-op proto
+/// arena sharding and its `(value, proto-id)` reduction (prune off so
+/// the evaluation counts are thread-invariant too).
 #[test]
 fn proto_sharding_within_one_op_is_bit_identical() {
     let arch = presets::arch3();
@@ -151,6 +159,7 @@ fn proto_sharding_within_one_op_is_bit_identical() {
     };
     let mk = |threads: usize| SearchConfig {
         threads,
+        prune: false,
         mapper: MapperConfig { max_candidates: 1_000, ..Default::default() },
         ..Default::default()
     };

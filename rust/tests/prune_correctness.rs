@@ -1,0 +1,115 @@
+//! Branch-and-bound pruning correctness: the pruned search must return
+//! **bit-identical** `(metric value, mapping)` results to an unpruned
+//! reference pass — across thread counts (1/3/4, covering the uneven
+//! `threads % workers != 0` split), both format modes, and several
+//! optimization metrics.  Only the telemetry counters (`evaluations`,
+//! cache and prune stats) may differ; the designs may not.
+//!
+//! This is the executable form of the argument in `docs/SEARCH.md`: the
+//! lower bound is order-independent and f64-monotone, so pruning skips
+//! only provably-worse protos, and an equal-value proto would lose the
+//! `(value, proto id)` tie-break anyway.
+
+use snipsnap::arch::presets;
+use snipsnap::cost::Metric;
+use snipsnap::dataflow::mapper::MapperConfig;
+use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig, WorkloadResult};
+use snipsnap::workload::llm;
+
+fn reduced_llm() -> snipsnap::workload::Workload {
+    llm::opt_125m(llm::Phase::prefill_only(64))
+}
+
+fn cfg(mode: FormatMode, metric: Metric, threads: usize, prune: bool) -> SearchConfig {
+    SearchConfig {
+        mode,
+        metric,
+        threads,
+        prune,
+        mapper: MapperConfig { max_candidates: 600, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Designs and scores equal bit for bit; telemetry intentionally ignored.
+fn assert_designs_identical(a: &WorkloadResult, b: &WorkloadResult, what: &str) {
+    assert_eq!(a.designs.len(), b.designs.len(), "{what}");
+    for (da, db) in a.designs.iter().zip(&b.designs) {
+        assert_eq!(da.op_name, db.op_name, "{what}");
+        assert_eq!(da.mapping, db.mapping, "{what}: {} mappings diverged", da.op_name);
+        assert_eq!(
+            da.metric_value.to_bits(),
+            db.metric_value.to_bits(),
+            "{what}: {} values diverged ({} vs {})",
+            da.op_name,
+            da.metric_value,
+            db.metric_value
+        );
+        assert_eq!(da.input_format.to_string(), db.input_format.to_string(), "{what}");
+        assert_eq!(da.weight_format.to_string(), db.weight_format.to_string(), "{what}");
+        assert_eq!(da.report, db.report, "{what}: {} reports diverged", da.op_name);
+    }
+}
+
+#[test]
+fn pruned_search_matches_unpruned_reference_across_threads_and_modes() {
+    let arch = presets::arch3();
+    let w = reduced_llm();
+    for mode in [FormatMode::Fixed, FormatMode::Search] {
+        // Unpruned serial run is the reference for everything else.
+        let reference = cosearch_workload(&arch, &w, &cfg(mode, Metric::Energy, 1, false));
+        let mut saw_pruning = false;
+        for threads in [1usize, 3, 4] {
+            for prune in [false, true] {
+                let r = cosearch_workload(&arch, &w, &cfg(mode, Metric::Energy, threads, prune));
+                assert_designs_identical(
+                    &reference,
+                    &r,
+                    &format!("{mode:?} threads={threads} prune={prune}"),
+                );
+                if prune {
+                    saw_pruning |= r.pruned > 0;
+                    assert!(r.pruned <= r.protos);
+                } else {
+                    assert_eq!(r.pruned, 0, "prune=false must never prune");
+                }
+            }
+        }
+        assert!(
+            saw_pruning,
+            "{mode:?}: the lower bound never pruned anything — the \
+             branch-and-bound path is not being exercised"
+        );
+    }
+}
+
+#[test]
+fn pruning_preserves_results_for_every_metric() {
+    let arch = presets::arch3();
+    let w = reduced_llm();
+    for metric in [Metric::Energy, Metric::MemoryEnergy, Metric::Latency, Metric::Edp] {
+        let off = cosearch_workload(&arch, &w, &cfg(FormatMode::Fixed, metric, 1, false));
+        let on = cosearch_workload(&arch, &w, &cfg(FormatMode::Fixed, metric, 1, true));
+        assert_designs_identical(&off, &on, &format!("{metric:?}"));
+        assert!(
+            on.evaluations <= off.evaluations,
+            "{metric:?}: pruning increased evaluations ({} vs {})",
+            on.evaluations,
+            off.evaluations
+        );
+    }
+}
+
+#[test]
+fn pruning_saves_meaningful_work() {
+    // Not a correctness property, but the reason this machinery exists:
+    // on a realistic op the bound should cut a visible share of the
+    // order sweeps.  Kept deliberately loose (any nonzero saving passes)
+    // so model changes don't turn it flaky.
+    let arch = presets::arch3();
+    let w = reduced_llm();
+    let off = cosearch_workload(&arch, &w, &cfg(FormatMode::Fixed, Metric::Energy, 1, false));
+    let on = cosearch_workload(&arch, &w, &cfg(FormatMode::Fixed, Metric::Energy, 1, true));
+    assert!(on.pruned > 0, "no protos pruned");
+    assert!(on.evaluations < off.evaluations, "pruning saved no evaluations");
+}
