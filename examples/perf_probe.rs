@@ -2,8 +2,10 @@
 //! access counting, mapping enumeration, engine format search) used to
 //! drive and record the optimization pass in EXPERIMENTS.md §Perf.
 //!
-//! Emits `results/perf_probe.json` under the unified bench-record
-//! schema (`bench`, `git_rev`, `wall_time_s`, per-row payload).
+//! Appends a record to `results/perf_probe.jsonl` under the unified
+//! bench-record schema (`bench`, `git_rev`, `ts_unix`, `wall_time_s`,
+//! per-row payload) — history accumulates across runs and `snipsnap
+//! report` diffs the latest run against the previous one.
 
 use snipsnap::arch::presets;
 use snipsnap::cost::{evaluate, CompressionRatios, Metric};

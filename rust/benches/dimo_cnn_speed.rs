@@ -10,13 +10,15 @@ use snipsnap::baselines::dimo_like::{dimo_workload, DimoConfig};
 use snipsnap::cost::Metric;
 use snipsnap::dataflow::mapper::MapperConfig;
 use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig};
-use snipsnap::util::bench::{banner, write_result};
+use snipsnap::util::bench::{banner, write_record};
 use snipsnap::util::json::Json;
 use snipsnap::util::stats::geomean;
 use snipsnap::util::table::{fmt_f, fmt_x, Table};
 use snipsnap::workload::cnn;
+use std::time::Instant;
 
 fn main() {
+    let t0 = Instant::now();
     banner("§IV-D", "exploration speed vs DiMO-like iterative baseline (CNNs)");
     let arch = presets::arch1();
     // CNN im2col dims are divisor-rich; give the one-shot search enough
@@ -80,8 +82,9 @@ fn main() {
         fmt_x(g)
     );
     assert!(g > 1.0, "speedup too small: {g}");
-    write_result(
+    write_record(
         "dimo_cnn_speed",
+        t0.elapsed().as_secs_f64(),
         Json::obj(vec![("geomean_speedup", Json::num(g)), ("rows", Json::arr(records))]),
     );
     println!("dimo_cnn OK");

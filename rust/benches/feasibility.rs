@@ -11,11 +11,13 @@ use snipsnap::arch::presets;
 use snipsnap::engine::{search_formats, EngineConfig};
 use snipsnap::format::space::SpaceConfig;
 use snipsnap::sparsity::SparsityPattern;
-use snipsnap::util::bench::{banner, write_result};
+use snipsnap::util::bench::{banner, write_record};
 use snipsnap::util::json::Json;
 use snipsnap::util::table::{fmt_pct, Table};
+use std::time::Instant;
 
 fn main() {
+    let t0 = Instant::now();
     banner("§IV-E", "discovered formats and deployment feasibility");
     let cfg = EngineConfig {
         space: SpaceConfig { max_depth: 3, ..Default::default() },
@@ -79,6 +81,6 @@ fn main() {
         assert!(arch.codec_area_overhead < 0.1545 + 1e-9);
     }
     println!("{}", a.render());
-    write_result("feasibility", Json::arr(records));
+    write_record("feasibility", t0.elapsed().as_secs_f64(), Json::arr(records));
     println!("feasibility OK");
 }

@@ -11,9 +11,10 @@ use snipsnap::format::{named, Axis, Format, Level, Prim};
 use snipsnap::sparsity::analyzer::analytical_cost;
 use snipsnap::sparsity::exact::{exact_cost, DenseMask};
 use snipsnap::sparsity::SparsityPattern;
-use snipsnap::util::bench::{banner, write_result};
+use snipsnap::util::bench::{banner, write_record};
 use snipsnap::util::json::Json;
 use snipsnap::util::table::{fmt_f, fmt_pct, Table};
+use std::time::Instant;
 
 fn three_level_b(rows: u64, n1: u64, n2: u64) -> Format {
     Format::new(
@@ -29,6 +30,7 @@ fn three_level_b(rows: u64, n1: u64, n2: u64) -> Format {
 }
 
 fn main() {
+    let t0 = Instant::now();
     banner("Fig. 5", "hierarchical three-level B vs one-level B payload");
 
     // --- The paper's 3x6 example -----------------------------------------
@@ -100,8 +102,9 @@ fn main() {
     }
     println!("{}", s.render());
 
-    write_result(
+    write_record(
         "fig05_hierarchical_payload",
+        t0.elapsed().as_secs_f64(),
         Json::obj(vec![
             ("example_total_reduction", Json::num(total_red)),
             ("example_metadata_reduction", Json::num(meta_red)),

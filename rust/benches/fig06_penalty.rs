@@ -9,11 +9,13 @@
 use snipsnap::engine::penalty::{exhaustive_search, optimality_gap};
 use snipsnap::engine::{search_formats, EngineConfig};
 use snipsnap::sparsity::SparsityPattern;
-use snipsnap::util::bench::{banner, time_once, write_result};
+use snipsnap::util::bench::{banner, time_once, write_record};
 use snipsnap::util::json::Json;
 use snipsnap::util::table::{fmt_f, fmt_pct, Table};
+use std::time::Instant;
 
 fn main() {
+    let t0 = Instant::now();
     banner("Fig. 6", "penalized vs exhaustive format search (4096x4096)");
     let cfg = EngineConfig::default();
     let mut t = Table::new(vec![
@@ -65,6 +67,6 @@ fn main() {
         assert!(stats.evaluated < ex.candidates / 50);
     }
     println!("{}", t.render());
-    write_result("fig06_penalty", Json::arr(records));
+    write_record("fig06_penalty", t0.elapsed().as_secs_f64(), Json::arr(records));
     println!("fig06 OK");
 }

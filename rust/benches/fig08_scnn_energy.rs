@@ -7,11 +7,13 @@
 //! reconstructions — see `arch::published` and DESIGN.md §5.
 
 use snipsnap::arch::validation::scnn_energy_validation;
-use snipsnap::util::bench::{banner, time_once, write_result};
+use snipsnap::util::bench::{banner, time_once, write_record};
 use snipsnap::util::json::Json;
 use snipsnap::util::table::{fmt_f, fmt_pct, Table};
+use std::time::Instant;
 
 fn main() {
+    let t0 = Instant::now();
     banner("Fig. 8", "SCNN energy validation (SA / SW / SA&SW)");
     let ((mre, rows), secs) = time_once(scnn_energy_validation);
     let mut t = Table::new(vec!["layer", "case", "reported", "modeled", "rel err"]);
@@ -38,8 +40,9 @@ fn main() {
         fmt_pct(mre)
     );
     assert!(mre < 0.10, "MRE {mre}");
-    write_result(
+    write_record(
         "fig08_scnn_energy",
+        t0.elapsed().as_secs_f64(),
         Json::obj(vec![("mre", Json::num(mre)), ("rows", Json::arr(records))]),
     );
     println!("fig08 OK");

@@ -16,11 +16,12 @@ use snipsnap::dataflow::mapper::MapperConfig;
 use snipsnap::dataflow::ProblemDims;
 use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig};
 use snipsnap::sparsity::SparsitySpec;
-use snipsnap::util::bench::{banner, write_result};
+use snipsnap::util::bench::{banner, write_record};
 use snipsnap::util::json::Json;
 use snipsnap::util::stats::{mean, relative_error};
 use snipsnap::util::table::{fmt_f, fmt_pct, Table};
 use snipsnap::workload::{MatMulOp, Workload};
+use std::time::Instant;
 
 /// Sparseloop-style post-hoc latency correction: dense-optimal mapping's
 /// latency scaled by the computation-reduction factor only.
@@ -56,6 +57,7 @@ fn stepwise_estimate() -> Vec<f64> {
 }
 
 fn main() {
+    let t0 = Instant::now();
     banner("Fig. 9", "DSTC latency validation (4096x4096 MatMul)");
     let (mre, rows) = dstc_latency_validation();
     let stepwise = stepwise_estimate();
@@ -94,8 +96,9 @@ fn main() {
     );
     assert!(mre < 0.10, "SnipSnap MRE {mre}");
     assert!(mre < sl_mre, "SnipSnap must model latency better than the stepwise estimate");
-    write_result(
+    write_record(
         "fig09_dstc_latency",
+        t0.elapsed().as_secs_f64(),
         Json::obj(vec![
             ("snipsnap_mre", Json::num(mre)),
             ("stepwise_mre", Json::num(sl_mre)),

@@ -13,12 +13,13 @@ use snipsnap::cost::Metric;
 use snipsnap::dataflow::mapper::MapperConfig;
 use snipsnap::format::named;
 use snipsnap::search::{cosearch_workload, evaluate_with_formats, FormatMode, SearchConfig};
-use snipsnap::util::bench::{banner, write_result};
+use snipsnap::util::bench::{banner, write_record};
 use snipsnap::util::json::Json;
 use snipsnap::util::stats::mean;
 use snipsnap::util::table::{fmt_pct, fmt_x, Table};
 use snipsnap::workload::llm::{self, Phase};
 use snipsnap::workload::Workload;
+use std::time::Instant;
 
 const FORMATS: [&str; 4] = ["Bitmap", "RLE", "CSR", "COO"];
 
@@ -98,6 +99,7 @@ fn run_variant(
 }
 
 fn main() {
+    let t0 = Instant::now();
     banner("Fig. 10", "single-LLM format optimization (SA / SW)");
     let ph = Phase::default_prefill_decode();
     // SA is evaluated on the prefill phase (activation traffic dominates
@@ -157,8 +159,9 @@ fn main() {
         cache_totals.misses,
         100.0 * cache_totals.hit_rate()
     );
-    write_result(
+    write_record(
         "fig10_single_llm",
+        t0.elapsed().as_secs_f64(),
         Json::obj(vec![
             ("sa_mean_saving", Json::num(mean(&sa_savings))),
             ("sw_mean_saving", Json::num(mean(&sw_savings))),

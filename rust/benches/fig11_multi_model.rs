@@ -16,11 +16,12 @@ use snipsnap::engine::EngineConfig;
 use snipsnap::format::space::SpaceConfig;
 use snipsnap::format::{named, Axis, CompPat, Prim};
 use snipsnap::search::{evaluate_with_formats, FormatMode, SearchConfig};
-use snipsnap::util::bench::{banner, write_result};
+use snipsnap::util::bench::{banner, write_record};
 use snipsnap::util::json::Json;
 use snipsnap::util::stats::mean;
 use snipsnap::util::table::{fmt_pct, Table};
 use snipsnap::workload::{llm, Workload};
+use std::time::Instant;
 
 fn search_cfg() -> SearchConfig {
     SearchConfig {
@@ -125,6 +126,7 @@ fn run_case(
 }
 
 fn main() {
+    let t0 = Instant::now();
     banner("Fig. 11", "multi-model shared format with importance scoring");
     let bert = llm::bert_base(256);
     let opt125 = llm::opt_125m(llm::Phase::new(256, 32));
@@ -147,8 +149,9 @@ fn main() {
     for s in s1.iter().chain(&s2) {
         assert!(*s > -0.02, "shared format lost badly to a baseline: {s}");
     }
-    write_result(
+    write_record(
         "fig11_multi_model",
+        t0.elapsed().as_secs_f64(),
         Json::obj(vec![("avg_saving", Json::num(avg)), ("rows", Json::arr(records))]),
     );
     println!("fig11 OK");

@@ -13,11 +13,12 @@
 use snipsnap::arch::presets;
 use snipsnap::dataflow::mapper::MapperConfig;
 use snipsnap::search::{cosearch_workload, SearchConfig};
-use snipsnap::util::bench::{banner, write_result};
+use snipsnap::util::bench::{banner, write_record};
 use snipsnap::util::json::Json;
 use snipsnap::util::table::{fmt_f, Table};
 use snipsnap::workload::llm::{build_llm, LlmShape, LlmSparsity, Phase};
 use snipsnap::workload::{gqa, llm, scenario_zoo, Workload};
+use std::time::Instant;
 
 fn cfg() -> SearchConfig {
     SearchConfig {
@@ -34,6 +35,7 @@ fn search(arch: &snipsnap::arch::Accelerator, w: &Workload) -> snipsnap::search:
 }
 
 fn main() {
+    let t0 = Instant::now();
     banner("Fig. 12", "scenario zoo: GQA / MoE / batched decode / N:M end-to-end");
     let arch = presets::arch3();
 
@@ -92,8 +94,9 @@ fn main() {
     println!("batch-4 decode energy = {amort:.2}x batch-1 (4 sequences; < 4x means amortization)");
     assert!(amort < 4.0, "batched decode showed no amortization: {amort}x");
 
-    write_result(
+    write_record(
         "fig12_scenario_zoo",
+        t0.elapsed().as_secs_f64(),
         Json::obj(vec![
             ("gqa_energy_saving", Json::num(gqa_saving)),
             ("nm_energy_saving", Json::num(nm_saving)),

@@ -13,13 +13,15 @@ use snipsnap::baselines::sparseloop_like::stepwise_workload;
 use snipsnap::cost::Metric;
 use snipsnap::dataflow::mapper::MapperConfig;
 use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig};
-use snipsnap::util::bench::{banner, write_result};
+use snipsnap::util::bench::{banner, write_record};
 use snipsnap::util::json::Json;
 use snipsnap::util::stats::geomean;
 use snipsnap::util::table::{fmt_x, Table};
 use snipsnap::workload::llm;
+use std::time::Instant;
 
 fn main() {
+    let t0 = Instant::now();
     banner("Table I", "exploration speed vs Sparseloop-like stepwise workflow");
     // Shared candidate space for a fair workflow comparison.
     let mapper = MapperConfig { max_candidates: 300, ..Default::default() };
@@ -117,8 +119,9 @@ fn main() {
         cache_totals.misses,
         100.0 * cache_totals.hit_rate()
     );
-    write_result(
+    write_record(
         "table1_speed",
+        t0.elapsed().as_secs_f64(),
         Json::obj(vec![
             ("geomean_fixed_speedup", Json::num(gf)),
             ("geomean_search_speedup", Json::num(gs)),

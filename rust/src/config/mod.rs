@@ -1,9 +1,16 @@
 //! Configuration system: a hand-rolled TOML-subset parser ([`toml`])
 //! plus typed loaders turning config files into [`Accelerator`]s,
-//! [`Workload`]s and search settings ([`typed`]).
+//! [`Workload`]s and search settings ([`typed`]), and the JSON
+//! run-config [`snapshot`] layer that makes every CLI run a replayable
+//! artifact.
+//!
+//! [`Accelerator`]: crate::arch::Accelerator
+//! [`Workload`]: crate::workload::Workload
 
+pub mod snapshot;
 pub mod toml;
 pub mod typed;
 
+pub use snapshot::load_run_config_any;
 pub use toml::TomlDoc;
 pub use typed::{load_run_config, RunConfig};

@@ -2,11 +2,16 @@
 //!
 //! Supported grammar — the subset our config files use:
 //! - `[section]` and `[section.sub]` headers
+//! - `[[name]]` arrays of tables (ordered; used for multi-op workloads)
 //! - `key = "string" | number | true/false | [array of scalars]`
 //! - `#` comments, blank lines
 //!
-//! Unsupported (rejected with an error): multi-line strings, inline
-//! tables, arrays of tables, datetimes.
+//! Unsupported (rejected with an error): multi-line strings, string
+//! escape sequences (any backslash inside a string is an error rather
+//! than a silent corruption), inline tables, datetimes, and non-finite
+//! numbers (`inf`, `nan` and friends — they would poison every cost
+//! computed from the config).  Numeric underscores follow TOML proper:
+//! they must sit between two digits (`4_096` yes, `_5`/`1__2`/`5_` no).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -57,11 +62,16 @@ impl TomlValue {
     }
 }
 
-/// A parsed document: section path -> key -> value.  The implicit root
-/// section is "".
+/// One table: key -> value.
+pub type TomlTable = BTreeMap<String, TomlValue>;
+
+/// A parsed document: plain sections (section path -> table; the
+/// implicit root section is "") plus `[[name]]` arrays of tables, whose
+/// elements keep file order.
 #[derive(Clone, Debug, Default)]
 pub struct TomlDoc {
-    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+    pub sections: BTreeMap<String, TomlTable>,
+    pub arrays: BTreeMap<String, Vec<TomlTable>>,
 }
 
 #[derive(Debug, Clone)]
@@ -78,27 +88,56 @@ impl fmt::Display for TomlError {
 
 impl std::error::Error for TomlError {}
 
+/// Where `key = value` lines currently land: the active `[section]` or
+/// the latest element of the active `[[name]]` array of tables.
+enum Cursor {
+    Section(String),
+    ArrayElem(String),
+}
+
 impl TomlDoc {
     pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
         let mut doc = TomlDoc::default();
-        let mut current = String::new();
-        doc.sections.entry(current.clone()).or_default();
+        let mut cursor = Cursor::Section(String::new());
+        doc.sections.entry(String::new()).or_default();
         for (ln, raw) in src.lines().enumerate() {
-            let line = strip_comment(raw).trim();
+            let err = |msg: &str| TomlError { line: ln + 1, msg: msg.to_string() };
+            let line = strip_comment(raw).map_err(|m| err(&m))?.trim();
             if line.is_empty() {
                 continue;
             }
-            let err = |msg: &str| TomlError { line: ln + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix("[[") {
+                let name = rest
+                    .strip_suffix("]]")
+                    .ok_or_else(|| err("unterminated array-of-tables header"))?
+                    .trim();
+                if name.is_empty() || name.contains('[') || name.contains(']') {
+                    return Err(err("bad array-of-tables header"));
+                }
+                if doc.sections.contains_key(name) {
+                    return Err(err(&format!(
+                        "'{name}' is already a [section]; it cannot also be [[{name}]]"
+                    )));
+                }
+                doc.arrays.entry(name.to_string()).or_default().push(TomlTable::new());
+                cursor = Cursor::ArrayElem(name.to_string());
+                continue;
+            }
             if let Some(rest) = line.strip_prefix('[') {
                 let name = rest
                     .strip_suffix(']')
                     .ok_or_else(|| err("unterminated section header"))?
                     .trim();
-                if name.is_empty() || name.starts_with('[') {
-                    return Err(err("arrays of tables are not supported"));
+                if name.is_empty() || name.contains('[') || name.contains(']') {
+                    return Err(err("bad section header"));
                 }
-                current = name.to_string();
-                doc.sections.entry(current.clone()).or_default();
+                if doc.arrays.contains_key(name) {
+                    return Err(err(&format!(
+                        "'{name}' is already [[an array of tables]]; it cannot also be [{name}]"
+                    )));
+                }
+                doc.sections.entry(name.to_string()).or_default();
+                cursor = Cursor::Section(name.to_string());
                 continue;
             }
             let eq = line.find('=').ok_or_else(|| err("expected 'key = value'"))?;
@@ -107,10 +146,11 @@ impl TomlDoc {
                 return Err(err("empty key"));
             }
             let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
-            doc.sections
-                .get_mut(&current)
-                .unwrap()
-                .insert(key.to_string(), val);
+            let table = match &cursor {
+                Cursor::Section(s) => doc.sections.get_mut(s).unwrap(),
+                Cursor::ArrayElem(n) => doc.arrays.get_mut(n).unwrap().last_mut().unwrap(),
+            };
+            table.insert(key.to_string(), val);
         }
         Ok(doc)
     }
@@ -119,12 +159,12 @@ impl TomlDoc {
         self.sections.get(section)?.get(key)
     }
 
-    pub fn section(&self, name: &str) -> Option<&BTreeMap<String, TomlValue>> {
+    pub fn section(&self, name: &str) -> Option<&TomlTable> {
         self.sections.get(name)
     }
 
     /// Sections whose path starts with `prefix.` (e.g. all `[op.X]`).
-    pub fn sections_under(&self, prefix: &str) -> Vec<(&str, &BTreeMap<String, TomlValue>)> {
+    pub fn sections_under(&self, prefix: &str) -> Vec<(&str, &TomlTable)> {
         let pat = format!("{prefix}.");
         self.sections
             .iter()
@@ -132,28 +172,46 @@ impl TomlDoc {
             .map(|(k, v)| (k.as_str(), v))
             .collect()
     }
+
+    /// Elements of the `[[name]]` array of tables, in file order (empty
+    /// when the document has none).
+    pub fn array_of_tables(&self, name: &str) -> &[TomlTable] {
+        self.arrays.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
 }
 
-fn strip_comment(line: &str) -> &str {
-    // Track string state so '#' inside quotes survives.
+/// Strip a trailing `#` comment, tracking string state so `#` inside
+/// quotes survives.  Backslashes inside a string are rejected outright:
+/// the subset has no escape sequences, and silently treating `\"` as a
+/// quote boundary would flip the string state and corrupt the value.
+fn strip_comment(line: &str) -> Result<&str, String> {
     let mut in_str = false;
     for (i, c) in line.char_indices() {
         match c {
             '"' => in_str = !in_str,
-            '#' if !in_str => return &line[..i],
+            '\\' if in_str => {
+                return Err(
+                    "backslash escapes are not supported by the TOML subset".to_string()
+                )
+            }
+            '#' if !in_str => return Ok(&line[..i]),
             _ => {}
         }
     }
-    line
+    Ok(line)
 }
 
 fn parse_value(s: &str) -> Result<TomlValue, String> {
     if let Some(rest) = s.strip_prefix('"') {
         let end = rest.find('"').ok_or("unterminated string")?;
+        let body = &rest[..end];
+        if body.contains('\\') {
+            return Err("backslash escapes are not supported by the TOML subset".into());
+        }
         if !rest[end + 1..].trim().is_empty() {
             return Err("trailing characters after string".into());
         }
-        return Ok(TomlValue::Str(rest[..end].to_string()));
+        return Ok(TomlValue::Str(body.to_string()));
     }
     if s == "true" {
         return Ok(TomlValue::Bool(true));
@@ -171,11 +229,36 @@ fn parse_value(s: &str) -> Result<TomlValue, String> {
         }
         return Ok(TomlValue::Arr(items));
     }
-    let cleaned = s.replace('_', "");
-    cleaned
+    parse_number(s).map(TomlValue::Num)
+}
+
+/// Parse a numeric literal, enforcing TOML's underscore rule (between
+/// two digits only) and rejecting the non-finite spellings Rust's
+/// `f64::from_str` would otherwise accept (`inf`, `nan`, `-infinity`,
+/// …) as well as finite-looking overflows like `1e999`.
+fn parse_number(s: &str) -> Result<f64, String> {
+    let b = s.as_bytes();
+    for (i, &c) in b.iter().enumerate() {
+        if c == b'_' {
+            let between_digits = i > 0
+                && b[i - 1].is_ascii_digit()
+                && i + 1 < b.len()
+                && b[i + 1].is_ascii_digit();
+            if !between_digits {
+                return Err(format!(
+                    "malformed underscore in number '{s}' (underscores must sit between digits)"
+                ));
+            }
+        }
+    }
+    let n = s
+        .replace('_', "")
         .parse::<f64>()
-        .map(TomlValue::Num)
-        .map_err(|_| format!("cannot parse value '{s}'"))
+        .map_err(|_| format!("cannot parse value '{s}'"))?;
+    if !n.is_finite() {
+        return Err(format!("non-finite number '{s}' is not a valid TOML value"));
+    }
+    Ok(n)
 }
 
 fn split_top_level(s: &str) -> Vec<&str> {
@@ -242,6 +325,34 @@ dims = [2048, 4096, 4_096]
     }
 
     #[test]
+    fn arrays_of_tables_keep_order() {
+        let doc = TomlDoc::parse(
+            "[run]\nx = 1\n[[op]]\nname = \"b\"\nm = 2\n[[op]]\nname = \"a\"\nm = 3\n",
+        )
+        .unwrap();
+        let ops = doc.array_of_tables("op");
+        assert_eq!(ops.len(), 2);
+        assert_eq!(ops[0].get("name").unwrap().as_str(), Some("b"));
+        assert_eq!(ops[1].get("name").unwrap().as_str(), Some("a"));
+        assert_eq!(ops[1].get("m").unwrap().as_u64(), Some(3));
+        assert!(doc.array_of_tables("missing").is_empty());
+        // Keys after a [[op]] header land in that element, not in [run].
+        assert!(doc.get("run", "name").is_none());
+    }
+
+    #[test]
+    fn section_and_array_names_cannot_collide() {
+        let e = TomlDoc::parse("[op]\nm = 1\n[[op]]\nm = 2\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.msg.contains("already a [section]"), "{e}");
+        let e = TomlDoc::parse("[[op]]\nm = 2\n[op]\nm = 1\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.msg.contains("array of tables"), "{e}");
+        assert!(TomlDoc::parse("[[x]\n").is_err());
+        assert!(TomlDoc::parse("[[]]\n").is_err());
+    }
+
+    #[test]
     fn error_reporting_with_line_numbers() {
         let e = TomlDoc::parse("ok = 1\nbad line\n").unwrap_err();
         assert_eq!(e.line, 2);
@@ -249,6 +360,55 @@ dims = [2048, 4096, 4_096]
         assert_eq!(e.line, 1);
         assert!(TomlDoc::parse("x = [1, 2\n").is_err());
         assert!(TomlDoc::parse("x = \"abc\ndef\"\n").is_err());
+    }
+
+    /// Regression: `inf`/`nan`/`-infinity` parsed as numbers via
+    /// `f64::from_str`, and any underscore placement was accepted.
+    #[test]
+    fn rejects_non_finite_and_malformed_underscore_numbers() {
+        for bad in [
+            "x = inf\n",
+            "x = -inf\n",
+            "x = nan\n",
+            "x = -infinity\n",
+            "x = Infinity\n",
+            "x = 1e999\n",
+            "x = _5\n",
+            "x = 5_\n",
+            "x = 1__2\n",
+            "x = _\n",
+            "x = 1._5\n",
+            "x = [1, inf]\n",
+        ] {
+            let e = TomlDoc::parse(bad).unwrap_err();
+            assert_eq!(e.line, 1, "{bad}");
+        }
+        let e = TomlDoc::parse("ok = 1\nx = nan\n").unwrap_err();
+        assert_eq!(e.line, 2, "errors must carry the offending line");
+        // Well-placed underscores still work.
+        let doc = TomlDoc::parse("a = 5_0\nb = 1_000.5\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_u64(), Some(50));
+        assert_eq!(doc.get("", "b").unwrap().as_f64(), Some(1000.5));
+    }
+
+    /// Regression: a `\"` inside a string used to flip the string state
+    /// in `strip_comment` and silently corrupt the value.  The subset
+    /// rejects backslashes in strings outright.
+    #[test]
+    fn rejects_backslash_escapes_in_strings() {
+        for bad in [
+            "x = \"a\\\"b\"\n",
+            "x = \"a\\nb\"\n",
+            "x = \"C:\\path\"\n",
+            "x = [\"a\\\\b\"]\n",
+            "x = \"a\\\" # not a comment\"\n",
+        ] {
+            let e = TomlDoc::parse(bad).unwrap_err();
+            assert!(e.msg.contains("backslash"), "{bad}: {e}");
+        }
+        // Backslashes in comments are fine (never inside a string).
+        let doc = TomlDoc::parse("x = 1 # C:\\temp\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_u64(), Some(1));
     }
 
     #[test]

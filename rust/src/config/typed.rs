@@ -28,7 +28,7 @@
 //! kv_density = 0.5          # KV-cache density on the A x V op, (0, 1]
 //! nm = "2:4"                # N:M weight sparsity (also: nm = [2, 4])
 //!
-//! # Optional custom workload:
+//! # Optional custom workload (named sections):
 //! [op.fc1]
 //! m = 2048
 //! n = 4096
@@ -36,6 +36,23 @@
 //! act_density = 0.4
 //! wgt_density = 0.5
 //! count = 32
+//!
+//! # ...or as an ordered TOML array of tables — the natural shape for
+//! # multi-op workloads (ops keep file order; `name` is optional and
+//! # defaults to `op<index>`):
+//! [[op]]
+//! name = "qkv"
+//! m = 2048
+//! n = 4096
+//! k = 4096
+//! act_density = 0.4
+//! wgt_density = 0.5
+//! count = 32
+//! [[op]]
+//! name = "fc1"
+//! m = 2048
+//! n = 4096
+//! k = 16384
 //!
 //! # Optional custom accelerator:
 //! [arch]
@@ -53,7 +70,7 @@
 //! level2 = ["OpBuf", 128, 1.5, 1.5, 8192]
 //! ```
 
-use super::toml::{TomlDoc, TomlValue};
+use super::toml::{TomlDoc, TomlTable, TomlValue};
 use crate::arch::{presets, Accelerator, MacArray, MemLevel};
 use crate::cost::Metric;
 use crate::dataflow::ProblemDims;
@@ -224,7 +241,7 @@ pub fn metric_by_name(name: &str) -> Result<Metric> {
     })
 }
 
-fn reduction_by_name(name: &str) -> Result<ReductionStrategy> {
+pub(crate) fn reduction_by_name(name: &str) -> Result<ReductionStrategy> {
     Ok(match name.to_ascii_lowercase().as_str() {
         "none" => ReductionStrategy::NONE,
         "gating-input" => ReductionStrategy::gating(Direction::InputOnly),
@@ -310,32 +327,63 @@ fn parse_inline_arch(doc: &TomlDoc) -> Result<Option<Accelerator>> {
     Ok(Some(arch))
 }
 
+/// Parse one custom MatMul op from a `[op.NAME]` section or a `[[op]]`
+/// table element.
+fn parse_op(name: &str, sec: &TomlTable) -> Result<MatMulOp> {
+    let get_u = |k: &str| -> Result<u64> {
+        sec.get(k)
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow!("[{name}] missing integer '{k}'"))
+    };
+    let get_density = |k: &str| -> Result<f64> {
+        let d = sec.get(k).and_then(|v| v.as_f64()).unwrap_or(1.0);
+        validate_density(d).map_err(|e| anyhow!("[{name}] {k}: {e}"))?;
+        Ok(d)
+    };
+    Ok(MatMulOp {
+        name: name.to_string(),
+        dims: ProblemDims::new(get_u("m")?, get_u("n")?, get_u("k")?),
+        spec: SparsitySpec::unstructured(
+            get_density("act_density")?,
+            get_density("wgt_density")?,
+        ),
+        count: sec.get("count").and_then(|v| v.as_u64()).unwrap_or(1),
+    })
+}
+
 fn parse_inline_workload(doc: &TomlDoc) -> Result<Option<Workload>> {
     let subs = doc.sections_under("op");
-    if subs.is_empty() {
+    let tables = doc.array_of_tables("op");
+    if !subs.is_empty() && !tables.is_empty() {
+        bail!("define the workload with either [op.NAME] sections or [[op]] tables, not both");
+    }
+    if subs.is_empty() && tables.is_empty() {
         return Ok(None);
     }
     let mut ops = Vec::new();
     for (name, sec) in subs {
-        let get_u = |k: &str| -> Result<u64> {
-            sec.get(k)
-                .and_then(|v| v.as_u64())
-                .ok_or_else(|| anyhow!("[{name}] missing integer '{k}'"))
+        ops.push(parse_op(name.trim_start_matches("op."), sec)?);
+    }
+    for (i, sec) in tables.iter().enumerate() {
+        let name = match sec.get("name") {
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| anyhow!("[[op]] #{i}: 'name' must be a string"))?
+                .to_string(),
+            None => format!("op{i}"),
         };
-        let get_density = |k: &str| -> Result<f64> {
-            let d = sec.get(k).and_then(|v| v.as_f64()).unwrap_or(1.0);
-            validate_density(d).map_err(|e| anyhow!("[{name}] {k}: {e}"))?;
-            Ok(d)
-        };
-        ops.push(MatMulOp {
-            name: name.trim_start_matches("op.").to_string(),
-            dims: ProblemDims::new(get_u("m")?, get_u("n")?, get_u("k")?),
-            spec: SparsitySpec::unstructured(
-                get_density("act_density")?,
-                get_density("wgt_density")?,
-            ),
-            count: sec.get("count").and_then(|v| v.as_u64()).unwrap_or(1),
-        });
+        ops.push(parse_op(&name, sec)?);
+    }
+    if let Some(dup) = ops
+        .iter()
+        .enumerate()
+        .find(|(i, o)| ops[..*i].iter().any(|p| p.name == o.name))
+        .map(|(_, o)| o.name.clone())
+    {
+        bail!(
+            "custom workload has duplicate op name '{dup}' \
+             (unnamed [[op]] tables default to op<index>; name every op explicitly to avoid clashes)"
+        );
     }
     Ok(Some(Workload { name: "custom".to_string(), ops }))
 }
@@ -586,6 +634,60 @@ count = 2
         assert_eq!(cfg.workload.ops.len(), 1);
         assert_eq!(cfg.workload.ops[0].count, 2);
         assert_eq!(cfg.workload.ops[0].name, "gemm");
+    }
+
+    #[test]
+    fn array_of_tables_workload() {
+        let cfg = load_run_config(
+            r#"
+[run]
+arch = "arch3"
+[[op]]
+name = "qkv"
+m = 64
+n = 64
+k = 128
+act_density = 0.4
+wgt_density = 0.5
+count = 3
+[[op]]
+m = 32
+n = 64
+k = 64
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.workload.ops.len(), 2);
+        assert_eq!(cfg.workload.ops[0].name, "qkv");
+        assert_eq!(cfg.workload.ops[0].count, 3);
+        assert_eq!(cfg.workload.ops[0].dims.k, 128);
+        // Unnamed elements get positional names; defaults apply.
+        assert_eq!(cfg.workload.ops[1].name, "op1");
+        assert_eq!(cfg.workload.ops[1].count, 1);
+        assert_eq!(cfg.workload.ops[1].spec.input.density(), 1.0);
+    }
+
+    #[test]
+    fn array_of_tables_workload_rejects_bad_shapes() {
+        // Mixing [op.NAME] and [[op]] is ambiguous.
+        let e = load_run_config(
+            "[run]\narch = \"arch3\"\n[op.a]\nm = 4\nn = 4\nk = 4\n[[op]]\nm = 4\nn = 4\nk = 4\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("not both"), "{e}");
+        // Duplicate names collide.
+        let dup = "[run]\narch = \"arch3\"\n\
+                   [[op]]\nname = \"a\"\nm = 4\nn = 4\nk = 4\n\
+                   [[op]]\nname = \"a\"\nm = 8\nn = 8\nk = 8\n";
+        assert!(load_run_config(dup).unwrap_err().to_string().contains("duplicate"));
+        // Missing dims and bad densities surface with the op name.
+        let e = load_run_config("[run]\narch = \"arch3\"\n[[op]]\nname = \"x\"\nm = 4\nn = 4\n")
+            .unwrap_err();
+        assert!(e.to_string().contains("[x]"), "{e}");
+        assert!(load_run_config(
+            "[run]\narch = \"arch3\"\n[[op]]\nm = 4\nn = 4\nk = 4\nact_density = 0.0\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -15,6 +15,8 @@
 //! - [`search`] — the progressive co-search workflow (§III-D)
 //! - [`baselines`] — Sparseloop-like and DiMO-like comparison workflows
 //! - [`runtime`] — PJRT loader/executor for the AOT XLA artifacts
+//! - [`config`] — TOML-subset run configs + JSON run-config snapshots
+//! - [`report`] — roll-up over the `results/` run artifacts
 //! - [`util`] — offline substrates (PRNG, JSON, tables, property tests)
 //!
 //! # Cargo features
@@ -32,6 +34,7 @@ pub mod cost;
 pub mod dataflow;
 pub mod engine;
 pub mod format;
+pub mod report;
 pub mod runtime;
 pub mod search;
 pub mod sparsity;

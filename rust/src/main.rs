@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   search    co-optimize format + dataflow for a workload on an arch
+//!             (emits a replayable JSON run-config snapshot per run)
+//!   report    roll up the results/ run artifacts into a summary table
 //!   formats   show the adaptive engine's top formats for one tensor
 //!   validate  run the Fig. 8 / Fig. 9 model-validation studies
 //!   xla       self-test the PJRT runtime against the AOT artifacts
@@ -21,15 +23,20 @@ fn usage() -> ! {
         "snipsnap — joint compression-format & dataflow co-optimization\n\
          \n\
          USAGE:\n\
-           snipsnap search   [--config F.toml] [--arch A] [--workload W]\n\
+           snipsnap search   [--config F.toml|F.config.json] [--arch A] [--workload W]\n\
                              [--metric M] [--mode search|fixed] [--max-mappings N]\n\
                              [--threads N]  (0 = all cores; designs are\n\
                              bit-identical for any thread count)\n\
                              [--prune on|off]  (branch-and-bound pruning;\n\
                              identical results either way, default on)\n\
+                             [--snapshot PATH|off]  (JSON run-config snapshot;\n\
+                             default results/run-<ts>-<pid>.config.json —\n\
+                             feed it back via --config to replay the run)\n\
                              workload modifiers (transformer presets only):\n\
                              [--prefill N] [--decode N] [--batch B]\n\
                              [--kv-density D] [--nm N:M]\n\
+           snipsnap report   [--dir results]  (summarize results/*.json(l);\n\
+                             exits non-zero on any unparseable artifact)\n\
            snipsnap formats  --rows R --cols C --density D [--gamma G] [--depth N]\n\
            snipsnap validate [--study scnn|dstc]\n\
            snipsnap xla      [--artifacts DIR]\n\
@@ -94,7 +101,8 @@ fn cmd_search(args: &Args) -> Result<()> {
             }
         }
         let src = std::fs::read_to_string(path).with_context(|| path.to_string())?;
-        let run = snipsnap::config::load_run_config(&src)?;
+        // TOML subset or a JSON run-config snapshot from a previous run.
+        let run = snipsnap::config::load_run_config_any(&src)?;
         arch = run.arch;
         workload = run.workload;
         cfg = run.search;
@@ -133,6 +141,8 @@ fn cmd_search(args: &Args) -> Result<()> {
             other => bail!("--prune takes on|off, got '{other}'"),
         };
     }
+
+    write_snapshot(args, &arch, &workload, &cfg);
 
     eprintln!("arch: {}", arch.name);
     eprintln!("workload: {} ({} ops)", workload.name, workload.op_count());
@@ -180,6 +190,44 @@ fn cmd_search(args: &Args) -> Result<()> {
         r.pruned,
         100.0 * r.prune_rate(),
     );
+    Ok(())
+}
+
+/// Emit the JSON run-config snapshot for a resolved search run (written
+/// before the search so a crashed run still leaves its artifact).
+/// Best-effort: an unwritable destination warns instead of failing the
+/// run.  `--snapshot off` disables, `--snapshot PATH` redirects; the
+/// default lands next to the bench results with a timestamped name.
+fn write_snapshot(
+    args: &Args,
+    arch: &snipsnap::arch::Accelerator,
+    workload: &snipsnap::workload::Workload,
+    cfg: &SearchConfig,
+) {
+    let path = match args.get("snapshot") {
+        Some("off") => return,
+        Some(p) => std::path::PathBuf::from(p),
+        None => {
+            let ts = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0);
+            std::path::PathBuf::from("results")
+                .join(format!("run-{ts}-{}.config.json", std::process::id()))
+        }
+    };
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    match std::fs::write(&path, snipsnap::config::snapshot::render(arch, workload, cfg)) {
+        Ok(()) => eprintln!("run-config snapshot: {}", path.display()),
+        Err(e) => eprintln!("warning: could not write snapshot {}: {e}", path.display()),
+    }
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get("dir").unwrap_or("results"));
+    print!("{}", snipsnap::report::report(&dir)?);
     Ok(())
 }
 
@@ -316,6 +364,7 @@ fn main() {
     };
     let result = match cmd.as_str() {
         "search" => cmd_search(&args),
+        "report" => cmd_report(&args),
         "formats" => cmd_formats(&args),
         "validate" => cmd_validate(&args),
         "xla" => cmd_xla(&args),

@@ -1,0 +1,385 @@
+//! `snipsnap report` — roll up the run artifacts under `results/`.
+//!
+//! The results layer emits three artifact shapes (docs/ARCHITECTURE.md
+//! "Run artifacts"):
+//! - `<bench>.jsonl` — append-mode bench history, one unified-schema
+//!   record per line (`{bench, git_rev, ts_unix, wall_time_s, rows}`,
+//!   written by [`crate::util::bench::write_record`]);
+//! - `*.config.json` — run-config snapshots emitted by `snipsnap
+//!   search`, replayable via `--config` ([`crate::config::snapshot`]);
+//!   the scanner runs them through the real snapshot loader, so a
+//!   snapshot the config layer could not replay fails the roll-up;
+//! - legacy `*.json` — single-record files from the pre-JSONL harness,
+//!   still readable so old results keep counting: a parseable legacy
+//!   record is merged into the same bench's history (as the oldest
+//!   entry, so trajectory diffs span the migration), while one poisoned
+//!   by the old non-finite-rendering bug is quarantined as a warning
+//!   rather than failing the roll-up.
+//!
+//! [`report`] parses everything with [`crate::util::json`], renders a
+//! cross-bench summary table plus a per-bench trajectory diff (latest
+//! vs previous record, wall-time regressions flagged), and **fails on
+//! any parse error in the artifacts this harness emits** (`*.jsonl`,
+//! `*.config.json`) — CI runs it after the bench step, so a schema
+//! regression in any emitter can never silently rot the artifacts.
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Wall-time growth beyond this fraction flags a bench as regressed in
+/// the summary table.
+pub const WALL_REGRESSION_THRESHOLD: f64 = 0.10;
+
+/// One bench's accumulated history, oldest record first.
+pub struct BenchHistory {
+    pub bench: String,
+    pub path: PathBuf,
+    pub records: Vec<Json>,
+}
+
+impl BenchHistory {
+    fn latest(&self) -> &Json {
+        self.records.last().expect("scan never yields empty histories")
+    }
+
+    fn previous(&self) -> Option<&Json> {
+        self.records.len().checked_sub(2).map(|i| &self.records[i])
+    }
+}
+
+/// Everything found under a results directory.
+pub struct ResultsScan {
+    pub benches: Vec<BenchHistory>,
+    pub snapshots: Vec<PathBuf>,
+    /// Legacy `*.json` files that do not parse — typically history
+    /// poisoned by the old non-finite-rendering bug.  Surfaced as
+    /// warnings: the current harness can no longer produce them, so
+    /// they must not brick the roll-up on machines with old results.
+    pub unreadable_legacy: Vec<(PathBuf, String)>,
+}
+
+/// Parse every artifact under `dir`.  An unparseable harness-emitted
+/// artifact (`*.jsonl`, `*.config.json`) is an error naming the file
+/// (and line, for JSONL); unparseable pre-migration `*.json` files are
+/// collected into [`ResultsScan::unreadable_legacy`] instead.  Legacy
+/// and JSONL records of the same bench merge into one history, legacy
+/// first (it always predates the append-mode migration).
+pub fn scan_results(dir: &Path) -> Result<ResultsScan> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading results dir '{}'", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    // Sorted, so `<bench>.json` contributes before `<bench>.jsonl`.
+    entries.sort();
+    let mut by_bench: BTreeMap<String, BenchHistory> = BTreeMap::new();
+    let mut snapshots = Vec::new();
+    let mut unreadable_legacy = Vec::new();
+    let mut add = |bench: String, path: PathBuf, mut records: Vec<Json>| {
+        match by_bench.entry(bench) {
+            std::collections::btree_map::Entry::Occupied(mut o) => {
+                let h = o.get_mut();
+                h.records.append(&mut records);
+                h.path = path;
+            }
+            std::collections::btree_map::Entry::Vacant(v) => {
+                let bench = v.key().clone();
+                v.insert(BenchHistory { bench, path, records });
+            }
+        }
+    };
+    for path in entries {
+        let fname = path.file_name().and_then(|s| s.to_str()).unwrap_or("").to_string();
+        let stem = fname.split('.').next().unwrap_or("").to_string();
+        let read = || {
+            std::fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))
+        };
+        if fname.ends_with(".config.json") {
+            let src = read()?;
+            // Full schema check, not just syntax: a snapshot the config
+            // loader cannot replay is already rotten.
+            crate::config::snapshot::load_run_config_json(&src)
+                .map_err(|e| anyhow!("{}: {e:#}", path.display()))?;
+            snapshots.push(path);
+        } else if fname.ends_with(".jsonl") {
+            let src = read()?;
+            let mut records = Vec::new();
+            for (i, line) in src.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                records.push(
+                    Json::parse(line)
+                        .map_err(|e| anyhow!("{} line {}: {e}", path.display(), i + 1))?,
+                );
+            }
+            if let Some(bench) = bench_id(&records, &stem) {
+                add(bench, path, records);
+            }
+        } else if fname.ends_with(".json") {
+            let src = read()?;
+            match Json::parse(&src) {
+                Ok(rec) => {
+                    let records = vec![rec];
+                    let bench = bench_id(&records, &stem).unwrap();
+                    add(bench, path, records);
+                }
+                Err(e) => unreadable_legacy.push((path, e.to_string())),
+            }
+        }
+        // Anything else (e.g. editor droppings) is ignored.
+    }
+    Ok(ResultsScan { benches: by_bench.into_values().collect(), snapshots, unreadable_legacy })
+}
+
+fn bench_id(records: &[Json], stem: &str) -> Option<String> {
+    let last = records.last()?;
+    Some(
+        last.get("bench")
+            .and_then(Json::as_str)
+            .unwrap_or(stem)
+            .to_string(),
+    )
+}
+
+fn wall_s(rec: &Json) -> Option<f64> {
+    rec.get("wall_time_s").and_then(Json::as_f64).filter(|w| w.is_finite())
+}
+
+/// Numeric scalar fields of a record's payload (`rows` in the unified
+/// schema, `data` in the legacy shape), plus the record's own wall time
+/// — the fields the trajectory diff compares.
+fn numeric_scalars(rec: &Json) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    if let Some(w) = wall_s(rec) {
+        out.insert("wall_time_s".to_string(), w);
+    }
+    let payload = rec.get("rows").or_else(|| rec.get("data"));
+    if let Some(Json::Obj(m)) = payload {
+        for (k, v) in m {
+            if let Json::Num(n) = v {
+                out.insert(k.clone(), *n);
+            }
+        }
+    }
+    out
+}
+
+fn pct_change(prev: f64, latest: f64) -> Option<f64> {
+    if prev != 0.0 && prev.is_finite() && latest.is_finite() {
+        Some(100.0 * (latest / prev - 1.0))
+    } else {
+        None
+    }
+}
+
+/// The cross-bench summary table.
+pub fn render_summary(scan: &ResultsScan) -> String {
+    let mut t = Table::new(vec![
+        "bench", "records", "latest rev", "wall (s)", "wall vs prev", "flags",
+    ])
+    .with_title("Run-artifact roll-up (latest record per bench)");
+    for b in &scan.benches {
+        let latest = b.latest();
+        let rev = latest.get("git_rev").and_then(Json::as_str).unwrap_or("-").to_string();
+        let wall = wall_s(latest);
+        let delta = b
+            .previous()
+            .and_then(wall_s)
+            .zip(wall)
+            .and_then(|(p, l)| pct_change(p, l));
+        let mut flags = String::new();
+        if delta.is_some_and(|d| d > 100.0 * WALL_REGRESSION_THRESHOLD) {
+            flags.push_str("WALL-REGRESSION");
+        }
+        t.add_row(vec![
+            b.bench.clone(),
+            b.records.len().to_string(),
+            rev,
+            wall.map(|w| format!("{w:.3}")).unwrap_or_else(|| "-".to_string()),
+            delta.map(|d| format!("{d:+.1}%")).unwrap_or_else(|| "-".to_string()),
+            flags,
+        ]);
+    }
+    t.render()
+}
+
+/// The latest-vs-previous field diff for one bench, or `None` with
+/// fewer than two records.
+pub fn render_trajectory(b: &BenchHistory) -> Option<String> {
+    let prev = numeric_scalars(b.previous()?);
+    let latest = numeric_scalars(b.latest());
+    let mut out = format!("{} (latest vs previous of {} records):\n", b.bench, b.records.len());
+    let mut any = false;
+    for (k, lv) in &latest {
+        match prev.get(k) {
+            Some(pv) => {
+                let delta = pct_change(*pv, *lv)
+                    .map(|d| format!(" ({d:+.1}%)"))
+                    .unwrap_or_default();
+                out.push_str(&format!("  {k}: {pv} -> {lv}{delta}\n"));
+            }
+            None => out.push_str(&format!("  {k}: (new) {lv}\n")),
+        }
+        any = true;
+    }
+    for k in prev.keys().filter(|k| !latest.contains_key(*k)) {
+        out.push_str(&format!("  {k}: dropped from the latest record\n"));
+        any = true;
+    }
+    if !any {
+        out.push_str("  (no numeric scalar fields to compare)\n");
+    }
+    Some(out)
+}
+
+/// Render the whole roll-up for a results directory: summary table,
+/// per-bench trajectories, snapshot count.  Errors when the directory
+/// is missing, empty of artifacts, or any artifact fails to parse.
+pub fn report(dir: &Path) -> Result<String> {
+    let scan = scan_results(dir)?;
+    if scan.benches.is_empty() && scan.snapshots.is_empty() && scan.unreadable_legacy.is_empty()
+    {
+        bail!("no run artifacts under '{}'", dir.display());
+    }
+    let mut out = render_summary(&scan);
+    for (path, err) in &scan.unreadable_legacy {
+        out.push_str(&format!(
+            "warning: {} predates the non-finite JSON fix and cannot be parsed ({err}); \
+             delete it or re-run the bench to start a fresh history\n",
+            path.display()
+        ));
+    }
+    let diffs: Vec<String> = scan.benches.iter().filter_map(render_trajectory).collect();
+    if !diffs.is_empty() {
+        out.push_str("\nTrajectories:\n");
+        for d in diffs {
+            out.push_str(&d);
+        }
+    }
+    out.push_str(&format!(
+        "\n{} bench histor{} ({} record{}), {} run-config snapshot{}\n",
+        scan.benches.len(),
+        if scan.benches.len() == 1 { "y" } else { "ies" },
+        scan.benches.iter().map(|b| b.records.len()).sum::<usize>(),
+        if scan.benches.iter().map(|b| b.records.len()).sum::<usize>() == 1 { "" } else { "s" },
+        scan.snapshots.len(),
+        if scan.snapshots.len() == 1 { "" } else { "s" },
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bench::write_record_at;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("snipsnap_report_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn rolls_up_accumulated_history_and_flags_regressions() {
+        let dir = tmpdir("ok");
+        assert!(write_record_at(&dir, "demo", 1.0, Json::obj(vec![("metric", Json::num(10.0))])));
+        assert!(write_record_at(&dir, "demo", 1.5, Json::obj(vec![("metric", Json::num(12.0))])));
+        std::fs::write(dir.join("legacy.json"), "{\"bench\":\"legacy\",\"data\":{\"x\":1}}")
+            .unwrap();
+        let cfg = crate::config::load_run_config(
+            "[run]\narch = \"arch3\"\n[[op]]\nm = 8\nn = 8\nk = 8\n",
+        )
+        .unwrap();
+        let snap = crate::config::snapshot::render(&cfg.arch, &cfg.workload, &cfg.search);
+        std::fs::write(dir.join("run-1.config.json"), snap).unwrap();
+        let out = report(&dir).unwrap();
+        assert!(out.contains("demo"), "{out}");
+        assert!(out.contains("legacy"), "{out}");
+        assert!(out.contains("WALL-REGRESSION"), "wall 1.0 -> 1.5 must flag:\n{out}");
+        assert!(out.contains("+50.0%"), "{out}");
+        assert!(out.contains("metric: 10 -> 12"), "{out}");
+        assert!(out.contains("1 run-config snapshot"), "{out}");
+        let scan = scan_results(&dir).unwrap();
+        assert_eq!(scan.benches.len(), 2);
+        assert_eq!(scan.benches.iter().find(|b| b.bench == "demo").unwrap().records.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Legacy single-record files merge into the same bench's JSONL
+    /// history (oldest first), so trajectory diffs span the migration;
+    /// legacy files poisoned by the old NaN-rendering bug are warnings,
+    /// not failures.
+    #[test]
+    fn legacy_records_merge_and_poisoned_legacy_warns() {
+        let dir = tmpdir("legacy");
+        std::fs::write(
+            dir.join("demo.json"),
+            "{\"bench\":\"demo\",\"data\":{\"metric\":9.0},\"wall_time_s\":1.0}",
+        )
+        .unwrap();
+        assert!(write_record_at(&dir, "demo", 1.2, Json::obj(vec![("metric", Json::num(10.0))])));
+        // The old Display bug wrote literal NaN — invalid JSON.
+        std::fs::write(dir.join("poisoned.json"), "{\"bench\":\"old\",\"x\":NaN}").unwrap();
+        let scan = scan_results(&dir).unwrap();
+        assert_eq!(scan.benches.len(), 1, "legacy + jsonl must merge into one history");
+        assert_eq!(scan.benches[0].records.len(), 2);
+        assert_eq!(scan.unreadable_legacy.len(), 1);
+        let out = report(&dir).unwrap();
+        assert!(out.contains("metric: 9 -> 10"), "diff must span the migration:\n{out}");
+        assert!(out.contains("warning") && out.contains("poisoned.json"), "{out}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn parse_errors_name_the_file_and_fail() {
+        let dir = tmpdir("bad");
+        assert!(write_record_at(&dir, "demo", 1.0, Json::Null));
+        std::fs::write(dir.join("broken.jsonl"), "{\"bench\":\"b\"}\n{oops\n").unwrap();
+        let e = report(&dir).unwrap_err().to_string();
+        assert!(e.contains("broken.jsonl"), "{e}");
+        assert!(e.contains("line 2"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_or_missing_dirs_error() {
+        let dir = tmpdir("empty");
+        assert!(report(&dir).unwrap_err().to_string().contains("no run artifacts"));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(report(&dir).is_err(), "missing dir must not be reported as healthy");
+    }
+
+    /// Every record shape the harness can emit — including non-finite
+    /// metrics, which serialize as null — must re-parse through the
+    /// scanner (the acceptance-level schema guarantee).
+    #[test]
+    fn harness_emitted_records_always_reparse() {
+        let dir = tmpdir("nan");
+        assert!(write_record_at(
+            &dir,
+            "edge",
+            f64::NAN,
+            Json::obj(vec![
+                ("nan", Json::num(f64::NAN)),
+                ("inf", Json::num(f64::INFINITY)),
+                ("neg", Json::num(f64::NEG_INFINITY)),
+                ("fine", Json::num(0.25)),
+            ]),
+        ));
+        assert!(write_record_at(&dir, "edge", 2.0, Json::arr([Json::num(1.0)])));
+        let out = report(&dir).unwrap();
+        assert!(out.contains("edge"), "{out}");
+        let scan = scan_results(&dir).unwrap();
+        let hist = &scan.benches[0];
+        assert_eq!(hist.records.len(), 2);
+        // The NaN wall time became null; the scanner treats it as absent.
+        assert_eq!(wall_s(&hist.records[0]), None);
+        assert_eq!(hist.records[0].get("rows").unwrap().get("nan"), Some(&Json::Null));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

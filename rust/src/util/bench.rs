@@ -1,10 +1,16 @@
 //! Tiny benchmark harness (criterion is unavailable offline).
 //!
 //! Each bench target is a `harness = false` binary that prints the
-//! corresponding paper table/figure as an ASCII table and appends a
-//! machine-readable record to `results/<bench>.json`.
+//! corresponding paper table/figure as an ASCII table and **appends** a
+//! machine-readable record to `results/<bench>.jsonl` — one JSON object
+//! per line, so the performance trajectory accumulates across runs
+//! instead of the last run clobbering the history.  `snipsnap report`
+//! rolls the accumulated records up into a cross-bench summary (see
+//! [`crate::report`] and docs/ARCHITECTURE.md "Run artifacts").
 
 use crate::util::json::Json;
+use std::io::Write;
+use std::path::Path;
 use std::time::Instant;
 
 /// Measure wall-clock seconds of one closure run.
@@ -26,50 +32,71 @@ pub fn time_median<T>(n: usize, mut f: impl FnMut() -> T) -> f64 {
     crate::util::stats::median(&samples)
 }
 
-/// Write a bench result record to `results/<name>.json`.
-pub fn write_result(name: &str, payload: Json) {
-    let dir = std::path::Path::new("results");
-    if std::fs::create_dir_all(dir).is_err() {
-        return;
-    }
-    let path = dir.join(format!("{name}.json"));
-    let record = Json::obj(vec![("bench", Json::str(name)), ("data", payload)]);
-    let _ = std::fs::write(path, record.to_string());
-}
-
 /// Current git revision (short), or `"unknown"` outside a work tree /
-/// without git on PATH.  Used to stamp bench records so result files are
-/// attributable after the fact.
+/// without git on PATH.  Used to stamp bench records and run-config
+/// snapshots so result files are attributable after the fact.  Memoized:
+/// the subprocess runs at most once per process.
 pub fn git_rev() -> String {
-    std::process::Command::new("git")
-        .args(["rev-parse", "--short", "HEAD"])
-        .output()
-        .ok()
-        .filter(|o| o.status.success())
-        .and_then(|o| String::from_utf8(o.stdout).ok())
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .unwrap_or_else(|| "unknown".to_string())
+    static REV: std::sync::OnceLock<String> = std::sync::OnceLock::new();
+    REV.get_or_init(|| {
+        std::process::Command::new("git")
+            .args(["rev-parse", "--short", "HEAD"])
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .and_then(|o| String::from_utf8(o.stdout).ok())
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .unwrap_or_else(|| "unknown".to_string())
+    })
+    .clone()
 }
 
-/// Write a bench record under the unified schema (ROADMAP "bench JSON
-/// emission"): `{bench, git_rev, wall_time_s, rows}` — bench id, the
-/// git revision the numbers came from, total wall time of the run, and
-/// the per-row payload (an array or object of measurements).  New bench
-/// targets should prefer this over the legacy [`write_result`] shape.
-pub fn write_record(name: &str, wall_time_s: f64, rows: Json) {
-    let dir = std::path::Path::new("results");
-    if std::fs::create_dir_all(dir).is_err() {
-        return;
-    }
-    let path = dir.join(format!("{name}.json"));
-    let record = Json::obj(vec![
+/// Seconds since the Unix epoch (0.0 when the clock is unavailable);
+/// orders a bench's accumulated records in time.
+fn unix_ts() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0)
+}
+
+/// Build one bench record under the unified schema: `{bench, git_rev,
+/// ts_unix, wall_time_s, rows}` — bench id, the git revision the numbers
+/// came from, the record's wall-clock position, total wall time of the
+/// run, and the per-row payload (an array or object of measurements).
+pub fn record_json(name: &str, wall_time_s: f64, rows: Json) -> Json {
+    Json::obj(vec![
         ("bench", Json::str(name)),
         ("git_rev", Json::str(&git_rev())),
+        ("ts_unix", Json::num(unix_ts())),
         ("wall_time_s", Json::num(wall_time_s)),
         ("rows", rows),
-    ]);
-    let _ = std::fs::write(path, record.to_string());
+    ])
+}
+
+/// Append one unified-schema record line to `<dir>/<name>.jsonl`.
+/// Returns `false` when the filesystem refused (benches treat results
+/// emission as best-effort; tests assert on the return).
+pub fn write_record_at(dir: &Path, name: &str, wall_time_s: f64, rows: Json) -> bool {
+    if std::fs::create_dir_all(dir).is_err() {
+        return false;
+    }
+    let path = dir.join(format!("{name}.jsonl"));
+    let line = format!("{}\n", record_json(name, wall_time_s, rows));
+    std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .and_then(|mut f| f.write_all(line.as_bytes()))
+        .is_ok()
+}
+
+/// Append a bench record to `results/<name>.jsonl` under the unified
+/// schema.  Records accumulate across runs — nothing is truncated — so
+/// `snipsnap report` can diff the latest run against the previous one.
+pub fn write_record(name: &str, wall_time_s: f64, rows: Json) {
+    let _ = write_record_at(Path::new("results"), name, wall_time_s, rows);
 }
 
 /// Standard bench banner.
@@ -97,5 +124,30 @@ mod tests {
         assert!(t >= 0.0);
         let m = time_median(3, || (0..100).product::<u128>());
         assert!(m >= 0.0);
+    }
+
+    /// Regression: `write_record` used `fs::write` (truncate), so every
+    /// bench run destroyed the accumulated history.  Two consecutive
+    /// calls must yield two parseable records.
+    #[test]
+    fn write_record_appends_history() {
+        let dir = std::env::temp_dir()
+            .join(format!("snipsnap_bench_append_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(write_record_at(&dir, "t", 0.5, Json::obj(vec![("x", Json::num(1.0))])));
+        assert!(write_record_at(&dir, "t", 0.7, Json::num(f64::NAN)));
+        let text = std::fs::read_to_string(dir.join("t.jsonl")).unwrap();
+        let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+        assert_eq!(lines.len(), 2, "append must accumulate history:\n{text}");
+        for l in &lines {
+            let rec = Json::parse(l).unwrap_or_else(|e| panic!("{l}: {e}"));
+            assert_eq!(rec.get("bench").unwrap().as_str(), Some("t"));
+            assert!(rec.get("git_rev").unwrap().as_str().is_some());
+            assert!(rec.get("ts_unix").unwrap().as_f64().is_some());
+            assert!(rec.get("wall_time_s").unwrap().as_f64().is_some());
+        }
+        // A NaN payload must still be valid JSON (non-finite -> null).
+        assert_eq!(Json::parse(lines[1]).unwrap().get("rows"), Some(&Json::Null));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

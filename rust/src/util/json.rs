@@ -3,7 +3,14 @@
 //! Reader: recursive-descent parser covering the full JSON grammar minus
 //! exotic number forms; enough for `artifacts/manifest.json` and result
 //! files.  Writer: escape-correct serialization used by the bench harness
-//! to dump machine-readable results.
+//! and the run-artifact layer to dump machine-readable results.
+//!
+//! Non-finite numbers: JSON has no `NaN`/`Infinity` literals, so
+//! [`Json::Num`] values that are not finite serialize as `null`.  Every
+//! rendered document therefore re-parses with [`Json::parse`], even when
+//! a bench metric degenerates to `NaN` or `inf`.  Finite numbers render
+//! with Rust's shortest-round-trip float formatting, so
+//! parse → render → parse is the identity on them.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -44,8 +51,26 @@ impl Json {
         }
     }
 
+    /// Integral non-negative value as `usize`; `None` for negative,
+    /// non-finite, fractional or out-of-range numbers (a saturating
+    /// cast would silently corrupt such inputs).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|n| n as usize)
+        self.as_u64().filter(|n| *n <= usize::MAX as u64).map(|n| n as usize)
+    }
+
+    /// Integral non-negative value as `u64`, with the same hardening as
+    /// [`Json::as_usize`].
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64()
+            .filter(|n| n.is_finite() && *n >= 0.0 && n.fract() == 0.0 && *n < u64::MAX as f64)
+            .map(|n| n as u64)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
     }
 
     pub fn as_arr(&self) -> Option<&[Json]> {
@@ -293,7 +318,10 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // No NaN/inf literals in JSON (see module docs).
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -378,6 +406,34 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let re = Json::parse(&v.to_string()).unwrap();
         assert_eq!(v, re);
+    }
+
+    /// Regression: non-finite numbers used to render verbatim (`NaN`,
+    /// `inf`) — invalid JSON that poisoned every downstream reader.
+    #[test]
+    fn non_finite_numbers_render_as_null() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let doc = Json::obj(vec![("metric", Json::num(bad)), ("ok", Json::num(1.5))]);
+            let rendered = doc.to_string();
+            let re = Json::parse(&rendered).unwrap_or_else(|e| panic!("{rendered}: {e}"));
+            assert_eq!(re.get("metric"), Some(&Json::Null), "{rendered}");
+            assert_eq!(re.get("ok").unwrap().as_f64(), Some(1.5));
+        }
+        assert_eq!(Json::arr([Json::num(f64::NAN)]).to_string(), "[null]");
+    }
+
+    #[test]
+    fn as_usize_rejects_negative_and_non_finite() {
+        assert_eq!(Json::num(4.0).as_usize(), Some(4));
+        assert_eq!(Json::num(-1.0).as_usize(), None);
+        assert_eq!(Json::num(2.5).as_usize(), None);
+        assert_eq!(Json::num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::num(f64::INFINITY).as_usize(), None);
+        assert_eq!(Json::num(1e19).as_usize(), None, "beyond u64 range");
+        assert_eq!(Json::Str("4".into()).as_usize(), None);
+        assert_eq!(Json::num(9.0e15).as_u64(), Some(9_000_000_000_000_000));
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+        assert_eq!(Json::num(1.0).as_bool(), None);
     }
 
     #[test]

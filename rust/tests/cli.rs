@@ -142,6 +142,89 @@ wgt_density = 0.5
     assert!(stdout.contains("pruned by lower bound"), "{stdout}");
 }
 
+/// The replayable-artifact contract at the CLI surface: a search run
+/// emits a JSON run-config snapshot which, fed back via --config,
+/// reproduces the design table and totals byte for byte.
+#[test]
+fn snapshot_replays_identically_through_config() {
+    let dir = std::env::temp_dir().join("snipsnap_cli_snapshot");
+    std::fs::create_dir_all(&dir).unwrap();
+    let snap = dir.join("run.config.json");
+    let _ = std::fs::remove_file(&snap);
+    let out1 = snipsnap()
+        .args([
+            "search", "--arch", "arch3", "--workload", "gqa-tiny", "--mode", "fixed",
+            "--max-mappings", "200", "--prefill", "32", "--decode", "4",
+            "--snapshot", snap.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run");
+    assert!(out1.status.success(), "{}", String::from_utf8_lossy(&out1.stderr));
+    let stderr1 = String::from_utf8_lossy(&out1.stderr);
+    assert!(stderr1.contains("run-config snapshot:"), "{stderr1}");
+    let text = std::fs::read_to_string(&snap).expect("snapshot written");
+    assert!(text.trim_start().starts_with('{'), "snapshot must be JSON:\n{text}");
+    assert!(text.contains("snipsnap_run_config"), "{text}");
+
+    let out2 = snipsnap()
+        .args(["search", "--config", snap.to_str().unwrap(), "--snapshot", "off"])
+        .output()
+        .expect("replay");
+    assert!(out2.status.success(), "{}", String::from_utf8_lossy(&out2.stderr));
+    // Timing/counter lines vary run to run; the design table and totals
+    // (every format pick, energy and cycle figure) must not.
+    let stable = |s: &str| -> String {
+        s.lines()
+            .filter(|l| {
+                !l.starts_with("search:") && !l.starts_with("cache:")
+                    && !l.starts_with("enumeration:")
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    assert_eq!(
+        stable(&String::from_utf8_lossy(&out1.stdout)),
+        stable(&String::from_utf8_lossy(&out2.stdout)),
+        "replayed run diverged from the original"
+    );
+}
+
+/// `snipsnap report` renders a summary from accumulated records and
+/// fails (non-zero) on unparseable artifacts.
+#[test]
+fn report_rolls_up_results_and_rejects_rot() {
+    let dir = std::env::temp_dir().join("snipsnap_cli_report/results");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("demo.jsonl"),
+        "{\"bench\":\"demo\",\"git_rev\":\"aaa\",\"ts_unix\":1,\"wall_time_s\":1.0,\
+         \"rows\":{\"metric\":2.0}}\n\
+         {\"bench\":\"demo\",\"git_rev\":\"bbb\",\"ts_unix\":2,\"wall_time_s\":1.5,\
+         \"rows\":{\"metric\":3.0}}\n",
+    )
+    .unwrap();
+    let out = snipsnap()
+        .args(["report", "--dir", dir.to_str().unwrap()])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("demo"), "{stdout}");
+    assert!(stdout.contains("bbb"), "latest rev must render:\n{stdout}");
+    assert!(stdout.contains("metric: 2 -> 3"), "trajectory diff missing:\n{stdout}");
+    assert!(stdout.contains("WALL-REGRESSION"), "{stdout}");
+
+    std::fs::write(dir.join("rotten.jsonl"), "{not json\n").unwrap();
+    let out = snipsnap()
+        .args(["report", "--dir", dir.to_str().unwrap()])
+        .output()
+        .expect("run");
+    assert!(!out.status.success(), "parse errors must fail the report");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("rotten.jsonl"), "{stderr}");
+}
+
 #[test]
 fn bad_flags_fail_cleanly() {
     let out = snipsnap()

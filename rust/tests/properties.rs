@@ -1,6 +1,7 @@
 //! Property-based tests over the core invariants (custom harness in
 //! `snipsnap::util::proptest` — proptest is unavailable offline).
 
+use snipsnap::config;
 use snipsnap::dataflow::mapper::{all_orders, spatial_candidates};
 use snipsnap::dataflow::nest::simulate_fills;
 use snipsnap::dataflow::{access_counts, LoopDim, Mapping, ProblemDims, Spatial, TileLevel};
@@ -9,6 +10,7 @@ use snipsnap::sparsity::analyzer::{analytical_cost, expected_ne};
 use snipsnap::sparsity::exact::exact_ne;
 use snipsnap::sparsity::sample::sample_mask;
 use snipsnap::sparsity::SparsityPattern;
+use snipsnap::util::json::Json;
 use snipsnap::util::proptest::{run, Gen};
 use snipsnap::workload::llm::{build_llm, weight_nm_variant, LlmShape, LlmSparsity, Phase};
 use snipsnap::workload::moe::{build_moe, MoeShape};
@@ -387,6 +389,119 @@ fn moe_expert_macs_linear_in_topk() {
                 (got - want).abs() <= 1e-9 * want,
                 "top_k={k}: expert MACs {got} vs {want}"
             );
+        }
+    });
+}
+
+// --- Run-artifact round-trip properties (the grown results layer) ------
+
+/// Random JSON values, depth-bounded, covering special floats, deep
+/// nesting and unicode/control-character strings.
+fn random_json(g: &mut Gen, depth: usize) -> Json {
+    let pick = if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool()),
+        2 => Json::Num(random_f64(g)),
+        3 => Json::Str(random_string(g)),
+        4 => Json::arr((0..g.usize_in(0, 3)).map(|_| random_json(g, depth - 1))),
+        _ => Json::Obj(
+            (0..g.usize_in(0, 3))
+                .map(|_| (random_string(g), random_json(g, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+fn random_f64(g: &mut Gen) -> f64 {
+    match g.usize_in(0, 7) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => f64::NEG_INFINITY,
+        3 => 0.0,
+        4 => -0.0,
+        5 => g.f64_in(-1.0, 1.0),
+        6 => g.f64_in(-1e18, 1e18),
+        _ => g.f64_in(0.0, 1.0) * 1e-12,
+    }
+}
+
+fn random_string(g: &mut Gen) -> String {
+    let pool = [
+        'a', 'Z', '0', ' ', '"', '\\', '/', '\n', '\t', '\r', '\u{1}', '\u{1f}', 'é', '日',
+        '🦀', '\u{2028}',
+    ];
+    (0..g.usize_in(0, 8)).map(|_| *g.choose(&pool)).collect()
+}
+
+/// What the writer documents: non-finite numbers come back as null,
+/// everything else round-trips exactly.
+fn json_normalize(v: &Json) -> Json {
+    match v {
+        Json::Num(n) if !n.is_finite() => Json::Null,
+        Json::Arr(a) => Json::Arr(a.iter().map(json_normalize).collect()),
+        Json::Obj(m) => {
+            Json::Obj(m.iter().map(|(k, v)| (k.clone(), json_normalize(v))).collect())
+        }
+        other => other.clone(),
+    }
+}
+
+/// `Json::parse` must accept every document the writer can produce —
+/// special floats, deep nesting and unicode included — and reproduce
+/// the written value (modulo the documented non-finite -> null policy).
+#[test]
+fn json_display_parse_identity() {
+    run("Json parse(render(v)) == normalize(v)", 300, |g| {
+        let v = random_json(g, 4);
+        let rendered = v.to_string();
+        let reparsed = Json::parse(&rendered)
+            .unwrap_or_else(|e| panic!("writer produced unparseable JSON: {e}\n{rendered}"));
+        assert_eq!(reparsed, json_normalize(&v), "render was:\n{rendered}");
+        // Rendering is stable: a second render of the reparsed value is
+        // byte-identical (the fixed-point the snapshot layer relies on —
+        // non-finite inputs already rendered as null the first time).
+        assert_eq!(reparsed.to_string(), rendered, "re-render drifted");
+    });
+}
+
+/// TOML `[[op]]` workloads survive the full artifact pipeline: parse ->
+/// typed config -> JSON snapshot render -> reload -> identical snapshot
+/// bytes and identical typed fields.
+#[test]
+fn toml_array_of_tables_roundtrips_through_snapshot() {
+    run("[[op]] -> RunConfig -> snapshot fixed point", 40, |g| {
+        let nops = g.usize_in(1, 4);
+        let mut toml = String::from(
+            "[run]\narch = \"arch3\"\nmetric = \"edp\"\nmode = \"fixed\"\n\
+             [search]\nmax_mappings = 200\n",
+        );
+        let mut dims = Vec::new();
+        for i in 0..nops {
+            let (m, n, k) =
+                (g.dim(256).max(2), g.dim(256).max(2), g.dim(256).max(2));
+            let ad = (g.u64_in(1, 100) as f64) / 100.0;
+            let wd = (g.u64_in(1, 100) as f64) / 100.0;
+            let count = g.u64_in(1, 64);
+            toml.push_str(&format!(
+                "[[op]]\nname = \"op_{i}\"\nm = {m}\nn = {n}\nk = {k}\n\
+                 act_density = {ad}\nwgt_density = {wd}\ncount = {count}\n"
+            ));
+            dims.push((m, n, k, ad, wd, count));
+        }
+        let cfg = config::load_run_config(&toml).unwrap_or_else(|e| panic!("{e}\n{toml}"));
+        assert_eq!(cfg.workload.ops.len(), nops);
+        let snap = config::snapshot::render(&cfg.arch, &cfg.workload, &cfg.search);
+        let cfg2 = config::load_run_config_any(&snap).unwrap_or_else(|e| panic!("{e}\n{snap}"));
+        let snap2 = config::snapshot::render(&cfg2.arch, &cfg2.workload, &cfg2.search);
+        assert_eq!(snap, snap2, "snapshot must be a fixed point of render∘load");
+        for (i, op) in cfg2.workload.ops.iter().enumerate() {
+            let (m, n, k, ad, wd, count) = dims[i];
+            assert_eq!(op.name, format!("op_{i}"));
+            assert_eq!((op.dims.m, op.dims.n, op.dims.k), (m, n, k));
+            assert_eq!(op.spec.input.density(), ad, "{}", op.name);
+            assert_eq!(op.spec.weight.density(), wd, "{}", op.name);
+            assert_eq!(op.count, count);
         }
     });
 }

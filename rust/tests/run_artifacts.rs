@@ -1,0 +1,120 @@
+//! Replayable run artifacts, end to end: TOML `[[op]]` workloads →
+//! co-search → JSON run-config snapshot → reload → **bit-identical**
+//! designs and scores, plus the append-mode bench history and the
+//! `snipsnap::report` roll-up over a synthetic results directory.
+
+use snipsnap::config::{self, snapshot};
+use snipsnap::search::cosearch_workload;
+use snipsnap::util::bench::write_record_at;
+use snipsnap::util::json::Json;
+use std::path::PathBuf;
+
+const CFG: &str = r#"
+[run]
+arch = "arch3"
+metric = "memory-energy"
+mode = "search"
+
+[search]
+top_k = 2
+max_depth = 3
+max_mappings = 150
+threads = 2
+
+[[op]]
+name = "fc1"
+m = 64
+n = 64
+k = 128
+act_density = 0.4
+wgt_density = 0.5
+count = 2
+
+[[op]]
+m = 32
+n = 64
+k = 64
+act_density = 0.25
+"#;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("snipsnap_artifacts_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The acceptance contract: a snapshot fed back through the config
+/// loader reproduces bit-identical designs and scores.
+#[test]
+fn snapshot_replay_is_bit_identical() {
+    let cfg = config::load_run_config(CFG).unwrap();
+    assert_eq!(cfg.workload.ops[0].name, "fc1");
+    assert_eq!(cfg.workload.ops[1].name, "op1");
+    let r1 = cosearch_workload(&cfg.arch, &cfg.workload, &cfg.search);
+
+    let snap = snapshot::render(&cfg.arch, &cfg.workload, &cfg.search);
+    let cfg2 = config::load_run_config_any(&snap).unwrap();
+    let r2 = cosearch_workload(&cfg2.arch, &cfg2.workload, &cfg2.search);
+
+    assert_eq!(r1.total_energy_pj().to_bits(), r2.total_energy_pj().to_bits());
+    assert_eq!(r1.memory_energy_pj().to_bits(), r2.memory_energy_pj().to_bits());
+    assert_eq!(r1.total_cycles().to_bits(), r2.total_cycles().to_bits());
+    assert_eq!(r1.designs.len(), r2.designs.len());
+    for (a, b) in r1.designs.iter().zip(&r2.designs) {
+        assert_eq!(a.op_name, b.op_name);
+        assert_eq!(a.input_format.to_string(), b.input_format.to_string());
+        assert_eq!(a.weight_format.to_string(), b.weight_format.to_string());
+        assert_eq!(a.metric_value.to_bits(), b.metric_value.to_bits(), "{}", a.op_name);
+        assert_eq!(format!("{:?}", a.mapping), format!("{:?}", b.mapping), "{}", a.op_name);
+    }
+
+    // The snapshot is a fixed point of render∘load — byte-for-byte.
+    let snap2 = snapshot::render(&cfg2.arch, &cfg2.workload, &cfg2.search);
+    assert_eq!(snap, snap2);
+}
+
+/// Every record the harness emits must re-parse (unified schema,
+/// non-finite metrics included) and accumulate instead of clobbering.
+#[test]
+fn bench_history_accumulates_and_reports() {
+    let dir = tmpdir("report");
+    for (wall, speedup) in [(1.0, 12.0), (1.05, f64::NAN)] {
+        assert!(write_record_at(
+            &dir,
+            "table1_speed",
+            wall,
+            Json::obj(vec![("geomean_fixed_speedup", Json::num(speedup))]),
+        ));
+    }
+    let scan = snipsnap::report::scan_results(&dir).unwrap();
+    assert_eq!(scan.benches.len(), 1);
+    assert_eq!(scan.benches[0].bench, "table1_speed");
+    assert_eq!(scan.benches[0].records.len(), 2, "history must accumulate");
+    let out = snipsnap::report::report(&dir).unwrap();
+    assert!(out.contains("table1_speed"), "{out}");
+    assert!(out.contains("wall_time_s: 1 -> 1.05"), "{out}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A run-config snapshot written next to the results is picked up (and
+/// schema-checked) by the report scanner.
+#[test]
+fn snapshots_ride_along_in_results() {
+    let dir = tmpdir("snap");
+    let cfg = config::load_run_config(CFG).unwrap();
+    let snap = snapshot::render(&cfg.arch, &cfg.workload, &cfg.search);
+    std::fs::write(dir.join("run-0.config.json"), &snap).unwrap();
+    assert!(write_record_at(&dir, "demo", 0.1, Json::Null));
+    let scan = snipsnap::report::scan_results(&dir).unwrap();
+    assert_eq!(scan.snapshots.len(), 1);
+    // ...and the ride-along snapshot still replays.
+    let replay = std::fs::read_to_string(&scan.snapshots[0]).unwrap();
+    assert!(config::load_run_config_any(&replay).is_ok());
+    // A corrupted snapshot fails the scan, naming the file.
+    std::fs::write(dir.join("bad.config.json"), "{truncated").unwrap();
+    let e = snipsnap::report::scan_results(&dir).unwrap_err().to_string();
+    assert!(e.contains("bad.config.json"), "{e}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
