@@ -8,7 +8,9 @@
 //! report` diffs the latest run against the previous one.
 
 use snipsnap::arch::presets;
-use snipsnap::cost::{evaluate, CompressionRatios, Metric};
+use snipsnap::cost::{
+    evaluate, CompressionRatios, ContentionParams, CostBackend, CostModel, EvalInputs, Metric,
+};
 use snipsnap::dataflow::mapper::MapperConfig;
 use snipsnap::dataflow::{access_counts, LoopDim, Mapping, ProblemDims, Spatial, TileLevel};
 use snipsnap::engine::{search_formats, EngineConfig};
@@ -64,6 +66,47 @@ fn main() {
     }) / n as f64;
     println!("evaluate:             {:>8.1} ns/call", t_ev * 1e9);
 
+    // 2b) cost backends head to head on the same mapping: the flat
+    //     analytical bits→cycles transform vs the contention roofline
+    //     (burst roundup, bandwidth derate, decompression throughput —
+    //     docs/COST.md).  Both consume the same AccessCounts, so the
+    //     delta is the backend alone; contention must dominate.
+    let ac = access_counts(&mapping, &p);
+    let ratios = CompressionRatios { input: 0.5, weight: 0.6 };
+    let reduction = ReductionStrategy::NONE;
+    let inp = EvalInputs {
+        arch: &arch,
+        p: &p,
+        mapping: &mapping,
+        spec: &spec,
+        reduction: &reduction,
+        ratios: &ratios,
+    };
+    let contention = CostModel::Contention(ContentionParams::default());
+    let t_ra = time_median(5, || {
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += CostModel::Analytical.report(&inp, &ac).latency_cycles();
+        }
+        acc
+    }) / n as f64;
+    let t_rc = time_median(5, || {
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += contention.report(&inp, &ac).latency_cycles();
+        }
+        acc
+    }) / n as f64;
+    let cyc_a = CostModel::Analytical.report(&inp, &ac).latency_cycles();
+    let cyc_c = contention.report(&inp, &ac).latency_cycles();
+    assert!(cyc_c >= cyc_a, "contention latency {cyc_c} < analytical {cyc_a}");
+    println!("report (analytical):  {:>8.1} ns/call", t_ra * 1e9);
+    println!(
+        "report (contention):  {:>8.1} ns/call  ({:.3}x latency of analytical)",
+        t_rc * 1e9,
+        cyc_c / cyc_a
+    );
+
     // 3) engine format search on a 4096x4096 tensor.
     let cfg = EngineConfig::default();
     let pattern = SparsityPattern::Unstructured { density: 0.3 };
@@ -96,6 +139,32 @@ fn main() {
     });
     println!("cosearch op (fixed):  {:>8.2} ms", t_fixed * 1e3);
     println!("cosearch op (search): {:>8.2} ms", t_search * 1e3);
+
+    // 4b) the same op co-searched for latency under each cost backend.
+    //     Contention latency dominates analytical exactly per mapping
+    //     (asserted above); the whole-search comparison also crosses
+    //     the backend-metric-driven tile refinement, hence the slack
+    //     (rust/tests/cost_backends.rs documents the distinction).
+    let mk_cost = |cost| SearchConfig {
+        metric: Metric::Latency,
+        mode: FormatMode::Fixed,
+        mapper: MapperConfig { max_candidates: 2_000, ..Default::default() },
+        cost,
+        ..Default::default()
+    };
+    let lat_a = cosearch_workload(&arch, &w, &mk_cost(CostModel::Analytical));
+    let lat_c = cosearch_workload(&arch, &w, &mk_cost(contention));
+    assert!(
+        lat_c.total_cycles() >= lat_a.total_cycles() * 0.98,
+        "contention co-search undercut the analytical optimum: {} < {}",
+        lat_c.total_cycles(),
+        lat_a.total_cycles(),
+    );
+    println!(
+        "cosearch latency:     {:>8.3e} cyc analytical | {:>8.3e} cyc contention",
+        lat_a.total_cycles(),
+        lat_c.total_cycles(),
+    );
 
     // 5) parallel co-search + memoized evaluation: the Fig. 10 LLaMA2-7B
     //    activation-sparsity workload, serial vs 4 worker threads.  The
@@ -175,6 +244,11 @@ fn main() {
         Json::obj(vec![
             ("access_counts_ns", Json::num(t_ac * 1e9)),
             ("evaluate_ns", Json::num(t_ev * 1e9)),
+            ("report_analytical_ns", Json::num(t_ra * 1e9)),
+            ("report_contention_ns", Json::num(t_rc * 1e9)),
+            ("latency_ratio_contention", Json::num(cyc_c / cyc_a)),
+            ("cosearch_latency_analytical_cycles", Json::num(lat_a.total_cycles())),
+            ("cosearch_latency_contention_cycles", Json::num(lat_c.total_cycles())),
             ("search_formats_ms", Json::num(t_fs * 1e3)),
             ("cosearch_fixed_ms", Json::num(t_fixed * 1e3)),
             ("cosearch_search_ms", Json::num(t_search * 1e3)),

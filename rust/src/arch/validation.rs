@@ -5,7 +5,7 @@
 
 use super::published::{DSTC_LATENCY, SCNN_ENERGY};
 use super::{presets, Accelerator};
-use crate::cost::Metric;
+use crate::cost::{CostModel, Metric};
 use crate::dataflow::ProblemDims;
 use crate::search::{cosearch_workload, FormatMode, SearchConfig};
 use crate::sparsity::SparsitySpec;
@@ -23,7 +23,7 @@ pub struct ValidationRow {
     pub rel_err: f64,
 }
 
-fn quick_cfg(metric: Metric) -> SearchConfig {
+fn quick_cfg(metric: Metric, cost: CostModel) -> SearchConfig {
     SearchConfig {
         metric,
         mode: FormatMode::Fixed,
@@ -33,6 +33,7 @@ fn quick_cfg(metric: Metric) -> SearchConfig {
             max_candidates: 24_000,
             ..Default::default()
         },
+        cost,
         ..Default::default()
     }
 }
@@ -42,15 +43,16 @@ fn run_energy(arch: &Accelerator, spec: SparsitySpec, dims: ProblemDims) -> f64 
         name: "validation".into(),
         ops: vec![MatMulOp { name: "op".into(), dims, spec, count: 1 }],
     };
-    cosearch_workload(arch, &w, &quick_cfg(Metric::Energy)).total_energy_pj()
+    cosearch_workload(arch, &w, &quick_cfg(Metric::Energy, CostModel::Analytical))
+        .total_energy_pj()
 }
 
-fn run_latency(arch: &Accelerator, spec: SparsitySpec, dims: ProblemDims) -> f64 {
+fn run_latency(arch: &Accelerator, spec: SparsitySpec, dims: ProblemDims, cost: CostModel) -> f64 {
     let w = Workload {
         name: "validation".into(),
         ops: vec![MatMulOp { name: "op".into(), dims, spec, count: 1 }],
     };
-    cosearch_workload(arch, &w, &quick_cfg(Metric::Latency)).total_cycles()
+    cosearch_workload(arch, &w, &quick_cfg(Metric::Latency, cost)).total_cycles()
 }
 
 /// Fig. 8: SCNN energy validation.  Returns (mean relative error, rows).
@@ -88,15 +90,26 @@ pub fn scnn_energy_validation() -> (f64, Vec<ValidationRow>) {
     (mre, rows)
 }
 
-/// Fig. 9: DSTC latency validation on the 4096x4096 MatMul.
+/// Fig. 9: DSTC latency validation on the 4096x4096 MatMul, with the
+/// default (analytical) cost backend — the paper-comparison series.
 pub fn dstc_latency_validation() -> (f64, Vec<ValidationRow>) {
+    dstc_latency_validation_with(CostModel::Analytical)
+}
+
+/// [`dstc_latency_validation`] under an explicit cost backend.  Each
+/// point is still normalized against a dense baseline searched under the
+/// **same** backend, so burst and derate constants largely divide out;
+/// only the accuracy assertions in the test/bench layers differ (the
+/// contention series is validated for finiteness and monotone trend,
+/// not pinned to the published MRE envelope — see `docs/COST.md`).
+pub fn dstc_latency_validation_with(cost: CostModel) -> (f64, Vec<ValidationRow>) {
     let arch = presets::dstc_validation();
     let dims = ProblemDims::new(4096, 4096, 4096);
-    let dense = run_latency(&arch, SparsitySpec::dense(), dims);
+    let dense = run_latency(&arch, SparsitySpec::dense(), dims, cost);
     let mut rows = Vec::new();
     for p in &DSTC_LATENCY {
         let spec = SparsitySpec::unstructured(p.act_density, p.wgt_density);
-        let modeled = run_latency(&arch, spec, dims) / dense;
+        let modeled = run_latency(&arch, spec, dims, cost) / dense;
         rows.push(ValidationRow {
             layer: "4096x4096",
             case: "latency",
@@ -139,6 +152,26 @@ mod tests {
                 w[1].modeled <= w[0].modeled + 1e-9,
                 "not monotone: {rows:?}"
             );
+        }
+    }
+
+    #[test]
+    fn dstc_validation_under_contention_is_finite_and_monotone() {
+        // The contention series is not pinned to the published MRE (the
+        // reference numbers were fit against a flat-bandwidth model);
+        // it must stay finite, positive, and keep the density trend.
+        let (mre, rows) =
+            dstc_latency_validation_with(CostModel::Contention(Default::default()));
+        assert_eq!(rows.len(), DSTC_LATENCY.len());
+        assert!(mre.is_finite(), "contention MRE {mre}");
+        for w in rows.windows(2) {
+            assert!(
+                w[1].modeled <= w[0].modeled + 1e-9,
+                "not monotone: {rows:?}"
+            );
+        }
+        for r in &rows {
+            assert!(r.modeled.is_finite() && r.modeled > 0.0, "{r:?}");
         }
     }
 }

@@ -22,7 +22,8 @@
 
 use super::typed::{metric_by_name, reduction_by_name, RunConfig};
 use crate::arch::{Accelerator, MacArray, MemLevel};
-use crate::cost::Metric;
+use crate::cost::{ContentionParams, CostModel, Metric};
+use crate::dataflow::MAX_LEVELS;
 use crate::dataflow::mapper::MapperConfig;
 use crate::dataflow::{LoopDim, ProblemDims};
 use crate::engine::EngineConfig;
@@ -367,7 +368,65 @@ fn search_json(s: &SearchConfig) -> Json {
         ("pairs_to_map", num_u(s.pairs_to_map as u64)),
         ("threads", num_u(s.threads as u64)),
         ("prune", Json::Bool(s.prune)),
+        ("cost", cost_json(&s.cost)),
     ])
+}
+
+/// Serialize the cost backend.  Per-level arrays are written in full
+/// ([`MAX_LEVELS`] entries) so the snapshot is machine-independent; the
+/// disabled-decompressor state uses the `null` sentinel (like
+/// `capacity_bits`), since `Infinity` is not valid JSON.
+fn cost_json(c: &CostModel) -> Json {
+    match c {
+        CostModel::Analytical => Json::obj(vec![("backend", Json::str("analytical"))]),
+        CostModel::Contention(p) => Json::obj(vec![
+            ("backend", Json::str("contention")),
+            (
+                "bandwidth_derate",
+                Json::arr(p.bandwidth_derate.iter().map(|&d| Json::num(d))),
+            ),
+            ("burst_bits", Json::arr(p.burst_bits.iter().map(|&w| Json::num(w)))),
+            (
+                "decompress_bits_per_cycle",
+                p.decompress_bits_per_cycle.map(Json::num).unwrap_or(Json::Null),
+            ),
+        ]),
+    }
+}
+
+fn levels_from(v: &Json, k: &str) -> Result<[f64; MAX_LEVELS]> {
+    let a = get_arr(v, k)?;
+    if a.len() != MAX_LEVELS {
+        bail!("snapshot '{k}' must have exactly {MAX_LEVELS} entries, got {}", a.len());
+    }
+    let mut out = [0.0f64; MAX_LEVELS];
+    for (slot, x) in out.iter_mut().zip(a) {
+        *slot = x.as_f64().with_context(|| format!("snapshot '{k}' entries must be numbers"))?;
+    }
+    Ok(out)
+}
+
+fn cost_from(v: &Json) -> Result<CostModel> {
+    let model = match get_s(v, "backend")? {
+        "analytical" => CostModel::Analytical,
+        "contention" => CostModel::Contention(ContentionParams {
+            bandwidth_derate: levels_from(v, "bandwidth_derate")?,
+            burst_bits: levels_from(v, "burst_bits")?,
+            decompress_bits_per_cycle: match get(v, "decompress_bits_per_cycle")? {
+                Json::Null => None,
+                other => Some(
+                    other
+                        .as_f64()
+                        .context("snapshot 'decompress_bits_per_cycle' must be null or a number")?,
+                ),
+            },
+        }),
+        other => bail!("unknown cost backend '{other}' in snapshot"),
+    };
+    // Same semantic validation as the TOML path: a hand-edited snapshot
+    // cannot smuggle in knobs a config file would reject.
+    model.validate().map_err(|e| anyhow!("snapshot cost: {e}"))?;
+    Ok(model)
 }
 
 fn search_from(v: &Json) -> Result<SearchConfig> {
@@ -400,6 +459,12 @@ fn search_from(v: &Json) -> Result<SearchConfig> {
         pairs_to_map: get_u(v, "pairs_to_map")? as usize,
         threads: get_u(v, "threads")? as usize,
         prune: get_b(v, "prune")?,
+        // Absent in snapshots written before the cost-backend seam:
+        // those runs evaluated analytically, so the default is exact.
+        cost: match v.get("cost") {
+            Some(c) => cost_from(c)?,
+            None => CostModel::Analytical,
+        },
     })
 }
 
@@ -470,6 +535,60 @@ k = 64
             assert_eq!(a.dims, b.dims, "{}", a.name);
             assert_eq!(a.count, b.count, "{}", a.name);
         }
+    }
+
+    #[test]
+    fn snapshot_round_trips_cost_backend() {
+        // Contention with non-default knobs: TOML → snapshot → reload →
+        // identical CostModel, and the snapshot is still a fixed point.
+        let src = format!(
+            "{SRC}[cost]\nbackend = \"contention\"\nbandwidth_derate = 0.75\n\
+             burst_bits = [1024, 256]\ndecompress_bits_per_cycle = 0\n"
+        );
+        let cfg = load_run_config(&src).unwrap();
+        let CostModel::Contention(p) = cfg.search.cost else { panic!("not contention") };
+        assert_eq!(p.decompress_bits_per_cycle, None);
+        let snap = render(&cfg.arch, &cfg.workload, &cfg.search);
+        assert!(snap.contains("\"backend\":\"contention\""), "{snap}");
+        let cfg2 = load_run_config_any(&snap).unwrap();
+        assert_eq!(cfg2.search.cost, cfg.search.cost);
+        let snap2 = render(&cfg2.arch, &cfg2.workload, &cfg2.search);
+        assert_eq!(snap, snap2);
+
+        // Analytical serializes compactly and round-trips too.
+        let cfg = load_run_config(SRC).unwrap();
+        let snap = render(&cfg.arch, &cfg.workload, &cfg.search);
+        assert!(snap.contains("\"cost\":{\"backend\":\"analytical\"}"), "{snap}");
+        assert_eq!(load_run_config_any(&snap).unwrap().search.cost, CostModel::Analytical);
+    }
+
+    #[test]
+    fn legacy_snapshot_without_cost_defaults_to_analytical() {
+        let cfg = load_run_config(SRC).unwrap();
+        let snap = render(&cfg.arch, &cfg.workload, &cfg.search);
+        // Strip the cost key the way a pre-backend snapshot looked.
+        let legacy = snap.replace(",\"cost\":{\"backend\":\"analytical\"}", "");
+        assert_ne!(legacy, snap, "strip pattern went stale");
+        let cfg2 = load_run_config_json(&legacy).unwrap();
+        assert_eq!(cfg2.search.cost, CostModel::Analytical);
+    }
+
+    #[test]
+    fn tampered_cost_snapshots_are_rejected() {
+        let src = format!("{SRC}[cost]\nbackend = \"contention\"\n");
+        let cfg = load_run_config(&src).unwrap();
+        let snap = render(&cfg.arch, &cfg.workload, &cfg.search);
+        let bad = snap.replace("\"backend\":\"contention\"", "\"backend\":\"vibes\"");
+        assert!(load_run_config_json(&bad).unwrap_err().to_string().contains("vibes"));
+        // Out-of-range knobs funnel through ContentionParams::validate.
+        let bad = snap.replace("\"bandwidth_derate\":[1,", "\"bandwidth_derate\":[7,");
+        assert!(load_run_config_json(&bad)
+            .unwrap_err()
+            .to_string()
+            .contains("bandwidth_derate"));
+        // Truncated per-level arrays are rejected, not zero-filled.
+        let bad = snap.replace("\"burst_bits\":[512,", "\"burst_bits\":[");
+        assert!(load_run_config_json(&bad).unwrap_err().to_string().contains("entries"));
     }
 
     #[test]

@@ -54,6 +54,16 @@
 //! n = 4096
 //! k = 16384
 //!
+//! # Optional cost backend (docs/COST.md; omit for the analytical
+//! # default).  Per-level knobs take a scalar (broadcast to every
+//! # boundary) or an array overriding a prefix of boundaries,
+//! # outermost first; unlisted boundaries keep their defaults.
+//! [cost]
+//! backend = "contention"    # analytical (default) | contention
+//! bandwidth_derate = 0.85   # achievable fraction of peak bw, (0, 1]
+//! burst_bits = [512, 128]   # transaction granularity per boundary
+//! decompress_bits_per_cycle = 4096   # 0 disables the decode term
+//!
 //! # Optional custom accelerator:
 //! [arch]
 //! macs = 2048
@@ -72,8 +82,8 @@
 
 use super::toml::{TomlDoc, TomlTable, TomlValue};
 use crate::arch::{presets, Accelerator, MacArray, MemLevel};
-use crate::cost::Metric;
-use crate::dataflow::ProblemDims;
+use crate::cost::{CostModel, Metric};
+use crate::dataflow::{ProblemDims, MAX_LEVELS};
 use crate::search::{FormatMode, SearchConfig};
 use crate::sparsity::reduction::{Direction, ReductionStrategy};
 use crate::sparsity::{validate_density, SparsitySpec};
@@ -388,6 +398,65 @@ fn parse_inline_workload(doc: &TomlDoc) -> Result<Option<Workload>> {
     Ok(Some(Workload { name: "custom".to_string(), ops }))
 }
 
+/// Fill a per-boundary knob array from a TOML value: a scalar
+/// broadcasts to every boundary; an array overrides a prefix of
+/// boundaries (outermost first), leaving the rest at their defaults.
+fn fill_levels(sec: &TomlTable, key: &str, out: &mut [f64; MAX_LEVELS]) -> Result<()> {
+    let Some(v) = sec.get(key) else { return Ok(()) };
+    match v {
+        TomlValue::Arr(a) => {
+            if a.is_empty() || a.len() > MAX_LEVELS {
+                bail!("[cost] {key} must have 1..={MAX_LEVELS} entries");
+            }
+            for (i, x) in a.iter().enumerate() {
+                out[i] = x
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("[cost] {key}[{i}] must be a number"))?;
+            }
+        }
+        other => {
+            let x = other
+                .as_f64()
+                .ok_or_else(|| anyhow!("[cost] {key} must be a number or an array"))?;
+            out.fill(x);
+        }
+    }
+    Ok(())
+}
+
+/// Parse the optional `[cost]` section into `search.cost`.  Absent (or
+/// empty) section keeps the analytical default; contention knobs on the
+/// analytical backend are an error rather than a silent no-op.
+fn parse_cost_section(doc: &TomlDoc, search: &mut SearchConfig) -> Result<()> {
+    let Some(sec) = doc.section("cost") else { return Ok(()) };
+    if sec.is_empty() {
+        return Ok(());
+    }
+    let backend = sec.get("backend").and_then(|v| v.as_str()).unwrap_or("analytical");
+    let knobs = ["bandwidth_derate", "burst_bits", "decompress_bits_per_cycle"];
+    let mut model = CostModel::by_name(backend).map_err(|e| anyhow!("[cost] {e}"))?;
+    match &mut model {
+        CostModel::Analytical => {
+            if let Some(k) = knobs.iter().find(|&&k| sec.get(k).is_some()) {
+                bail!("[cost] {k} requires backend = \"contention\"");
+            }
+        }
+        CostModel::Contention(p) => {
+            fill_levels(sec, "bandwidth_derate", &mut p.bandwidth_derate)?;
+            fill_levels(sec, "burst_bits", &mut p.burst_bits)?;
+            if let Some(v) = sec.get("decompress_bits_per_cycle") {
+                let x = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("[cost] decompress_bits_per_cycle must be a number"))?;
+                p.decompress_bits_per_cycle = if x == 0.0 { None } else { Some(x) };
+            }
+        }
+    }
+    model.validate().map_err(|e| anyhow!("[cost] {e}"))?;
+    search.cost = model;
+    Ok(())
+}
+
 /// Load a complete run configuration from TOML text.
 pub fn load_run_config(src: &str) -> Result<RunConfig> {
     let doc = TomlDoc::parse(src).map_err(|e| anyhow!("{e}"))?;
@@ -479,6 +548,7 @@ pub fn load_run_config(src: &str) -> Result<RunConfig> {
             search.prune = p;
         }
     }
+    parse_cost_section(&doc, &mut search)?;
     search.engine.data_bits = arch.data_bits;
     Ok(RunConfig { arch, workload, search })
 }
@@ -746,6 +816,67 @@ preset = "gqa-tiny"
 kv_density = 1.5
 "#;
         assert!(load_run_config(kv_bad).is_err());
+    }
+
+    #[test]
+    fn cost_section_parses_and_defaults() {
+        use crate::cost::ContentionParams;
+        let base = "[run]\narch = \"arch3\"\nworkload = \"opt-125m\"\n";
+
+        // Absent section: analytical default.
+        let cfg = load_run_config(base).unwrap();
+        assert_eq!(cfg.search.cost, CostModel::Analytical);
+
+        // Explicit analytical.
+        let cfg = load_run_config(&format!("{base}[cost]\nbackend = \"analytical\"\n")).unwrap();
+        assert_eq!(cfg.search.cost, CostModel::Analytical);
+
+        // Contention with all defaults.
+        let cfg = load_run_config(&format!("{base}[cost]\nbackend = \"contention\"\n")).unwrap();
+        assert_eq!(cfg.search.cost, CostModel::Contention(ContentionParams::default()));
+
+        // Scalar broadcast + prefix array + decomp override.
+        let cfg = load_run_config(&format!(
+            "{base}[cost]\nbackend = \"contention\"\nbandwidth_derate = 0.8\n\
+             burst_bits = [1024, 256]\ndecompress_bits_per_cycle = 2048\n"
+        ))
+        .unwrap();
+        let CostModel::Contention(p) = cfg.search.cost else { panic!("not contention") };
+        assert!(p.bandwidth_derate.iter().all(|&d| d == 0.8));
+        assert_eq!(p.burst_bits[0], 1024.0);
+        assert_eq!(p.burst_bits[1], 256.0);
+        // Unlisted boundaries keep their defaults.
+        assert_eq!(p.burst_bits[2], ContentionParams::default().burst_bits[2]);
+        assert_eq!(p.decompress_bits_per_cycle, Some(2048.0));
+
+        // 0 disables the decompression term.
+        let cfg = load_run_config(&format!(
+            "{base}[cost]\nbackend = \"contention\"\ndecompress_bits_per_cycle = 0\n"
+        ))
+        .unwrap();
+        let CostModel::Contention(p) = cfg.search.cost else { panic!("not contention") };
+        assert_eq!(p.decompress_bits_per_cycle, None);
+    }
+
+    #[test]
+    fn cost_section_rejects_bad_configs() {
+        let base = "[run]\narch = \"arch3\"\nworkload = \"opt-125m\"\n";
+        let err = |tail: &str| load_run_config(&format!("{base}{tail}")).unwrap_err().to_string();
+
+        let e = err("[cost]\nbackend = \"bogus\"\n");
+        assert!(e.contains("bogus"), "{e}");
+        // Contention knobs without the contention backend.
+        let e = err("[cost]\nbandwidth_derate = 0.8\n");
+        assert!(e.contains("backend = \"contention\""), "{e}");
+        // Out-of-range values funnel through ContentionParams::validate.
+        let e = err("[cost]\nbackend = \"contention\"\nbandwidth_derate = 1.5\n");
+        assert!(e.contains("bandwidth_derate"), "{e}");
+        assert!(!err("[cost]\nbackend = \"contention\"\nburst_bits = 0.5\n").is_empty());
+        let e = err("[cost]\nbackend = \"contention\"\ndecompress_bits_per_cycle = -1\n");
+        assert!(e.contains("decompress"), "{e}");
+        // Over-long prefix array.
+        let many = "[cost]\nbackend = \"contention\"\nburst_bits = [1,1,1,1,1,1,1,1,1]\n";
+        assert!(err(many).contains("entries"));
     }
 
     #[test]

@@ -1,0 +1,61 @@
+//! The analytical cost backend: the original SnipSnap counts model.
+//!
+//! Memory time at each boundary is simply `bits / bandwidth` — no
+//! transaction rounding, no contention derating, no decompression
+//! latency.  This is the default backend and the reference the
+//! differential suite (`rust/tests/cost_backends.rs`) pins: routed
+//! through the [`CostBackend`] trait it must remain **bit-identical**
+//! to the pre-trait evaluation path (same designs, same scores, same
+//! evaluation counts through the memo cache).
+
+use crate::arch::Accelerator;
+use crate::cost::{CompressionRatios, CostBackend};
+
+/// Zero-sized marker: the flat `bits / bandwidth` memory-time model.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Analytical;
+
+impl CostBackend for Analytical {
+    fn name(&self) -> &'static str {
+        "analytical"
+    }
+
+    /// Exactly the historical transform: one division by the boundary's
+    /// peak bandwidth.  `total_bits` is the same index-order operand sum
+    /// the pre-trait code accumulated, so this is the identical f64
+    /// operation sequence.
+    fn boundary_cycles(
+        &self,
+        arch: &Accelerator,
+        b: usize,
+        _op_bits: &[f64; 3],
+        total_bits: f64,
+        _ratios: &CompressionRatios,
+    ) -> f64 {
+        total_bits / arch.levels[b].bandwidth_bits_per_cycle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn boundary_cycles_is_bits_over_bandwidth() {
+        let arch = presets::arch3();
+        let ratios = CompressionRatios::DENSE;
+        let op_bits = [1024.0, 2048.0, 512.0];
+        let total = 1024.0 + 2048.0 + 512.0;
+        for b in 0..arch.levels.len() {
+            let got = Analytical.boundary_cycles(&arch, b, &op_bits, total, &ratios);
+            let want = total / arch.levels[b].bandwidth_bits_per_cycle;
+            assert_eq!(got.to_bits(), want.to_bits(), "boundary {b}");
+        }
+    }
+
+    #[test]
+    fn name_is_stable() {
+        assert_eq!(Analytical.name(), "analytical");
+    }
+}

@@ -1,0 +1,296 @@
+//! The contention cost backend: bandwidth derating, burst/transaction
+//! granularity, and decompression latency on the critical path.
+//!
+//! Same [`AccessCounts`](crate::dataflow::AccessCounts), same energy
+//! model as the analytical backend — only the bits→cycles transform of
+//! each memory boundary changes:
+//!
+//! 1. Per-operand traffic rounds **up** to whole bursts:
+//!    `service = max(ceil(bits / burst) * burst, bits)` per operand
+//!    (the `max` guards the one f64 edge where `ceil` of a rounded
+//!    quotient lands a hair *below* `bits`, which would otherwise let
+//!    contention under-cut the analytical time).  Compressed operands
+//!    ship fewer bits and therefore fewer transactions, but a format
+//!    whose tile shrinks below one burst still pays a full burst.
+//! 2. Effective bandwidth is derated: `bw * derate[b]`, `derate ∈ (0,1]`
+//!    modeling arbitration/refresh/row-conflict loss at that boundary.
+//! 3. At the innermost boundary (delivery into the PEs) compressed
+//!    operands pass through a decompressor with throughput
+//!    `decompress_bits_per_cycle`; the boundary's service time is the
+//!    roofline-style `max(transfer, decompress)`.
+//!
+//! With default parameters (derate 1.0 everywhere) every service time
+//! is ≥ the analytical `bits / bw`, term by term, so the contention
+//! latency **dominates** the analytical latency on every mapping — the
+//! invariant the differential suite asserts exactly (not approximately)
+//! and the reason the branch-and-bound `lower_bound` remains a true
+//! lower bound under this backend (`docs/COST.md`).
+
+use crate::arch::Accelerator;
+use crate::cost::{CompressionRatios, CostBackend};
+use crate::dataflow::{Operand, MAX_LEVELS};
+
+/// Default burst size (bits) for the outermost boundary — a 64-byte
+/// DRAM burst, the granularity at which compressed blocks round up.
+pub const DEFAULT_BURST_BITS_OUTER: f64 = 512.0;
+
+/// Default burst size (bits) for every on-chip boundary — a 16-byte
+/// SRAM line.
+pub const DEFAULT_BURST_BITS_INNER: f64 = 128.0;
+
+/// Default decompressor throughput (bits/cycle) at the PE boundary.
+/// Wide enough that decompression only surfaces on heavily compressed,
+/// bandwidth-light tiles — matching the paper's claim that decoding is
+/// off the critical path for well-chosen formats.
+pub const DEFAULT_DECOMPRESS_BITS_PER_CYCLE: f64 = 4096.0;
+
+/// Tunable knobs of the contention model, settable per run via the
+/// `[cost]` TOML section and captured bit-identically in run-config
+/// snapshots.  Arrays are indexed by memory boundary (same order as
+/// `Accelerator::levels`, outermost first); boundaries beyond the
+/// machine's actual level count are ignored.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ContentionParams {
+    /// Fraction of each boundary's peak bandwidth actually achievable,
+    /// in `(0, 1]`.  `1.0` = no contention loss.
+    pub bandwidth_derate: [f64; MAX_LEVELS],
+    /// Burst/transaction granularity (bits) per boundary, ≥ 1.
+    pub burst_bits: [f64; MAX_LEVELS],
+    /// Decompressor throughput (bits/cycle) at the innermost boundary,
+    /// applied to compressed operands only.  `None` disables the
+    /// decompression term (serialized as `0` in TOML / `null` in
+    /// snapshots).
+    pub decompress_bits_per_cycle: Option<f64>,
+}
+
+impl Default for ContentionParams {
+    fn default() -> Self {
+        let mut burst_bits = [DEFAULT_BURST_BITS_INNER; MAX_LEVELS];
+        burst_bits[0] = DEFAULT_BURST_BITS_OUTER;
+        ContentionParams {
+            bandwidth_derate: [1.0; MAX_LEVELS],
+            burst_bits,
+            decompress_bits_per_cycle: Some(DEFAULT_DECOMPRESS_BITS_PER_CYCLE),
+        }
+    }
+}
+
+impl ContentionParams {
+    /// Every knob finite and in range; rejects the configs that would
+    /// let NaN/inf leak into `CostReport`.
+    pub fn validate(&self) -> Result<(), String> {
+        for (b, d) in self.bandwidth_derate.iter().enumerate() {
+            if !d.is_finite() || *d <= 0.0 || *d > 1.0 {
+                return Err(format!(
+                    "cost.bandwidth_derate[{b}] = {d}: must be finite and in (0, 1]"
+                ));
+            }
+        }
+        for (b, w) in self.burst_bits.iter().enumerate() {
+            if !w.is_finite() || *w < 1.0 {
+                return Err(format!("cost.burst_bits[{b}] = {w}: must be finite and >= 1"));
+            }
+        }
+        if let Some(tp) = self.decompress_bits_per_cycle {
+            if !tp.is_finite() || tp <= 0.0 {
+                return Err(format!(
+                    "cost.decompress_bits_per_cycle = {tp}: must be finite and > 0 \
+                     (use 0 in TOML to disable)"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Number of whole bursts needed to move `bits` (0 for no traffic).
+pub fn transactions(bits: f64, burst_bits: f64) -> f64 {
+    if bits <= 0.0 {
+        0.0
+    } else {
+        (bits / burst_bits).ceil()
+    }
+}
+
+/// The contention backend: [`ContentionParams`] applied on top of the
+/// shared access-count funnel.
+#[derive(Clone, Copy, Debug)]
+pub struct Contention {
+    pub params: ContentionParams,
+}
+
+impl CostBackend for Contention {
+    fn name(&self) -> &'static str {
+        "contention"
+    }
+
+    fn boundary_cycles(
+        &self,
+        arch: &Accelerator,
+        b: usize,
+        op_bits: &[f64; 3],
+        _total_bits: f64,
+        ratios: &CompressionRatios,
+    ) -> f64 {
+        let burst = self.params.burst_bits[b];
+        let mut service_bits = 0.0;
+        for bits in op_bits {
+            // `.max(bits)` keeps service ≥ raw bits even in the f64
+            // corner where ceil(fl(bits/burst)) * burst < bits.
+            service_bits += (transactions(*bits, burst) * burst).max(*bits);
+        }
+        let bw = arch.levels[b].bandwidth_bits_per_cycle * self.params.bandwidth_derate[b];
+        let transfer = service_bits / bw;
+
+        // Decompression sits at the PE boundary only, and only for
+        // operands that are actually compressed.
+        if b + 1 == arch.levels.len() {
+            if let Some(tp) = self.params.decompress_bits_per_cycle {
+                let mut decomp = 0.0f64;
+                for (oi, op) in Operand::ALL.iter().enumerate() {
+                    if ratios.get(*op) < 1.0 {
+                        decomp = decomp.max(op_bits[oi] / tp);
+                    }
+                }
+                return transfer.max(decomp);
+            }
+        }
+        transfer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::Analytical;
+
+    #[test]
+    fn transactions_rounds_up() {
+        assert_eq!(transactions(0.0, 512.0), 0.0);
+        assert_eq!(transactions(1.0, 512.0), 1.0);
+        assert_eq!(transactions(512.0, 512.0), 1.0);
+        assert_eq!(transactions(513.0, 512.0), 2.0);
+        assert_eq!(transactions(4096.0, 128.0), 32.0);
+    }
+
+    #[test]
+    fn default_params_validate() {
+        ContentionParams::default().validate().unwrap();
+    }
+
+    /// Defaults with one knob twiddled (avoids the
+    /// `field_reassign_with_default` pattern clippy rejects).
+    fn tweaked(f: impl FnOnce(&mut ContentionParams)) -> ContentionParams {
+        let mut p = ContentionParams::default();
+        f(&mut p);
+        p
+    }
+
+    #[test]
+    fn bad_params_are_rejected() {
+        let p = tweaked(|p| p.bandwidth_derate[2] = 0.0);
+        assert!(p.validate().unwrap_err().contains("bandwidth_derate[2]"));
+        assert!(tweaked(|p| p.bandwidth_derate[0] = 1.5).validate().is_err());
+        let p = tweaked(|p| p.burst_bits[1] = 0.5);
+        assert!(p.validate().unwrap_err().contains("burst_bits[1]"));
+        assert!(tweaked(|p| p.burst_bits[0] = f64::NAN).validate().is_err());
+        assert!(tweaked(|p| p.decompress_bits_per_cycle = Some(0.0)).validate().is_err());
+        tweaked(|p| p.decompress_bits_per_cycle = None).validate().unwrap();
+    }
+
+    /// The load-bearing invariant, checked term by term at the boundary
+    /// level: contention service time ≥ analytical service time for the
+    /// same traffic, including awkward non-burst-aligned bit counts.
+    #[test]
+    fn boundary_cycles_dominate_analytical() {
+        let arch = presets::arch3();
+        let c = Contention { params: ContentionParams::default() };
+        let ratios = CompressionRatios { input: 0.4, weight: 0.7 };
+        for op_bits in [
+            [0.0, 0.0, 0.0],
+            [1.0, 1.0, 1.0],
+            [511.0, 513.0, 128.0],
+            [1e6 + 0.5, 3.0, 77777.0],
+            [1e12, 1e-9, 12345.6],
+        ] {
+            let total: f64 = op_bits.iter().sum();
+            for b in 0..arch.levels.len() {
+                let anal = Analytical.boundary_cycles(&arch, b, &op_bits, total, &ratios);
+                let cont = c.boundary_cycles(&arch, b, &op_bits, total, &ratios);
+                assert!(
+                    cont >= anal,
+                    "boundary {b}: contention {cont} < analytical {anal} for {op_bits:?}"
+                );
+                assert!(cont.is_finite());
+            }
+        }
+    }
+
+    /// With derate 1.0 and traffic that is an exact multiple of the
+    /// burst, the transfer term equals the analytical time exactly; the
+    /// dense case also skips the decompression term.
+    #[test]
+    fn burst_aligned_dense_traffic_matches_analytical() {
+        let arch = presets::arch3();
+        let c = Contention { params: ContentionParams::default() };
+        let ratios = CompressionRatios::DENSE;
+        for b in 0..arch.levels.len() {
+            let burst = c.params.burst_bits[b];
+            let op_bits = [burst * 4.0, burst * 9.0, burst * 2.0];
+            let total: f64 = op_bits.iter().sum();
+            let anal = Analytical.boundary_cycles(&arch, b, &op_bits, total, &ratios);
+            let cont = c.boundary_cycles(&arch, b, &op_bits, total, &ratios);
+            assert_eq!(cont.to_bits(), anal.to_bits(), "boundary {b}");
+        }
+    }
+
+    /// Decompression applies only at the innermost boundary, only to
+    /// compressed operands, and can dominate the transfer time.
+    #[test]
+    fn decompression_gates_innermost_boundary() {
+        let arch = presets::arch3();
+        let inner = arch.levels.len() - 1;
+        // Pathologically slow decompressor: 1 bit/cycle.
+        let c = Contention { params: tweaked(|p| p.decompress_bits_per_cycle = Some(1.0)) };
+        let compressed = CompressionRatios { input: 0.5, weight: 1.0 };
+        let op_bits = [1024.0, 1024.0, 0.0];
+        let total: f64 = op_bits.iter().sum();
+
+        // Innermost + compressed input → decomp term (1024 cycles at
+        // 1 bit/cycle) dominates any realistic transfer time.
+        let gated = c.boundary_cycles(&arch, inner, &op_bits, total, &compressed);
+        assert_eq!(gated, 1024.0);
+
+        // Outer boundary: same traffic, no decompression term.
+        let outer = c.boundary_cycles(&arch, 0, &op_bits, total, &compressed);
+        assert!(outer < gated);
+
+        // Dense traffic at the innermost boundary: no decompression.
+        let dense = c.boundary_cycles(&arch, inner, &op_bits, total, &CompressionRatios::DENSE);
+        assert!(dense < gated);
+
+        // Disabled decompressor: pure transfer time.
+        let c_off = Contention { params: tweaked(|p| p.decompress_bits_per_cycle = None) };
+        let plain = c_off.boundary_cycles(&arch, inner, &op_bits, total, &compressed);
+        assert!(plain < gated);
+    }
+
+    #[test]
+    fn derate_scales_transfer_time() {
+        let arch = presets::arch3();
+        let c = Contention { params: tweaked(|p| p.bandwidth_derate[0] = 0.5) };
+        let base = Contention { params: ContentionParams::default() };
+        let ratios = CompressionRatios::DENSE;
+        let op_bits = [512.0 * 3.0, 512.0 * 5.0, 512.0];
+        let total: f64 = op_bits.iter().sum();
+        let slow = c.boundary_cycles(&arch, 0, &op_bits, total, &ratios);
+        let fast = base.boundary_cycles(&arch, 0, &op_bits, total, &ratios);
+        assert_eq!(slow.to_bits(), (fast * 2.0).to_bits());
+    }
+
+    #[test]
+    fn name_is_stable() {
+        assert_eq!(Contention { params: ContentionParams::default() }.name(), "contention");
+    }
+}

@@ -35,6 +35,25 @@
 //! - [`EvalContext::lower_bound`] — an order-independent lower bound on
 //!   the metric from tile footprints alone, used by the search's
 //!   branch-and-bound pruning (derivation in `docs/SEARCH.md`).
+//!
+//! # Pluggable cost backends
+//!
+//! The bits→cycles transform of each memory boundary sits behind the
+//! [`CostBackend`] trait (contract in `docs/COST.md`).  Two backends
+//! ship today: [`analytical::Analytical`] (the default — exactly the
+//! historical counts model, bit-identical through the trait) and
+//! [`contention::Contention`] (burst/transaction roundup, bandwidth
+//! derating and decompression latency on the same [`AccessCounts`]).
+//! The search carries the selection as a [`CostModel`] enum so contexts
+//! stay `Copy`-cheap and `Send`; the memoized counts cache is
+//! backend-independent (counts are a pure function of mapping + dims),
+//! so switching backends never changes cache semantics.
+
+pub mod analytical;
+pub mod contention;
+
+pub use analytical::Analytical;
+pub use contention::{transactions, Contention, ContentionParams};
 
 use crate::arch::Accelerator;
 use crate::dataflow::{
@@ -132,6 +151,170 @@ impl Metric {
     }
 }
 
+/// Everything a backend needs to evaluate one design point, minus the
+/// [`AccessCounts`] (which arrive separately so the memoized and the
+/// uncached paths share one funnel).  Bundling the references keeps the
+/// [`CostBackend::report`] signature small and stable as backends grow.
+pub struct EvalInputs<'a> {
+    pub arch: &'a Accelerator,
+    pub p: &'a ProblemDims,
+    pub mapping: &'a Mapping,
+    pub spec: &'a SparsitySpec,
+    pub reduction: &'a ReductionStrategy,
+    pub ratios: &'a CompressionRatios,
+}
+
+/// A cost backend: how per-boundary compressed traffic turns into
+/// service cycles.  Everything else — MAC energy, compute cycles,
+/// per-bit transfer energy, the access-count model — is shared by all
+/// backends via the provided [`CostBackend::report`] funnel, so a
+/// backend only decides the memory-time story (contract and equations
+/// in `docs/COST.md`).  Future measured/PJRT backends can override
+/// `report` wholesale without touching the search loop.
+pub trait CostBackend {
+    /// Stable identifier (`"analytical"`, `"contention"`) used by the
+    /// CLI, the `[cost]` config section and run-config snapshots.
+    fn name(&self) -> &'static str;
+
+    /// Service cycles of memory boundary `b` given the per-operand bit
+    /// traffic crossing it (`op_bits` in [`Operand::ALL`] order, the
+    /// partial-sum read-modify-write already folded into the O entry)
+    /// and its pre-formed index-order sum `total_bits`.
+    fn boundary_cycles(
+        &self,
+        arch: &Accelerator,
+        b: usize,
+        op_bits: &[f64; 3],
+        total_bits: f64,
+        ratios: &CompressionRatios,
+    ) -> f64;
+
+    /// Full cost report for one design point.  Provided implementation
+    /// shared by all backends: only the bits→cycles transform of each
+    /// boundary dispatches through [`Self::boundary_cycles`].  The
+    /// energy model is deliberately backend-independent, so
+    /// energy-metric searches rank identically under every backend.
+    fn report(&self, inp: &EvalInputs<'_>, ac: &AccessCounts) -> CostReport {
+        let arch = inp.arch;
+        let data_bits = arch.data_bits as f64;
+
+        // --- MAC compute ----------------------------------------------
+        let peak_macs = inp.p.macs() as f64;
+        let mac_energy_pj =
+            peak_macs * inp.reduction.energy_fraction(inp.spec) * arch.mac.pj_per_mac;
+        let spatial = (inp.mapping.spatial.factor(LoopDim::M)
+            * inp.mapping.spatial.factor(LoopDim::N)
+            * inp.mapping.spatial.factor(LoopDim::K)) as f64;
+        let compute_cycles = peak_macs * inp.reduction.cycle_fraction(inp.spec) / spatial;
+
+        // --- Memory boundaries ----------------------------------------
+        // The per-operand products and the index-order sum reproduce the
+        // historical accumulation exactly (same f64 operations in the
+        // same association), so the analytical backend is bit-identical
+        // to the pre-trait model.
+        let nb = inp.mapping.levels.len();
+        let mut mem_energy_pj: InlineVec<f64, MAX_LEVELS> = InlineVec::new();
+        let mut mem_cycles: InlineVec<f64, MAX_LEVELS> = InlineVec::new();
+        for b in 0..nb {
+            let mut op_bits = [0.0f64; 3];
+            for (oi, op) in Operand::ALL.iter().enumerate() {
+                let psum = if *op == Operand::O { PSUM_RW } else { 1.0 };
+                op_bits[oi] = ac.fills[b][oi] * data_bits * inp.ratios.get(*op) * psum;
+            }
+            let mut bits = 0.0;
+            for x in op_bits {
+                bits += x;
+            }
+            let read_pj = arch.levels[b].read_pj_per_bit;
+            let write_pj = if b + 1 < arch.levels.len() {
+                arch.levels[b + 1].write_pj_per_bit
+            } else {
+                0.0 // delivery into the MAC datapath
+            };
+            mem_energy_pj.push(bits * (read_pj + write_pj));
+            mem_cycles.push(self.boundary_cycles(arch, b, &op_bits, bits, inp.ratios));
+        }
+
+        CostReport { mac_energy_pj, mem_energy_pj, compute_cycles, mem_cycles }
+    }
+}
+
+/// Backend selector carried by `SearchConfig` and [`EvalContext`] — a
+/// `Copy` enum rather than a trait object so per-worker contexts stay
+/// `Send` and cheap to construct, and so run snapshots can capture the
+/// full backend configuration by value.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum CostModel {
+    #[default]
+    Analytical,
+    Contention(ContentionParams),
+}
+
+impl CostModel {
+    /// Resolve a backend by its CLI/config name.  `"contention"` takes
+    /// the representative default [`ContentionParams`]; tune per-level
+    /// knobs via the `[cost]` TOML section.
+    pub fn by_name(name: &str) -> Result<CostModel, String> {
+        match name.to_ascii_lowercase().as_str() {
+            "analytical" => Ok(CostModel::Analytical),
+            "contention" => Ok(CostModel::Contention(ContentionParams::default())),
+            other => Err(format!("unknown cost backend '{other}' (analytical|contention)")),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            CostModel::Analytical => Ok(()),
+            CostModel::Contention(p) => p.validate(),
+        }
+    }
+}
+
+impl std::fmt::Display for CostModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(CostBackend::name(self))
+    }
+}
+
+impl CostBackend for CostModel {
+    fn name(&self) -> &'static str {
+        match self {
+            CostModel::Analytical => Analytical.name(),
+            CostModel::Contention(p) => Contention { params: *p }.name(),
+        }
+    }
+
+    fn boundary_cycles(
+        &self,
+        arch: &Accelerator,
+        b: usize,
+        op_bits: &[f64; 3],
+        total_bits: f64,
+        ratios: &CompressionRatios,
+    ) -> f64 {
+        match self {
+            CostModel::Analytical => {
+                Analytical.boundary_cycles(arch, b, op_bits, total_bits, ratios)
+            }
+            CostModel::Contention(p) => {
+                Contention { params: *p }.boundary_cycles(arch, b, op_bits, total_bits, ratios)
+            }
+        }
+    }
+}
+
+/// The backend named by `SNIPSNAP_COST_BACKEND` (defaults to analytical
+/// when unset).  Tests and benches use this to re-run the whole suite
+/// under a second backend in CI; the search itself never consults the
+/// environment — backend selection flows through `SearchConfig` so
+/// golden fixtures and replayed snapshots stay environment-independent.
+pub fn backend_from_env() -> CostModel {
+    match std::env::var("SNIPSNAP_COST_BACKEND") {
+        Ok(v) => CostModel::by_name(&v).unwrap_or_else(|e| panic!("SNIPSNAP_COST_BACKEND: {e}")),
+        Err(_) => CostModel::Analytical,
+    }
+}
+
 /// Compressed footprint (bits) of one tile — shared by the mapping- and
 /// tile-based legality checks so both sum in the same operand order
 /// (bit-identical results).
@@ -212,7 +395,13 @@ pub fn evaluate(
 }
 
 /// Evaluate one design point from precomputed [`access_counts`] — the
-/// memoization seam shared by [`evaluate`] and [`EvalContext`].
+/// memoization seam shared by [`evaluate`] and [`EvalContext`].  This is
+/// the **analytical** backend routed through the [`CostBackend`] funnel;
+/// the per-operand restructuring inside [`CostBackend::report`] performs
+/// the identical f64 operation sequence (same products, same addition
+/// association) as the historical inline accumulation, so results are
+/// bit-identical to the pre-trait model (pinned by
+/// `rust/tests/cost_backends.rs`).
 pub fn evaluate_from_counts(
     arch: &Accelerator,
     p: &ProblemDims,
@@ -222,37 +411,7 @@ pub fn evaluate_from_counts(
     ratios: &CompressionRatios,
     ac: &AccessCounts,
 ) -> CostReport {
-    let data_bits = arch.data_bits as f64;
-
-    // --- MAC compute --------------------------------------------------
-    let peak_macs = p.macs() as f64;
-    let mac_energy_pj = peak_macs * reduction.energy_fraction(spec) * arch.mac.pj_per_mac;
-    let spatial = (mapping.spatial.factor(LoopDim::M)
-        * mapping.spatial.factor(LoopDim::N)
-        * mapping.spatial.factor(LoopDim::K)) as f64;
-    let compute_cycles = peak_macs * reduction.cycle_fraction(spec) / spatial;
-
-    // --- Memory boundaries ---------------------------------------------
-    let nb = mapping.levels.len();
-    let mut mem_energy_pj: InlineVec<f64, MAX_LEVELS> = InlineVec::new();
-    let mut mem_cycles: InlineVec<f64, MAX_LEVELS> = InlineVec::new();
-    for b in 0..nb {
-        let mut bits = 0.0;
-        for (oi, op) in Operand::ALL.iter().enumerate() {
-            let psum = if *op == Operand::O { PSUM_RW } else { 1.0 };
-            bits += ac.fills[b][oi] * data_bits * ratios.get(*op) * psum;
-        }
-        let read_pj = arch.levels[b].read_pj_per_bit;
-        let write_pj = if b + 1 < arch.levels.len() {
-            arch.levels[b + 1].write_pj_per_bit
-        } else {
-            0.0 // delivery into the MAC datapath
-        };
-        mem_energy_pj.push(bits * (read_pj + write_pj));
-        mem_cycles.push(bits / arch.levels[b].bandwidth_bits_per_cycle);
-    }
-
-    CostReport { mac_energy_pj, mem_energy_pj, compute_cycles, mem_cycles }
+    Analytical.report(&EvalInputs { arch, p, mapping, spec, reduction, ratios }, ac)
 }
 
 /// Hit/miss counters of the memoized [`access_counts`] cache.
@@ -364,12 +523,28 @@ pub struct EvalContext<'a> {
     pub arch: &'a Accelerator,
     pub p: ProblemDims,
     pub metric: Metric,
+    /// Cost backend every evaluation dispatches through.  The counts
+    /// cache is backend-independent, so this only affects the final
+    /// bits→cycles transform.
+    pub model: CostModel,
     cache: HashMap<MapKey, AccessCounts>,
     stats: CacheStats,
 }
 
 impl<'a> EvalContext<'a> {
+    /// Context with the default (analytical) backend — exactly the
+    /// historical behavior.
     pub fn new(arch: &'a Accelerator, p: ProblemDims, metric: Metric) -> Self {
+        Self::with_model(arch, p, metric, CostModel::Analytical)
+    }
+
+    /// Context evaluating through an explicit cost backend.
+    pub fn with_model(
+        arch: &'a Accelerator,
+        p: ProblemDims,
+        metric: Metric,
+        model: CostModel,
+    ) -> Self {
         assert!(
             arch.levels.len() <= MAX_LEVELS,
             "{} has {} memory levels; MAX_LEVELS is {MAX_LEVELS}",
@@ -384,6 +559,7 @@ impl<'a> EvalContext<'a> {
             arch,
             p,
             metric,
+            model,
             cache: HashMap::new(),
             stats: CacheStats::default(),
         }
@@ -405,17 +581,20 @@ impl<'a> EvalContext<'a> {
         reduction: &ReductionStrategy,
         ratios: &CompressionRatios,
     ) -> CostReport {
+        let model = self.model;
         let key = pack_key(mapping);
         if let Some(ac) = self.cache.get(&key) {
             self.stats.hits += 1;
-            return evaluate_from_counts(self.arch, &self.p, mapping, spec, reduction, ratios, ac);
+            let inp = EvalInputs { arch: self.arch, p: &self.p, mapping, spec, reduction, ratios };
+            return model.report(&inp, ac);
         }
         self.stats.misses += 1;
         if self.cache.len() >= EVAL_CACHE_CAP {
             self.cache.clear();
         }
         let ac = access_counts(mapping, &self.p);
-        let r = evaluate_from_counts(self.arch, &self.p, mapping, spec, reduction, ratios, &ac);
+        let inp = EvalInputs { arch: self.arch, p: &self.p, mapping, spec, reduction, ratios };
+        let r = model.report(&inp, &ac);
         self.cache.insert(key, ac);
         r
     }
@@ -464,13 +643,16 @@ impl<'a> EvalContext<'a> {
             prefix_state.advance(&m.levels[b]);
             prefix_fills.push(prefix_state.row(tiles[b]));
         }
+        let model = self.model;
         let mut best: Option<([LoopDim; 3], f64)> = None;
         for ord in crate::dataflow::mapper::ALL_ORDERS {
             m.levels[lvl].order = ord;
             let key = pack_key(m);
             let r = if let Some(ac) = self.cache.get(&key) {
                 self.stats.hits += 1;
-                evaluate_from_counts(self.arch, &self.p, m, spec, reduction, ratios, ac)
+                let inp =
+                    EvalInputs { arch: self.arch, p: &self.p, mapping: m, spec, reduction, ratios };
+                model.report(&inp, ac)
             } else {
                 self.stats.misses += 1;
                 if self.cache.len() >= EVAL_CACHE_CAP {
@@ -482,7 +664,9 @@ impl<'a> EvalContext<'a> {
                     state.advance(&m.levels[b]);
                     ac.fills.push(state.row(tiles[b]));
                 }
-                let r = evaluate_from_counts(self.arch, &self.p, m, spec, reduction, ratios, &ac);
+                let inp =
+                    EvalInputs { arch: self.arch, p: &self.p, mapping: m, spec, reduction, ratios };
+                let r = model.report(&inp, &ac);
                 self.cache.insert(key, ac);
                 r
             };
@@ -513,6 +697,16 @@ impl<'a> EvalContext<'a> {
     /// The search may therefore skip the order sweep for any proto whose
     /// bound already reaches the incumbent best without changing the
     /// result (`docs/SEARCH.md` § pruning).
+    ///
+    /// The per-boundary cycles dispatch through the context's
+    /// [`CostModel`], which keeps the bound true for **every** backend:
+    /// each [`CostBackend::boundary_cycles`] implementation is monotone
+    /// non-decreasing in every entry of `op_bits` (burst roundup, max,
+    /// sum and division by a positive constant all are), so applying it
+    /// to the lower-bounded traffic still bounds the achievable cycles
+    /// from below — branch-and-bound pruning stays enabled under the
+    /// contention backend (`docs/COST.md`, verified by
+    /// `rust/tests/prune_correctness.rs`).
     pub fn lower_bound(
         &self,
         factors: &[[u64; 3]],
@@ -545,14 +739,18 @@ impl<'a> EvalContext<'a> {
                 loads[oi] *= rel;
             }
             let [tm, tn, tk] = *t;
-            let mut bits = 0.0f64;
+            let mut op_bits = [0.0f64; 3];
             for (oi, op) in Operand::ALL.iter().enumerate() {
                 let psum = if *op == Operand::O { PSUM_RW } else { 1.0 };
                 // Same association order as the fills-based path: the
                 // (loads × footprint) product is formed first, exactly
                 // like an `AccessCounts` fill row.
                 let fill = loads[oi] * op.footprint(tm, tn, tk) as f64;
-                bits += fill * data_bits * ratios.get(*op) * psum;
+                op_bits[oi] = fill * data_bits * ratios.get(*op) * psum;
+            }
+            let mut bits = 0.0f64;
+            for x in op_bits {
+                bits += x;
             }
             let read_pj = arch.levels[b].read_pj_per_bit;
             let write_pj = if b + 1 < arch.levels.len() {
@@ -561,8 +759,8 @@ impl<'a> EvalContext<'a> {
                 0.0
             };
             mem_energy += bits * (read_pj + write_pj);
-            let bw = arch.levels[b].bandwidth_bits_per_cycle;
-            worst_mem_cycles = worst_mem_cycles.max(bits / bw);
+            let cycles = self.model.boundary_cycles(arch, b, &op_bits, bits, ratios);
+            worst_mem_cycles = worst_mem_cycles.max(cycles);
         }
         match self.metric {
             Metric::Energy => mac_energy + mem_energy,
@@ -888,6 +1086,108 @@ mod tests {
             }
             assert!(ctx.cache_stats().hits >= 6, "second sweep should hit the cache");
         }
+    }
+
+    #[test]
+    fn analytical_through_trait_is_bit_identical() {
+        // The trait-routed default context vs the free `evaluate`
+        // function, and `with_model(Analytical)` vs `new` — all four
+        // paths must agree bit for bit (field-level PartialEq on the
+        // full report).
+        let (arch, p, mapping) = toy_setup();
+        let spec = SparsitySpec::unstructured(0.45, 0.55);
+        let ratios = CompressionRatios { input: 0.5, weight: 0.8 };
+        let direct = evaluate(&arch, &p, &mapping, &spec, &arch.reduction, &ratios);
+        let via_trait = Analytical.report(
+            &EvalInputs {
+                arch: &arch,
+                p: &p,
+                mapping: &mapping,
+                spec: &spec,
+                reduction: &arch.reduction,
+                ratios: &ratios,
+            },
+            &access_counts(&mapping, &p),
+        );
+        assert_eq!(direct, via_trait);
+        let mut ctx = EvalContext::with_model(&arch, p, Metric::Edp, CostModel::Analytical);
+        assert_eq!(ctx.evaluate(&mapping, &spec, &arch.reduction, &ratios), direct);
+        assert_eq!(ctx.model, CostModel::Analytical);
+    }
+
+    #[test]
+    fn contention_report_dominates_analytical_and_shares_energy() {
+        let (arch, p, mapping) = toy_setup();
+        let spec = SparsitySpec::unstructured(0.4, 0.6);
+        let ratios = CompressionRatios { input: 0.5, weight: 0.7 };
+        let model = CostModel::Contention(ContentionParams::default());
+        let mut anal = EvalContext::new(&arch, p, Metric::Latency);
+        let mut cont = EvalContext::with_model(&arch, p, Metric::Latency, model);
+        let ra = anal.evaluate(&mapping, &spec, &arch.reduction, &ratios);
+        let rc = cont.evaluate(&mapping, &spec, &arch.reduction, &ratios);
+        // Energy model is backend-independent — bit-identical.
+        assert_eq!(ra.mac_energy_pj.to_bits(), rc.mac_energy_pj.to_bits());
+        assert_eq!(ra.mem_energy_pj, rc.mem_energy_pj);
+        assert_eq!(ra.compute_cycles.to_bits(), rc.compute_cycles.to_bits());
+        // Memory time dominates, per boundary and in the roofline.
+        for (a, c) in ra.mem_cycles.iter().zip(rc.mem_cycles.iter()) {
+            assert!(c >= a, "contention boundary time {c} < analytical {a}");
+        }
+        assert!(rc.latency_cycles() >= ra.latency_cycles());
+        assert!(rc.latency_cycles().is_finite());
+    }
+
+    #[test]
+    fn contention_lower_bound_never_exceeds_any_order_assignment() {
+        use crate::dataflow::mapper::ALL_ORDERS;
+        let (arch, p, mapping) = toy_setup();
+        let spec = SparsitySpec::unstructured(0.5, 0.4);
+        let ratios = CompressionRatios { input: 0.6, weight: 0.8 };
+        let tiles = tiles_of(&mapping);
+        let factors: Vec<[u64; 3]> = mapping.levels.iter().map(|l| l.factors).collect();
+        let model = CostModel::Contention(ContentionParams::default());
+        for metric in [Metric::Energy, Metric::MemoryEnergy, Metric::Latency, Metric::Edp] {
+            let ctx = EvalContext::with_model(&arch, p, metric, model);
+            let lb = ctx.lower_bound(
+                &factors,
+                &tiles,
+                mapping.spatial,
+                &spec,
+                &arch.reduction,
+                &ratios,
+            );
+            assert!(lb > 0.0 && lb.is_finite());
+            for o0 in ALL_ORDERS {
+                for o1 in ALL_ORDERS {
+                    let mut m = mapping.clone();
+                    m.levels[0].order = o0;
+                    m.levels[1].order = o1;
+                    let mut c = EvalContext::with_model(&arch, p, metric, model);
+                    let (_, v) = c.value(&m, &spec, &arch.reduction, &ratios);
+                    assert!(lb <= v, "{metric:?}: contention bound {lb} exceeds achievable {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cost_model_names_round_trip() {
+        assert_eq!(CostModel::by_name("analytical").unwrap(), CostModel::Analytical);
+        assert_eq!(
+            CostModel::by_name("contention").unwrap(),
+            CostModel::Contention(ContentionParams::default())
+        );
+        assert_eq!(CostModel::by_name("Analytical").unwrap(), CostModel::Analytical);
+        let e = CostModel::by_name("bogus").unwrap_err();
+        assert!(e.contains("bogus") && e.contains("analytical|contention"), "{e}");
+        assert_eq!(CostModel::default(), CostModel::Analytical);
+        assert_eq!(CostModel::Analytical.to_string(), "analytical");
+        assert_eq!(
+            CostModel::Contention(ContentionParams::default()).to_string(),
+            "contention"
+        );
+        CostModel::Analytical.validate().unwrap();
+        CostModel::Contention(ContentionParams::default()).validate().unwrap();
     }
 
     #[test]

@@ -29,6 +29,9 @@ fn usage() -> ! {
                              bit-identical for any thread count)\n\
                              [--prune on|off]  (branch-and-bound pruning;\n\
                              identical results either way, default on)\n\
+                             [--cost-backend analytical|contention]  (memory\n\
+                             model, docs/COST.md; default analytical — tune\n\
+                             contention knobs via the [cost] config section)\n\
                              [--snapshot PATH|off]  (JSON run-config snapshot;\n\
                              default results/run-<ts>-<pid>.config.json —\n\
                              feed it back via --config to replay the run)\n\
@@ -141,11 +144,26 @@ fn cmd_search(args: &Args) -> Result<()> {
             other => bail!("--prune takes on|off, got '{other}'"),
         };
     }
+    if let Some(b) = args.get("cost-backend") {
+        use snipsnap::cost::CostModel;
+        match CostModel::by_name(b) {
+            // Keep a config-supplied contention tuning when the flag
+            // merely re-selects the same backend; the flag's job is
+            // backend selection, not knob reset.
+            Ok(CostModel::Contention(_)) if matches!(cfg.cost, CostModel::Contention(_)) => {}
+            Ok(m) => cfg.cost = m,
+            Err(e) => {
+                eprintln!("error: {e}");
+                usage();
+            }
+        }
+    }
 
     write_snapshot(args, &arch, &workload, &cfg);
 
     eprintln!("arch: {}", arch.name);
     eprintln!("workload: {} ({} ops)", workload.name, workload.op_count());
+    eprintln!("cost backend: {}", cfg.cost);
     let r = cosearch_workload(&arch, &workload, &cfg);
 
     let mut t = Table::new(vec![

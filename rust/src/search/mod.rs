@@ -47,7 +47,7 @@
 pub mod progressive;
 
 use crate::arch::Accelerator;
-use crate::cost::{CacheStats, CostReport, EvalContext, Metric};
+use crate::cost::{CacheStats, CostModel, CostReport, EvalContext, Metric};
 use crate::dataflow::Mapping;
 use crate::engine::EngineConfig;
 use crate::format::Format;
@@ -125,6 +125,12 @@ pub struct SearchConfig {
     /// (`evaluations`, cache and prune stats) do depend on this flag and
     /// — when pruning is on — on the shard count.  Default `true`.
     pub prune: bool,
+    /// Cost backend every evaluation (and lower bound) dispatches
+    /// through; see `docs/COST.md`.  The default analytical backend is
+    /// bit-identical to the pre-backend cost model; branch-and-bound
+    /// pruning remains sound under every backend, so `prune` composes
+    /// freely with this selection.
+    pub cost: CostModel,
 }
 
 impl Default for SearchConfig {
@@ -140,6 +146,7 @@ impl Default for SearchConfig {
             pairs_to_map: 2,
             threads: 1,
             prune: true,
+            cost: CostModel::Analytical,
         }
     }
 }

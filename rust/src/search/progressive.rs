@@ -432,7 +432,7 @@ fn cosearch_op_sharded(
     tel: &mut SearchTelemetry,
 ) -> Option<OpDesign> {
     let mut ctxs: Vec<EvalContext<'_>> = (0..shards.max(1))
-        .map(|_| EvalContext::new(arch, op.dims, cfg.metric))
+        .map(|_| EvalContext::with_model(arch, op.dims, cfg.metric, cfg.cost))
         .collect();
     let en = op_enumeration(arch, &op.dims, &cfg.mapper);
     let mut arena = ProtoArena::new();
@@ -564,7 +564,7 @@ pub fn evaluate_with_formats(
         let fw = ScoredFormat::score(f_w, &op.spec.weight, &cfg.engine);
         let ratios = pair_ratios(&fi, &fw, &op.spec);
         let mut ctxs: Vec<EvalContext<'_>> = (0..shard_plan[i])
-            .map(|_| EvalContext::new(arch, op.dims, cfg.metric))
+            .map(|_| EvalContext::with_model(arch, op.dims, cfg.metric, cfg.cost))
             .collect();
         let en = op_enumeration(arch, &op.dims, &cfg.mapper);
         let mut arena = ProtoArena::new();

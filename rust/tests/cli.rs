@@ -189,6 +189,70 @@ fn snapshot_replays_identically_through_config() {
     );
 }
 
+/// `--cost-backend contention` selects the backend end to end: it is
+/// announced on stderr, captured in the snapshot, and the snapshot
+/// replays the identical run (docs/COST.md).
+#[test]
+fn cost_backend_flag_selects_and_snapshots_contention() {
+    let dir = std::env::temp_dir().join("snipsnap_cli_cost_backend");
+    std::fs::create_dir_all(&dir).unwrap();
+    let snap = dir.join("run.config.json");
+    let _ = std::fs::remove_file(&snap);
+    let out1 = snipsnap()
+        .args([
+            "search", "--arch", "arch3", "--workload", "gqa-tiny", "--mode", "fixed",
+            "--metric", "latency", "--max-mappings", "200", "--prefill", "32", "--decode", "4",
+            "--cost-backend", "contention", "--snapshot", snap.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run");
+    assert!(out1.status.success(), "{}", String::from_utf8_lossy(&out1.stderr));
+    let stderr1 = String::from_utf8_lossy(&out1.stderr);
+    assert!(stderr1.contains("cost backend: contention"), "{stderr1}");
+    let text = std::fs::read_to_string(&snap).expect("snapshot written");
+    assert!(text.contains(r#""backend":"contention""#), "{text}");
+    assert!(text.contains("bandwidth_derate"), "{text}");
+
+    // The snapshot replays the contention run byte for byte (stable
+    // lines only, as in snapshot_replays_identically_through_config).
+    let out2 = snipsnap()
+        .args(["search", "--config", snap.to_str().unwrap(), "--snapshot", "off"])
+        .output()
+        .expect("replay");
+    assert!(out2.status.success(), "{}", String::from_utf8_lossy(&out2.stderr));
+    assert!(
+        String::from_utf8_lossy(&out2.stderr).contains("cost backend: contention"),
+        "replay lost the backend"
+    );
+    let stable = |s: &str| -> String {
+        s.lines()
+            .filter(|l| {
+                !l.starts_with("search:") && !l.starts_with("cache:")
+                    && !l.starts_with("enumeration:")
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    assert_eq!(
+        stable(&String::from_utf8_lossy(&out1.stdout)),
+        stable(&String::from_utf8_lossy(&out2.stdout)),
+        "replayed contention run diverged from the original"
+    );
+}
+
+/// A bogus backend name is a usage error: exit 2, usage on stderr.
+#[test]
+fn bad_cost_backend_exits_2_with_usage() {
+    let out = snipsnap()
+        .args(["search", "--workload", "gqa-tiny", "--cost-backend", "bogus"])
+        .output()
+        .expect("run");
+    assert_eq!(out.status.code(), Some(2), "usage errors exit 2: {:?}", out.status);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown cost backend 'bogus'"), "{stderr}");
+    assert!(stderr.contains("USAGE"), "usage must go to stderr:\n{stderr}");
+}
+
 /// `snipsnap report` renders a summary from accumulated records and
 /// fails (non-zero) on unparseable artifacts.
 #[test]

@@ -9,9 +9,14 @@
 //! lower bound is order-independent and f64-monotone, so pruning skips
 //! only provably-worse protos, and an equal-value proto would lose the
 //! `(value, proto id)` tie-break anyway.
+//!
+//! Both cost backends are covered: the bound dispatches its bits→cycles
+//! transform through the selected backend (docs/COST.md), so it remains
+//! a true lower bound — and pruning stays enabled — under the
+//! contention model too.
 
 use snipsnap::arch::presets;
-use snipsnap::cost::Metric;
+use snipsnap::cost::{ContentionParams, CostModel, Metric};
 use snipsnap::dataflow::mapper::MapperConfig;
 use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig, WorkloadResult};
 use snipsnap::workload::llm;
@@ -20,12 +25,23 @@ fn reduced_llm() -> snipsnap::workload::Workload {
     llm::opt_125m(llm::Phase::prefill_only(64))
 }
 
-fn cfg(mode: FormatMode, metric: Metric, threads: usize, prune: bool) -> SearchConfig {
+fn backends() -> [CostModel; 2] {
+    [CostModel::Analytical, CostModel::Contention(ContentionParams::default())]
+}
+
+fn cfg(
+    mode: FormatMode,
+    metric: Metric,
+    threads: usize,
+    prune: bool,
+    cost: CostModel,
+) -> SearchConfig {
     SearchConfig {
         mode,
         metric,
         threads,
         prune,
+        cost,
         mapper: MapperConfig { max_candidates: 600, ..Default::default() },
         ..Default::default()
     }
@@ -55,31 +71,38 @@ fn assert_designs_identical(a: &WorkloadResult, b: &WorkloadResult, what: &str) 
 fn pruned_search_matches_unpruned_reference_across_threads_and_modes() {
     let arch = presets::arch3();
     let w = reduced_llm();
-    for mode in [FormatMode::Fixed, FormatMode::Search] {
-        // Unpruned serial run is the reference for everything else.
-        let reference = cosearch_workload(&arch, &w, &cfg(mode, Metric::Energy, 1, false));
-        let mut saw_pruning = false;
-        for threads in [1usize, 3, 4] {
-            for prune in [false, true] {
-                let r = cosearch_workload(&arch, &w, &cfg(mode, Metric::Energy, threads, prune));
-                assert_designs_identical(
-                    &reference,
-                    &r,
-                    &format!("{mode:?} threads={threads} prune={prune}"),
-                );
-                if prune {
-                    saw_pruning |= r.pruned > 0;
-                    assert!(r.pruned <= r.protos);
-                } else {
-                    assert_eq!(r.pruned, 0, "prune=false must never prune");
+    for cost in backends() {
+        for mode in [FormatMode::Fixed, FormatMode::Search] {
+            // Unpruned serial run is the reference for everything else.
+            let reference =
+                cosearch_workload(&arch, &w, &cfg(mode, Metric::Energy, 1, false, cost));
+            let mut saw_pruning = false;
+            for threads in [1usize, 3, 4] {
+                for prune in [false, true] {
+                    let r = cosearch_workload(
+                        &arch,
+                        &w,
+                        &cfg(mode, Metric::Energy, threads, prune, cost),
+                    );
+                    assert_designs_identical(
+                        &reference,
+                        &r,
+                        &format!("{cost} {mode:?} threads={threads} prune={prune}"),
+                    );
+                    if prune {
+                        saw_pruning |= r.pruned > 0;
+                        assert!(r.pruned <= r.protos);
+                    } else {
+                        assert_eq!(r.pruned, 0, "prune=false must never prune");
+                    }
                 }
             }
+            assert!(
+                saw_pruning,
+                "{cost} {mode:?}: the lower bound never pruned anything — the \
+                 branch-and-bound path is not being exercised"
+            );
         }
-        assert!(
-            saw_pruning,
-            "{mode:?}: the lower bound never pruned anything — the \
-             branch-and-bound path is not being exercised"
-        );
     }
 }
 
@@ -87,17 +110,57 @@ fn pruned_search_matches_unpruned_reference_across_threads_and_modes() {
 fn pruning_preserves_results_for_every_metric() {
     let arch = presets::arch3();
     let w = reduced_llm();
-    for metric in [Metric::Energy, Metric::MemoryEnergy, Metric::Latency, Metric::Edp] {
-        let off = cosearch_workload(&arch, &w, &cfg(FormatMode::Fixed, metric, 1, false));
-        let on = cosearch_workload(&arch, &w, &cfg(FormatMode::Fixed, metric, 1, true));
-        assert_designs_identical(&off, &on, &format!("{metric:?}"));
-        assert!(
-            on.evaluations <= off.evaluations,
-            "{metric:?}: pruning increased evaluations ({} vs {})",
-            on.evaluations,
-            off.evaluations
-        );
+    for cost in backends() {
+        for metric in [Metric::Energy, Metric::MemoryEnergy, Metric::Latency, Metric::Edp] {
+            let off = cosearch_workload(&arch, &w, &cfg(FormatMode::Fixed, metric, 1, false, cost));
+            let on = cosearch_workload(&arch, &w, &cfg(FormatMode::Fixed, metric, 1, true, cost));
+            assert_designs_identical(&off, &on, &format!("{cost} {metric:?}"));
+            assert!(
+                on.evaluations <= off.evaluations,
+                "{cost} {metric:?}: pruning increased evaluations ({} vs {})",
+                on.evaluations,
+                off.evaluations
+            );
+        }
     }
+}
+
+#[test]
+fn contention_latency_pruning_is_sound_across_threads() {
+    // The latency metric is where the contention backend actually
+    // changes the bound's cycle term (burst roundup, derate,
+    // decompression): the pruned search must still match the unpruned
+    // reference bit for bit at every thread count (pruning stays
+    // enabled for this backend — no analytical fallback).
+    let arch = presets::arch3();
+    let w = reduced_llm();
+    let cost = CostModel::Contention(ContentionParams::default());
+    let reference =
+        cosearch_workload(&arch, &w, &cfg(FormatMode::Fixed, Metric::Latency, 1, false, cost));
+    for threads in [1usize, 3, 4] {
+        for prune in [false, true] {
+            let r = cosearch_workload(
+                &arch,
+                &w,
+                &cfg(FormatMode::Fixed, Metric::Latency, threads, prune, cost),
+            );
+            assert_designs_identical(
+                &reference,
+                &r,
+                &format!("contention latency threads={threads} prune={prune}"),
+            );
+            if prune {
+                assert!(r.pruned <= r.protos, "prune counter exceeds proto count");
+            } else {
+                assert_eq!(r.pruned, 0, "prune=false must never prune");
+            }
+        }
+    }
+    // That pruning actually *fires* under the contention backend is
+    // asserted by pruned_search_matches_unpruned_reference_across_
+    // threads_and_modes above (the Energy bound is backend-independent,
+    // so the seed suite's guarantee carries over); here the point is
+    // that the backend-dispatched cycle term keeps the bound sound.
 }
 
 #[test]
@@ -108,8 +171,9 @@ fn pruning_saves_meaningful_work() {
     // so model changes don't turn it flaky.
     let arch = presets::arch3();
     let w = reduced_llm();
-    let off = cosearch_workload(&arch, &w, &cfg(FormatMode::Fixed, Metric::Energy, 1, false));
-    let on = cosearch_workload(&arch, &w, &cfg(FormatMode::Fixed, Metric::Energy, 1, true));
+    let c = CostModel::Analytical;
+    let off = cosearch_workload(&arch, &w, &cfg(FormatMode::Fixed, Metric::Energy, 1, false, c));
+    let on = cosearch_workload(&arch, &w, &cfg(FormatMode::Fixed, Metric::Energy, 1, true, c));
     assert!(on.pruned > 0, "no protos pruned");
     assert!(on.evaluations < off.evaluations, "pruning saved no evaluations");
 }

@@ -4,6 +4,8 @@
 //! `snipsnap::report` roll-up over a synthetic results directory.
 
 use snipsnap::config::{self, snapshot};
+use snipsnap::cost::CostModel;
+use snipsnap::dataflow::MAX_LEVELS;
 use snipsnap::search::cosearch_workload;
 use snipsnap::util::bench::write_record_at;
 use snipsnap::util::json::Json;
@@ -35,6 +37,37 @@ m = 32
 n = 64
 k = 64
 act_density = 0.25
+"#;
+
+/// Same run, latency metric, contention cost backend with tuned
+/// per-level knobs — the `[cost]` section must survive the
+/// TOML → RunConfig → snapshot → replay loop bit-identically.
+const CFG_COST: &str = r#"
+[run]
+arch = "arch3"
+metric = "latency"
+mode = "search"
+
+[search]
+top_k = 2
+max_depth = 3
+max_mappings = 150
+threads = 2
+
+[cost]
+backend = "contention"
+bandwidth_derate = 0.8
+burst_bits = [1024, 256]
+decompress_bits_per_cycle = 2048
+
+[[op]]
+name = "fc1"
+m = 64
+n = 64
+k = 128
+act_density = 0.4
+wgt_density = 0.5
+count = 2
 "#;
 
 fn tmpdir(tag: &str) -> PathBuf {
@@ -73,6 +106,78 @@ fn snapshot_replay_is_bit_identical() {
     // The snapshot is a fixed point of render∘load — byte-for-byte.
     let snap2 = snapshot::render(&cfg2.arch, &cfg2.workload, &cfg2.search);
     assert_eq!(snap, snap2);
+
+    // The CFG above has no [cost] section: the replayed config must
+    // carry the analytical default, explicitly, in the snapshot.
+    assert_eq!(cfg2.search.cost, CostModel::Analytical);
+    assert!(snap.contains(r#""backend":"analytical""#), "{snap}");
+}
+
+/// A `[cost]`-configured contention run replays bit-identically and its
+/// snapshot is a fixed point — tuned per-level knobs included.
+#[test]
+fn cost_section_survives_snapshot_replay() {
+    let cfg = config::load_run_config(CFG_COST).unwrap();
+    let CostModel::Contention(params) = cfg.search.cost else {
+        panic!("[cost] backend = contention not honored: {:?}", cfg.search.cost)
+    };
+    // Scalar broadcasts; the array overrides the outermost prefix.
+    assert_eq!(params.bandwidth_derate[0], 0.8);
+    assert_eq!(params.bandwidth_derate[MAX_LEVELS - 1], 0.8);
+    assert_eq!(params.burst_bits[0], 1024.0);
+    assert_eq!(params.burst_bits[1], 256.0);
+    assert_eq!(params.decompress_bits_per_cycle, Some(2048.0));
+
+    let r1 = cosearch_workload(&cfg.arch, &cfg.workload, &cfg.search);
+    let snap = snapshot::render(&cfg.arch, &cfg.workload, &cfg.search);
+    assert!(snap.contains(r#""backend":"contention""#), "{snap}");
+
+    let cfg2 = config::load_run_config_any(&snap).unwrap();
+    assert_eq!(cfg2.search.cost, cfg.search.cost, "cost config not replayed verbatim");
+    let r2 = cosearch_workload(&cfg2.arch, &cfg2.workload, &cfg2.search);
+    assert_eq!(r1.total_cycles().to_bits(), r2.total_cycles().to_bits());
+    assert_eq!(r1.total_energy_pj().to_bits(), r2.total_energy_pj().to_bits());
+    assert_eq!(r1.designs.len(), r2.designs.len());
+    for (a, b) in r1.designs.iter().zip(&r2.designs) {
+        assert_eq!(a.metric_value.to_bits(), b.metric_value.to_bits(), "{}", a.op_name);
+        assert_eq!(format!("{:?}", a.mapping), format!("{:?}", b.mapping), "{}", a.op_name);
+    }
+
+    let snap2 = snapshot::render(&cfg2.arch, &cfg2.workload, &cfg2.search);
+    assert_eq!(snap, snap2, "snapshot is not a fixed point under [cost]");
+
+    // Same TOML minus [cost] = the analytical default — and it must
+    // actually change the search's latency story (contention dominates).
+    let stripped: String = {
+        let mut out = String::new();
+        let mut skipping = false;
+        for line in CFG_COST.lines() {
+            if line.trim() == "[cost]" {
+                skipping = true;
+                continue;
+            }
+            if skipping && line.trim().starts_with('[') {
+                skipping = false;
+            }
+            if !skipping {
+                out.push_str(line);
+                out.push('\n');
+            }
+        }
+        out
+    };
+    let cfg_plain = config::load_run_config(&stripped).unwrap();
+    assert_eq!(cfg_plain.search.cost, CostModel::Analytical);
+    let r_plain = cosearch_workload(&cfg_plain.arch, &cfg_plain.workload, &cfg_plain.search);
+    // Slack for the backend-dependent tile-refinement trajectory
+    // (rust/tests/cost_backends.rs documents why the whole-search
+    // comparison is not exact); per-mapping dominance is exact.
+    assert!(
+        r1.total_cycles() >= r_plain.total_cycles() * 0.98,
+        "contention run undercut the analytical optimum: {} < {}",
+        r1.total_cycles(),
+        r_plain.total_cycles()
+    );
 }
 
 /// Every record the harness emits must re-parse (unified schema,
