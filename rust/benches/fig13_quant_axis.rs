@@ -1,0 +1,171 @@
+//! Fig. 13 (extension beyond the paper) — quantization as a co-search
+//! axis: payload bitwidths searched jointly with compression format and
+//! dataflow, on Arch 3 over small scenario workloads.
+//!
+//! Qualitative claims asserted:
+//!   * the multi-width search picks widths from the configured spaces
+//!     only (activations pinned at 8, weights/KV searched over 4/8/16),
+//!   * per op, the searched design's objective is <= the design of
+//!     every fixed-width run over the same set (the set search
+//!     dominates each of its members),
+//!   * consequently the per-op objective sum of the search run is <=
+//!     that of the best fixed-width run, for energy and for EDP.
+//!
+//! The dominance comparison uses the per-op objective sum
+//! `sum(metric_value * count)` — the quantity the co-search actually
+//! minimizes per op.  Workload EDP is `(sum E) * (sum C)`, not a per-op
+//! sum, so a workload-level EDP comparison would not be a theorem; the
+//! per-op sum is (see docs/SEARCH.md).
+
+use snipsnap::arch::presets;
+use snipsnap::config::typed::workload_by_name;
+use snipsnap::cost::Metric;
+use snipsnap::dataflow::mapper::MapperConfig;
+use snipsnap::format::quant::{BitwidthSpace, QuantConfig};
+use snipsnap::search::{cosearch_workload, SearchConfig, WorkloadResult};
+use snipsnap::util::bench::{banner, write_record};
+use snipsnap::util::json::Json;
+use snipsnap::util::table::{fmt_f, Table};
+use std::time::Instant;
+
+const WIDTHS: [u32; 3] = [4, 8, 16];
+const SCENARIOS: [&str; 3] = ["gqa-tiny", "decode-tiny", "moe-tiny"];
+
+fn cfg(metric: Metric, quant: QuantConfig) -> SearchConfig {
+    SearchConfig {
+        metric,
+        mapper: MapperConfig { max_candidates: 300, ..Default::default() },
+        quant,
+        ..Default::default()
+    }
+}
+
+/// Weights and KV searched over 4/8/16; activations pinned at 8.
+fn set_quant() -> QuantConfig {
+    let wide = BitwidthSpace::new(WIDTHS.to_vec()).expect("static set");
+    QuantConfig {
+        w_bits: Some(wide.clone()),
+        a_bits: Some(BitwidthSpace::fixed(8)),
+        kv_bits: Some(wide),
+    }
+}
+
+/// One member of the searched set: weights and KV pinned at `b`.
+fn fixed_quant(b: u32) -> QuantConfig {
+    QuantConfig {
+        w_bits: Some(BitwidthSpace::fixed(b)),
+        a_bits: Some(BitwidthSpace::fixed(8)),
+        kv_bits: Some(BitwidthSpace::fixed(b)),
+    }
+}
+
+/// The per-op objective the co-search minimizes, summed over instances.
+fn per_op_sum(r: &WorkloadResult) -> f64 {
+    r.designs.iter().map(|d| d.metric_value * d.count as f64).sum()
+}
+
+/// Per-op dominance: the searched design must be no worse than the
+/// fixed-width design on every op (same workload, same op order).
+fn assert_dominates(searched: &WorkloadResult, fixed: &WorkloadResult, label: &str) {
+    for (s, f) in searched.designs.iter().zip(&fixed.designs) {
+        assert_eq!(s.op_name, f.op_name, "{label}: op order mismatch");
+        assert!(
+            s.metric_value <= f.metric_value,
+            "{label} {}: searched {} > fixed {}",
+            s.op_name,
+            s.metric_value,
+            f.metric_value
+        );
+    }
+}
+
+fn main() {
+    let t0 = Instant::now();
+    banner("Fig. 13", "quantization co-search axis: set search vs fixed widths");
+    let arch = presets::arch3();
+
+    let mut t = Table::new(vec![
+        "scenario", "search (pJ)", "W4 (pJ)", "W8 (pJ)", "W16 (pJ)", "vs best fixed",
+    ]);
+    let mut rows = Vec::new();
+    for name in SCENARIOS {
+        let w = workload_by_name(name).expect("scenario preset");
+        let searched = cosearch_workload(&arch, &w, &cfg(Metric::Energy, set_quant()));
+        assert_eq!(searched.designs.len(), w.ops.len(), "{name}: missing designs");
+        for d in &searched.designs {
+            assert_eq!(d.input_bits, 8, "{name} {}: activations pinned at 8", d.op_name);
+            assert!(
+                WIDTHS.contains(&d.weight_bits),
+                "{name} {}: searched width {} outside the configured set",
+                d.op_name,
+                d.weight_bits
+            );
+        }
+
+        let mut fixed = Vec::new();
+        for b in WIDTHS {
+            let r = cosearch_workload(&arch, &w, &cfg(Metric::Energy, fixed_quant(b)));
+            assert_dominates(&searched, &r, &format!("{name} energy W{b}"));
+            fixed.push(r);
+        }
+        let best_fixed = fixed
+            .iter()
+            .map(per_op_sum)
+            .fold(f64::INFINITY, f64::min);
+        let s_sum = per_op_sum(&searched);
+        assert!(
+            s_sum <= best_fixed,
+            "{name}: search sum {s_sum} > best fixed sum {best_fixed}"
+        );
+
+        t.add_row(vec![
+            w.name.clone(),
+            fmt_f(searched.total_energy_pj()),
+            fmt_f(fixed[0].total_energy_pj()),
+            fmt_f(fixed[1].total_energy_pj()),
+            fmt_f(fixed[2].total_energy_pj()),
+            format!("{:.1}%", 100.0 * (1.0 - s_sum / best_fixed)),
+        ]);
+        rows.push(Json::obj(vec![
+            ("scenario", Json::str(&w.name)),
+            ("search_objective", Json::num(s_sum)),
+            ("best_fixed_objective", Json::num(best_fixed)),
+            ("search_energy_pj", Json::num(searched.total_energy_pj())),
+            (
+                "fixed_energy_pj",
+                Json::arr(fixed.iter().map(|r| Json::num(r.total_energy_pj())).collect()),
+            ),
+        ]));
+    }
+    println!("{}", t.render());
+
+    // Same dominance under EDP, on one scenario (per-op objective sums;
+    // see the module comment for why not workload EDP).
+    let w = workload_by_name("gqa-tiny").expect("scenario preset");
+    let searched = cosearch_workload(&arch, &w, &cfg(Metric::Edp, set_quant()));
+    let mut best_fixed = f64::INFINITY;
+    for b in WIDTHS {
+        let r = cosearch_workload(&arch, &w, &cfg(Metric::Edp, fixed_quant(b)));
+        assert_dominates(&searched, &r, &format!("gqa-tiny edp W{b}"));
+        best_fixed = best_fixed.min(per_op_sum(&r));
+    }
+    let edp_sum = per_op_sum(&searched);
+    assert!(edp_sum <= best_fixed, "EDP search sum {edp_sum} > best fixed {best_fixed}");
+    println!(
+        "EDP per-op objective: search {} vs best fixed {} ({:.1}% better)",
+        fmt_f(edp_sum),
+        fmt_f(best_fixed),
+        100.0 * (1.0 - edp_sum / best_fixed)
+    );
+
+    write_record(
+        "fig13_quant_axis",
+        t0.elapsed().as_secs_f64(),
+        Json::obj(vec![
+            ("edp_search_objective", Json::num(edp_sum)),
+            ("edp_best_fixed_objective", Json::num(best_fixed)),
+            ("rows", Json::arr(rows)),
+        ]),
+    );
+    println!("fig13 OK");
+}

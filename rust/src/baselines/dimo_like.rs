@@ -15,7 +15,7 @@ use crate::dataflow::mapper::{all_orders, spatial_candidates};
 use crate::dataflow::{LoopDim, Mapping, ProblemDims, TileLevel};
 use crate::engine::ScoredFormat;
 use crate::search::progressive::native_format;
-use crate::search::{OpDesign, WorkloadResult};
+use crate::search::{OpDesign, ScoredMapping, WorkloadResult};
 use crate::util::prng::Pcg32;
 use crate::workload::{MatMulOp, Workload};
 use std::time::Instant;
@@ -119,16 +119,16 @@ pub fn dimo_op(
     };
     let orders = all_orders();
     let mut rng = Pcg32::new(cfg.seed);
-    let mut best: Option<(Mapping, crate::cost::CostReport, f64)> = None;
+    let mut best: Option<ScoredMapping> = None;
 
     // Full sparse evaluation with exhaustive order expansion — DiMO's
     // inner objective is evaluated on every candidate move.
     let eval_all_orders =
-        |m: &Mapping, evals: &mut u64| -> Option<(Mapping, crate::cost::CostReport, f64)> {
+        |m: &Mapping, evals: &mut u64| -> Option<ScoredMapping> {
             if !mapping_is_legal(arch, m, &CompressionRatios::DENSE) {
                 return None;
             }
-            let mut local: Option<(Mapping, crate::cost::CostReport, f64)> = None;
+            let mut local: Option<ScoredMapping> = None;
             let mut idx = vec![0usize; nlevels];
             loop {
                 let mut cand = m.clone();
@@ -197,6 +197,9 @@ pub fn dimo_op(
         op_name: op.name.clone(),
         input_format: fi.format.clone(),
         weight_format: fw.format.clone(),
+        // DiMO-Sparse has no quantization axis: native width.
+        input_bits: arch.data_bits,
+        weight_bits: arch.data_bits,
         mapping,
         report,
         metric_value: v,

@@ -20,10 +20,10 @@
 use crate::arch::Accelerator;
 use crate::cost::{mapping_is_legal, tiles_are_legal, CompressionRatios, EvalContext, Metric};
 use crate::dataflow::mapper::{all_orders, MapperConfig, ProtoArena};
-use crate::dataflow::{Mapping, ProblemDims};
+use crate::dataflow::ProblemDims;
 use crate::engine::ScoredFormat;
 use crate::search::progressive::native_format;
-use crate::search::{OpDesign, SearchTelemetry, WorkloadResult};
+use crate::search::{OpDesign, ScoredMapping, SearchTelemetry, WorkloadResult};
 use crate::sparsity::reduction::ReductionStrategy;
 use crate::sparsity::SparsitySpec;
 use crate::workload::{MatMulOp, Workload};
@@ -63,7 +63,7 @@ pub fn stepwise_op(
 
     let orders = all_orders();
     let mut ctx = EvalContext::new(arch, p, metric);
-    let mut best: Option<(Mapping, crate::cost::CostReport, f64)> = None;
+    let mut best: Option<ScoredMapping> = None;
 
     // Step 1 legality: *dense* footprints (no compression awareness) —
     // evaluated on the packed arena tiles, then every proto's orders are
@@ -137,6 +137,9 @@ pub fn stepwise_op(
         op_name: op.name.clone(),
         input_format: fi.format.clone(),
         weight_format: fw.format.clone(),
+        // The stepwise baseline predates the quant axis: native width.
+        input_bits: arch.data_bits,
+        weight_bits: arch.data_bits,
         mapping,
         report,
         metric_value: v,

@@ -27,6 +27,7 @@ use crate::dataflow::MAX_LEVELS;
 use crate::dataflow::mapper::MapperConfig;
 use crate::dataflow::{LoopDim, ProblemDims};
 use crate::engine::EngineConfig;
+use crate::format::quant::{BitwidthSpace, QuantConfig};
 use crate::format::space::SpaceConfig;
 use crate::search::{FormatMode, SearchConfig};
 use crate::sparsity::reduction::{Direction, ReductionKind, ReductionStrategy};
@@ -369,7 +370,59 @@ fn search_json(s: &SearchConfig) -> Json {
         ("threads", num_u(s.threads as u64)),
         ("prune", Json::Bool(s.prune)),
         ("cost", cost_json(&s.cost)),
+        ("quant", quant_json(&s.quant)),
     ])
+}
+
+/// Serialize the quantization axis: each operand class is either `null`
+/// (axis disabled for that class — native width) or the sorted candidate
+/// set.  [`BitwidthSpace`] stores sorted + deduplicated values, so the
+/// rendering is canonical and the snapshot stays a fixed point.
+fn quant_json(q: &QuantConfig) -> Json {
+    let space = |s: &Option<BitwidthSpace>| match s {
+        Some(s) => Json::arr(s.values().iter().map(|&b| num_u(b as u64))),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("w_bits", space(&q.w_bits)),
+        ("a_bits", space(&q.a_bits)),
+        ("kv_bits", space(&q.kv_bits)),
+    ])
+}
+
+fn quant_space_from(v: &Json, k: &str) -> Result<Option<BitwidthSpace>> {
+    match get(v, k)? {
+        Json::Null => Ok(None),
+        other => {
+            let arr = other
+                .as_arr()
+                .with_context(|| format!("snapshot '{k}' must be null or an array"))?;
+            let mut vals = Vec::with_capacity(arr.len());
+            for x in arr {
+                let n = x
+                    .as_u64()
+                    .with_context(|| format!("snapshot '{k}' entries must be integers"))?;
+                vals.push(
+                    u32::try_from(n)
+                        .map_err(|_| anyhow!("snapshot '{k}' value {n} exceeds u32"))?,
+                );
+            }
+            // Same semantic validation as the CLI/TOML paths: a
+            // hand-edited snapshot cannot smuggle in a width the flags
+            // would reject.
+            BitwidthSpace::new(vals)
+                .map(Some)
+                .map_err(|e| anyhow!("snapshot '{k}': {e}"))
+        }
+    }
+}
+
+fn quant_from(v: &Json) -> Result<QuantConfig> {
+    Ok(QuantConfig {
+        w_bits: quant_space_from(v, "w_bits")?,
+        a_bits: quant_space_from(v, "a_bits")?,
+        kv_bits: quant_space_from(v, "kv_bits")?,
+    })
 }
 
 /// Serialize the cost backend.  Per-level arrays are written in full
@@ -464,6 +517,13 @@ fn search_from(v: &Json) -> Result<SearchConfig> {
         cost: match v.get("cost") {
             Some(c) => cost_from(c)?,
             None => CostModel::Analytical,
+        },
+        // Absent in snapshots written before the quantization axis:
+        // those runs searched at the native width, which is exactly
+        // what the default (disabled) config reproduces.
+        quant: match v.get("quant") {
+            Some(q) => quant_from(q)?,
+            None => QuantConfig::default(),
         },
     })
 }
@@ -560,6 +620,50 @@ k = 64
         let snap = render(&cfg.arch, &cfg.workload, &cfg.search);
         assert!(snap.contains("\"cost\":{\"backend\":\"analytical\"}"), "{snap}");
         assert_eq!(load_run_config_any(&snap).unwrap().search.cost, CostModel::Analytical);
+    }
+
+    #[test]
+    fn snapshot_round_trips_quant_axis() {
+        // [quant] TOML → snapshot → reload → identical QuantConfig, and
+        // the snapshot stays a fixed point.  Unsorted input canonicalizes.
+        let src = format!("{SRC}[quant]\nw_bits = [16, 4, 8]\nkv_bits = 8\n");
+        let cfg = load_run_config(&src).unwrap();
+        let q = &cfg.search.quant;
+        assert_eq!(q.w_bits.as_ref().unwrap().values(), &[4, 8, 16]);
+        assert_eq!(q.a_bits, None);
+        assert_eq!(q.kv_bits.as_ref().unwrap().values(), &[8]);
+        let snap = render(&cfg.arch, &cfg.workload, &cfg.search);
+        assert!(snap.contains("\"w_bits\":[4,8,16]"), "{snap}");
+        assert!(snap.contains("\"a_bits\":null"), "{snap}");
+        let cfg2 = load_run_config_any(&snap).unwrap();
+        assert_eq!(cfg2.search.quant, cfg.search.quant);
+        let snap2 = render(&cfg2.arch, &cfg2.workload, &cfg2.search);
+        assert_eq!(snap, snap2);
+    }
+
+    #[test]
+    fn legacy_snapshot_without_quant_defaults_to_disabled() {
+        let cfg = load_run_config(SRC).unwrap();
+        let snap = render(&cfg.arch, &cfg.workload, &cfg.search);
+        // Strip the quant key the way a pre-quant snapshot looked.
+        let legacy = snap
+            .replace(",\"quant\":{\"w_bits\":null,\"a_bits\":null,\"kv_bits\":null}", "");
+        assert_ne!(legacy, snap, "strip pattern went stale");
+        let cfg2 = load_run_config_json(&legacy).unwrap();
+        assert!(cfg2.search.quant.is_default());
+    }
+
+    #[test]
+    fn tampered_quant_snapshots_are_rejected() {
+        let src = format!("{SRC}[quant]\nw_bits = [4, 8]\n");
+        let cfg = load_run_config(&src).unwrap();
+        let snap = render(&cfg.arch, &cfg.workload, &cfg.search);
+        let bad = snap.replace("\"w_bits\":[4,8]", "\"w_bits\":[0]");
+        assert!(load_run_config_json(&bad).unwrap_err().to_string().contains("w_bits"));
+        let bad = snap.replace("\"w_bits\":[4,8]", "\"w_bits\":[]");
+        assert!(load_run_config_json(&bad).unwrap_err().to_string().contains("empty"));
+        let bad = snap.replace("\"w_bits\":[4,8]", "\"w_bits\":\"4,8\"");
+        assert!(load_run_config_json(&bad).unwrap_err().to_string().contains("array"));
     }
 
     #[test]

@@ -64,6 +64,15 @@
 //! burst_bits = [512, 128]   # transaction granularity per boundary
 //! decompress_bits_per_cycle = 4096   # 0 disables the decode term
 //!
+//! # Optional quantization axis (docs/SEARCH.md): payload bitwidths per
+//! # operand class — a fixed integer pins the width, an array hands the
+//! # choice to the co-search.  Absent keys stay at the accelerator's
+//! # data_bits (axis disabled = bit-identical to the pre-quant flow).
+//! [quant]
+//! w_bits = [4, 8, 16]       # weight payload widths to search
+//! a_bits = 8                # activation payload width (fixed)
+//! kv_bits = 8               # KV-cache width (attention qk/av weight slot)
+//!
 //! # Optional custom accelerator:
 //! [arch]
 //! macs = 2048
@@ -84,6 +93,7 @@ use super::toml::{TomlDoc, TomlTable, TomlValue};
 use crate::arch::{presets, Accelerator, MacArray, MemLevel};
 use crate::cost::{CostModel, Metric};
 use crate::dataflow::{ProblemDims, MAX_LEVELS};
+use crate::format::quant::{BitwidthSpace, QuantConfig};
 use crate::search::{FormatMode, SearchConfig};
 use crate::sparsity::reduction::{Direction, ReductionStrategy};
 use crate::sparsity::{validate_density, SparsitySpec};
@@ -201,6 +211,18 @@ pub fn resolve_workload(name: &str, opts: &WorkloadOpts) -> Result<Workload> {
     let mut w = match lname.as_str() {
         "llama2-7b" | "llama2-7b-batch8" => llm::llama2_7b(ph),
         "llama2-7b-nm24" => llm::weight_nm_variant(llm::llama2_7b(ph), 2, 4),
+        // Quantized variants: same ops; the bundled QuantConfig rides in
+        // via [`preset_quant`] (callers apply it to `search.quant`).
+        "llama2-7b-w4a8" => {
+            let mut w = llm::llama2_7b(ph);
+            w.name.push_str(" (W4A8)");
+            w
+        }
+        "llama2-7b-qsearch" => {
+            let mut w = llm::llama2_7b(ph);
+            w.name.push_str(" (quant search)");
+            w
+        }
         "llama2-13b" => llm::llama2_13b(ph),
         "opt-125m" => llm::opt_125m(ph),
         "opt-6.7b" => llm::opt_6_7b(ph),
@@ -239,6 +261,27 @@ pub fn resolve_workload(name: &str, opts: &WorkloadOpts) -> Result<Workload> {
 /// Resolve a workload preset by name with its default scenario knobs.
 pub fn workload_by_name(name: &str) -> Result<Workload> {
     resolve_workload(name, &WorkloadOpts::default())
+}
+
+/// The quantization axis bundled with a workload preset, if any.  Most
+/// presets carry none (axis disabled); the quantized variants pin or
+/// search payload widths.  Callers resolving a preset by name apply this
+/// to `search.quant` before `[quant]` sections / `--*-bits` flags, which
+/// override per key.
+pub fn preset_quant(name: &str) -> Option<QuantConfig> {
+    match name.to_ascii_lowercase().as_str() {
+        "llama2-7b-w4a8" => Some(QuantConfig {
+            w_bits: Some(BitwidthSpace::fixed(4)),
+            a_bits: Some(BitwidthSpace::fixed(8)),
+            kv_bits: Some(BitwidthSpace::fixed(8)),
+        }),
+        "llama2-7b-qsearch" => Some(QuantConfig {
+            w_bits: Some(BitwidthSpace::new(vec![4, 8, 16]).expect("static set")),
+            a_bits: Some(BitwidthSpace::new(vec![8, 16]).expect("static set")),
+            kv_bits: Some(BitwidthSpace::new(vec![8, 16]).expect("static set")),
+        }),
+        _ => None,
+    }
 }
 
 pub fn metric_by_name(name: &str) -> Result<Metric> {
@@ -457,6 +500,67 @@ fn parse_cost_section(doc: &TomlDoc, search: &mut SearchConfig) -> Result<()> {
     Ok(())
 }
 
+/// Parse one `[quant]` key: a scalar integer pins the width, an array
+/// hands the set to the co-search.  Validation (non-empty, 1..=64)
+/// funnels through [`BitwidthSpace::new`].
+fn parse_quant_value(sec: &TomlTable, key: &str) -> Result<Option<BitwidthSpace>> {
+    let Some(v) = sec.get(key) else { return Ok(None) };
+    let bits = match v {
+        TomlValue::Arr(a) => a
+            .iter()
+            .enumerate()
+            .map(|(i, x)| {
+                x.as_u32()
+                    .ok_or_else(|| anyhow!("[quant] {key}[{i}] must be an integer"))
+            })
+            .collect::<Result<Vec<u32>>>()?,
+        other => vec![other
+            .as_u32()
+            .ok_or_else(|| anyhow!("[quant] {key} must be an integer or an array"))?],
+    };
+    Ok(Some(
+        BitwidthSpace::new(bits).map_err(|e| anyhow!("[quant] {key}: {e}"))?,
+    ))
+}
+
+/// Parse the optional `[quant]` section into `search.quant`.  Keys
+/// override any preset-bundled quant config individually; absent keys
+/// keep the preset's (or the disabled default's) value.
+fn parse_quant_section(doc: &TomlDoc, search: &mut SearchConfig) -> Result<()> {
+    let Some(sec) = doc.section("quant") else { return Ok(()) };
+    if let Some(s) = parse_quant_value(sec, "w_bits")? {
+        search.quant.w_bits = Some(s);
+    }
+    if let Some(s) = parse_quant_value(sec, "a_bits")? {
+        search.quant.a_bits = Some(s);
+    }
+    if let Some(s) = parse_quant_value(sec, "kv_bits")? {
+        search.quant.kv_bits = Some(s);
+    }
+    Ok(())
+}
+
+/// Reject payload widths above the accelerator word width: quantization
+/// narrows operands, and a payload wider than `data_bits` would make the
+/// "compressed" tile larger than its dense reference, breaking the
+/// ratio-cap invariant the tile-legality and lower-bound math rely on.
+pub fn validate_quant_bits(q: &QuantConfig, data_bits: u32) -> Result<()> {
+    for (key, space) in [
+        ("w_bits", &q.w_bits),
+        ("a_bits", &q.a_bits),
+        ("kv_bits", &q.kv_bits),
+    ] {
+        if let Some(s) = space {
+            if let Some(&b) = s.values().iter().find(|&&b| b > data_bits) {
+                bail!(
+                    "quant {key} includes {b}, above the accelerator's data_bits {data_bits}"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Load a complete run configuration from TOML text.
 pub fn load_run_config(src: &str) -> Result<RunConfig> {
     let doc = TomlDoc::parse(src).map_err(|e| anyhow!("{e}"))?;
@@ -470,6 +574,7 @@ pub fn load_run_config(src: &str) -> Result<RunConfig> {
                 .context("[run] arch missing (or provide [arch])")?,
         )?,
     };
+    let mut preset_name: Option<String> = None;
     let workload = match parse_inline_workload(&doc)? {
         Some(w) => w,
         None => {
@@ -481,6 +586,7 @@ pub fn load_run_config(src: &str) -> Result<RunConfig> {
                 .context(
                     "[run] workload / [workload] preset missing (or provide [op.*])",
                 )?;
+            preset_name = Some(preset.to_string());
             let mut opts = WorkloadOpts::default();
             if let Some(sec) = wsec {
                 if let Some(v) = sec.get("prefill_tokens") {
@@ -549,6 +655,12 @@ pub fn load_run_config(src: &str) -> Result<RunConfig> {
         }
     }
     parse_cost_section(&doc, &mut search)?;
+    // Preset-bundled quant seeds the axis; [quant] keys override per key.
+    if let Some(q) = preset_name.as_deref().and_then(preset_quant) {
+        search.quant = q;
+    }
+    parse_quant_section(&doc, &mut search)?;
+    validate_quant_bits(&search.quant, arch.data_bits)?;
     search.engine.data_bits = arch.data_bits;
     Ok(RunConfig { arch, workload, search })
 }
@@ -877,6 +989,67 @@ kv_density = 1.5
         // Over-long prefix array.
         let many = "[cost]\nbackend = \"contention\"\nburst_bits = [1,1,1,1,1,1,1,1,1]\n";
         assert!(err(many).contains("entries"));
+    }
+
+    #[test]
+    fn quant_section_parses_scalar_and_array() {
+        let base = "[run]\narch = \"arch3\"\nworkload = \"opt-125m\"\n";
+
+        // Absent section: axis disabled.
+        let cfg = load_run_config(base).unwrap();
+        assert!(cfg.search.quant.is_default());
+
+        let cfg = load_run_config(&format!(
+            "{base}[quant]\nw_bits = [16, 4, 8]\na_bits = 8\n"
+        ))
+        .unwrap();
+        let q = &cfg.search.quant;
+        assert_eq!(q.w_bits.as_ref().unwrap().values(), &[4, 8, 16]);
+        assert_eq!(q.a_bits.as_ref().unwrap().values(), &[8]);
+        assert!(q.kv_bits.is_none(), "absent key stays disabled");
+    }
+
+    #[test]
+    fn quant_presets_seed_and_sections_override() {
+        assert!(preset_quant("llama2-7b").is_none());
+        let q = preset_quant("llama2-7b-w4a8").unwrap();
+        assert_eq!(q.w_bits.as_ref().unwrap().values(), &[4]);
+        assert_eq!(q.a_bits.as_ref().unwrap().values(), &[8]);
+        let q = preset_quant("llama2-7b-qsearch").unwrap();
+        assert_eq!(q.w_bits.as_ref().unwrap().values(), &[4, 8, 16]);
+
+        // The preset names resolve as workloads too (same ops as the base
+        // model, distinct display name).
+        let w = workload_by_name("llama2-7b-w4a8").unwrap();
+        assert!(w.name.contains("W4A8"), "{}", w.name);
+        assert_eq!(w.ops.len(), workload_by_name("llama2-7b").unwrap().ops.len());
+
+        // A [quant] key overrides the preset individually; absent keys
+        // keep the preset's value.
+        let cfg = load_run_config(
+            "[run]\narch = \"arch3\"\nworkload = \"llama2-7b-w4a8\"\n[quant]\nw_bits = 8\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.search.quant.w_bits.as_ref().unwrap().values(), &[8]);
+        assert_eq!(cfg.search.quant.a_bits.as_ref().unwrap().values(), &[8]);
+        assert_eq!(cfg.search.quant.kv_bits.as_ref().unwrap().values(), &[8]);
+    }
+
+    #[test]
+    fn quant_section_rejects_bad_values() {
+        let base = "[run]\narch = \"arch3\"\nworkload = \"opt-125m\"\n";
+        let err = |tail: &str| load_run_config(&format!("{base}{tail}")).unwrap_err().to_string();
+
+        let e = err("[quant]\nw_bits = 0\n");
+        assert!(e.contains("out of range"), "{e}");
+        let e = err("[quant]\na_bits = []\n");
+        assert!(e.contains("empty"), "{e}");
+        let e = err("[quant]\nkv_bits = \"8\"\n");
+        assert!(e.contains("integer"), "{e}");
+        // Widths above the accelerator word width are rejected (arch3 is
+        // a 16-bit machine).
+        let e = err("[quant]\nw_bits = [4, 32]\n");
+        assert!(e.contains("data_bits"), "{e}");
     }
 
     #[test]

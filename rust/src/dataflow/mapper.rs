@@ -113,6 +113,11 @@ fn splits(total: u64, nlevels: usize) -> Vec<Vec<u64>> {
     all
 }
 
+/// Factor-split table of one residual dimension: every way to split the
+/// residual across the temporal levels (`splits(total, nlevels)`), one
+/// `Vec<u64>` of per-level factors per entry.
+type SplitTable = Vec<Vec<u64>>;
+
 /// The ratio-independent part of one op's proto enumeration, hoisted so
 /// it is computed **once per op**: the spatial candidates plus the
 /// per-level factor-split tables of every residual dim.  `for_each_proto`
@@ -126,13 +131,13 @@ pub struct OpEnumeration {
     spatial_splits: Vec<[usize; 3]>,
     /// Distinct split tables, deduplicated by residual value (many
     /// spatial candidates share residuals).
-    split_tables: Vec<Vec<Vec<u64>>>,
+    split_tables: Vec<SplitTable>,
 }
 
 impl OpEnumeration {
     pub fn new(p: &ProblemDims, nlevels: usize, rows: u64, cols: u64, cfg: &MapperConfig) -> Self {
         let spatials = spatial_candidates(p, rows, cols, cfg.min_spatial_utilization);
-        let mut split_tables: Vec<Vec<Vec<u64>>> = Vec::new();
+        let mut split_tables: Vec<SplitTable> = Vec::new();
         let mut by_total: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
         let mut table_for = |total: u64| -> usize {
             *by_total.entry(total).or_insert_with(|| {

@@ -17,6 +17,10 @@ pub struct Loop {
     pub level: usize,
 }
 
+/// Last-seen relevant-coordinate tuple per operand (indexed like
+/// [`Operand::ALL`]) at one memory boundary; `None` until first touch.
+type LastCoords = [Option<Vec<u64>>; 3];
+
 /// Brute-force fill counting: simulate the nest, tracking for each memory
 /// boundary and operand the last-seen relevant-index tuple; count a load
 /// whenever it changes.  Returns `fills[boundary][operand]` in elements.
@@ -27,7 +31,7 @@ pub fn simulate_fills(mapping: &Mapping, p: &ProblemDims) -> Vec<[f64; 3]> {
     assert!(total_iters <= 1 << 22, "simulate_fills is for small problems");
 
     // Per-boundary, per-operand: last relevant coordinate tuple.
-    let mut last: Vec<[Option<Vec<u64>>; 3]> = vec![[None, None, None]; nlevels];
+    let mut last: Vec<LastCoords> = vec![[None, None, None]; nlevels];
     let mut loads: Vec<[u64; 3]> = vec![[0; 3]; nlevels];
 
     let mut idx = vec![0u64; nest.len()];

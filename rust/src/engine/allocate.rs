@@ -15,7 +15,7 @@
 use super::EngineConfig;
 use crate::format::space::enumerate_allocations;
 use crate::format::{Axis, CompPat, Format};
-use crate::sparsity::analyzer::analytical_cost;
+use crate::sparsity::analyzer::analytical_cost_quant;
 use crate::sparsity::SparsityPattern;
 
 /// Per-axis dataflow tile factors, outermost first (from the chosen loop
@@ -117,6 +117,23 @@ pub fn choose_allocation(
     hints: Option<&TileHints>,
     cfg: &EngineConfig,
 ) -> Option<Format> {
+    choose_allocation_quant(pat, rows, cols, pattern, hints, cfg, cfg.data_bits)
+}
+
+/// [`choose_allocation`] with the payload quantized to `payload_bits`
+/// (see `format::quant`): the allocation ranking reruns under the
+/// quantized bit cost, so a width that shrinks the payload share can
+/// shift the best split.  `payload_bits == cfg.data_bits` reproduces
+/// [`choose_allocation`] bit for bit.
+pub fn choose_allocation_quant(
+    pat: &CompPat,
+    rows: u64,
+    cols: u64,
+    pattern: &SparsityPattern,
+    hints: Option<&TileHints>,
+    cfg: &EngineConfig,
+    payload_bits: u32,
+) -> Option<Format> {
     let mut candidates: Vec<Format> = Vec::new();
     if let Some(h) = hints {
         if let Some(f) = aligned_allocation(pat, rows, cols, h) {
@@ -150,7 +167,7 @@ pub fn choose_allocation(
     }
     let mut best: Option<(f64, Format)> = None;
     for f in candidates {
-        let bits = analytical_cost(&f, pattern, cfg.data_bits).total_bits();
+        let bits = analytical_cost_quant(&f, pattern, cfg.data_bits, payload_bits).total_bits();
         let surcharge = match hints {
             Some(h) => 1.0 + MISALIGN_SURCHARGE * misaligned_levels(&f, h) as f64,
             None => 1.0,
@@ -189,6 +206,7 @@ fn balanced_split(n: u64, k: usize) -> Vec<u64> {
 mod tests {
     use super::*;
     use crate::format::Prim;
+    use crate::sparsity::analyzer::analytical_cost;
 
     fn b2_pattern() -> CompPat {
         CompPat::new(vec![

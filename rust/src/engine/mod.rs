@@ -10,7 +10,7 @@ pub mod scoring;
 
 use crate::format::space::SpaceConfig;
 use crate::format::Format;
-use crate::sparsity::analyzer::{analytical_cost, FormatCost};
+use crate::sparsity::analyzer::{analytical_cost, analytical_cost_quant, FormatCost};
 use crate::sparsity::SparsityPattern;
 
 /// Engine configuration.
@@ -47,6 +47,21 @@ impl ScoredFormat {
         let eq_bits = cfg.gamma.powi(format.compressing_depth() as i32) * cost.total_bits();
         ScoredFormat { format, cost, eq_bits }
     }
+
+    /// Score with the payload quantized to `payload_bits` (the dense
+    /// reference stays at `cfg.data_bits` — see `format::quant`).  With
+    /// `payload_bits == cfg.data_bits` this is [`ScoredFormat::score`]
+    /// bit for bit.
+    pub fn score_quant(
+        format: Format,
+        pattern: &SparsityPattern,
+        cfg: &EngineConfig,
+        payload_bits: u32,
+    ) -> Self {
+        let cost = analytical_cost_quant(&format, pattern, cfg.data_bits, payload_bits);
+        let eq_bits = cfg.gamma.powi(format.compressing_depth() as i32) * cost.total_bits();
+        ScoredFormat { format, cost, eq_bits }
+    }
 }
 
 /// Search statistics, reported by the Fig. 6 ablation.
@@ -71,6 +86,23 @@ pub fn search_formats(
     tile_hints: Option<&allocate::TileHints>,
     cfg: &EngineConfig,
 ) -> (Vec<ScoredFormat>, SearchStats) {
+    search_formats_quant(rows, cols, pattern, tile_hints, cfg, cfg.data_bits)
+}
+
+/// [`search_formats`] with the payload quantized to `payload_bits`: the
+/// whole structure search — allocation choice, penalty pruning, top-k
+/// ranking — reruns under the quantized payload cost, because shrinking
+/// the payload shifts the metadata/payload trade-off and can change
+/// which pattern wins.  With `payload_bits == cfg.data_bits` this is
+/// [`search_formats`] bit for bit (the quant-axis disabled contract).
+pub fn search_formats_quant(
+    rows: u64,
+    cols: u64,
+    pattern: &SparsityPattern,
+    tile_hints: Option<&allocate::TileHints>,
+    cfg: &EngineConfig,
+    payload_bits: u32,
+) -> (Vec<ScoredFormat>, SearchStats) {
     // NOTE: `full_space` is only filled when the caller asks (the Fig. 6
     // ablation) — counting the unpruned space costs more than the search.
     let mut stats = SearchStats::default();
@@ -87,12 +119,19 @@ pub fn search_formats(
 
     for pat in &ordered {
         let depth = pat.compressing_depth();
-        let Some(format) = allocate::choose_allocation(pat, rows, cols, pattern, tile_hints, cfg)
-        else {
+        let Some(format) = allocate::choose_allocation_quant(
+            pat,
+            rows,
+            cols,
+            pattern,
+            tile_hints,
+            cfg,
+            payload_bits,
+        ) else {
             continue;
         };
         stats.evaluated += 1;
-        let scored = ScoredFormat::score(format, pattern, cfg);
+        let scored = ScoredFormat::score_quant(format, pattern, cfg, payload_bits);
         let simpler_best = best_eq_by_depth[..depth]
             .iter()
             .fold(f64::INFINITY, |a, &b| a.min(b));
@@ -171,6 +210,37 @@ mod tests {
             cfg.data_bits,
         );
         assert!(top[0].cost.total_bits() < flat.total_bits());
+    }
+
+    #[test]
+    fn quant_search_at_native_bits_is_the_plain_search() {
+        let cfg = EngineConfig::default();
+        let pattern = SparsityPattern::Unstructured { density: 0.3 };
+        let (plain, s1) = search_formats(128, 128, &pattern, None, &cfg);
+        let (quant, s2) =
+            search_formats_quant(128, 128, &pattern, None, &cfg, cfg.data_bits);
+        assert_eq!(plain.len(), quant.len());
+        assert_eq!(s1.evaluated, s2.evaluated);
+        for (a, b) in plain.iter().zip(quant.iter()) {
+            assert_eq!(a.format, b.format);
+            assert_eq!(a.eq_bits.to_bits(), b.eq_bits.to_bits());
+            assert_eq!(a.cost.total_bits().to_bits(), b.cost.total_bits().to_bits());
+        }
+    }
+
+    #[test]
+    fn quantized_payload_shrinks_the_winning_cost() {
+        let cfg = EngineConfig::default();
+        let pattern = SparsityPattern::Unstructured { density: 0.4 };
+        let (w16, _) = search_formats_quant(256, 256, &pattern, None, &cfg, 16);
+        let (w4, _) = search_formats_quant(256, 256, &pattern, None, &cfg, 4);
+        // The 4-bit search minimizes over (at least) the 16-bit winner's
+        // pattern, whose best allocation scored at 4 bits is strictly
+        // cheaper than at 16 — so the penalized winner must improve.
+        assert!(w4[0].eq_bits < w16[0].eq_bits);
+        let rescored =
+            analytical_cost_quant(&w16[0].format, &pattern, cfg.data_bits, 4);
+        assert!(rescored.total_bits() < w16[0].cost.total_bits());
     }
 
     #[test]

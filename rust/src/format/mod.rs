@@ -17,6 +17,7 @@
 //! compressing levels only non-empty ones.
 
 pub mod named;
+pub mod quant;
 pub mod space;
 
 use crate::util::mathx::ceil_log2;

@@ -1,0 +1,251 @@
+//! Payload-bitwidth (quantization) axis of the format space.
+//!
+//! Two retrieved papers (FPGA co-design for N:M sparse + quantized
+//! inference, arxiv 2512.24713; flexible N:M via digital CiM, arxiv
+//! 2504.14365) argue that sparsity pattern and precision must be
+//! optimized *jointly* — the same "overlooked axis" thesis SnipSnap
+//! makes for compression formats.  This module makes the payload
+//! bitwidth of each operand a searchable dimension alongside the
+//! hierarchical compression patterns: a [`BitwidthSpace`] per operand
+//! class (weights, activations, KV-cache) is enumerated by the
+//! co-search, and the adaptive engine re-runs format-structure search
+//! per candidate bitwidth (quantizing the payload shifts the
+//! metadata/payload trade-off, so the best pattern can change with
+//! precision).
+//!
+//! Quantization flows through the existing compression-ratio seam: a
+//! format scored at payload bitwidth `b` keeps its *dense* reference at
+//! the accelerator word width, so `FormatCost::ratio()` carries both the
+//! sparsity compression and the `b / data_bits` precision scaling into
+//! tile legality, traffic costing and the branch-and-bound lower bound
+//! unchanged.  With every space a singleton at the accelerator's
+//! `data_bits` (the default), every f64 operation is literally the
+//! pre-quantization one — the bit-identity contract pinned by
+//! `rust/tests/quant_axis.rs`.
+
+use std::fmt;
+
+/// Maximum representable payload width (a generous bound; the point is
+/// rejecting nonsense like 0 or 1000, not modeling exotic widths).
+pub const MAX_BITS: u32 = 64;
+
+/// Errors from [`BitwidthSpace`] construction/parsing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum QuantError {
+    /// The set was empty (nothing to search).
+    Empty,
+    /// A width fell outside `1..=64`.
+    OutOfRange(u32),
+    /// A comma-separated entry failed to parse as an integer.
+    Unparsable(String),
+}
+
+impl fmt::Display for QuantError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            QuantError::Empty => write!(f, "bitwidth set is empty"),
+            QuantError::OutOfRange(b) => {
+                write!(f, "bitwidth {b} out of range (want 1..={MAX_BITS})")
+            }
+            QuantError::Unparsable(s) => write!(f, "cannot parse bitwidth '{s}'"),
+        }
+    }
+}
+
+impl std::error::Error for QuantError {}
+
+/// A non-empty, sorted, deduplicated set of candidate payload bitwidths
+/// for one operand class.  A singleton set pins the width; a multi-value
+/// set hands the choice to the co-search.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitwidthSpace {
+    values: Vec<u32>,
+}
+
+impl BitwidthSpace {
+    /// Validate, sort and deduplicate a candidate set.
+    pub fn new(mut values: Vec<u32>) -> Result<Self, QuantError> {
+        if values.is_empty() {
+            return Err(QuantError::Empty);
+        }
+        for &b in &values {
+            if b == 0 || b > MAX_BITS {
+                return Err(QuantError::OutOfRange(b));
+            }
+        }
+        values.sort_unstable();
+        values.dedup();
+        Ok(BitwidthSpace { values })
+    }
+
+    /// The singleton space `{bits}`.  Panics on an out-of-range width —
+    /// only used with widths the caller already validated (e.g. the
+    /// accelerator's own `data_bits`).
+    pub fn fixed(bits: u32) -> Self {
+        BitwidthSpace::new(vec![bits]).expect("fixed bitwidth out of range")
+    }
+
+    /// Parse `"4"` or `"4,8,16"` (whitespace around entries tolerated).
+    /// Trailing commas, empty entries and non-integers are errors.
+    pub fn parse(s: &str) -> Result<Self, QuantError> {
+        let mut values = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            let b: u32 = part
+                .parse()
+                .map_err(|_| QuantError::Unparsable(part.to_string()))?;
+            values.push(b);
+        }
+        BitwidthSpace::new(values)
+    }
+
+    /// Candidate widths, ascending.
+    pub fn values(&self) -> &[u32] {
+        &self.values
+    }
+
+    /// True when there is nothing to search (one candidate).
+    pub fn is_fixed(&self) -> bool {
+        self.values.len() == 1
+    }
+
+    pub fn contains(&self, bits: u32) -> bool {
+        self.values.contains(&bits)
+    }
+}
+
+impl fmt::Display for BitwidthSpace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, b) in self.values.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{b}")?;
+        }
+        Ok(())
+    }
+}
+
+/// User-facing quantization configuration: one optional space per
+/// operand class.  `None` means "not quantized" — the operand stays at
+/// the accelerator's native `data_bits` and the search degenerates to
+/// the pre-quantization flow bit for bit.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct QuantConfig {
+    /// Weight-operand widths (non-KV weights).  CLI `--w-bits`.
+    pub w_bits: Option<BitwidthSpace>,
+    /// Activation (input-operand) widths.  CLI `--a-bits`.
+    pub a_bits: Option<BitwidthSpace>,
+    /// KV-cache widths: the weight-slot tensor of attention `qk`/`av`
+    /// ops (K and V respectively).  CLI `--kv-bits`.
+    pub kv_bits: Option<BitwidthSpace>,
+}
+
+impl QuantConfig {
+    /// True when the axis is disabled entirely (the default).
+    pub fn is_default(&self) -> bool {
+        self.w_bits.is_none() && self.a_bits.is_none() && self.kv_bits.is_none()
+    }
+
+    /// Resolve against an accelerator word width: absent spaces become
+    /// the singleton `{data_bits}`, so downstream code never branches on
+    /// "quant enabled?" — disabled is just the one-point space.
+    pub fn resolve(&self, data_bits: u32) -> QuantSpace {
+        let or_native = |s: &Option<BitwidthSpace>| {
+            s.clone().unwrap_or_else(|| BitwidthSpace::fixed(data_bits))
+        };
+        QuantSpace {
+            act: or_native(&self.a_bits),
+            weight: or_native(&self.w_bits),
+            kv: or_native(&self.kv_bits),
+        }
+    }
+}
+
+/// A fully-resolved quantization space: every operand class has a
+/// concrete non-empty candidate set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QuantSpace {
+    pub act: BitwidthSpace,
+    pub weight: BitwidthSpace,
+    pub kv: BitwidthSpace,
+}
+
+impl QuantSpace {
+    /// The space governing an op's weight-slot tensor: KV ops (attention
+    /// `qk`/`av`, whose "weights" are the K/V caches) draw from the KV
+    /// space, everything else from the weight space.
+    pub fn weight_space(&self, weight_is_kv: bool) -> &BitwidthSpace {
+        if weight_is_kv {
+            &self.kv
+        } else {
+            &self.weight
+        }
+    }
+
+    /// Total (act, weight) combinations an op enumerates.
+    pub fn combos(&self, weight_is_kv: bool) -> usize {
+        self.act.values().len() * self.weight_space(weight_is_kv).values().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_single_and_set() {
+        assert_eq!(BitwidthSpace::parse("4").unwrap().values(), &[4]);
+        assert_eq!(BitwidthSpace::parse("16,4, 8").unwrap().values(), &[4, 8, 16]);
+        assert_eq!(BitwidthSpace::parse("8,8,8").unwrap().values(), &[8]);
+    }
+
+    #[test]
+    fn parse_rejects_bogus() {
+        assert_eq!(BitwidthSpace::parse("0"), Err(QuantError::OutOfRange(0)));
+        assert_eq!(
+            BitwidthSpace::parse("3,"),
+            Err(QuantError::Unparsable(String::new()))
+        );
+        assert_eq!(
+            BitwidthSpace::parse("foo"),
+            Err(QuantError::Unparsable("foo".into()))
+        );
+        assert_eq!(BitwidthSpace::parse("65"), Err(QuantError::OutOfRange(65)));
+        assert!(BitwidthSpace::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn display_round_trips() {
+        let s = BitwidthSpace::parse("16,4,8").unwrap();
+        assert_eq!(s.to_string(), "4,8,16");
+        assert_eq!(BitwidthSpace::parse(&s.to_string()).unwrap(), s);
+    }
+
+    #[test]
+    fn default_config_resolves_to_native_singletons() {
+        let q = QuantConfig::default();
+        assert!(q.is_default());
+        let sp = q.resolve(16);
+        assert_eq!(sp.act.values(), &[16]);
+        assert_eq!(sp.weight.values(), &[16]);
+        assert_eq!(sp.kv.values(), &[16]);
+        assert_eq!(sp.combos(false), 1);
+        assert_eq!(sp.combos(true), 1);
+    }
+
+    #[test]
+    fn kv_ops_draw_from_kv_space() {
+        let q = QuantConfig {
+            w_bits: Some(BitwidthSpace::parse("4,8").unwrap()),
+            a_bits: None,
+            kv_bits: Some(BitwidthSpace::fixed(8)),
+        };
+        assert!(!q.is_default());
+        let sp = q.resolve(16);
+        assert_eq!(sp.weight_space(false).values(), &[4, 8]);
+        assert_eq!(sp.weight_space(true).values(), &[8]);
+        assert_eq!(sp.combos(false), 2);
+        assert_eq!(sp.combos(true), 1);
+    }
+}

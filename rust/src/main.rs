@@ -11,9 +11,11 @@
 
 use anyhow::{bail, Context, Result};
 use snipsnap::config::typed::{
-    arch_by_name, metric_by_name, parse_nm, resolve_workload, WorkloadOpts,
+    arch_by_name, metric_by_name, parse_nm, preset_quant, resolve_workload,
+    validate_quant_bits, WorkloadOpts,
 };
 use snipsnap::engine::{search_formats, EngineConfig};
+use snipsnap::format::quant::BitwidthSpace;
 use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig};
 use snipsnap::sparsity::SparsityPattern;
 use snipsnap::util::table::{fmt_f, fmt_pct, Table};
@@ -35,6 +37,10 @@ fn usage() -> ! {
                              [--snapshot PATH|off]  (JSON run-config snapshot;\n\
                              default results/run-<ts>-<pid>.config.json —\n\
                              feed it back via --config to replay the run)\n\
+                             [--w-bits B] [--a-bits B] [--kv-bits B]  (payload\n\
+                             bitwidths per operand class: a fixed width like\n\
+                             '8' or a search set like '4,8,16'; default =\n\
+                             arch data_bits, i.e. quantization disabled)\n\
                              workload modifiers (transformer presets only):\n\
                              [--prefill N] [--decode N] [--batch B]\n\
                              [--kv-density D] [--nm N:M]\n\
@@ -118,8 +124,14 @@ fn cmd_search(args: &Args) -> Result<()> {
             kv_density: args.get_f64("kv-density")?,
             nm: args.get("nm").map(parse_nm).transpose()?,
         };
-        workload = resolve_workload(args.get("workload").unwrap_or("opt-125m"), &opts)?;
+        let preset = args.get("workload").unwrap_or("opt-125m");
+        workload = resolve_workload(preset, &opts)?;
         cfg = SearchConfig::default();
+        // Quantized presets bundle a quant axis; --*-bits flags below
+        // override per operand class.
+        if let Some(q) = preset_quant(preset) {
+            cfg.quant = q;
+        }
     }
     if let Some(m) = args.get("metric") {
         cfg.metric = metric_by_name(m)?;
@@ -158,16 +170,48 @@ fn cmd_search(args: &Args) -> Result<()> {
             }
         }
     }
+    // Quant-axis flags: like --cost-backend they compose with --config
+    // (a flag overrides that operand class; other classes keep the
+    // config's spaces).  Bogus values are usage errors.
+    let parse_bits = |key: &str| -> Option<BitwidthSpace> {
+        args.get(key).map(|v| match BitwidthSpace::parse(v) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("error: --{key}: {e}");
+                usage();
+            }
+        })
+    };
+    if let Some(s) = parse_bits("w-bits") {
+        cfg.quant.w_bits = Some(s);
+    }
+    if let Some(s) = parse_bits("a-bits") {
+        cfg.quant.a_bits = Some(s);
+    }
+    if let Some(s) = parse_bits("kv-bits") {
+        cfg.quant.kv_bits = Some(s);
+    }
+    if let Err(e) = validate_quant_bits(&cfg.quant, arch.data_bits) {
+        eprintln!("error: {e}");
+        usage();
+    }
 
     write_snapshot(args, &arch, &workload, &cfg);
 
     eprintln!("arch: {}", arch.name);
     eprintln!("workload: {} ({} ops)", workload.name, workload.op_count());
     eprintln!("cost backend: {}", cfg.cost);
+    if !cfg.quant.is_default() {
+        let qs = cfg.quant.resolve(arch.data_bits);
+        eprintln!(
+            "quant axis: W{{{}}} A{{{}}} KV{{{}}} (payload bits; dense ref {})",
+            qs.weight, qs.act, qs.kv, arch.data_bits
+        );
+    }
     let r = cosearch_workload(&arch, &workload, &cfg);
 
     let mut t = Table::new(vec![
-        "op", "I format", "W format", "energy (pJ)", "cycles",
+        "op", "I format", "W format", "bits (A/W)", "energy (pJ)", "cycles",
     ])
     .with_title(format!(
         "SnipSnap co-search: {} on {} [{:?}, {:?}]",
@@ -178,6 +222,7 @@ fn cmd_search(args: &Args) -> Result<()> {
             d.op_name.clone(),
             d.input_format.to_string(),
             d.weight_format.to_string(),
+            format!("{}/{}", d.input_bits, d.weight_bits),
             fmt_f(d.report.total_energy_pj()),
             fmt_f(d.report.latency_cycles()),
         ]);
@@ -361,6 +406,10 @@ fn cmd_list() -> Result<()> {
     println!("  MoE (routed FFN):  mixtral-8x7b moe-tiny");
     println!("  batched decode:    llama2-7b-batch8 decode-tiny");
     println!("  N:M weights:       llama2-7b-nm24 (or any transformer preset + --nm N:M)");
+    println!(
+        "  quantized:         llama2-7b-w4a8 llama2-7b-qsearch \
+         (or any preset + --w-bits/--a-bits/--kv-bits)"
+    );
     println!("  CNN (im2col):      alexnet vgg-16 resnet-18");
     println!(
         "workload modifiers (transformer presets): --prefill N --decode N --batch B \

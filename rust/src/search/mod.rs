@@ -50,12 +50,17 @@ use crate::arch::Accelerator;
 use crate::cost::{CacheStats, CostModel, CostReport, EvalContext, Metric};
 use crate::dataflow::Mapping;
 use crate::engine::EngineConfig;
+use crate::format::quant::QuantConfig;
 use crate::format::Format;
 use std::time::Duration;
 
 pub use progressive::{
     cosearch_op, cosearch_workload, evaluate_with_formats, probe_tile_hints,
 };
+
+/// A mapping with its cost report and scalar metric value — the unit the
+/// mapping search returns and the tile refinement hill-climbs on.
+pub type ScoredMapping = (Mapping, CostReport, f64);
 
 /// Per-search telemetry: logical cost-model evaluations plus the
 /// hit/miss counters of the memoized `access_counts` cache, and the
@@ -131,6 +136,13 @@ pub struct SearchConfig {
     /// pruning remains sound under every backend, so `prune` composes
     /// freely with this selection.
     pub cost: CostModel,
+    /// Quantization axis (`format::quant`): per-operand-class payload
+    /// bitwidth spaces the co-search enumerates alongside compression
+    /// formats.  The default (all `None`) disables the axis — every
+    /// operand stays at the accelerator's `data_bits` and the search is
+    /// bit-identical to the pre-quantization flow (pinned by
+    /// `rust/tests/quant_axis.rs`).
+    pub quant: QuantConfig,
 }
 
 impl Default for SearchConfig {
@@ -147,6 +159,7 @@ impl Default for SearchConfig {
             threads: 1,
             prune: true,
             cost: CostModel::Analytical,
+            quant: QuantConfig::default(),
         }
     }
 }
@@ -157,6 +170,12 @@ pub struct OpDesign {
     pub op_name: String,
     pub input_format: Format,
     pub weight_format: Format,
+    /// Payload bitwidth chosen for the input (activation) operand —
+    /// the accelerator's `data_bits` when the quant axis is disabled.
+    pub input_bits: u32,
+    /// Payload bitwidth chosen for the weight-slot operand (the KV
+    /// tensor on attention `qk`/`av` ops).
+    pub weight_bits: u32,
     pub mapping: Mapping,
     pub report: CostReport,
     pub metric_value: f64,

@@ -14,17 +14,18 @@
 //! new bests `clone_from` into place).  `docs/SEARCH.md` walks the
 //! whole pipeline and states the determinism contract.
 
-use super::{FormatMode, OpDesign, SearchConfig, SearchTelemetry, WorkloadResult};
+use super::{FormatMode, OpDesign, ScoredMapping, SearchConfig, SearchTelemetry, WorkloadResult};
 use crate::arch::Accelerator;
 use crate::cost::{mapping_is_legal, tiles_are_legal, CompressionRatios, CostReport, EvalContext};
 use crate::dataflow::mapper::{MapperConfig, OpEnumeration, ProtoArena};
 use crate::dataflow::{tiles_of, Mapping, ProblemDims, MAX_LEVELS};
 use crate::engine::allocate::TileHints;
-use crate::engine::{search_formats, ScoredFormat};
+use crate::engine::{search_formats_quant, ScoredFormat};
 use crate::format::{named, Format};
-use crate::sparsity::{SparsityPattern, SparsitySpec};
+use crate::sparsity::SparsitySpec;
 use crate::util::inline::InlineVec;
 use crate::util::pool;
+use crate::workload::llm::weight_is_kv_tensor;
 use crate::workload::{MatMulOp, Workload};
 use std::time::Instant;
 
@@ -74,41 +75,102 @@ pub fn native_format(arch: &Accelerator, rows: u64, cols: u64) -> Format {
     }
 }
 
-/// Candidate format pairs for one op, best-first by combined bits.
-fn format_pairs(
-    arch: &Accelerator,
-    op: &MatMulOp,
-    cfg: &SearchConfig,
-) -> Vec<(ScoredFormat, ScoredFormat)> {
+/// One candidate operand configuration the co-search maps: an (input,
+/// weight) format pair plus the payload bitwidths each was scored at.
+/// With the quantization axis disabled both widths are the engine's
+/// `data_bits` and this is the classic format pair.
+pub(crate) struct FormatChoice {
+    pub input: ScoredFormat,
+    pub weight: ScoredFormat,
+    pub input_bits: u32,
+    pub weight_bits: u32,
+}
+
+/// Candidate format choices for one op: per (activation, weight)
+/// bitwidth combination, the format pairs best-first by combined
+/// penalized bits — truncated to `pairs_to_map` *per combination*, then
+/// concatenated in combination order.
+///
+/// The per-combination truncation is what makes a multi-width search
+/// dominate every fixed-width search of the same set: the combo's
+/// sub-list is exactly what a fixed search at those widths would map
+/// (same engine calls, same truncation), so the union's minimum is ≤
+/// each fixed search's minimum — exactly, per op (pinned by the
+/// property tests in `rust/tests/quant_axis.rs`).  A single globally
+/// truncated list would not have this property, because `eq_bits` ranks
+/// low-width pairs first while being only a proxy for the mapped
+/// metric.
+fn format_pairs(arch: &Accelerator, op: &MatMulOp, cfg: &SearchConfig) -> Vec<FormatChoice> {
     let (m, n, k) = (op.dims.m, op.dims.n, op.dims.k);
-    let score = |f: Format, pat: &SparsityPattern| {
-        crate::engine::ScoredFormat::score(f, pat, &cfg.engine)
-    };
+    let qs = cfg.quant.resolve(cfg.engine.data_bits);
+    let wspace = qs.weight_space(weight_is_kv_tensor(&op.name)).clone();
+    let mut out: Vec<FormatChoice> = Vec::new();
     match cfg.mode {
         FormatMode::Fixed => {
-            let fi = score(native_format(arch, m, n), &op.spec.input);
-            let fw = score(native_format(arch, n, k), &op.spec.weight);
-            vec![(fi, fw)]
+            for &ab in qs.act.values() {
+                for &wb in wspace.values() {
+                    let fi = ScoredFormat::score_quant(
+                        native_format(arch, m, n),
+                        &op.spec.input,
+                        &cfg.engine,
+                        ab,
+                    );
+                    let fw = ScoredFormat::score_quant(
+                        native_format(arch, n, k),
+                        &op.spec.weight,
+                        &cfg.engine,
+                        wb,
+                    );
+                    out.push(FormatChoice { input: fi, weight: fw, input_bits: ab, weight_bits: wb });
+                }
+            }
         }
         FormatMode::Search => {
             let (hint_i, hint_w) = probe_tile_hints(&op.dims, arch.levels.len());
-            let (top_i, _) = search_formats(m, n, &op.spec.input, Some(&hint_i), &cfg.engine);
-            let (top_w, _) = search_formats(n, k, &op.spec.weight, Some(&hint_w), &cfg.engine);
-            let mut pairs = Vec::new();
-            for fi in top_i.iter() {
-                for fw in top_w.iter() {
-                    pairs.push((fi.clone(), fw.clone()));
+            // The weight-side structure search depends only on the
+            // weight width; hoist it out of the activation loop.
+            let tops_w: Vec<(u32, Vec<ScoredFormat>)> = wspace
+                .values()
+                .iter()
+                .map(|&wb| {
+                    let (top, _) = search_formats_quant(
+                        n,
+                        k,
+                        &op.spec.weight,
+                        Some(&hint_w),
+                        &cfg.engine,
+                        wb,
+                    );
+                    (wb, top)
+                })
+                .collect();
+            for &ab in qs.act.values() {
+                let (top_i, _) =
+                    search_formats_quant(m, n, &op.spec.input, Some(&hint_i), &cfg.engine, ab);
+                for (wb, top_w) in &tops_w {
+                    let mut pairs = Vec::new();
+                    for fi in top_i.iter() {
+                        for fw in top_w.iter() {
+                            pairs.push((fi.clone(), fw.clone()));
+                        }
+                    }
+                    pairs.sort_by(|a, b| {
+                        let ca = a.0.eq_bits + a.1.eq_bits;
+                        let cb = b.0.eq_bits + b.1.eq_bits;
+                        ca.partial_cmp(&cb).unwrap()
+                    });
+                    pairs.truncate(cfg.pairs_to_map.max(1));
+                    out.extend(pairs.into_iter().map(|(fi, fw)| FormatChoice {
+                        input: fi,
+                        weight: fw,
+                        input_bits: ab,
+                        weight_bits: *wb,
+                    }));
                 }
             }
-            pairs.sort_by(|a, b| {
-                let ca = a.0.eq_bits + a.1.eq_bits;
-                let cb = b.0.eq_bits + b.1.eq_bits;
-                ca.partial_cmp(&cb).unwrap()
-            });
-            pairs.truncate(cfg.pairs_to_map.max(1));
-            pairs
         }
     }
+    out
 }
 
 /// Hoisted enumeration tables for one op's dims on `arch` — the single
@@ -129,13 +191,18 @@ pub(crate) fn op_enumeration(
     )
 }
 
-/// Compression ratios of a format pair for an op.
-fn pair_ratios(
-    fi: &ScoredFormat,
-    fw: &ScoredFormat,
-    _spec: &SparsitySpec,
-) -> CompressionRatios {
-    CompressionRatios { input: fi.cost.ratio().min(1.0), weight: fw.cost.ratio().min(1.0) }
+/// Compression ratios of a format choice.  Each operand's ratio is
+/// capped at its *quantized-dense* ratio `bits / data_bits` — the
+/// accelerator can always fall back to storing the quantized tensor
+/// dense, so an inflating format never costs more than that.  With the
+/// quant axis disabled the cap is exactly `1.0` (the classic dense
+/// cap), keeping the disabled flow bit-identical.
+fn pair_ratios(choice: &FormatChoice, data_bits: u32) -> CompressionRatios {
+    let cap = |bits: u32| bits as f64 / data_bits as f64;
+    CompressionRatios {
+        input: choice.input.cost.ratio().min(cap(choice.input_bits)),
+        weight: choice.weight.cost.ratio().min(cap(choice.weight_bits)),
+    }
 }
 
 /// Per-level loop ordering via coordinate descent **in place**: sweep
@@ -191,12 +258,12 @@ fn choose_orders_greedy(
 /// their sweep — refinement accepts strict improvements only, so the
 /// outcome is unchanged.
 fn refine_tiles(
-    best: (Mapping, CostReport, f64),
+    best: ScoredMapping,
     ctx: &mut EvalContext<'_>,
     spec: &SparsitySpec,
     ratios: &CompressionRatios,
     prune: bool,
-) -> (Mapping, CostReport, f64) {
+) -> ScoredMapping {
     let arch = ctx.arch;
     let (mut mapping, mut report, mut value) = best;
     for _iter in 0..40 {
@@ -363,7 +430,7 @@ fn map_search(
     cfg: &SearchConfig,
     ratios: &CompressionRatios,
     tel: &mut SearchTelemetry,
-) -> Option<(Mapping, CostReport, f64)> {
+) -> Option<ScoredMapping> {
     let nshards = ctxs.len();
     let outcomes: Vec<ShardOutcome> = if nshards <= 1 {
         vec![search_pair_shard(0, 1, &mut ctxs[0], arena, op, cfg, ratios)]
@@ -437,8 +504,8 @@ fn cosearch_op_sharded(
     let en = op_enumeration(arch, &op.dims, &cfg.mapper);
     let mut arena = ProtoArena::new();
     let mut best: Option<OpDesign> = None;
-    for (fi, fw) in format_pairs(arch, op, cfg) {
-        let ratios = pair_ratios(&fi, &fw, &op.spec);
+    for choice in format_pairs(arch, op, cfg) {
+        let ratios = pair_ratios(&choice, cfg.engine.data_bits);
         arena.rebuild(&en, &cfg.mapper, |tiles, spatial| {
             tiles_are_legal(arch, tiles, spatial, &ratios)
         });
@@ -447,8 +514,10 @@ fn cosearch_op_sharded(
             if best.as_ref().map(|b| v < b.metric_value).unwrap_or(true) {
                 best = Some(OpDesign {
                     op_name: op.name.clone(),
-                    input_format: fi.format.clone(),
-                    weight_format: fw.format.clone(),
+                    input_format: choice.input.format.clone(),
+                    weight_format: choice.weight.format.clone(),
+                    input_bits: choice.input_bits,
+                    weight_bits: choice.weight_bits,
                     mapping,
                     report,
                     metric_value: v,
@@ -560,9 +629,14 @@ pub fn evaluate_with_formats(
     let (workers, shard_plan) = split_threads(pool::resolve_threads(cfg.threads), w.ops.len());
     let per_op = pool::parallel_map(workers, &w.ops, |i, op| {
         let (f_i, f_w) = make_formats(op);
-        let fi = ScoredFormat::score(f_i, &op.spec.input, &cfg.engine);
-        let fw = ScoredFormat::score(f_w, &op.spec.weight, &cfg.engine);
-        let ratios = pair_ratios(&fi, &fw, &op.spec);
+        let native = cfg.engine.data_bits;
+        let choice = FormatChoice {
+            input: ScoredFormat::score(f_i, &op.spec.input, &cfg.engine),
+            weight: ScoredFormat::score(f_w, &op.spec.weight, &cfg.engine),
+            input_bits: native,
+            weight_bits: native,
+        };
+        let ratios = pair_ratios(&choice, native);
         let mut ctxs: Vec<EvalContext<'_>> = (0..shard_plan[i])
             .map(|_| EvalContext::with_model(arch, op.dims, cfg.metric, cfg.cost))
             .collect();
@@ -578,8 +652,10 @@ pub fn evaluate_with_formats(
         }
         let design = found.map(|(mapping, report, v)| OpDesign {
             op_name: op.name.clone(),
-            input_format: fi.format,
-            weight_format: fw.format,
+            input_format: choice.input.format,
+            weight_format: choice.weight.format,
+            input_bits: choice.input_bits,
+            weight_bits: choice.weight_bits,
             mapping,
             report,
             metric_value: v,
@@ -602,7 +678,8 @@ mod tests {
     use super::*;
     use crate::arch::presets;
     use crate::cost::Metric;
-    use crate::sparsity::SparsitySpec;
+    use crate::format::quant::{BitwidthSpace, QuantConfig};
+    use crate::sparsity::{SparsityPattern, SparsitySpec};
 
     fn small_op(name: &str, m: u64, n: u64, k: u64, di: f64, dw: f64) -> MatMulOp {
         MatMulOp {
@@ -713,6 +790,119 @@ mod tests {
                 t_off.evaluations
             );
         }
+    }
+
+    #[test]
+    fn quant_explicit_native_singletons_match_disabled_axis() {
+        // Disabled quant and an explicit all-{data_bits} config walk the
+        // identical code path: same combos, same engine calls, same caps.
+        let arch = presets::arch3();
+        let op = small_op("t", 64, 128, 64, 0.3, 0.5);
+        for mode in [FormatMode::Fixed, FormatMode::Search] {
+            let mut ta = SearchTelemetry::default();
+            let mut tb = SearchTelemetry::default();
+            let off = cosearch_op(&arch, &op, &fast_cfg(mode), &mut ta).unwrap();
+            let native = fast_cfg(mode).engine.data_bits;
+            let explicit_cfg = SearchConfig {
+                quant: QuantConfig {
+                    w_bits: Some(BitwidthSpace::fixed(native)),
+                    a_bits: Some(BitwidthSpace::fixed(native)),
+                    kv_bits: Some(BitwidthSpace::fixed(native)),
+                },
+                ..fast_cfg(mode)
+            };
+            let on = cosearch_op(&arch, &op, &explicit_cfg, &mut tb).unwrap();
+            assert_eq!(off.mapping, on.mapping, "{mode:?}");
+            assert_eq!(off.metric_value.to_bits(), on.metric_value.to_bits(), "{mode:?}");
+            assert_eq!(off.report, on.report, "{mode:?}");
+            assert_eq!((off.input_bits, off.weight_bits), (native, native));
+            assert_eq!((on.input_bits, on.weight_bits), (native, native));
+            assert_eq!(ta.evaluations, tb.evaluations, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn quant_set_search_dominates_every_fixed_width() {
+        let arch = presets::arch3();
+        let op = small_op("t", 64, 64, 64, 0.4, 0.4);
+        let widths = [4u32, 8, 16];
+        let set_cfg = SearchConfig {
+            quant: QuantConfig {
+                w_bits: Some(BitwidthSpace::new(widths.to_vec()).unwrap()),
+                ..QuantConfig::default()
+            },
+            ..fast_cfg(FormatMode::Search)
+        };
+        let mut tel = SearchTelemetry::default();
+        let searched = cosearch_op(&arch, &op, &set_cfg, &mut tel).unwrap();
+        assert!(widths.contains(&searched.weight_bits));
+        assert_eq!(searched.input_bits, set_cfg.engine.data_bits);
+        for b in widths {
+            let fixed_cfg = SearchConfig {
+                quant: QuantConfig {
+                    w_bits: Some(BitwidthSpace::fixed(b)),
+                    ..QuantConfig::default()
+                },
+                ..fast_cfg(FormatMode::Search)
+            };
+            let fixed = cosearch_op(&arch, &op, &fixed_cfg, &mut tel).unwrap();
+            assert!(
+                searched.metric_value <= fixed.metric_value,
+                "set search {} beaten by fixed {b}-bit {}",
+                searched.metric_value,
+                fixed.metric_value
+            );
+        }
+    }
+
+    #[test]
+    fn kv_ops_draw_weight_bits_from_the_kv_space() {
+        let arch = presets::arch3();
+        let mut op = small_op("blk/qk", 64, 64, 64, 0.5, 0.5);
+        let cfg = SearchConfig {
+            quant: QuantConfig {
+                w_bits: Some(BitwidthSpace::fixed(4)),
+                a_bits: None,
+                kv_bits: Some(BitwidthSpace::fixed(8)),
+            },
+            ..fast_cfg(FormatMode::Search)
+        };
+        let mut tel = SearchTelemetry::default();
+        let kv = cosearch_op(&arch, &op, &cfg, &mut tel).unwrap();
+        assert_eq!(kv.weight_bits, 8, "qk weight slot is the K cache");
+        op.name = "blk/fc1".into();
+        let plain = cosearch_op(&arch, &op, &cfg, &mut tel).unwrap();
+        assert_eq!(plain.weight_bits, 4, "non-KV weights use --w-bits");
+    }
+
+    #[test]
+    fn pruning_is_sound_under_quant_search() {
+        // The acceptance criterion's prune on/off bit-identity, extended
+        // to a multi-width search.
+        let arch = presets::arch3();
+        let op = small_op("t", 64, 128, 64, 0.3, 0.5);
+        let base = SearchConfig {
+            quant: QuantConfig {
+                w_bits: Some(BitwidthSpace::new(vec![4, 16]).unwrap()),
+                a_bits: Some(BitwidthSpace::new(vec![8, 16]).unwrap()),
+                ..QuantConfig::default()
+            },
+            ..fast_cfg(FormatMode::Search)
+        };
+        let mut t_on = SearchTelemetry::default();
+        let mut t_off = SearchTelemetry::default();
+        let on = cosearch_op(&arch, &op, &base, &mut t_on).unwrap();
+        let off_cfg = SearchConfig { prune: false, ..base };
+        let off = cosearch_op(&arch, &op, &off_cfg, &mut t_off).unwrap();
+        assert_eq!(on.mapping, off.mapping);
+        assert_eq!(on.metric_value.to_bits(), off.metric_value.to_bits());
+        assert_eq!(on.report, off.report);
+        assert_eq!(
+            (on.input_bits, on.weight_bits),
+            (off.input_bits, off.weight_bits)
+        );
+        assert_eq!(t_off.pruned, 0);
+        assert_eq!(t_on.protos, t_off.protos);
     }
 
     #[test]

@@ -136,8 +136,19 @@ pub fn level_is_delimited(format: &Format, i: usize) -> bool {
     i > 0 && matches!(format.levels[i - 1].prim, Prim::UOP)
 }
 
-/// Full format cost from a non-empty-count vector.
-pub fn cost_from_ne(format: &Format, ne: &[f64], data_bits: u32) -> FormatCost {
+/// Full format cost from a non-empty-count vector, with the payload
+/// quantized to `payload_bits` while the *dense* reference stays at the
+/// accelerator word width `dense_bits` (the quantization axis,
+/// `format::quant`).  `ratio()` therefore carries both the sparsity
+/// compression and the `payload_bits / dense_bits` precision scaling;
+/// metadata widths are payload-independent.  With
+/// `payload_bits == dense_bits` this is exactly [`cost_from_ne`].
+pub fn cost_from_ne_quant(
+    format: &Format,
+    ne: &[f64],
+    dense_bits: u32,
+    payload_bits: u32,
+) -> FormatCost {
     let ops = operands_from_ne(format, ne);
     let mut metadata = 0.0;
     for (i, l) in format.levels.iter().enumerate() {
@@ -152,9 +163,26 @@ pub fn cost_from_ne(format: &Format, ne: &[f64], data_bits: u32) -> FormatCost {
     }
     FormatCost {
         metadata_bits: metadata,
-        payload_bits: ops.leaf_count * data_bits as f64,
-        dense_bits: (format.rows * format.cols) as f64 * data_bits as f64,
+        payload_bits: ops.leaf_count * payload_bits as f64,
+        dense_bits: (format.rows * format.cols) as f64 * dense_bits as f64,
     }
+}
+
+/// Full format cost from a non-empty-count vector.
+pub fn cost_from_ne(format: &Format, ne: &[f64], data_bits: u32) -> FormatCost {
+    cost_from_ne_quant(format, ne, data_bits, data_bits)
+}
+
+/// Analytical format cost with a quantized payload — the quant-axis DSE
+/// hot path (`dense_bits` = accelerator word width, `payload_bits` =
+/// candidate operand precision).
+pub fn analytical_cost_quant(
+    format: &Format,
+    pattern: &SparsityPattern,
+    dense_bits: u32,
+    payload_bits: u32,
+) -> FormatCost {
+    cost_from_ne_quant(format, &expected_ne(format, pattern), dense_bits, payload_bits)
 }
 
 /// Analytical format cost for a statistical pattern — the DSE hot path.
@@ -163,7 +191,7 @@ pub fn analytical_cost(
     pattern: &SparsityPattern,
     data_bits: u32,
 ) -> FormatCost {
-    cost_from_ne(format, &expected_ne(format, pattern), data_bits)
+    analytical_cost_quant(format, pattern, data_bits, data_bits)
 }
 
 #[cfg(test)]
@@ -262,6 +290,24 @@ mod tests {
         let ops = operands_from_ne(&f, &ne);
         // Leaves = non-empty rows x 8 (dense within row).
         assert!((ops.leaf_count - ne[1] * 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantized_payload_scales_with_bits() {
+        let f = named::bitmap(64, 64);
+        let d = SparsityPattern::Unstructured { density: 0.25 };
+        let c16 = analytical_cost_quant(&f, &d, BITS, 16);
+        let c8 = analytical_cost_quant(&f, &d, BITS, 8);
+        let c4 = analytical_cost_quant(&f, &d, BITS, 4);
+        // payload_bits == dense_bits is the unquantized cost, bit for bit.
+        assert_eq!(c16, analytical_cost(&f, &d, BITS));
+        // Metadata and the dense reference are precision-independent.
+        assert_eq!(c8.metadata_bits, c16.metadata_bits);
+        assert_eq!(c8.dense_bits, c16.dense_bits);
+        // Total bits (and hence the ratio) strictly monotone in precision.
+        assert!(c4.total_bits() < c8.total_bits());
+        assert!(c8.total_bits() < c16.total_bits());
+        assert!(c4.ratio() < c8.ratio() && c8.ratio() < c16.ratio());
     }
 
     #[test]

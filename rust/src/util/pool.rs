@@ -21,6 +21,10 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// One worker's output: `(input index, result)` pairs in the order the
+/// worker pulled them off the cursor.
+type IndexedResults<R> = Vec<(usize, R)>;
+
 /// Resolve a configured thread count: `0` means "use all available
 /// cores"; any other value is taken literally.
 pub fn resolve_threads(configured: usize) -> usize {
@@ -51,7 +55,7 @@ where
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
     let cursor = AtomicUsize::new(0);
-    let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+    let parts: Vec<IndexedResults<R>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..threads)
             .map(|_| {
                 s.spawn(|| {

@@ -372,8 +372,11 @@ pub fn activation_sparse_variant(mut w: Workload) -> Workload {
 /// The attention score/context MatMuls carry K/V tensors — activations
 /// from the KV cache — in their weight-operand slot, so weight-pruning
 /// variants must leave them alone (in particular, a [`Phase::kv_density`]
-/// knob must survive the variant transforms).
-fn weight_is_kv_tensor(op_name: &str) -> bool {
+/// knob must survive the variant transforms).  The quantization axis
+/// (`format::quant`) uses the same classification: these ops draw their
+/// weight-slot bitwidths from the KV space (`--kv-bits`), not the
+/// weight space.
+pub fn weight_is_kv_tensor(op_name: &str) -> bool {
     op_name.ends_with("/qk") || op_name.ends_with("/av")
 }
 

@@ -26,6 +26,10 @@ fn smoke_list_exits_zero_and_names_presets() {
     assert!(stdout.contains("decode-tiny"), "no batched-decode preset:\n{stdout}");
     assert!(stdout.contains("--nm N:M"), "no N:M modifier:\n{stdout}");
     assert!(stdout.contains("llama2-7b-nm24"), "no N:M preset:\n{stdout}");
+    // The quantized presets and the quant-axis flags must be advertised.
+    assert!(stdout.contains("llama2-7b-w4a8"), "no fixed-width quant preset:\n{stdout}");
+    assert!(stdout.contains("llama2-7b-qsearch"), "no quant-search preset:\n{stdout}");
+    assert!(stdout.contains("--w-bits"), "no quant flags mentioned:\n{stdout}");
 }
 
 /// Scenario presets drive the whole pipeline from the CLI, including
@@ -251,6 +255,119 @@ fn bad_cost_backend_exits_2_with_usage() {
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(stderr.contains("unknown cost backend 'bogus'"), "{stderr}");
     assert!(stderr.contains("USAGE"), "usage must go to stderr:\n{stderr}");
+}
+
+/// The quant-axis flags drive the search end to end: a fixed width and a
+/// comma-separated search set are both accepted, the axis is announced
+/// on stderr, and the chosen widths land in the design table's
+/// `bits (A/W)` column (docs/SEARCH.md).
+#[test]
+fn quant_flags_accept_fixed_and_set_widths() {
+    let out = snipsnap()
+        .args([
+            "search", "--arch", "arch3", "--workload", "gqa-tiny", "--mode", "fixed",
+            "--max-mappings", "200", "--w-bits", "4", "--a-bits", "8",
+        ])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("quant axis: W{4} A{8}"), "axis not announced:\n{stderr}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("bits (A/W)"), "no widths column:\n{stdout}");
+    assert!(stdout.contains("8/4"), "fixed widths not in the table:\n{stdout}");
+
+    let out = snipsnap()
+        .args([
+            "search", "--arch", "arch3", "--workload", "gqa-tiny", "--mode", "fixed",
+            "--max-mappings", "200", "--w-bits", "4,8,16", "--a-bits", "8",
+        ])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("quant axis: W{4,8,16} A{8}"), "set not announced:\n{stderr}");
+}
+
+/// Bogus quant widths are usage errors: exit 2, usage on stderr — zero,
+/// trailing commas, non-numbers and widths above the accelerator's
+/// `data_bits` all fail before any search runs.
+#[test]
+fn bad_quant_flags_exit_2_with_usage() {
+    let run = |val: &str| {
+        let out = snipsnap()
+            .args(["search", "--workload", "gqa-tiny", "--w-bits", val])
+            .output()
+            .expect("run");
+        assert_eq!(
+            out.status.code(),
+            Some(2),
+            "--w-bits {val}: usage errors exit 2: {:?}",
+            out.status
+        );
+        let stderr = String::from_utf8_lossy(&out.stderr).to_string();
+        assert!(stderr.contains("USAGE"), "--w-bits {val}: usage must go to stderr:\n{stderr}");
+        stderr
+    };
+    let e = run("0");
+    assert!(e.contains("out of range"), "{e}");
+    let e = run("3,");
+    assert!(e.contains("cannot parse"), "{e}");
+    let e = run("foo");
+    assert!(e.contains("cannot parse"), "{e}");
+    let e = run("32");
+    assert!(e.contains("data_bits"), "widths above the word width must fail:\n{e}");
+}
+
+/// The replayable-artifact contract extends to the quant axis: a search
+/// with quant flags snapshots the `[quant]` spaces and the snapshot
+/// replays the identical run through --config.
+#[test]
+fn quant_snapshot_replays_identically_through_config() {
+    let dir = std::env::temp_dir().join("snipsnap_cli_quant_snapshot");
+    std::fs::create_dir_all(&dir).unwrap();
+    let snap = dir.join("run.config.json");
+    let _ = std::fs::remove_file(&snap);
+    let out1 = snipsnap()
+        .args([
+            "search", "--arch", "arch3", "--workload", "gqa-tiny", "--mode", "fixed",
+            "--max-mappings", "200", "--prefill", "32", "--decode", "4",
+            "--w-bits", "4,8,16", "--a-bits", "8", "--kv-bits", "8",
+            "--snapshot", snap.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run");
+    assert!(out1.status.success(), "{}", String::from_utf8_lossy(&out1.stderr));
+    assert!(
+        String::from_utf8_lossy(&out1.stderr).contains("quant axis:"),
+        "axis not announced"
+    );
+    let text = std::fs::read_to_string(&snap).expect("snapshot written");
+    assert!(text.contains(r#""w_bits":[4,8,16]"#), "quant not captured:\n{text}");
+
+    let out2 = snipsnap()
+        .args(["search", "--config", snap.to_str().unwrap(), "--snapshot", "off"])
+        .output()
+        .expect("replay");
+    assert!(out2.status.success(), "{}", String::from_utf8_lossy(&out2.stderr));
+    assert!(
+        String::from_utf8_lossy(&out2.stderr).contains("quant axis:"),
+        "replay lost the quant axis"
+    );
+    let stable = |s: &str| -> String {
+        s.lines()
+            .filter(|l| {
+                !l.starts_with("search:") && !l.starts_with("cache:")
+                    && !l.starts_with("enumeration:")
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    assert_eq!(
+        stable(&String::from_utf8_lossy(&out1.stdout)),
+        stable(&String::from_utf8_lossy(&out2.stdout)),
+        "replayed quant run diverged from the original"
+    );
 }
 
 /// `snipsnap report` renders a summary from accumulated records and

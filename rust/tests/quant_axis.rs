@@ -1,0 +1,494 @@
+//! Differential + property suite for the quantization co-search axis
+//! (`format::quant`, docs/SEARCH.md).
+//!
+//! Three layers, mirroring `cost_backends.rs`:
+//!
+//! 1. **Disabled axis is the pre-quantization search, bit for bit.**
+//!    With `SearchConfig::quant` at its default (all spaces `None`) the
+//!    co-search must reproduce the committed golden fixtures — designs,
+//!    metric values and serial evaluation counts — and an explicit
+//!    all-`{data_bits}` singleton config must match the default to the
+//!    bit, across every metric, both cost backends, prune on/off and
+//!    thread counts 1/3/4.  This suite never blesses fixtures; only
+//!    `golden_cosearch` does.
+//! 2. **Quant searches keep the determinism contract**: a multi-width
+//!    search produces bit-identical designs (including the chosen
+//!    widths) for any thread count and with pruning on or off.
+//! 3. **Property tests** (`util::proptest`): format bits strictly
+//!    monotone in the payload width with precision-independent metadata;
+//!    a search over a width set dominates every fixed-width search of
+//!    that set exactly (per-combination truncation in `format_pairs` +
+//!    per-choice refinement make this a theorem, not a heuristic); the
+//!    searched width is always a member of the configured set; and
+//!    snapshot render∘load is a fixed point for `[quant]` configs.
+
+use snipsnap::arch::presets;
+use snipsnap::config::{load_run_config_any, snapshot};
+use snipsnap::cost::{backend_from_env, ContentionParams, CostModel, Metric};
+use snipsnap::dataflow::mapper::MapperConfig;
+use snipsnap::dataflow::ProblemDims;
+use snipsnap::engine::{search_formats, EngineConfig};
+use snipsnap::format::quant::{BitwidthSpace, QuantConfig};
+use snipsnap::search::{
+    cosearch_op, cosearch_workload, SearchConfig, SearchTelemetry, WorkloadResult,
+};
+use snipsnap::sparsity::analyzer::analytical_cost_quant;
+use snipsnap::sparsity::{SparsityPattern, SparsitySpec};
+use snipsnap::util::proptest::{run, Gen};
+use snipsnap::workload::llm::{build_llm, LlmShape, LlmSparsity, Phase};
+use snipsnap::workload::moe::{build_moe, MoeShape};
+use snipsnap::workload::{llm, MatMulOp, Workload};
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+// ---------------------------------------------------------------------
+// Golden families — in lockstep with rust/tests/golden_cosearch.rs and
+// rust/tests/cost_backends.rs (same workloads, same mapper budget, same
+// render) so all three suites pin the same fixtures.
+
+const SP: LlmSparsity =
+    LlmSparsity { act_proj: 0.55, act_fc1: 0.50, act_fc2: 0.20, attn: 0.30, weight: 0.40 };
+
+fn mha_small() -> Workload {
+    build_llm("mha-small", LlmShape::mha(64, 128, 1, 4), SP, Phase::new(16, 4))
+}
+
+fn families() -> Vec<(&'static str, Workload)> {
+    vec![
+        ("mha", mha_small()),
+        (
+            "gqa",
+            build_llm(
+                "gqa-small",
+                LlmShape { hidden: 64, intermediate: 128, layers: 1, heads: 4, kv_heads: 2 },
+                SP,
+                Phase::new(16, 4),
+            ),
+        ),
+        (
+            "moe",
+            build_moe(
+                "moe-small",
+                MoeShape { base: LlmShape::mha(64, 128, 1, 4), experts: 4, top_k: 2 },
+                SP,
+                Phase::new(16, 4),
+            ),
+        ),
+        (
+            "batched_decode",
+            build_llm(
+                "batched-small",
+                LlmShape::mha(64, 128, 1, 4),
+                SP,
+                Phase::new(0, 8).with_batch(4).with_kv_density(0.5),
+            ),
+        ),
+        ("nm", llm::weight_nm_variant(mha_small(), 2, 4)),
+    ]
+}
+
+fn render_designs(r: &WorkloadResult) -> String {
+    let mut s = String::new();
+    for d in &r.designs {
+        writeln!(
+            s,
+            "{} | I={} | W={} | map={} | value={:.6e}",
+            d.op_name, d.input_format, d.weight_format, d.mapping, d.metric_value
+        )
+        .unwrap();
+    }
+    s
+}
+
+fn render_fixture(serial: &WorkloadResult) -> String {
+    let mut s = render_designs(serial);
+    writeln!(s, "evaluations={}", serial.evaluations).unwrap();
+    s
+}
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden")
+        .join(format!("{name}.txt"))
+}
+
+fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| v == "1").unwrap_or(false)
+}
+
+fn golden_cfg() -> SearchConfig {
+    SearchConfig {
+        mapper: MapperConfig { max_candidates: 600, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn small_cfg() -> SearchConfig {
+    SearchConfig {
+        mapper: MapperConfig { max_candidates: 300, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Every operand class pinned at `bits` — the explicit spelling of the
+/// disabled axis when `bits` is the accelerator word width.
+fn all_fixed(bits: u32) -> QuantConfig {
+    QuantConfig {
+        w_bits: Some(BitwidthSpace::fixed(bits)),
+        a_bits: Some(BitwidthSpace::fixed(bits)),
+        kv_bits: Some(BitwidthSpace::fixed(bits)),
+    }
+}
+
+fn assert_identical(a: &WorkloadResult, b: &WorkloadResult, what: &str) {
+    assert_eq!(render_fixture(a), render_fixture(b), "{what}");
+    assert_eq!(a.designs.len(), b.designs.len(), "{what}");
+    for (da, db) in a.designs.iter().zip(&b.designs) {
+        assert_eq!(
+            da.metric_value.to_bits(),
+            db.metric_value.to_bits(),
+            "{what}/{}: score not bit-identical",
+            da.op_name
+        );
+        assert_eq!(
+            (da.input_bits, da.weight_bits),
+            (db.input_bits, db.weight_bits),
+            "{what}/{}: chosen widths diverged",
+            da.op_name
+        );
+    }
+    assert_eq!(a.evaluations, b.evaluations, "{what}: evaluation count");
+}
+
+// ---------------------------------------------------------------------
+// Layer 1 — the disabled axis is the pre-quantization flow.
+
+#[test]
+fn quant_disabled_reproduces_the_golden_fixtures() {
+    let arch = presets::arch3();
+    let native = golden_cfg().engine.data_bits;
+    for (name, w) in families() {
+        let disabled = cosearch_workload(&arch, &w, &golden_cfg());
+        let explicit = cosearch_workload(
+            &arch,
+            &w,
+            &SearchConfig { quant: all_fixed(native), ..golden_cfg() },
+        );
+        assert_identical(&disabled, &explicit, name);
+        for d in &disabled.designs {
+            assert_eq!(
+                (d.input_bits, d.weight_bits),
+                (native, native),
+                "{name}/{}: disabled axis must report native widths",
+                d.op_name
+            );
+        }
+
+        // Blessing runs are golden_cosearch's job; here a blessing pass
+        // just skips the compare.
+        if env_flag("SNIPSNAP_BLESS") {
+            continue;
+        }
+        let path = golden_path(name);
+        match std::fs::read_to_string(&path) {
+            Ok(want) => assert_eq!(
+                render_fixture(&disabled),
+                want,
+                "{name}: quant-disabled search diverged from {}",
+                path.display()
+            ),
+            Err(_) if env_flag("SNIPSNAP_REQUIRE_GOLDEN") => panic!(
+                "{name}: golden fixture {} is missing and SNIPSNAP_REQUIRE_GOLDEN=1. \
+                 Generate it with `SNIPSNAP_BLESS=1 cargo test --test golden_cosearch` \
+                 and commit the file.",
+                path.display()
+            ),
+            Err(_) => eprintln!(
+                "SKIP golden compare for '{name}': {} missing \
+                 (create with `SNIPSNAP_BLESS=1 cargo test --test golden_cosearch`)",
+                path.display()
+            ),
+        }
+    }
+}
+
+#[test]
+fn quant_disabled_identity_across_metrics_and_backends() {
+    let arch = presets::arch3();
+    let w = mha_small();
+    let native = small_cfg().engine.data_bits;
+    for metric in [Metric::Energy, Metric::MemoryEnergy, Metric::Latency, Metric::Edp] {
+        for cost in [CostModel::Analytical, CostModel::Contention(ContentionParams::default())]
+        {
+            let mk = |quant| SearchConfig { metric, cost, quant, ..small_cfg() };
+            let disabled = cosearch_workload(&arch, &w, &mk(QuantConfig::default()));
+            let explicit = cosearch_workload(&arch, &w, &mk(all_fixed(native)));
+            assert_identical(&disabled, &explicit, &format!("{metric:?}/{cost}"));
+        }
+    }
+}
+
+#[test]
+fn quant_disabled_identity_across_threads_and_prune() {
+    let arch = presets::arch3();
+    let w = mha_small();
+    let native = small_cfg().engine.data_bits;
+    let serial = cosearch_workload(
+        &arch,
+        &w,
+        &SearchConfig { threads: 1, prune: false, ..small_cfg() },
+    );
+    for threads in [1usize, 3, 4] {
+        for prune in [true, false] {
+            let r = cosearch_workload(
+                &arch,
+                &w,
+                &SearchConfig { threads, prune, quant: all_fixed(native), ..small_cfg() },
+            );
+            let what = format!("threads={threads} prune={prune}");
+            assert_eq!(render_designs(&serial), render_designs(&r), "{what}");
+            for (ds, dr) in serial.designs.iter().zip(&r.designs) {
+                assert_eq!(ds.metric_value.to_bits(), dr.metric_value.to_bits(), "{what}");
+                assert_eq!((dr.input_bits, dr.weight_bits), (native, native), "{what}");
+            }
+            if !prune {
+                // Evaluation counts are thread-invariant only with the
+                // pruner off (docs/SEARCH.md).
+                assert_eq!(serial.evaluations, r.evaluations, "{what}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Layer 2 — quant searches keep the determinism contract.
+
+#[test]
+fn quant_search_designs_are_thread_and_prune_invariant() {
+    let arch = presets::arch3();
+    let w = mha_small(); // has qk/av ops, so the KV space is exercised
+    let quant = QuantConfig {
+        w_bits: Some(BitwidthSpace::new(vec![4, 16]).unwrap()),
+        a_bits: Some(BitwidthSpace::fixed(8)),
+        kv_bits: Some(BitwidthSpace::new(vec![8, 16]).unwrap()),
+    };
+    let mk = |threads, prune| SearchConfig {
+        threads,
+        prune,
+        quant: quant.clone(),
+        ..small_cfg()
+    };
+    let serial = cosearch_workload(&arch, &w, &mk(1, false));
+    for d in &serial.designs {
+        assert_eq!(d.input_bits, 8, "{}: activations pinned at 8", d.op_name);
+        assert!(
+            [4, 8, 16].contains(&d.weight_bits),
+            "{}: width {} outside every configured space",
+            d.op_name,
+            d.weight_bits
+        );
+    }
+    for threads in [1usize, 3, 4] {
+        for prune in [true, false] {
+            let r = cosearch_workload(&arch, &w, &mk(threads, prune));
+            let what = format!("threads={threads} prune={prune}");
+            assert_eq!(render_designs(&serial), render_designs(&r), "{what}");
+            for (ds, dr) in serial.designs.iter().zip(&r.designs) {
+                assert_eq!(ds.metric_value.to_bits(), dr.metric_value.to_bits(), "{what}");
+                assert_eq!(
+                    (ds.input_bits, ds.weight_bits),
+                    (dr.input_bits, dr.weight_bits),
+                    "{what}/{}: chosen widths must be thread/prune invariant",
+                    ds.op_name
+                );
+            }
+            if !prune {
+                assert_eq!(serial.evaluations, r.evaluations, "{what}");
+            }
+        }
+    }
+}
+
+#[test]
+fn env_selected_backend_drives_a_quant_search() {
+    // Read-only on SNIPSNAP_COST_BACKEND (all mutation lives in
+    // cost_backends.rs; env mutation is process-global).  CI runs this
+    // binary once per backend; the set-dominance theorem is backend-
+    // independent, so it must hold under whatever the env selected.
+    let cost = backend_from_env();
+    let arch = presets::arch3();
+    let op = MatMulOp {
+        name: "p/fc1".into(),
+        dims: ProblemDims::new(64, 64, 64),
+        spec: SparsitySpec::unstructured(0.4, 0.4),
+        count: 1,
+    };
+    let widths = [4u32, 8, 16];
+    let mk = |quant| SearchConfig {
+        metric: Metric::Latency,
+        cost,
+        quant,
+        mapper: MapperConfig { max_candidates: 150, ..Default::default() },
+        ..Default::default()
+    };
+    let set = QuantConfig {
+        w_bits: Some(BitwidthSpace::new(widths.to_vec()).unwrap()),
+        a_bits: Some(BitwidthSpace::fixed(8)),
+        ..QuantConfig::default()
+    };
+    let mut tel = SearchTelemetry::default();
+    let searched = cosearch_op(&arch, &op, &mk(set), &mut tel).unwrap();
+    assert!(searched.metric_value.is_finite() && searched.metric_value > 0.0);
+    assert_eq!(searched.input_bits, 8);
+    assert!(widths.contains(&searched.weight_bits));
+    for b in widths {
+        let fixed_q = QuantConfig {
+            w_bits: Some(BitwidthSpace::fixed(b)),
+            a_bits: Some(BitwidthSpace::fixed(8)),
+            ..QuantConfig::default()
+        };
+        let fixed = cosearch_op(&arch, &op, &mk(fixed_q), &mut tel).unwrap();
+        assert!(
+            searched.metric_value <= fixed.metric_value,
+            "{cost}: set search {} beaten by fixed {b}-bit {}",
+            searched.metric_value,
+            fixed.metric_value
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Layer 3 — property tests.
+
+#[test]
+fn prop_format_bits_strictly_monotone_in_payload_width() {
+    run("format bits monotone in payload width", 60, |g: &mut Gen| {
+        let rows = g.dim(64).max(2);
+        let cols = g.dim(64).max(2);
+        let density = g.f64_in(0.05, 1.0);
+        let pattern = SparsityPattern::Unstructured { density };
+        let cfg = EngineConfig::default();
+        let (top, _) = search_formats(rows, cols, &pattern, None, &cfg);
+        let widths = [2u32, 4, 8, 12, 16];
+        let i = g.usize_in(0, widths.len() - 2);
+        let lo = widths[i];
+        let hi = widths[g.usize_in(i + 1, widths.len() - 1)];
+        for s in top.iter().take(3) {
+            let c_lo = analytical_cost_quant(&s.format, &pattern, cfg.data_bits, lo);
+            let c_hi = analytical_cost_quant(&s.format, &pattern, cfg.data_bits, hi);
+            // Metadata and the dense reference are precision-independent
+            // (the lower-bound soundness condition, docs/SEARCH.md) ...
+            assert_eq!(c_lo.metadata_bits.to_bits(), c_hi.metadata_bits.to_bits());
+            assert_eq!(c_lo.dense_bits.to_bits(), c_hi.dense_bits.to_bits());
+            // ... while payload, total and ratio grow strictly with the
+            // width (density >= 0.05 keeps the expected payload nonzero).
+            assert!(c_lo.payload_bits < c_hi.payload_bits, "{}", s.format);
+            assert!(c_lo.total_bits() < c_hi.total_bits(), "{}", s.format);
+            assert!(c_lo.ratio() < c_hi.ratio(), "{}", s.format);
+        }
+    });
+}
+
+#[test]
+fn prop_set_search_dominates_fixed_and_stays_in_set() {
+    let arch = presets::arch3();
+    run("quant set search dominates fixed widths", 10, |g: &mut Gen| {
+        let dims = ProblemDims::new(
+            g.dim(32).max(8),
+            g.dim(32).max(8),
+            g.dim(32).max(8),
+        );
+        let op = MatMulOp {
+            // Alternate KV-slot and plain ops so both spaces get hit.
+            name: if g.bool() { "p/qk".into() } else { "p/fc1".into() },
+            dims,
+            spec: SparsitySpec::unstructured(g.f64_in(0.2, 0.9), g.f64_in(0.2, 0.9)),
+            count: 1,
+        };
+        let all = [4u32, 8, 16];
+        let mut set: Vec<u32> = all.iter().copied().filter(|_| g.bool()).collect();
+        if set.is_empty() {
+            set.push(*g.choose(&all));
+        }
+        let metric = *g.choose(&[
+            Metric::Energy,
+            Metric::MemoryEnergy,
+            Metric::Latency,
+            Metric::Edp,
+        ]);
+        let space = BitwidthSpace::new(set.clone()).unwrap();
+        let mk = |w: BitwidthSpace, kv: BitwidthSpace| SearchConfig {
+            metric,
+            quant: QuantConfig { w_bits: Some(w), a_bits: None, kv_bits: Some(kv) },
+            mapper: MapperConfig { max_candidates: 150, ..Default::default() },
+            ..Default::default()
+        };
+        let mut tel = SearchTelemetry::default();
+        let searched = cosearch_op(&arch, &op, &mk(space.clone(), space.clone()), &mut tel)
+            .expect("set search found no design");
+        assert!(
+            set.contains(&searched.weight_bits),
+            "searched width {} outside the configured set {set:?}",
+            searched.weight_bits
+        );
+        assert_eq!(searched.input_bits, 16, "a_bits=None stays at data_bits");
+        for &b in &set {
+            let fixed = cosearch_op(
+                &arch,
+                &op,
+                &mk(BitwidthSpace::fixed(b), BitwidthSpace::fixed(b)),
+                &mut tel,
+            )
+            .expect("fixed search found no design");
+            // Exact: the fixed run's candidate list is a sub-list of the
+            // set run's (per-combination truncation), and each candidate
+            // maps + refines deterministically.
+            assert!(
+                searched.metric_value <= fixed.metric_value,
+                "{metric:?}: set {set:?} gave {}, fixed {b} gave {}",
+                searched.metric_value,
+                fixed.metric_value
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_snapshot_render_load_fixed_point_for_quant() {
+    let arch = presets::arch3();
+    let w = Workload {
+        name: "snap".into(),
+        ops: vec![MatMulOp {
+            name: "g".into(),
+            dims: ProblemDims::new(16, 16, 16),
+            spec: SparsitySpec::unstructured(0.5, 0.5),
+            count: 1,
+        }],
+    };
+    run("quant snapshot render-load fixed point", 40, |g: &mut Gen| {
+        let mut rand_space = |g: &mut Gen| -> Option<BitwidthSpace> {
+            if g.bool() {
+                return None;
+            }
+            let all = [2u32, 4, 6, 8, 12, 16];
+            let mut v: Vec<u32> = all.iter().copied().filter(|_| g.bool()).collect();
+            if v.is_empty() {
+                v.push(*g.choose(&all));
+            }
+            Some(BitwidthSpace::new(v).unwrap())
+        };
+        let cfg = SearchConfig {
+            quant: QuantConfig {
+                w_bits: rand_space(g),
+                a_bits: rand_space(g),
+                kv_bits: rand_space(g),
+            },
+            ..Default::default()
+        };
+        let s1 = snapshot::render(&arch, &w, &cfg);
+        let loaded = load_run_config_any(&s1).expect("snapshot must load");
+        assert_eq!(loaded.search.quant, cfg.quant, "quant did not round-trip");
+        let s2 = snapshot::render(&loaded.arch, &loaded.workload, &loaded.search);
+        assert_eq!(s1, s2, "render∘load is not a fixed point");
+    });
+}
