@@ -75,6 +75,14 @@ pub fn snapshot_json(arch: &Accelerator, workload: &Workload, search: &SearchCon
 /// Parse a snapshot back into a [`RunConfig`].
 pub fn load_run_config_json(src: &str) -> Result<RunConfig> {
     let v = Json::parse(src).map_err(|e| anyhow!("run-config snapshot: {e}"))?;
+    run_config_from_value(&v)
+}
+
+/// Build a [`RunConfig`] from an already-parsed snapshot document.
+/// Unknown keys are ignored, which is what lets `snipsnap serve` wrap a
+/// snapshot with request-level fields (`id`, `budget`) while keeping the
+/// snapshot itself the wire format.
+pub fn run_config_from_value(v: &Json) -> Result<RunConfig> {
     let version = v
         .get("snipsnap_run_config")
         .and_then(Json::as_u64)
@@ -82,10 +90,10 @@ pub fn load_run_config_json(src: &str) -> Result<RunConfig> {
     if version != SNAPSHOT_VERSION {
         bail!("unsupported snapshot version {version} (this build reads {SNAPSHOT_VERSION})");
     }
-    let arch = arch_from(get(&v, "arch")?)?;
+    let arch = arch_from(get(v, "arch")?)?;
     arch.validate().map_err(|e| anyhow!(e))?;
-    let workload = workload_from(get(&v, "workload")?)?;
-    let search = search_from(get(&v, "search")?)?;
+    let workload = workload_from(get(v, "workload")?)?;
+    let search = search_from(get(v, "search")?)?;
     Ok(RunConfig { arch, workload, search })
 }
 
@@ -181,7 +189,7 @@ fn level_from(v: &Json) -> Result<MemLevel> {
     })
 }
 
-fn arch_json(a: &Accelerator) -> Json {
+pub(crate) fn arch_json(a: &Accelerator) -> Json {
     Json::obj(vec![
         ("name", Json::str(&a.name)),
         ("macs", num_u(a.mac.total_macs)),
@@ -298,7 +306,7 @@ fn op_from(v: &Json) -> Result<MatMulOp> {
     })
 }
 
-fn workload_json(w: &Workload) -> Json {
+pub(crate) fn workload_json(w: &Workload) -> Json {
     Json::obj(vec![
         ("name", Json::str(&w.name)),
         ("ops", Json::arr(w.ops.iter().map(op_json))),
@@ -378,7 +386,7 @@ fn search_json(s: &SearchConfig) -> Json {
 /// (axis disabled for that class — native width) or the sorted candidate
 /// set.  [`BitwidthSpace`] stores sorted + deduplicated values, so the
 /// rendering is canonical and the snapshot stays a fixed point.
-fn quant_json(q: &QuantConfig) -> Json {
+pub(crate) fn quant_json(q: &QuantConfig) -> Json {
     let space = |s: &Option<BitwidthSpace>| match s {
         Some(s) => Json::arr(s.values().iter().map(|&b| num_u(b as u64))),
         None => Json::Null,
@@ -429,7 +437,7 @@ fn quant_from(v: &Json) -> Result<QuantConfig> {
 /// ([`MAX_LEVELS`] entries) so the snapshot is machine-independent; the
 /// disabled-decompressor state uses the `null` sentinel (like
 /// `capacity_bits`), since `Infinity` is not valid JSON.
-fn cost_json(c: &CostModel) -> Json {
+pub(crate) fn cost_json(c: &CostModel) -> Json {
     match c {
         CostModel::Analytical => Json::obj(vec![("backend", Json::str("analytical"))]),
         CostModel::Contention(p) => Json::obj(vec![

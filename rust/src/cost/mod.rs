@@ -507,6 +507,47 @@ pub fn pack_key(mapping: &Mapping) -> MapKey {
     MapKey { levels, spatial }
 }
 
+/// Cross-run memoization seam for cached [`access_counts`] — the
+/// persistent memo store behind `snipsnap serve` implements it
+/// ([`crate::serve::memo::MemoStore`]).  Implementors are shared across
+/// worker threads, so both methods take `&self` and the trait requires
+/// `Sync`.  The contract that makes the seam bit-identity-safe: `get`
+/// must only ever return counts that some `put` stored for the same
+/// key, with every `f64` preserved exactly.
+pub trait CountsMemo: Sync {
+    /// Previously stored counts for `key`, if any.
+    fn get(&self, key: u128) -> Option<AccessCounts>;
+    /// Record freshly computed counts for `key`.
+    fn put(&self, key: u128, counts: &AccessCounts);
+}
+
+/// A [`CountsMemo`] bound to the *scope* it may be consulted under: a
+/// caller-computed digest of everything outside the packed [`MapKey`]
+/// that the stored counts must be invalidated by.  `access_counts` is a
+/// pure function of `(mapping, dims)`, so dims are the minimum;
+/// `snipsnap serve` conservatively folds in the arch, workload,
+/// cost-backend and quantization config digests (the invalidation key
+/// documented in docs/ARCHITECTURE.md "Serving").
+#[derive(Clone, Copy)]
+pub struct SharedCounts<'m> {
+    pub store: &'m dyn CountsMemo,
+    pub scope: u64,
+}
+
+/// The 128-bit cross-run memo key: FNV-1a over the scope digest and the
+/// packed [`MapKey`] words.  128 bits make an accidental collision over
+/// a memo store's lifetime negligible (a collision would silently serve
+/// wrong counts, so the margin is deliberate).
+pub fn memo_key(scope: u64, key: &MapKey) -> u128 {
+    let mut h = crate::util::hash::Fnv128::new();
+    h.write_u64(scope);
+    for w in key.levels {
+        h.write_u64(w);
+    }
+    h.write_u64(key.spatial);
+    h.finish()
+}
+
 /// Per-operator evaluation context: the invariants every cost-model call
 /// shares (accelerator, problem dims, optimization metric) plus a
 /// memoized [`access_counts`] cache keyed by the packed [`MapKey`]
@@ -529,6 +570,14 @@ pub struct EvalContext<'a> {
     pub model: CostModel,
     cache: HashMap<MapKey, AccessCounts>,
     stats: CacheStats,
+    /// Optional cross-run store consulted on local-cache misses before
+    /// recomputing (and published to after).  Because stored counts are
+    /// the exact `f64`s a recompute would produce, binding a store
+    /// changes *where* counts come from but never their values — memo-on
+    /// and memo-off searches are bit-identical (pinned by
+    /// `rust/tests/serve_service.rs`), and `evaluations`/cache counters
+    /// are untouched.
+    memo: Option<SharedCounts<'a>>,
 }
 
 impl<'a> EvalContext<'a> {
@@ -562,6 +611,27 @@ impl<'a> EvalContext<'a> {
             model,
             cache: HashMap::new(),
             stats: CacheStats::default(),
+            memo: None,
+        }
+    }
+
+    /// Bind a shared cross-run counts store (builder-style).  Without a
+    /// binding the context behaves exactly as before.
+    pub fn with_shared_counts(mut self, memo: SharedCounts<'a>) -> Self {
+        self.memo = Some(memo);
+        self
+    }
+
+    /// Consult the bound cross-run store for counts missing from the
+    /// local cache.
+    fn memo_fetch(&self, key: &MapKey) -> Option<AccessCounts> {
+        self.memo.as_ref().and_then(|m| m.store.get(memo_key(m.scope, key)))
+    }
+
+    /// Publish freshly computed counts to the bound cross-run store.
+    fn memo_publish(&self, key: &MapKey, ac: &AccessCounts) {
+        if let Some(m) = &self.memo {
+            m.store.put(memo_key(m.scope, key), ac);
         }
     }
 
@@ -592,7 +662,14 @@ impl<'a> EvalContext<'a> {
         if self.cache.len() >= EVAL_CACHE_CAP {
             self.cache.clear();
         }
-        let ac = access_counts(mapping, &self.p);
+        let ac = match self.memo_fetch(&key) {
+            Some(ac) => ac,
+            None => {
+                let ac = access_counts(mapping, &self.p);
+                self.memo_publish(&key, &ac);
+                ac
+            }
+        };
         let inp = EvalInputs { arch: self.arch, p: &self.p, mapping, spec, reduction, ratios };
         let r = model.report(&inp, &ac);
         self.cache.insert(key, ac);
@@ -658,12 +735,19 @@ impl<'a> EvalContext<'a> {
                 if self.cache.len() >= EVAL_CACHE_CAP {
                     self.cache.clear();
                 }
-                let mut ac = AccessCounts { fills: prefix_fills };
-                let mut state = prefix_state;
-                for b in lvl..nlevels {
-                    state.advance(&m.levels[b]);
-                    ac.fills.push(state.row(tiles[b]));
-                }
+                let ac = match self.memo_fetch(&key) {
+                    Some(ac) => ac,
+                    None => {
+                        let mut ac = AccessCounts { fills: prefix_fills };
+                        let mut state = prefix_state;
+                        for b in lvl..nlevels {
+                            state.advance(&m.levels[b]);
+                            ac.fills.push(state.row(tiles[b]));
+                        }
+                        self.memo_publish(&key, &ac);
+                        ac
+                    }
+                };
                 let inp =
                     EvalInputs { arch: self.arch, p: &self.p, mapping: m, spec, reduction, ratios };
                 let r = model.report(&inp, &ac);
@@ -897,6 +981,68 @@ mod tests {
         );
         assert!(Metric::Energy.of(&r) >= Metric::MemoryEnergy.of(&r));
         assert_eq!(Metric::Edp.of(&r), r.total_energy_pj() * r.latency_cycles());
+    }
+
+    /// The cross-run memo seam must be value-transparent: with a store
+    /// bound, reports are bit-identical to the unbound path, local cache
+    /// counters are untouched, and the scope digest partitions entries.
+    #[test]
+    fn shared_counts_store_is_value_transparent() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Mutex;
+
+        #[derive(Default)]
+        struct TestStore {
+            map: Mutex<std::collections::HashMap<u128, AccessCounts>>,
+            hits: AtomicU64,
+            puts: AtomicU64,
+        }
+        impl CountsMemo for TestStore {
+            fn get(&self, key: u128) -> Option<AccessCounts> {
+                let got = self.map.lock().unwrap().get(&key).copied();
+                if got.is_some() {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                }
+                got
+            }
+            fn put(&self, key: u128, counts: &AccessCounts) {
+                self.puts.fetch_add(1, Ordering::Relaxed);
+                self.map.lock().unwrap().insert(key, *counts);
+            }
+        }
+
+        let (arch, p, mapping) = toy_setup();
+        let spec = SparsitySpec::unstructured(0.4, 0.6);
+        let ratios = CompressionRatios { input: 0.5, weight: 0.7 };
+        let store = TestStore::default();
+        let scope = 0xfeed;
+
+        let mut plain = EvalContext::new(&arch, p, Metric::Edp);
+        let want = plain.evaluate(&mapping, &spec, &arch.reduction, &ratios);
+
+        // Cold store: computes, publishes, matches bit for bit.
+        let mut cold = EvalContext::new(&arch, p, Metric::Edp)
+            .with_shared_counts(SharedCounts { store: &store, scope });
+        assert_eq!(cold.evaluate(&mapping, &spec, &arch.reduction, &ratios), want);
+        assert_eq!(store.puts.load(Ordering::Relaxed), 1);
+        assert_eq!(store.hits.load(Ordering::Relaxed), 0);
+
+        // Fresh context over a warm store: serves from the store, still
+        // identical, and the local cache stats are indistinguishable
+        // from a memo-off context (a memo hit stays a local miss).
+        let mut warm = EvalContext::new(&arch, p, Metric::Edp)
+            .with_shared_counts(SharedCounts { store: &store, scope });
+        assert_eq!(warm.evaluate(&mapping, &spec, &arch.reduction, &ratios), want);
+        assert_eq!(store.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(warm.cache_stats(), CacheStats { hits: 0, misses: 1 });
+        assert_eq!(warm.evals(), 1);
+
+        // A different scope must not see the entry (stale-config guard).
+        let mut other = EvalContext::new(&arch, p, Metric::Edp)
+            .with_shared_counts(SharedCounts { store: &store, scope: scope ^ 1 });
+        assert_eq!(other.evaluate(&mapping, &spec, &arch.reduction, &ratios), want);
+        assert_eq!(store.hits.load(Ordering::Relaxed), 1, "scope must partition the store");
+        assert_eq!(store.puts.load(Ordering::Relaxed), 2);
     }
 
     #[test]

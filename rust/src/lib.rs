@@ -16,6 +16,8 @@
 //! - [`baselines`] — Sparseloop-like and DiMO-like comparison workflows
 //! - [`runtime`] — PJRT loader/executor for the AOT XLA artifacts
 //! - [`config`] — TOML-subset run configs + JSON run-config snapshots
+//! - [`serve`] — the long-running co-search service (JSONL requests,
+//!   per-request budgets, persistent cross-run memo store)
 //! - [`report`] — roll-up over the `results/` run artifacts
 //! - [`util`] — offline substrates (PRNG, JSON, tables, property tests)
 //!
@@ -37,6 +39,7 @@ pub mod format;
 pub mod report;
 pub mod runtime;
 pub mod search;
+pub mod serve;
 pub mod sparsity;
 pub mod util;
 pub mod workload;

@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   search    co-optimize format + dataflow for a workload on an arch
 //!             (emits a replayable JSON run-config snapshot per run)
+//!   serve     long-running co-search service: JSONL requests on stdin,
+//!             deterministic JSONL responses on stdout, per-request
+//!             budgets, persistent cross-run memo store
 //!   report    roll up the results/ run artifacts into a summary table
 //!   formats   show the adaptive engine's top formats for one tensor
 //!   validate  run the Fig. 8 / Fig. 9 model-validation studies
@@ -44,6 +47,18 @@ fn usage() -> ! {
                              workload modifiers (transformer presets only):\n\
                              [--prefill N] [--decode N] [--batch B]\n\
                              [--kv-density D] [--nm N:M]\n\
+           snipsnap serve    [--once] [--jobs N] [--memo PATH|off]\n\
+                             [--results DIR|off]\n\
+                             long-running co-search service: one JSON\n\
+                             request per stdin line (the run-config\n\
+                             snapshot format, plus optional \"id\" and\n\
+                             \"budget\" fields), one deterministic JSON\n\
+                             response per stdout line, stats on stderr.\n\
+                             --once serves a single request then exits;\n\
+                             --memo is the persistent cross-run counts\n\
+                             store (default results/serve_memo.jsonl);\n\
+                             --results is where per-request records land\n\
+                             for `snipsnap report` (default results)\n\
            snipsnap report   [--dir results]  (summarize results/*.json(l);\n\
                              exits non-zero on any unparseable artifact)\n\
            snipsnap formats  --rows R --cols C --density D [--gamma G] [--depth N]\n\
@@ -54,14 +69,20 @@ fn usage() -> ! {
     std::process::exit(2);
 }
 
-/// Tiny argv parser: `--key value` pairs after the subcommand.
+/// Flags that are bare switches (no value argument).
+const SWITCHES: &[&str] = &["once"];
+
+/// Tiny argv parser: `--key value` pairs after the subcommand, plus the
+/// bare [`SWITCHES`].
 struct Args {
     flags: std::collections::HashMap<String, String>,
+    switches: std::collections::HashSet<String>,
 }
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Args> {
         let mut flags = std::collections::HashMap::new();
+        let mut switches = std::collections::HashSet::new();
         let mut i = 0;
         while i < argv.len() {
             let k = &argv[i];
@@ -69,6 +90,11 @@ impl Args {
                 bail!("unexpected argument '{k}'");
             }
             let key = k.trim_start_matches("--").to_string();
+            if SWITCHES.contains(&key.as_str()) {
+                switches.insert(key);
+                i += 1;
+                continue;
+            }
             let val = argv
                 .get(i + 1)
                 .with_context(|| format!("--{key} needs a value"))?
@@ -76,11 +102,15 @@ impl Args {
             flags.insert(key, val);
             i += 2;
         }
-        Ok(Args { flags })
+        Ok(Args { flags, switches })
     }
 
     fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.switches.contains(key)
     }
 
     fn get_f64(&self, key: &str) -> Result<Option<f64>> {
@@ -288,6 +318,47 @@ fn write_snapshot(
     }
 }
 
+/// `snipsnap serve` — the long-running co-search service
+/// (`snipsnap::serve`).  Wires stdin/stdout/stderr into `serve_loop`
+/// and resolves the store/results destinations from the flags.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use snipsnap::serve::{serve_loop, ServeOpts};
+
+    let opts = ServeOpts {
+        once: args.has("once"),
+        jobs: args.get_u64("jobs")?.unwrap_or(1).max(1) as usize,
+        results_dir: match args.get("results") {
+            Some("off") => None,
+            Some(dir) => Some(std::path::PathBuf::from(dir)),
+            None => Some(std::path::PathBuf::from("results")),
+        },
+    };
+    let store = match args.get("memo") {
+        Some("off") => None,
+        Some(path) => Some(snipsnap::serve::memo::MemoStore::open(std::path::Path::new(path))?),
+        None => Some(snipsnap::serve::memo::MemoStore::open(std::path::Path::new(
+            "results/serve_memo.jsonl",
+        ))?),
+    };
+    eprintln!(
+        "snipsnap serve: {} jobs, memo {} ({} entries), {}",
+        opts.jobs,
+        if store.is_some() { "on" } else { "off" },
+        store.as_ref().map(|s| s.len()).unwrap_or(0),
+        if opts.once { "single request (--once)" } else { "reading requests from stdin" },
+    );
+    let stdin = std::io::stdin();
+    let summary = serve_loop(
+        &opts,
+        store.as_ref(),
+        stdin.lock(),
+        &mut std::io::stdout(),
+        &mut std::io::stderr(),
+    )?;
+    eprintln!("snipsnap serve: {} requests served, {} failed", summary.requests, summary.failed);
+    Ok(())
+}
+
 fn cmd_report(args: &Args) -> Result<()> {
     let dir = std::path::PathBuf::from(args.get("dir").unwrap_or("results"));
     print!("{}", snipsnap::report::report(&dir)?);
@@ -431,6 +502,7 @@ fn main() {
     };
     let result = match cmd.as_str() {
         "search" => cmd_search(&args),
+        "serve" => cmd_serve(&args),
         "report" => cmd_report(&args),
         "formats" => cmd_formats(&args),
         "validate" => cmd_validate(&args),

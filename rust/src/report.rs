@@ -77,12 +77,23 @@ pub fn scan_results(dir: &Path) -> Result<ResultsScan> {
     let mut by_bench: BTreeMap<String, BenchHistory> = BTreeMap::new();
     let mut snapshots = Vec::new();
     let mut unreadable_legacy = Vec::new();
-    let mut add = |bench: String, path: PathBuf, mut records: Vec<Json>| {
+    // `legacy` records always predate the append-mode migration, so on a
+    // merge they splice in *front* of any JSONL history — even when the
+    // legacy file sorts after the JSONL file (a legacy `bench` field can
+    // disagree with its filename stem, e.g. `zz.json` carrying bench
+    // "aaa") — and they never steal the history's path from the live
+    // JSONL file.
+    let mut add = |bench: String, path: PathBuf, mut records: Vec<Json>, legacy: bool| {
         match by_bench.entry(bench) {
             std::collections::btree_map::Entry::Occupied(mut o) => {
                 let h = o.get_mut();
-                h.records.append(&mut records);
-                h.path = path;
+                if legacy {
+                    records.append(&mut h.records);
+                    h.records = records;
+                } else {
+                    h.records.append(&mut records);
+                    h.path = path;
+                }
             }
             std::collections::btree_map::Entry::Vacant(v) => {
                 let bench = v.key().clone();
@@ -116,7 +127,7 @@ pub fn scan_results(dir: &Path) -> Result<ResultsScan> {
                 );
             }
             if let Some(bench) = bench_id(&records, &stem) {
-                add(bench, path, records);
+                add(bench, path, records, false);
             }
         } else if fname.ends_with(".json") {
             let src = read()?;
@@ -124,7 +135,7 @@ pub fn scan_results(dir: &Path) -> Result<ResultsScan> {
                 Ok(rec) => {
                     let records = vec![rec];
                     let bench = bench_id(&records, &stem).unwrap();
-                    add(bench, path, records);
+                    add(bench, path, records, true);
                 }
                 Err(e) => unreadable_legacy.push((path, e.to_string())),
             }
@@ -352,6 +363,78 @@ mod tests {
         assert!(report(&dir).unwrap_err().to_string().contains("no run artifacts"));
         let _ = std::fs::remove_dir_all(&dir);
         assert!(report(&dir).is_err(), "missing dir must not be reported as healthy");
+    }
+
+    /// A legacy file whose `bench` field disagrees with its filename
+    /// stem buckets by the *field*, and stays the oldest record of the
+    /// merged history even when the legacy filename sorts after the
+    /// JSONL file (regression: the merge used to append it last and
+    /// steal the history's path).
+    #[test]
+    fn legacy_bench_field_beats_stem_and_stays_oldest() {
+        let dir = tmpdir("stem_mismatch");
+        assert!(write_record_at(&dir, "aaa", 2.0, Json::obj(vec![("metric", Json::num(10.0))])));
+        std::fs::write(
+            dir.join("zz.json"),
+            "{\"bench\":\"aaa\",\"data\":{\"metric\":9.0},\"wall_time_s\":1.0}",
+        )
+        .unwrap();
+        let scan = scan_results(&dir).unwrap();
+        assert_eq!(scan.benches.len(), 1, "must merge into one 'aaa' history, not a 'zz' bench");
+        let h = &scan.benches[0];
+        assert_eq!(h.bench, "aaa");
+        assert_eq!(h.records.len(), 2);
+        assert_eq!(
+            h.records[0].get("data").and_then(|d| d.get("metric")),
+            Some(&Json::num(9.0)),
+            "legacy record must stay oldest regardless of filename order"
+        );
+        assert!(h.path.ends_with("aaa.jsonl"), "path must stay the live JSONL file");
+        let out = report(&dir).unwrap();
+        assert!(out.contains("metric: 9 -> 10"), "{out}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A `.jsonl` filename with dots truncates its *stem* at the first
+    /// dot, but records carrying a `bench` field bucket by the field —
+    /// dotted bench names must not split or mis-bucket histories.
+    #[test]
+    fn dotted_jsonl_names_bucket_by_record_bench() {
+        let dir = tmpdir("dotted");
+        assert!(write_record_at(&dir, "fig.v2", 1.0, Json::obj(vec![("m", Json::num(1.0))])));
+        assert!(write_record_at(&dir, "fig.v2", 2.0, Json::obj(vec![("m", Json::num(2.0))])));
+        // A record with no bench field falls back to the first-dot stem.
+        std::fs::write(dir.join("x.y.jsonl"), "{\"wall_time_s\":1.0}\n").unwrap();
+        let scan = scan_results(&dir).unwrap();
+        let names: Vec<&str> = scan.benches.iter().map(|b| b.bench.as_str()).collect();
+        assert_eq!(names, vec!["fig.v2", "x"], "got {names:?}");
+        assert_eq!(
+            scan.benches.iter().find(|b| b.bench == "fig.v2").unwrap().records.len(),
+            2,
+            "dotted bench name must keep one merged history"
+        );
+        report(&dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Empty (or whitespace-only) `.jsonl` files yield no records: they
+    /// must be skipped without panicking and without creating a
+    /// zero-record history (`BenchHistory::latest` would panic on one).
+    #[test]
+    fn empty_jsonl_files_are_skipped() {
+        let dir = tmpdir("empty_jsonl");
+        std::fs::write(dir.join("hollow.jsonl"), "").unwrap();
+        std::fs::write(dir.join("blank.jsonl"), "\n  \n\n").unwrap();
+        let scan = scan_results(&dir).unwrap();
+        assert!(scan.benches.is_empty(), "empty files must not become histories");
+        // With nothing else present the roll-up reports no artifacts.
+        assert!(report(&dir).unwrap_err().to_string().contains("no run artifacts"));
+        // And alongside a real history they stay invisible.
+        assert!(write_record_at(&dir, "real", 1.0, Json::Null));
+        let scan = scan_results(&dir).unwrap();
+        assert_eq!(scan.benches.len(), 1);
+        assert_eq!(scan.benches[0].bench, "real");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// Every record shape the harness can emit — including non-finite

@@ -47,15 +47,17 @@
 pub mod progressive;
 
 use crate::arch::Accelerator;
-use crate::cost::{CacheStats, CostModel, CostReport, EvalContext, Metric};
+use crate::cost::{CacheStats, CostModel, CostReport, EvalContext, Metric, SharedCounts};
 use crate::dataflow::Mapping;
 use crate::engine::EngineConfig;
 use crate::format::quant::QuantConfig;
 use crate::format::Format;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
 
 pub use progressive::{
     cosearch_op, cosearch_workload, evaluate_with_formats, probe_tile_hints,
+    try_cosearch_workload,
 };
 
 /// A mapping with its cost report and scalar metric value — the unit the
@@ -94,6 +96,93 @@ impl SearchTelemetry {
         self.protos += other.protos;
         self.pruned += other.pruned;
     }
+}
+
+/// Cooperative budget enforcement for one co-search invocation: an
+/// optional wall-clock deadline and an optional cap on protos admitted
+/// into the mapping search, shared across every shard of the request
+/// (the `serve` layer builds one per [`crate::serve::SearchBudget`]).
+///
+/// Enforcement happens inside the arena loop: each shard asks
+/// [`Self::admit_proto`] before opening a proto, and once any cap fires
+/// the limiter latches `exhausted` so all shards — and the format-pair
+/// loop above them — stop opening new work.  A limiter whose caps never
+/// fire is behaviorally invisible: the search result is bit-identical
+/// to running without one.  When a cap *does* fire, which protos got
+/// admitted depends on thread scheduling, so budget-exhausted results
+/// are best-effort; the determinism contract (docs/SEARCH.md) applies
+/// to searches whose budget never fires.
+pub struct SearchLimiter {
+    deadline: Option<Instant>,
+    max_protos: Option<u64>,
+    admitted: AtomicU64,
+    exhausted: AtomicBool,
+}
+
+impl SearchLimiter {
+    /// A limiter with the given caps; `None` caps never fire (and a
+    /// wall time too large to represent as a deadline is unlimited).
+    pub fn new(wall_time: Option<Duration>, max_protos: Option<u64>) -> SearchLimiter {
+        SearchLimiter {
+            deadline: wall_time.and_then(|d| Instant::now().checked_add(d)),
+            max_protos,
+            admitted: AtomicU64::new(0),
+            exhausted: AtomicBool::new(false),
+        }
+    }
+
+    /// Ask to admit one more proto into the mapping search; `false`
+    /// means a cap fired and the caller must stop opening work.
+    pub fn admit_proto(&self) -> bool {
+        if self.exhausted.load(Ordering::Relaxed) {
+            return false;
+        }
+        let n = self.admitted.fetch_add(1, Ordering::Relaxed);
+        if self.max_protos.is_some_and(|cap| n >= cap) {
+            self.admitted.fetch_sub(1, Ordering::Relaxed);
+            self.exhausted.store(true, Ordering::Relaxed);
+            return false;
+        }
+        // The deadline is sampled every 64th admission only: an Instant
+        // read costs far more than the admission bookkeeping.
+        if n % 64 == 0 {
+            if let Some(dl) = self.deadline {
+                if Instant::now() >= dl {
+                    self.admitted.fetch_sub(1, Ordering::Relaxed);
+                    self.exhausted.store(true, Ordering::Relaxed);
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// True once any cap has fired (latched).
+    pub fn exhausted(&self) -> bool {
+        self.exhausted.load(Ordering::Relaxed)
+    }
+
+    /// Protos admitted so far.
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+}
+
+/// Cross-cutting hooks for one co-search invocation — the seam the
+/// serve layer plugs into the search core.  The `Default` value (no
+/// memo, no limiter) is exactly the classic search:
+/// [`cosearch_workload`] delegates to [`try_cosearch_workload`] with
+/// default hooks.
+#[derive(Clone, Copy, Default)]
+pub struct SearchHooks<'a> {
+    /// Cross-run `access_counts` store plus the request-scope digest
+    /// ([`SharedCounts`]).  Value-transparent: binding a store never
+    /// changes designs, scores or the `evaluations` counter (pinned by
+    /// `rust/tests/serve_service.rs`).
+    pub memo: Option<SharedCounts<'a>>,
+    /// Budget caps checked inside the arena loop (see
+    /// [`SearchLimiter`]).
+    pub limiter: Option<&'a SearchLimiter>,
 }
 
 /// Format selection mode (Table I columns).
@@ -258,4 +347,40 @@ impl WorkloadResult {
 pub fn fixed_format_config(arch: &Accelerator) -> SearchConfig {
     let _ = arch;
     SearchConfig { mode: FormatMode::Fixed, ..Default::default() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn limiter_proto_cap_is_exact_and_latches() {
+        let l = SearchLimiter::new(None, Some(3));
+        assert!(l.admit_proto());
+        assert!(l.admit_proto());
+        assert!(l.admit_proto());
+        assert!(!l.exhausted());
+        assert!(!l.admit_proto());
+        assert!(l.exhausted());
+        assert!(!l.admit_proto(), "exhaustion must latch");
+        assert_eq!(l.admitted(), 3);
+    }
+
+    #[test]
+    fn limiter_zero_wall_time_denies_immediately() {
+        let l = SearchLimiter::new(Some(Duration::ZERO), None);
+        assert!(!l.admit_proto());
+        assert!(l.exhausted());
+        assert_eq!(l.admitted(), 0);
+    }
+
+    #[test]
+    fn unlimited_limiter_never_fires() {
+        let l = SearchLimiter::new(None, None);
+        for _ in 0..1000 {
+            assert!(l.admit_proto());
+        }
+        assert!(!l.exhausted());
+        assert_eq!(l.admitted(), 1000);
+    }
 }

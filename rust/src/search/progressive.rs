@@ -14,19 +14,26 @@
 //! new bests `clone_from` into place).  `docs/SEARCH.md` walks the
 //! whole pipeline and states the determinism contract.
 
-use super::{FormatMode, OpDesign, ScoredMapping, SearchConfig, SearchTelemetry, WorkloadResult};
+use super::{
+    FormatMode, OpDesign, ScoredMapping, SearchConfig, SearchHooks, SearchLimiter,
+    SearchTelemetry, WorkloadResult,
+};
 use crate::arch::Accelerator;
-use crate::cost::{mapping_is_legal, tiles_are_legal, CompressionRatios, CostReport, EvalContext};
+use crate::cost::{
+    mapping_is_legal, tiles_are_legal, CompressionRatios, CostReport, EvalContext, SharedCounts,
+};
 use crate::dataflow::mapper::{MapperConfig, OpEnumeration, ProtoArena};
 use crate::dataflow::{tiles_of, Mapping, ProblemDims, MAX_LEVELS};
 use crate::engine::allocate::TileHints;
 use crate::engine::{search_formats_quant, ScoredFormat};
 use crate::format::{named, Format};
 use crate::sparsity::SparsitySpec;
+use crate::util::hash::fnv1a64_fold;
 use crate::util::inline::InlineVec;
 use crate::util::pool;
 use crate::workload::llm::weight_is_kv_tensor;
 use crate::workload::{MatMulOp, Workload};
+use anyhow::{bail, Result};
 use std::time::Instant;
 
 /// Quick dense probe: an even split of each dim across levels, used only
@@ -347,6 +354,17 @@ struct ShardOutcome {
     pruned: u64,
 }
 
+/// The immutable inputs one (op, ratios) mapping search shares across
+/// its shards — bundled so the shard entry point stays at a sane arity.
+#[derive(Clone, Copy)]
+struct PairSearch<'s> {
+    arena: &'s ProtoArena,
+    op: &'s MatMulOp,
+    cfg: &'s SearchConfig,
+    ratios: &'s CompressionRatios,
+    limiter: Option<&'s SearchLimiter>,
+}
+
 /// Run the mapping search over one shard's slice of the prebuilt proto
 /// arena: indices congruent to `shard` mod `nshards` (a balanced
 /// interleave; ids are arena-global, so the reduction is partition-
@@ -365,11 +383,9 @@ fn search_pair_shard(
     shard: usize,
     nshards: usize,
     ctx: &mut EvalContext<'_>,
-    arena: &ProtoArena,
-    op: &MatMulOp,
-    cfg: &SearchConfig,
-    ratios: &CompressionRatios,
+    ps: &PairSearch<'_>,
 ) -> ShardOutcome {
+    let PairSearch { arena, op, cfg, ratios, limiter } = *ps;
     let mut out = ShardOutcome { best: None, protos: 0, pruned: 0 };
     if arena.is_empty() || shard >= arena.len() {
         return out;
@@ -377,6 +393,13 @@ fn search_pair_shard(
     let arch = ctx.arch;
     let mut scratch = arena.scratch_mapping();
     for id in (shard..arena.len()).step_by(nshards.max(1)) {
+        // Budget gate (serve requests): once a cap fires, every shard
+        // stops opening protos.
+        if let Some(l) = limiter {
+            if !l.admit_proto() {
+                break;
+            }
+        }
         out.protos += 1;
         if cfg.prune {
             if let Some(b) = &out.best {
@@ -425,25 +448,18 @@ fn search_pair_shard(
 /// Enumeration counters accumulate into `tel`.
 fn map_search(
     ctxs: &mut [EvalContext<'_>],
-    arena: &ProtoArena,
-    op: &MatMulOp,
-    cfg: &SearchConfig,
-    ratios: &CompressionRatios,
+    ps: &PairSearch<'_>,
     tel: &mut SearchTelemetry,
 ) -> Option<ScoredMapping> {
     let nshards = ctxs.len();
     let outcomes: Vec<ShardOutcome> = if nshards <= 1 {
-        vec![search_pair_shard(0, 1, &mut ctxs[0], arena, op, cfg, ratios)]
+        vec![search_pair_shard(0, 1, &mut ctxs[0], ps)]
     } else {
         std::thread::scope(|s| {
             let handles: Vec<_> = ctxs
                 .iter_mut()
                 .enumerate()
-                .map(|(i, ctx)| {
-                    s.spawn(move || {
-                        search_pair_shard(i, nshards, ctx, arena, op, cfg, ratios)
-                    })
-                })
+                .map(|(i, ctx)| s.spawn(move || search_pair_shard(i, nshards, ctx, ps)))
                 .collect();
             handles
                 .into_iter()
@@ -474,13 +490,31 @@ fn map_search(
         }
     }
     let pb = best?;
+    // Tile refinement is bounded and runs on the already-reduced winner,
+    // so it stays outside the budget gate: a fired limiter stops new
+    // arena work but never truncates refinement of a found design.
     Some(refine_tiles(
         (pb.mapping, pb.report, pb.value),
         &mut ctxs[0],
-        &op.spec,
-        ratios,
-        cfg.prune,
+        &ps.op.spec,
+        ps.ratios,
+        ps.cfg.prune,
     ))
+}
+
+/// Refine a request-level memo scope to one op by folding in its
+/// problem dims.  `access_counts` depends on `(mapping, dims)` only, so
+/// ops with identical dims deliberately share memo entries — repeated
+/// transformer layers (and same-shape q/k/v projections) hit the store
+/// even within a single request.
+fn op_memo<'m>(memo: Option<SharedCounts<'m>>, dims: &ProblemDims) -> Option<SharedCounts<'m>> {
+    memo.map(|m| {
+        let mut scope = m.scope;
+        for d in [dims.m, dims.n, dims.k] {
+            scope = fnv1a64_fold(scope, &d.to_le_bytes());
+        }
+        SharedCounts { scope, ..m }
+    })
 }
 
 /// Progressive co-search for one operator over `shards` proto-level
@@ -490,26 +524,40 @@ fn map_search(
 /// ordering) and the shards iterate it by index.  The per-shard
 /// evaluation contexts persist across format pairs, so the
 /// `access_counts` cache pays off a second time when the same proto
-/// recurs under a different candidate ratio pair.
+/// recurs under a different candidate ratio pair.  `hooks` optionally
+/// binds a cross-run counts memo and a search budget; default hooks
+/// reproduce the classic search exactly.
 fn cosearch_op_sharded(
     arch: &Accelerator,
     op: &MatMulOp,
     cfg: &SearchConfig,
     shards: usize,
     tel: &mut SearchTelemetry,
+    hooks: SearchHooks<'_>,
 ) -> Option<OpDesign> {
+    let memo = op_memo(hooks.memo, &op.dims);
     let mut ctxs: Vec<EvalContext<'_>> = (0..shards.max(1))
-        .map(|_| EvalContext::with_model(arch, op.dims, cfg.metric, cfg.cost))
+        .map(|_| {
+            let ctx = EvalContext::with_model(arch, op.dims, cfg.metric, cfg.cost);
+            match memo {
+                Some(m) => ctx.with_shared_counts(m),
+                None => ctx,
+            }
+        })
         .collect();
     let en = op_enumeration(arch, &op.dims, &cfg.mapper);
     let mut arena = ProtoArena::new();
     let mut best: Option<OpDesign> = None;
     for choice in format_pairs(arch, op, cfg) {
+        if hooks.limiter.is_some_and(|l| l.exhausted()) {
+            break;
+        }
         let ratios = pair_ratios(&choice, cfg.engine.data_bits);
         arena.rebuild(&en, &cfg.mapper, |tiles, spatial| {
             tiles_are_legal(arch, tiles, spatial, &ratios)
         });
-        let found = map_search(&mut ctxs, &arena, op, cfg, &ratios, tel);
+        let ps = PairSearch { arena: &arena, op, cfg, ratios: &ratios, limiter: hooks.limiter };
+        let found = map_search(&mut ctxs, &ps, tel);
         if let Some((mapping, report, v)) = found {
             if best.as_ref().map(|b| v < b.metric_value).unwrap_or(true) {
                 best = Some(OpDesign {
@@ -542,7 +590,14 @@ pub fn cosearch_op(
     cfg: &SearchConfig,
     tel: &mut SearchTelemetry,
 ) -> Option<OpDesign> {
-    cosearch_op_sharded(arch, op, cfg, pool::resolve_threads(cfg.threads), tel)
+    cosearch_op_sharded(
+        arch,
+        op,
+        cfg,
+        pool::resolve_threads(cfg.threads),
+        tel,
+        SearchHooks::default(),
+    )
 }
 
 /// Split `threads` between op-level workers and a per-op proto-shard
@@ -563,26 +618,35 @@ fn split_threads(threads: usize, nops: usize) -> (usize, Vec<usize>) {
 }
 
 /// Fold per-op `(design, telemetry)` results — already in workload op
-/// order — into a [`WorkloadResult`], panicking with the op name when an
-/// op found no legal mapping (tiny on-chip memory; a dense worst-case
-/// fallback with trivially legal minimal tiles is a possible future
-/// softening).
+/// order — into a [`WorkloadResult`].  An op with no design is an error
+/// naming the op: an exhausted budget when a limiter fired before the
+/// op completed, otherwise no legal mapping exists (tiny on-chip
+/// memory; a dense worst-case fallback with trivially legal minimal
+/// tiles is a possible future softening).
 fn collect_workload(
     arch: &Accelerator,
     w: &Workload,
     start: Instant,
     per_op: Vec<(Option<OpDesign>, SearchTelemetry)>,
-) -> WorkloadResult {
+    limiter: Option<&SearchLimiter>,
+) -> Result<WorkloadResult> {
     let mut tel = SearchTelemetry::default();
     let mut designs = Vec::with_capacity(w.ops.len());
     for (i, (d, t)) in per_op.into_iter().enumerate() {
         tel.merge(t);
         match d {
             Some(d) => designs.push(d),
-            None => panic!("no legal mapping for op {} on {}", w.ops[i].name, arch.name),
+            None => match limiter.filter(|l| l.exhausted()) {
+                Some(l) => bail!(
+                    "search budget exhausted ({} protos admitted) before op {} found a design",
+                    l.admitted(),
+                    w.ops[i].name
+                ),
+                None => bail!("no legal mapping for op {} on {}", w.ops[i].name, arch.name),
+            },
         }
     }
-    WorkloadResult {
+    Ok(WorkloadResult {
         workload: w.name.clone(),
         designs,
         elapsed: start.elapsed(),
@@ -590,7 +654,28 @@ fn collect_workload(
         cache: tel.cache,
         protos: tel.protos,
         pruned: tel.pruned,
-    }
+    })
+}
+
+/// Progressive co-search across a whole workload with explicit
+/// [`SearchHooks`] — the fallible entry point `snipsnap serve` calls.
+/// With default hooks this is byte-for-byte [`cosearch_workload`]; with
+/// a limiter bound, an exhausted budget surfaces as an `Err` naming the
+/// first op left without a design instead of a panic.
+pub fn try_cosearch_workload(
+    arch: &Accelerator,
+    w: &Workload,
+    cfg: &SearchConfig,
+    hooks: SearchHooks<'_>,
+) -> Result<WorkloadResult> {
+    let start = Instant::now();
+    let (workers, shard_plan) = split_threads(pool::resolve_threads(cfg.threads), w.ops.len());
+    let per_op = pool::parallel_map(workers, &w.ops, |i, op| {
+        let mut tel = SearchTelemetry::default();
+        let d = cosearch_op_sharded(arch, op, cfg, shard_plan[i], &mut tel, hooks);
+        (d, tel)
+    });
+    collect_workload(arch, w, start, per_op, hooks.limiter)
 }
 
 /// Progressive co-search across a whole workload, parallelized over
@@ -598,20 +683,14 @@ fn collect_workload(
 /// are bit-identical for any thread count and with pruning on or off;
 /// the telemetry counters (`evaluations`, cache, prune stats) are
 /// additionally thread-invariant when pruning is off.  See
-/// `docs/SEARCH.md`.
+/// `docs/SEARCH.md`.  Panics when an op has no legal mapping; the
+/// hook-carrying [`try_cosearch_workload`] is the fallible variant.
 pub fn cosearch_workload(
     arch: &Accelerator,
     w: &Workload,
     cfg: &SearchConfig,
 ) -> WorkloadResult {
-    let start = Instant::now();
-    let (workers, shard_plan) = split_threads(pool::resolve_threads(cfg.threads), w.ops.len());
-    let per_op = pool::parallel_map(workers, &w.ops, |i, op| {
-        let mut tel = SearchTelemetry::default();
-        let d = cosearch_op_sharded(arch, op, cfg, shard_plan[i], &mut tel);
-        (d, tel)
-    });
-    collect_workload(arch, w, start, per_op)
+    try_cosearch_workload(arch, w, cfg, SearchHooks::default()).unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Evaluate a workload with FIXED formats and a FIXED per-op mapping
@@ -646,7 +725,8 @@ pub fn evaluate_with_formats(
             tiles_are_legal(arch, tiles, spatial, &ratios)
         });
         let mut tel = SearchTelemetry::default();
-        let found = map_search(&mut ctxs, &arena, op, cfg, &ratios, &mut tel);
+        let ps = PairSearch { arena: &arena, op, cfg, ratios: &ratios, limiter: None };
+        let found = map_search(&mut ctxs, &ps, &mut tel);
         for ctx in &ctxs {
             tel.absorb(ctx);
         }
@@ -663,7 +743,7 @@ pub fn evaluate_with_formats(
         });
         (design, tel)
     });
-    collect_workload(arch, w, start, per_op)
+    collect_workload(arch, w, start, per_op, None).unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Check the compressed tensors of a design still satisfy the analytical

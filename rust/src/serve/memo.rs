@@ -1,0 +1,410 @@
+//! Persistent cross-run `access_counts` memo store.
+//!
+//! The co-search's dominant cost is recomputing access counts for
+//! mappings it has already seen — across requests, across processes.
+//! [`MemoStore`] is an append-mode on-disk map from the 128-bit
+//! [`memo_key`](crate::cost::memo_key) (scope digest + packed
+//! [`MapKey`](crate::cost::MapKey)) to the cached [`AccessCounts`]:
+//! loaded once at startup, consulted through the
+//! [`CountsMemo`](crate::cost::CountsMemo) seam during searches, and
+//! flushed incrementally (new entries only) between requests.
+//!
+//! # Why this cannot change results
+//!
+//! `access_counts` is a pure function of `(mapping, dims)` and the store
+//! holds the exact `f64`s a recompute would produce (the JSON writer
+//! uses shortest-round-trip float formatting, so render → parse is the
+//! identity on finite values — and fill counts are always finite).  A
+//! memo hit therefore substitutes bit-identical inputs into the cost
+//! backend; designs, scores and the `evaluations` counter are unchanged
+//! (pinned by `rust/tests/serve_service.rs`).
+//!
+//! # Scope digest (the invalidation key)
+//!
+//! Entries are only shared under an identical [`request_scope`]: an
+//! FNV-1a digest of the memo schema version plus the canonical snapshot
+//! JSON of the accelerator, workload, cost-backend and quantization
+//! configs (the op's problem dims are folded in per-op by the search).
+//! Dims alone would be sufficient for correctness; the conservative
+//! digest means a config change can only ever cause misses, never a
+//! wrong hit.
+//!
+//! # File format
+//!
+//! JSONL: a header line `{"snipsnap_memo":1}` followed by one entry per
+//! line, `{"counts":[[f,f,f],...],"key":"<32 hex digits>"}`.  Appends
+//! are line-atomic in practice but a crash mid-write can truncate the
+//! final line, so the loader tolerates (drops) a malformed *last* line
+//! while rejecting corruption anywhere else.
+
+use crate::arch::Accelerator;
+use crate::config::snapshot;
+use crate::cost::CountsMemo;
+use crate::dataflow::{AccessCounts, MAX_LEVELS};
+use crate::search::SearchConfig;
+use crate::util::hash::{fnv1a64_fold, FNV64_OFFSET};
+use crate::util::inline::InlineVec;
+use crate::util::json::Json;
+use crate::workload::Workload;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Memo schema version, folded into every [`request_scope`] digest: bump
+/// it whenever the meaning of stored counts changes and every existing
+/// entry silently (and safely) misses.
+pub const MEMO_SCHEMA: u64 = 1;
+
+/// The store-level scope digest for one request: FNV-1a over
+/// [`MEMO_SCHEMA`] and the canonical snapshot JSON of everything the
+/// stored counts must be invalidated by (see module docs).
+pub fn request_scope(arch: &Accelerator, w: &Workload, cfg: &SearchConfig) -> u64 {
+    let mut scope = fnv1a64_fold(FNV64_OFFSET, &MEMO_SCHEMA.to_le_bytes());
+    for doc in [
+        snapshot::arch_json(arch),
+        snapshot::workload_json(w),
+        snapshot::cost_json(&cfg.cost),
+        snapshot::quant_json(&cfg.quant),
+    ] {
+        scope = fnv1a64_fold(scope, doc.to_string().as_bytes());
+    }
+    scope
+}
+
+/// The on-disk map behind `snipsnap serve` (see module docs).  Shared
+/// across worker threads: all methods take `&self` and synchronize on an
+/// internal mutex (the search only touches it on local-cache misses, so
+/// contention is off the hot path).
+pub struct MemoStore {
+    path: Option<PathBuf>,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<u128, AccessCounts>,
+    /// Entries inserted since the last [`MemoStore::flush`], in insert
+    /// order — the append-mode write set.
+    pending: Vec<(u128, AccessCounts)>,
+}
+
+impl MemoStore {
+    /// Open (or create) the store at `path`, loading every entry.  A
+    /// missing file becomes an empty store whose first flush writes the
+    /// header; an existing file must start with the versioned header.
+    pub fn open(path: &Path) -> Result<MemoStore> {
+        let mut inner = Inner::default();
+        match std::fs::read_to_string(path) {
+            Ok(text) => {
+                load_entries(&text, &mut inner.map)
+                    .with_context(|| format!("memo store {}", path.display()))?;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(anyhow!("memo store {}: {e}", path.display())),
+        }
+        Ok(MemoStore { path: Some(path.to_path_buf()), inner: Mutex::new(inner) })
+    }
+
+    /// A store with no backing file — same semantics, nothing persists.
+    pub fn in_memory() -> MemoStore {
+        MemoStore { path: None, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Entries currently held (flushed or pending).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stored counts for `key`, if any ([`AccessCounts`] is `Copy`).
+    pub fn get(&self, key: u128) -> Option<AccessCounts> {
+        self.inner.lock().unwrap().map.get(&key).copied()
+    }
+
+    /// Record `counts` under `key`; the first insert wins (counts for a
+    /// key are unique by construction, so a duplicate is a no-op rather
+    /// than a rewrite) and joins the next flush's write set.
+    pub fn insert(&self, key: u128, counts: &AccessCounts) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.insert(key, *counts).is_none() {
+            inner.pending.push((key, *counts));
+        }
+    }
+
+    /// Append all pending entries to the backing file (creating it with
+    /// the header if needed) and clear the write set.  Returns how many
+    /// entries were written; an in-memory store just drains.
+    pub fn flush(&self) -> Result<usize> {
+        let pending: Vec<(u128, AccessCounts)> = {
+            let mut inner = self.inner.lock().unwrap();
+            std::mem::take(&mut inner.pending)
+        };
+        let Some(path) = &self.path else { return Ok(pending.len()) };
+        if pending.is_empty() {
+            return Ok(0);
+        }
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("memo store {}", path.display()))?;
+        }
+        let mut out = String::new();
+        if !path.exists() {
+            out.push_str(&format!("{}\n", header_json()));
+        }
+        for (key, ac) in &pending {
+            out.push_str(&format!("{}\n", entry_json(*key, ac)));
+        }
+        std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .and_then(|mut f| f.write_all(out.as_bytes()))
+            .with_context(|| format!("memo store {}", path.display()))?;
+        Ok(pending.len())
+    }
+}
+
+impl CountsMemo for MemoStore {
+    fn get(&self, key: u128) -> Option<AccessCounts> {
+        MemoStore::get(self, key)
+    }
+
+    fn put(&self, key: u128, counts: &AccessCounts) {
+        self.insert(key, counts);
+    }
+}
+
+/// Per-request view of a [`MemoStore`] that counts hits and misses —
+/// the numbers behind `memo_hits`/`memo_misses` in
+/// [`SearchStats`](crate::serve::SearchStats).  The search binds this
+/// (not the store directly) so each request reports its own traffic.
+pub struct MemoSession<'a> {
+    store: &'a MemoStore,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<'a> MemoSession<'a> {
+    pub fn new(store: &'a MemoStore) -> MemoSession<'a> {
+        MemoSession { store, hits: AtomicU64::new(0), misses: AtomicU64::new(0) }
+    }
+
+    /// Store lookups served from the store during this request.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Store lookups that missed (and were then computed + published).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+impl CountsMemo for MemoSession<'_> {
+    fn get(&self, key: u128) -> Option<AccessCounts> {
+        let r = self.store.get(key);
+        match r {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        r
+    }
+
+    fn put(&self, key: u128, counts: &AccessCounts) {
+        self.store.insert(key, counts);
+    }
+}
+
+// --- file format ----------------------------------------------------------
+
+fn header_json() -> Json {
+    Json::obj(vec![("snipsnap_memo", Json::num(MEMO_SCHEMA as f64))])
+}
+
+fn entry_json(key: u128, ac: &AccessCounts) -> Json {
+    Json::obj(vec![
+        ("key", Json::str(&format!("{key:032x}"))),
+        (
+            "counts",
+            Json::arr(ac.fills.iter().map(|row| Json::arr(row.iter().map(|&f| Json::num(f))))),
+        ),
+    ])
+}
+
+fn entry_from(v: &Json) -> Result<(u128, AccessCounts)> {
+    let hex = v.get("key").and_then(Json::as_str).context("entry missing 'key'")?;
+    if hex.len() != 32 {
+        bail!("entry key '{hex}' is not 32 hex digits");
+    }
+    let key = u128::from_str_radix(hex, 16).with_context(|| format!("entry key '{hex}'"))?;
+    let rows = v.get("counts").and_then(Json::as_arr).context("entry missing 'counts'")?;
+    if rows.is_empty() || rows.len() > MAX_LEVELS {
+        bail!("entry has {} count rows (need 1..={MAX_LEVELS})", rows.len());
+    }
+    let mut fills: InlineVec<[f64; 3], MAX_LEVELS> = InlineVec::new();
+    for row in rows {
+        let row = row.as_arr().context("count row must be an array")?;
+        let row: [f64; 3] = row
+            .iter()
+            .map(|x| x.as_f64().context("count entries must be numbers"))
+            .collect::<Result<Vec<_>>>()?
+            .try_into()
+            .map_err(|_| anyhow!("count rows must have 3 entries"))?;
+        fills.push(row);
+    }
+    Ok((key, AccessCounts { fills }))
+}
+
+/// Parse a store file: versioned header first, then entries.  A
+/// malformed **final** line (torn append) is dropped; corruption
+/// anywhere else is an error — silently skipping mid-file lines would
+/// mask real damage.
+fn load_entries(text: &str, map: &mut HashMap<u128, AccessCounts>) -> Result<()> {
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    let Some((first, rest)) = lines.split_first() else { return Ok(()) };
+    let header = Json::parse(first).map_err(|e| anyhow!("bad header line: {e}"))?;
+    let schema = header
+        .get("snipsnap_memo")
+        .and_then(Json::as_u64)
+        .context("not a snipsnap memo store (missing 'snipsnap_memo' header)")?;
+    if schema != MEMO_SCHEMA {
+        bail!("unsupported memo schema {schema} (this build reads {MEMO_SCHEMA})");
+    }
+    for (i, line) in rest.iter().enumerate() {
+        let last = i + 1 == rest.len();
+        let parsed = Json::parse(line)
+            .map_err(|e| anyhow!("line {}: {e}", i + 2))
+            .and_then(|v| entry_from(&v).map_err(|e| anyhow!("line {}: {e}", i + 2)));
+        match parsed {
+            Ok((key, ac)) => {
+                map.insert(key, ac);
+            }
+            Err(_) if last => {} // torn final append — drop it
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(seed: f64) -> AccessCounts {
+        let mut fills: InlineVec<[f64; 3], MAX_LEVELS> = InlineVec::new();
+        fills.push([seed, seed * 2.0, seed + 0.125]);
+        fills.push([1.0, f64::from_bits(0x3ff0_0000_0000_0001), 3.0e16]);
+        AccessCounts { fills }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("snipsnap_memo_{name}_{}", std::process::id()))
+    }
+
+    /// Every `f64` must survive the disk round trip exactly — including
+    /// non-integral values, a 1-ulp-off-1.0 value and counts beyond the
+    /// writer's integer-formatting range.
+    #[test]
+    fn disk_round_trip_is_exact() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let store = MemoStore::open(&path).unwrap();
+        store.insert(7, &counts(0.3));
+        store.insert(u128::MAX, &counts(9.0));
+        assert_eq!(store.flush().unwrap(), 2);
+        assert_eq!(store.flush().unwrap(), 0, "flush drains the write set");
+
+        let re = MemoStore::open(&path).unwrap();
+        assert_eq!(re.len(), 2);
+        assert_eq!(re.get(7), Some(counts(0.3)));
+        assert_eq!(re.get(u128::MAX), Some(counts(9.0)));
+        assert_eq!(re.get(8), None);
+
+        // Appends across reopen accumulate instead of clobbering.
+        re.insert(8, &counts(1.5));
+        re.flush().unwrap();
+        let re2 = MemoStore::open(&path).unwrap();
+        assert_eq!(re2.len(), 3);
+        assert_eq!(re2.get(7), Some(counts(0.3)));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_final_line_is_dropped_mid_file_corruption_is_not() {
+        let path = tmp("torn");
+        let store = MemoStore::in_memory();
+        store.insert(1, &counts(1.0));
+        store.insert(2, &counts(2.0));
+        let text = format!(
+            "{}\n{}\n{}\n",
+            header_json(),
+            entry_json(1, &counts(1.0)),
+            entry_json(2, &counts(2.0)),
+        );
+        // Truncate mid-way through the final line (a torn append).
+        std::fs::write(&path, &text[..text.len() - 10]).unwrap();
+        let re = MemoStore::open(&path).unwrap();
+        assert_eq!(re.len(), 1, "torn last line dropped, earlier entries kept");
+        assert_eq!(re.get(1), Some(counts(1.0)));
+
+        // The same damage mid-file is corruption, not tolerance.
+        let torn_first = format!(
+            "{}\n{}\n{}\n",
+            header_json(),
+            &entry_json(1, &counts(1.0)).to_string()[..20],
+            entry_json(2, &counts(2.0)),
+        );
+        std::fs::write(&path, torn_first).unwrap();
+        assert!(MemoStore::open(&path).is_err());
+
+        // Wrong / missing header is rejected outright.
+        std::fs::write(&path, format!("{}\n", entry_json(1, &counts(1.0)))).unwrap();
+        assert!(MemoStore::open(&path).unwrap_err().to_string().contains("snipsnap_memo"));
+        std::fs::write(&path, "{\"snipsnap_memo\":99}\n").unwrap();
+        assert!(MemoStore::open(&path).unwrap_err().to_string().contains("schema"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn session_counts_hits_and_misses() {
+        let store = MemoStore::in_memory();
+        store.insert(5, &counts(4.0));
+        let session = MemoSession::new(&store);
+        assert_eq!(CountsMemo::get(&session, 5), Some(counts(4.0)));
+        assert_eq!(CountsMemo::get(&session, 6), None);
+        session.put(6, &counts(6.0));
+        assert_eq!(CountsMemo::get(&session, 6), Some(counts(6.0)));
+        assert_eq!((session.hits(), session.misses()), (2, 1));
+        assert_eq!(store.len(), 2);
+    }
+
+    /// The scope digest must shift when any component of the
+    /// invalidation key changes.
+    #[test]
+    fn request_scope_tracks_its_inputs() {
+        let run = crate::config::load_run_config(
+            "[run]\narch = \"arch1\"\n[[op]]\nname = \"x\"\nm = 8\nn = 8\nk = 8\n",
+        )
+        .unwrap();
+        let base = request_scope(&run.arch, &run.workload, &run.search);
+        assert_eq!(base, request_scope(&run.arch, &run.workload, &run.search));
+
+        let mut arch2 = run.arch.clone();
+        arch2.data_bits += 8;
+        assert_ne!(base, request_scope(&arch2, &run.workload, &run.search));
+
+        let mut w2 = run.workload.clone();
+        w2.ops[0].count += 1;
+        assert_ne!(base, request_scope(&run.arch, &w2, &run.search));
+
+        let mut cfg2 = run.search.clone();
+        cfg2.cost = crate::cost::CostModel::Contention(Default::default());
+        assert_ne!(base, request_scope(&run.arch, &run.workload, &cfg2));
+    }
+}

@@ -1,0 +1,403 @@
+//! `snipsnap serve` — a long-running co-search service.
+//!
+//! The service reads one JSON request per line on stdin and writes one
+//! JSON response per line on stdout (JSONL), with human-readable
+//! per-request stats on stderr.  The wire format for a request **is**
+//! the run-config snapshot ([`crate::config::snapshot`]): any snapshot
+//! a `snipsnap search` run emitted is a valid request body, optionally
+//! wrapped with service-level fields the snapshot loader ignores:
+//!
+//! ```json
+//! {"snipsnap_run_config":1, "arch":{...}, "workload":{...}, "search":{...},
+//!  "id":"req-42", "budget":{"wall_time_ms":5000,"max_protos":100000}}
+//! ```
+//!
+//! Every request is therefore replayable by construction — feed the
+//! same line back (or hand it to `snipsnap search --config`) and the
+//! deterministic co-search reproduces the same designs.  Response lines
+//! carry only deterministic fields (designs, totals); the
+//! nondeterministic observables (wall time, memo traffic) go to stderr
+//! and the per-request [`results record`](crate::report) — so two runs
+//! of the same request are byte-identical on stdout.
+//!
+//! Budgets ([`SearchBudget`]) are enforced *inside* the arena loop via
+//! [`SearchLimiter`]: a budget that never fires leaves the result
+//! bit-identical to an unbudgeted search, and a fired budget surfaces
+//! as an `ok:false` response naming the op that ran out of room.
+//!
+//! Across requests (and across processes) the service shares a
+//! persistent `access_counts` memo ([`memo::MemoStore`]) — see the memo
+//! module docs for the bit-identity argument and the invalidation key.
+
+pub mod memo;
+
+use crate::config::snapshot::run_config_from_value;
+use crate::config::RunConfig;
+use crate::cost::{CacheStats, SharedCounts};
+use crate::search::{try_cosearch_workload, SearchHooks, SearchLimiter, WorkloadResult};
+use crate::util::bench;
+use crate::util::json::Json;
+use crate::util::pool;
+use anyhow::{bail, Context, Result};
+use memo::{MemoSession, MemoStore};
+use std::io::{BufRead, Write};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Version stamped into every response line.
+pub const RESPONSE_VERSION: u64 = 1;
+
+/// Per-request search budget: caps enforced cooperatively inside the
+/// arena loop (see [`SearchLimiter`]).  Both caps default to unlimited;
+/// a request whose budget never fires is bit-identical to an
+/// unbudgeted one.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SearchBudget {
+    /// Wall-clock cap in milliseconds.
+    pub wall_time_ms: Option<u64>,
+    /// Cap on protos admitted into the mapping search.
+    pub max_protos: Option<u64>,
+}
+
+impl SearchBudget {
+    /// Parse the request's `budget` object.  Unknown keys are rejected
+    /// (a typo'd cap name must not silently mean "unlimited"), and caps
+    /// must be non-negative integers.
+    pub fn from_json(v: &Json) -> Result<SearchBudget> {
+        let Json::Obj(m) = v else { bail!("'budget' must be an object") };
+        let mut b = SearchBudget::default();
+        for (k, val) in m {
+            let cap = Some(
+                val.as_u64()
+                    .with_context(|| format!("budget '{k}' must be a non-negative integer"))?,
+            );
+            match k.as_str() {
+                "wall_time_ms" => b.wall_time_ms = cap,
+                "max_protos" => b.max_protos = cap,
+                other => bail!("unknown budget cap '{other}' (wall_time_ms|max_protos)"),
+            }
+        }
+        Ok(b)
+    }
+
+    /// The enforcing limiter, or `None` when both caps are unlimited
+    /// (no limiter at all keeps the classic search path untouched).
+    pub fn limiter(&self) -> Option<SearchLimiter> {
+        if self.wall_time_ms.is_none() && self.max_protos.is_none() {
+            return None;
+        }
+        Some(SearchLimiter::new(self.wall_time_ms.map(Duration::from_millis), self.max_protos))
+    }
+}
+
+/// One parsed service request: a fully-resolved run config plus the
+/// service-level wrapper fields.
+pub struct SearchRequest {
+    /// Caller-chosen correlation id, echoed into the response.
+    pub id: Option<String>,
+    pub run: RunConfig,
+    pub budget: SearchBudget,
+}
+
+impl SearchRequest {
+    /// Parse one request line (see module docs for the shape).
+    pub fn parse(line: &str) -> Result<SearchRequest> {
+        let v = Json::parse(line).map_err(|e| anyhow::anyhow!("request: {e}"))?;
+        let run = run_config_from_value(&v)?;
+        let id = match v.get("id") {
+            None | Some(Json::Null) => None,
+            Some(other) => {
+                Some(other.as_str().context("request 'id' must be a string")?.to_string())
+            }
+        };
+        let budget = match v.get("budget") {
+            None | Some(Json::Null) => SearchBudget::default(),
+            Some(b) => SearchBudget::from_json(b)?,
+        };
+        Ok(SearchRequest { id, run, budget })
+    }
+}
+
+/// Observables of one request: the search telemetry plus the service's
+/// own counters.  Reported on stderr and in the per-request results
+/// record — never on the response line, because wall time and memo
+/// traffic are the two things two identical requests legitimately
+/// differ in.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SearchStats {
+    /// Cost-model evaluations (memo-invariant; see docs/SEARCH.md).
+    pub evaluations: u64,
+    /// Local per-worker `access_counts` cache counters.
+    pub cache: CacheStats,
+    /// Legal protos considered across all ops and format pairs.
+    pub protos: u64,
+    /// Protos skipped by the branch-and-bound lower bound.
+    pub pruned: u64,
+    /// Cross-run memo store lookups served / missed this request.
+    pub memo_hits: u64,
+    pub memo_misses: u64,
+    /// Wall time of the whole request (parse excluded).
+    pub wall_time_s: f64,
+    /// True when the request's budget fired before the search finished.
+    pub budget_exhausted: bool,
+}
+
+impl SearchStats {
+    /// Fraction of memo lookups served from the store (0 when none).
+    pub fn memo_hit_rate(&self) -> f64 {
+        let total = self.memo_hits + self.memo_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.memo_hits as f64 / total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("evaluations", Json::num(self.evaluations as f64)),
+            ("cache_hits", Json::num(self.cache.hits as f64)),
+            ("cache_misses", Json::num(self.cache.misses as f64)),
+            ("protos", Json::num(self.protos as f64)),
+            ("pruned", Json::num(self.pruned as f64)),
+            ("memo_hits", Json::num(self.memo_hits as f64)),
+            ("memo_misses", Json::num(self.memo_misses as f64)),
+            ("wall_time_s", Json::num(self.wall_time_s)),
+            ("budget_exhausted", Json::Bool(self.budget_exhausted)),
+        ])
+    }
+}
+
+/// The outcome of one request: the co-search result (or the error
+/// string for the `ok:false` response) plus this request's stats.
+pub struct SearchResponse {
+    pub id: Option<String>,
+    pub result: Result<WorkloadResult, String>,
+    pub stats: SearchStats,
+}
+
+impl SearchResponse {
+    /// The deterministic response document (see module docs): protocol
+    /// version, echoed id, `ok`, and on success the designs and totals.
+    /// Object keys render sorted ([`Json::Obj`] is a `BTreeMap`), so
+    /// equal results are byte-equal lines.
+    pub fn wire_json(&self) -> Json {
+        let id = self.id.as_deref().map(Json::str).unwrap_or(Json::Null);
+        match &self.result {
+            Ok(r) => Json::obj(vec![
+                ("snipsnap_response", Json::num(RESPONSE_VERSION as f64)),
+                ("id", id),
+                ("ok", Json::Bool(true)),
+                ("workload", Json::str(&r.workload)),
+                (
+                    "designs",
+                    Json::arr(r.designs.iter().map(|d| {
+                        Json::obj(vec![
+                            ("op", Json::str(&d.op_name)),
+                            ("input_format", Json::str(&d.input_format.to_string())),
+                            ("weight_format", Json::str(&d.weight_format.to_string())),
+                            ("input_bits", Json::num(d.input_bits as f64)),
+                            ("weight_bits", Json::num(d.weight_bits as f64)),
+                            ("energy_pj", Json::num(d.report.total_energy_pj())),
+                            ("cycles", Json::num(d.report.latency_cycles())),
+                            ("metric_value", Json::num(d.metric_value)),
+                            ("count", Json::num(d.count as f64)),
+                        ])
+                    })),
+                ),
+                (
+                    "totals",
+                    Json::obj(vec![
+                        ("energy_pj", Json::num(r.total_energy_pj())),
+                        ("memory_energy_pj", Json::num(r.memory_energy_pj())),
+                        ("cycles", Json::num(r.total_cycles())),
+                        ("edp", Json::num(r.edp())),
+                    ]),
+                ),
+            ]),
+            Err(msg) => Json::obj(vec![
+                ("snipsnap_response", Json::num(RESPONSE_VERSION as f64)),
+                ("id", id),
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(msg)),
+            ]),
+        }
+    }
+
+    /// The response line (newline included).
+    pub fn render(&self) -> String {
+        format!("{}\n", self.wire_json())
+    }
+}
+
+/// Run one parsed request: bind the memo session and budget limiter as
+/// [`SearchHooks`] and drive the fallible co-search.  Search errors
+/// (budget exhaustion, no legal mapping) become `ok:false` responses,
+/// never a dead service.
+pub fn handle_request(req: &SearchRequest, store: Option<&MemoStore>) -> SearchResponse {
+    let start = Instant::now();
+    let limiter = req.budget.limiter();
+    let session = store.map(MemoSession::new);
+    let scope = memo::request_scope(&req.run.arch, &req.run.workload, &req.run.search);
+    let hooks = SearchHooks {
+        memo: session.as_ref().map(|s| SharedCounts { store: s, scope }),
+        limiter: limiter.as_ref(),
+    };
+    let result = try_cosearch_workload(&req.run.arch, &req.run.workload, &req.run.search, hooks);
+    let mut stats = SearchStats {
+        wall_time_s: start.elapsed().as_secs_f64(),
+        budget_exhausted: limiter.as_ref().is_some_and(|l| l.exhausted()),
+        memo_hits: session.as_ref().map(|s| s.hits()).unwrap_or(0),
+        memo_misses: session.as_ref().map(|s| s.misses()).unwrap_or(0),
+        ..SearchStats::default()
+    };
+    if let Ok(r) = &result {
+        stats.evaluations = r.evaluations;
+        stats.cache = r.cache;
+        stats.protos = r.protos;
+        stats.pruned = r.pruned;
+    }
+    SearchResponse {
+        id: req.id.clone(),
+        result: result.map_err(|e| format!("{e:#}")),
+        stats,
+    }
+}
+
+/// Parse-and-run one request line.  Parse failures become `ok:false`
+/// responses with default stats, so a malformed line costs its sender
+/// one error response instead of killing the loop.
+pub fn handle_line(line: &str, store: Option<&MemoStore>) -> SearchResponse {
+    match SearchRequest::parse(line) {
+        Ok(req) => handle_request(&req, store),
+        Err(e) => SearchResponse {
+            id: None,
+            result: Err(format!("{e:#}")),
+            stats: SearchStats::default(),
+        },
+    }
+}
+
+/// Service configuration (resolved from the CLI flags in `main`).
+pub struct ServeOpts {
+    /// Handle exactly one request, then exit (errors if stdin is empty).
+    pub once: bool,
+    /// Worker threads for concurrent requests; request lines are
+    /// batched `jobs` at a time through [`pool::parallel_map`], and
+    /// responses always come back in request order.
+    pub jobs: usize,
+    /// Where per-request unified-schema records land (`serve.jsonl`,
+    /// rolled up by `snipsnap report`); `None` disables.
+    pub results_dir: Option<PathBuf>,
+}
+
+/// What the loop served, for the exit banner.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeSummary {
+    pub requests: u64,
+    pub failed: u64,
+}
+
+/// One stderr stats line per request.  `memo_hits=` is the greppable
+/// signal CI uses to prove the cross-run store was actually consulted.
+fn log_line(n: u64, resp: &SearchResponse) -> String {
+    let s = &resp.stats;
+    let id = resp.id.clone().unwrap_or_else(|| format!("#{n}"));
+    let outcome = match &resp.result {
+        Ok(r) => format!("ok workload={}", r.workload),
+        Err(e) => format!("error: {e}"),
+    };
+    format!(
+        "serve: request {id} {outcome} evals={} cache={}/{} memo_hits={} memo_misses={} \
+         protos={} pruned={} wall={:.3}s budget_exhausted={}",
+        s.evaluations,
+        s.cache.hits,
+        s.cache.misses,
+        s.memo_hits,
+        s.memo_misses,
+        s.protos,
+        s.pruned,
+        s.wall_time_s,
+        s.budget_exhausted,
+    )
+}
+
+/// The per-request results record (`rows` of the unified bench schema),
+/// so `snipsnap report` rolls service traffic up next to the benches.
+fn record_rows(resp: &SearchResponse) -> Json {
+    let s = &resp.stats;
+    let mut rows = vec![
+        ("id", resp.id.as_deref().map(Json::str).unwrap_or(Json::Null)),
+        ("ok", Json::Bool(resp.result.is_ok())),
+        ("stats", s.to_json()),
+    ];
+    match &resp.result {
+        Ok(r) => {
+            rows.push(("workload", Json::str(&r.workload)));
+            rows.push(("energy_pj", Json::num(r.total_energy_pj())));
+            rows.push(("cycles", Json::num(r.total_cycles())));
+            rows.push(("edp", Json::num(r.edp())));
+        }
+        Err(e) => rows.push(("error", Json::str(e))),
+    }
+    Json::obj(rows)
+}
+
+/// The service loop: read request lines, serve them in order, flush the
+/// memo store between batches.  Blank lines are skipped.  I/O errors on
+/// the streams are fatal (the peer is gone); per-request failures are
+/// in-band `ok:false` responses counted in the summary.
+pub fn serve_loop(
+    opts: &ServeOpts,
+    store: Option<&MemoStore>,
+    input: impl BufRead,
+    out: &mut impl Write,
+    log: &mut impl Write,
+) -> Result<ServeSummary> {
+    let mut summary = ServeSummary::default();
+    let mut lines = input.lines();
+    let batch_cap = if opts.once { 1 } else { opts.jobs.max(1) };
+    loop {
+        // Pull the next batch of non-blank request lines.
+        let mut batch: Vec<String> = Vec::with_capacity(batch_cap);
+        while batch.len() < batch_cap {
+            match lines.next() {
+                Some(line) => {
+                    let line = line.context("reading request")?;
+                    if !line.trim().is_empty() {
+                        batch.push(line);
+                    }
+                }
+                None => break,
+            }
+        }
+        if batch.is_empty() {
+            if opts.once && summary.requests == 0 {
+                bail!("--once: no request on stdin");
+            }
+            break;
+        }
+        let responses = pool::parallel_map(batch_cap, &batch, |_, line| {
+            handle_line(line, store)
+        });
+        for resp in &responses {
+            summary.requests += 1;
+            summary.failed += u64::from(resp.result.is_err());
+            out.write_all(resp.render().as_bytes()).context("writing response")?;
+            writeln!(log, "{}", log_line(summary.requests, resp)).context("writing stats")?;
+            if let Some(dir) = &opts.results_dir {
+                bench::write_record_at(dir, "serve", resp.stats.wall_time_s, record_rows(resp));
+            }
+        }
+        out.flush().context("writing response")?;
+        // Persist what this batch learned before accepting more work, so
+        // a later crash loses at most one batch of memo entries.
+        if let Some(s) = store {
+            s.flush()?;
+        }
+        if opts.once {
+            break;
+        }
+    }
+    Ok(summary)
+}

@@ -52,13 +52,28 @@ pub fn git_rev() -> String {
     .clone()
 }
 
-/// Seconds since the Unix epoch (0.0 when the clock is unavailable);
-/// orders a bench's accumulated records in time.
+/// Seconds since the Unix epoch, sub-second precision, **strictly
+/// increasing within a process** — back-to-back records (or a clock
+/// that only ticks per second / steps backwards) must still carry
+/// unambiguous time-ordering, so when the wall clock has not advanced
+/// past the previously issued stamp the value is bumped by at least one
+/// ulp.  Falls back to bumping from 0.0 when the clock is unavailable.
 fn unix_ts() -> f64 {
-    std::time::SystemTime::now()
+    static LAST: std::sync::Mutex<f64> = std::sync::Mutex::new(0.0);
+    let now = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs() as f64)
-        .unwrap_or(0.0)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    let mut last = LAST.lock().unwrap();
+    // max(|last|, 1) * EPSILON >= ulp(last), so the sum is a strictly
+    // larger float (a few hundred ns at 2026-era epoch seconds).
+    let ts = if now > *last {
+        now
+    } else {
+        *last + last.abs().max(1.0) * f64::EPSILON
+    };
+    *last = ts;
+    ts
 }
 
 /// Build one bench record under the unified schema: `{bench, git_rev,
@@ -149,5 +164,33 @@ mod tests {
         // A NaN payload must still be valid JSON (non-finite -> null).
         assert_eq!(Json::parse(lines[1]).unwrap().get("rows"), Some(&Json::Null));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Regression: `unix_ts` truncated to whole seconds (`as_secs`), so
+    /// two records written in the same second carried identical
+    /// `ts_unix` and service/bench record ordering was ambiguous.  The
+    /// stamp is now sub-second *and* strictly increasing per process.
+    #[test]
+    fn record_timestamps_strictly_increase() {
+        let a = record_json("ts", 0.0, Json::Null);
+        let b = record_json("ts", 0.0, Json::Null);
+        let ta = a.get("ts_unix").unwrap().as_f64().unwrap();
+        let tb = b.get("ts_unix").unwrap().as_f64().unwrap();
+        assert!(
+            tb > ta,
+            "back-to-back records must have strictly increasing ts_unix, got {ta} then {tb}"
+        );
+        // Sub-second resolution: many stamps within one wall-clock
+        // second must all be distinct and ordered.
+        let mut prev = tb;
+        for _ in 0..100 {
+            let t = record_json("ts", 0.0, Json::Null)
+                .get("ts_unix")
+                .unwrap()
+                .as_f64()
+                .unwrap();
+            assert!(t > prev);
+            prev = t;
+        }
     }
 }

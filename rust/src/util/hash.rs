@@ -1,0 +1,100 @@
+//! FNV-1a hashing (64- and 128-bit) for memo keys and config digests.
+//!
+//! Offline builds cannot take a hashing crate, and the cross-run memo
+//! store (`serve::memo`) needs a *stable* digest — `std`'s `DefaultHasher`
+//! is explicitly allowed to change between releases, so keys written by
+//! one build must not be hashed differently by the next.  FNV-1a is
+//! trivially stable, fast on the short inputs used here (packed map
+//! keys, canonical config JSON), and the 128-bit variant makes an
+//! accidental collision across a memo store's lifetime negligible.
+
+/// FNV-1a 64-bit offset basis — the initial fold state.
+pub const FNV64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV64_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+const FNV128_OFFSET: u128 = 0x6c62_272e_07bb_0142_62b8_2175_6295_c58d;
+const FNV128_PRIME: u128 = 0x0000_0000_0100_0000_0000_0000_0000_013b;
+
+/// Fold `bytes` into an existing 64-bit FNV-1a state.  Folding is how
+/// multi-part digests compose: `fnv1a64_fold(fnv1a64(a), b)` equals
+/// `fnv1a64` of the concatenation.
+pub fn fnv1a64_fold(state: u64, bytes: &[u8]) -> u64 {
+    let mut h = state;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV64_PRIME);
+    }
+    h
+}
+
+/// FNV-1a 64-bit digest of `bytes`.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_fold(FNV64_OFFSET, bytes)
+}
+
+/// Incremental 128-bit FNV-1a hasher.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv128 {
+    state: u128,
+}
+
+impl Fnv128 {
+    pub fn new() -> Self {
+        Fnv128 { state: FNV128_OFFSET }
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u128;
+            self.state = self.state.wrapping_mul(FNV128_PRIME);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u128 {
+        self.state
+    }
+}
+
+impl Default for Fnv128 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference vectors from the FNV specification.
+    #[test]
+    fn fnv64_matches_reference_vectors() {
+        assert_eq!(fnv1a64(b""), FNV64_OFFSET);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn folding_equals_concatenation() {
+        assert_eq!(fnv1a64_fold(fnv1a64(b"foo"), b"bar"), fnv1a64(b"foobar"));
+        let mut whole = Fnv128::new();
+        whole.write(b"foobar");
+        let mut parts = Fnv128::new();
+        parts.write(b"foo");
+        parts.write(b"bar");
+        assert_eq!(whole.finish(), parts.finish());
+        assert_ne!(whole.finish(), Fnv128::new().finish());
+    }
+
+    #[test]
+    fn write_u64_is_little_endian_bytes() {
+        let mut a = Fnv128::new();
+        a.write_u64(0x0102_0304_0506_0708);
+        let mut b = Fnv128::new();
+        b.write(&[0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01]);
+        assert_eq!(a.finish(), b.finish());
+    }
+}

@@ -5,6 +5,7 @@
 //! parallel co-search.
 
 pub mod bench;
+pub mod hash;
 pub mod inline;
 pub mod json;
 pub mod mathx;

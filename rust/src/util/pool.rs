@@ -43,7 +43,10 @@ pub fn resolve_threads(configured: usize) -> usize {
 /// `threads = 1` is exactly the pre-parallel code path.
 ///
 /// A panic in `f` propagates to the caller once all workers have
-/// stopped.
+/// stopped, **with its original payload** — the join re-raises via
+/// [`std::panic::resume_unwind`] instead of wrapping the panic in a
+/// generic message, so `catch_unwind` callers (and test output) see the
+/// worker's own message.
 pub fn parallel_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
@@ -73,7 +76,7 @@ where
             .collect();
         handles
             .into_iter()
-            .map(|h| h.join().expect("pool worker panicked"))
+            .map(|h| h.join().unwrap_or_else(|payload| std::panic::resume_unwind(payload)))
             .collect()
     });
     let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
@@ -127,5 +130,31 @@ mod tests {
     fn zero_threads_resolves_to_available_cores() {
         assert!(resolve_threads(0) >= 1);
         assert_eq!(resolve_threads(3), 3);
+    }
+
+    /// Regression: worker joins used `.expect("pool worker panicked")`,
+    /// replacing the original panic message with a generic one.  The
+    /// payload must survive the scoped join intact.
+    #[test]
+    fn worker_panic_payload_survives() {
+        let items: Vec<u32> = (0..16).collect();
+        let result = std::panic::catch_unwind(|| {
+            parallel_map(2, &items, |i, &x| {
+                if i == 7 {
+                    panic!("original worker payload 1337");
+                }
+                x
+            })
+        });
+        let payload = result.expect_err("worker panic must propagate");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .expect("payload must stay a string message");
+        assert!(
+            msg.contains("original worker payload 1337"),
+            "payload was rewritten: {msg}"
+        );
     }
 }

@@ -31,12 +31,16 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// Median (averages the middle pair for even n); 0.0 for empty input.
+///
+/// NaN samples never panic: ordering is IEEE-754 `total_cmp`, which
+/// places NaNs after `+inf`, so a partially NaN-poisoned series keeps a
+/// finite median until the NaN tail reaches the middle.
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -70,11 +74,18 @@ pub fn mean_relative_error(estimates: &[f64], references: &[f64]) -> f64 {
     )
 }
 
-/// Percentile via linear interpolation, p in [0, 100].
+/// Percentile via linear interpolation; panics unless `p` is in
+/// [0, 100] (a NaN `p` fails the range check too).  NaN *samples* are
+/// ordered by `total_cmp` (after `+inf`) instead of panicking — see
+/// [`median`].
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
+    assert!(
+        (0.0..=100.0).contains(&p),
+        "percentile p must be in [0, 100], got {p}"
+    );
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = p / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -124,5 +135,30 @@ mod tests {
         assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
         assert!((percentile(&xs, 0.0) - 0.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 10.0).abs() < 1e-12);
+    }
+
+    /// Regression: `median`/`percentile` sorted with
+    /// `partial_cmp(..).unwrap()`, so a single NaN sample (e.g. a 0/0
+    /// rate from an empty bench record) panicked the whole report path.
+    #[test]
+    fn nan_samples_do_not_panic() {
+        let xs = [2.0, f64::NAN, 1.0, 3.0];
+        // total_cmp sorts the NaN after +inf: [1, 2, 3, NaN].
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!(percentile(&xs, 100.0).is_nan());
+        assert!(median(&[f64::NAN]).is_nan());
+    }
+
+    /// Regression: `percentile(xs, 150.0)` indexed out of bounds and
+    /// `percentile(xs, -10.0)` silently returned the minimum; both (and
+    /// a NaN p) must now fail the range assertion instead.
+    #[test]
+    fn percentile_rejects_out_of_range_p() {
+        let xs = [1.0, 2.0, 3.0];
+        for bad in [150.0, -10.0, f64::NAN] {
+            let r = std::panic::catch_unwind(|| percentile(&xs, bad));
+            assert!(r.is_err(), "p = {bad} must be rejected");
+        }
     }
 }

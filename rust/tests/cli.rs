@@ -420,6 +420,98 @@ fn bad_flags_fail_cleanly() {
     assert!(!out.status.success());
 }
 
+/// Spawn the binary with `input` piped to stdin and collect the output.
+fn run_with_stdin(args: &[&str], input: &str) -> std::process::Output {
+    use std::io::Write;
+    use std::process::Stdio;
+    let mut child = snipsnap()
+        .args(args)
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn");
+    // Take (and drop) the handle so the child sees EOF after the write.
+    child.stdin.take().unwrap().write_all(input.as_bytes()).expect("write stdin");
+    child.wait_with_output().expect("wait")
+}
+
+/// `snipsnap serve --once` end to end: a snapshot emitted by `snipsnap
+/// search` is a valid request body verbatim, two identical requests
+/// yield byte-identical stdout, the second run's stderr reports a
+/// nonzero cross-run memo hit count (the store persisted), and the
+/// per-request records roll up under `snipsnap report`.
+#[test]
+fn serve_once_round_trips_and_warms_the_memo() {
+    let dir = std::env::temp_dir().join("snipsnap_cli_serve");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let snap = dir.join("req.config.json");
+    let out = snipsnap()
+        .args([
+            "search", "--arch", "arch3", "--workload", "gqa-tiny", "--mode", "fixed",
+            "--max-mappings", "200", "--prefill", "32", "--decode", "4",
+            "--snapshot", snap.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let request = std::fs::read_to_string(&snap).expect("snapshot written");
+
+    let memo = dir.join("memo.jsonl");
+    let results = dir.join("results");
+    let args = [
+        "serve", "--once",
+        "--memo", memo.to_str().unwrap(),
+        "--results", results.to_str().unwrap(),
+    ];
+    let out1 = run_with_stdin(&args, &request);
+    assert!(out1.status.success(), "{}", String::from_utf8_lossy(&out1.stderr));
+    let stdout1 = String::from_utf8_lossy(&out1.stdout);
+    assert!(stdout1.contains("\"ok\":true"), "{stdout1}");
+    assert!(stdout1.contains("\"designs\":"), "{stdout1}");
+    let stderr1 = String::from_utf8_lossy(&out1.stderr);
+    assert!(stderr1.contains("memo_hits="), "no stats line:\n{stderr1}");
+    assert!(stderr1.contains("1 requests served, 0 failed"), "{stderr1}");
+    assert!(memo.exists(), "the memo store must persist to disk");
+
+    // Replay: a fresh process, same request, warmed store.
+    let out2 = run_with_stdin(&args, &request);
+    assert!(out2.status.success(), "{}", String::from_utf8_lossy(&out2.stderr));
+    assert_eq!(
+        out1.stdout, out2.stdout,
+        "identical requests must produce byte-identical responses"
+    );
+    let stderr2 = String::from_utf8_lossy(&out2.stderr);
+    let hits: u64 = stderr2
+        .lines()
+        .find_map(|l| l.split("memo_hits=").nth(1))
+        .and_then(|s| s.split_whitespace().next())
+        .expect("memo_hits= in stats")
+        .parse()
+        .expect("memo_hits is a number");
+    assert!(hits > 0, "second run must hit the persisted memo:\n{stderr2}");
+
+    // Service traffic shows up in `snipsnap report`.
+    let recorded = std::fs::read_to_string(results.join("serve.jsonl")).unwrap();
+    assert_eq!(recorded.lines().count(), 2, "{recorded}");
+    let out = snipsnap()
+        .args(["report", "--dir", results.to_str().unwrap()])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("serve"));
+}
+
+/// `serve --once` with nothing on stdin is an error, not a silent 0.
+#[test]
+fn serve_once_empty_stdin_fails() {
+    let out = run_with_stdin(&["serve", "--once", "--memo", "off", "--results", "off"], "");
+    assert!(!out.status.success(), "empty --once must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("no request"), "{stderr}");
+}
+
 #[test]
 fn xla_selftest_runs_when_artifacts_exist() {
     let dir = snipsnap::runtime::Runtime::default_dir();

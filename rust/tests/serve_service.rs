@@ -1,0 +1,353 @@
+//! Differential suite for `snipsnap serve` (`snipsnap::serve`).
+//!
+//! The load-bearing claims, each pinned here:
+//!
+//! 1. **The memo seam is value-transparent.**  Searches with the
+//!    cross-run counts store bound — cold or warm — produce designs,
+//!    scores and `evaluations` bit-identical to the memo-off search.
+//! 2. **Serving is the search.**  `handle_request` returns the same
+//!    designs as a direct `cosearch_workload`, two identical requests
+//!    yield byte-identical response lines, and the second reports a
+//!    nonzero memo hit rate.
+//! 3. **The store persists.**  Flush → reopen → a fresh process's
+//!    request is served from disk, still bit-identical.
+//! 4. **Budgets are honest.**  A budget that cannot fire changes
+//!    nothing; an exhausted budget is an `ok:false` response naming the
+//!    starved op, never a panic.
+//! 5. **Malformed requests cost one error response**, not the loop.
+//! 6. **Concurrency is invisible**: a batched `serve_loop` emits the
+//!    same bytes as the serial one, in request order.
+
+use snipsnap::config::{load_run_config, snapshot, RunConfig};
+use snipsnap::cost::SharedCounts;
+use snipsnap::search::{cosearch_workload, try_cosearch_workload, SearchHooks, WorkloadResult};
+use snipsnap::serve::memo::{request_scope, MemoSession, MemoStore};
+use snipsnap::serve::{handle_line, serve_loop, SearchRequest, ServeOpts, ServeSummary};
+use snipsnap::util::json::Json;
+use std::path::PathBuf;
+
+/// Two small ops with **distinct** problem dims: per-op memo scopes
+/// differ, so a cold single-threaded run performs no memo hits at all —
+/// which lets the cold/warm assertions below be exact.
+const SRC: &str = r#"
+[run]
+arch = "arch3"
+mode = "fixed"
+[search]
+max_mappings = 300
+[[op]]
+name = "a"
+m = 32
+n = 32
+k = 64
+act_density = 0.5
+wgt_density = 0.4
+[[op]]
+name = "b"
+m = 48
+n = 32
+k = 32
+act_density = 0.3
+wgt_density = 0.6
+"#;
+
+fn run_cfg() -> RunConfig {
+    load_run_config(SRC).unwrap()
+}
+
+/// The request line for [`SRC`] — exactly the run-config snapshot.
+fn request_line() -> String {
+    let run = run_cfg();
+    snapshot::render(&run.arch, &run.workload, &run.search).trim().to_string()
+}
+
+/// Wrap a snapshot line with service-level fields (`"id":"r1"`, a
+/// budget, ...); the snapshot loader ignores keys it does not know.
+fn with_fields(snap_line: &str, extra: &str) -> String {
+    format!("{{{extra},{}", &snap_line[1..])
+}
+
+/// Designs equal bit for bit (mapping, formats, widths, metric value).
+fn assert_identical(a: &WorkloadResult, b: &WorkloadResult, what: &str) {
+    assert_eq!(a.designs.len(), b.designs.len(), "{what}");
+    for (da, db) in a.designs.iter().zip(&b.designs) {
+        assert_eq!(da.op_name, db.op_name, "{what}");
+        assert_eq!(da.mapping, db.mapping, "{what}: {} mappings diverged", da.op_name);
+        assert_eq!(da.input_format, db.input_format, "{what}: {}", da.op_name);
+        assert_eq!(da.weight_format, db.weight_format, "{what}: {}", da.op_name);
+        assert_eq!(
+            (da.input_bits, da.weight_bits),
+            (db.input_bits, db.weight_bits),
+            "{what}: {}",
+            da.op_name
+        );
+        assert_eq!(
+            da.metric_value.to_bits(),
+            db.metric_value.to_bits(),
+            "{what}: {} metric diverged",
+            da.op_name
+        );
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("snipsnap_serve_{name}_{}", std::process::id()))
+}
+
+/// Claim 1: memo-on (cold and warm) is bit-identical to memo-off, with
+/// identical `evaluations`; the cold pass only misses, the warm pass
+/// only hits.
+#[test]
+fn memo_on_and_off_searches_are_bit_identical() {
+    let run = run_cfg();
+    let baseline =
+        try_cosearch_workload(&run.arch, &run.workload, &run.search, SearchHooks::default())
+            .unwrap();
+
+    let store = MemoStore::in_memory();
+    let scope = request_scope(&run.arch, &run.workload, &run.search);
+    let cold_session = MemoSession::new(&store);
+    let cold = try_cosearch_workload(
+        &run.arch,
+        &run.workload,
+        &run.search,
+        SearchHooks {
+            memo: Some(SharedCounts { store: &cold_session, scope }),
+            limiter: None,
+        },
+    )
+    .unwrap();
+    assert_identical(&baseline, &cold, "cold store vs memo-off");
+    assert_eq!(cold.evaluations, baseline.evaluations, "memo must not change evaluations");
+    assert_eq!(cold_session.hits(), 0, "distinct-dim ops cannot hit a cold store");
+    assert!(cold_session.misses() > 0, "the cold pass must consult the store");
+    assert_eq!(store.len() as u64, cold_session.misses(), "every miss is published");
+
+    let warm_session = MemoSession::new(&store);
+    let warm = try_cosearch_workload(
+        &run.arch,
+        &run.workload,
+        &run.search,
+        SearchHooks {
+            memo: Some(SharedCounts { store: &warm_session, scope }),
+            limiter: None,
+        },
+    )
+    .unwrap();
+    assert_identical(&baseline, &warm, "warm store vs memo-off");
+    assert_eq!(warm.evaluations, baseline.evaluations);
+    assert!(warm_session.hits() > 0, "the warm pass must be served from the store");
+    assert_eq!(warm_session.misses(), 0, "a warm identical search misses nothing");
+}
+
+/// Claim 2: `handle_line` twice over one store — byte-identical
+/// responses, direct-search-identical designs, nonzero memo hit rate
+/// on the second request only.
+#[test]
+fn serve_matches_direct_search_and_warms_the_memo() {
+    let run = run_cfg();
+    let line = with_fields(&request_line(), r#""id":"r1""#);
+    let store = MemoStore::in_memory();
+
+    let first = handle_line(&line, Some(&store));
+    let second = handle_line(&line, Some(&store));
+    let ok = first.result.as_ref().expect("first request must succeed");
+
+    // The service result IS the direct search result.
+    let direct = cosearch_workload(&run.arch, &run.workload, &run.search);
+    assert_identical(&direct, ok, "serve vs direct search");
+
+    // Deterministic wire: byte-identical lines, parseable, id echoed.
+    assert_eq!(first.render(), second.render(), "identical requests must render identically");
+    let doc = Json::parse(first.render().trim()).expect("response must be valid JSON");
+    assert_eq!(doc.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(doc.get("id").and_then(Json::as_str), Some("r1"));
+    let designs = doc.get("designs").and_then(Json::as_arr).expect("designs array");
+    assert_eq!(designs.len(), direct.designs.len());
+    for (wire, d) in designs.iter().zip(&direct.designs) {
+        // Shortest-round-trip floats: the wire metric re-parses to the
+        // exact bits the search produced.
+        assert_eq!(
+            wire.get("metric_value").and_then(Json::as_f64).unwrap().to_bits(),
+            d.metric_value.to_bits(),
+            "{}",
+            d.op_name
+        );
+        assert_eq!(wire.get("op").and_then(Json::as_str), Some(d.op_name.as_str()));
+    }
+
+    // Memo traffic is the one asymmetry — and it lives in stats only.
+    assert_eq!(first.stats.memo_hits, 0);
+    assert!(second.stats.memo_hits > 0, "second identical request must hit the store");
+    assert!(second.stats.memo_hit_rate() > 0.0);
+    assert_eq!(
+        first.stats.evaluations, second.stats.evaluations,
+        "memo hits must not change the evaluations counter"
+    );
+}
+
+/// Claim 3: flush → reopen (a fresh process) → the store serves the
+/// same request from disk, bit-identically.
+#[test]
+fn memo_store_round_trips_through_disk() {
+    let path = tmp("disk");
+    let _ = std::fs::remove_file(&path);
+    let line = request_line();
+
+    let store = MemoStore::open(&path).unwrap();
+    let first = handle_line(&line, Some(&store));
+    assert!(first.result.is_ok());
+    let written = store.flush().unwrap();
+    assert!(written > 0, "the cold request must persist entries");
+    drop(store);
+
+    let reopened = MemoStore::open(&path).unwrap();
+    assert_eq!(reopened.len(), written, "every flushed entry must reload");
+    let second = handle_line(&line, Some(&reopened));
+    assert_eq!(first.render(), second.render(), "disk-served response diverged");
+    assert!(second.stats.memo_hits > 0, "the reopened store must serve hits");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Claim 4: a budget that cannot fire is invisible; an exhausted one is
+/// a deterministic `ok:false` response naming the starved op.
+#[test]
+fn budgets_are_invisible_until_they_fire() {
+    let unbudgeted = handle_line(&request_line(), None);
+    let generous = handle_line(
+        &with_fields(
+            &request_line(),
+            r#""budget":{"max_protos":10000000,"wall_time_ms":3600000}"#,
+        ),
+        None,
+    );
+    assert_eq!(
+        unbudgeted.render(),
+        generous.render(),
+        "an unfired budget must not change the response"
+    );
+    assert!(!generous.stats.budget_exhausted);
+
+    let starved = handle_line(&with_fields(&request_line(), r#""budget":{"max_protos":0}"#), None);
+    let err = starved.result.as_ref().expect_err("a zero budget must fail");
+    assert!(err.contains("budget exhausted"), "{err}");
+    assert!(err.contains("op a"), "the starved op must be named: {err}");
+    assert!(starved.stats.budget_exhausted);
+    let doc = Json::parse(starved.render().trim()).unwrap();
+    assert_eq!(doc.get("ok"), Some(&Json::Bool(false)));
+    assert!(doc.get("error").and_then(Json::as_str).unwrap().contains("budget"));
+}
+
+/// Claim 5: malformed lines become parseable `ok:false` responses; the
+/// parser rejects each bad shape with a message naming the problem.
+#[test]
+fn malformed_requests_become_error_responses() {
+    let line = request_line();
+    let cases: Vec<(String, &str)> = vec![
+        ("{not json".to_string(), "request"),
+        ("{}".to_string(), "snipsnap_run_config"),
+        ("[]".to_string(), "snipsnap_run_config"),
+        (line.replace("\"snipsnap_run_config\":1", "\"snipsnap_run_config\":99"), "version"),
+        (with_fields(&line, r#""budget":{"max_protos":"many"}"#), "max_protos"),
+        (with_fields(&line, r#""budget":{"wall_time":5}"#), "unknown budget cap"),
+        (with_fields(&line, r#""budget":7"#), "must be an object"),
+        (with_fields(&line, r#""id":7"#), "'id' must be a string"),
+    ];
+    for (bad, needle) in cases {
+        let resp = handle_line(&bad, None);
+        let err = resp.result.as_ref().expect_err(&format!("must reject: {bad}"));
+        assert!(err.contains(needle), "error for {bad:?} must mention '{needle}', got: {err}");
+        let doc = Json::parse(resp.render().trim()).expect("error responses are still JSON");
+        assert_eq!(doc.get("ok"), Some(&Json::Bool(false)), "{bad}");
+        assert!(SearchRequest::parse(&bad).is_err());
+    }
+    // A null id / absent budget are fine (defaults).
+    let req = SearchRequest::parse(&with_fields(&line, r#""id":null"#)).unwrap();
+    assert_eq!(req.id, None);
+    assert_eq!(req.budget, Default::default());
+}
+
+/// Claim 6: the batched loop emits the serial loop's bytes, in order;
+/// blank lines are skipped; per-request records land for `report`.
+#[test]
+fn serve_loop_is_concurrency_invariant_and_records_traffic() {
+    let line = request_line();
+    let input = format!("{line}\n\n{line}\n{line}\n");
+    let results = tmp("loop_results");
+    let _ = std::fs::remove_dir_all(&results);
+
+    let mut serial_out = Vec::new();
+    let mut serial_log = Vec::new();
+    let store = MemoStore::in_memory();
+    let summary = serve_loop(
+        &ServeOpts { once: false, jobs: 1, results_dir: Some(results.clone()) },
+        Some(&store),
+        input.as_bytes(),
+        &mut serial_out,
+        &mut serial_log,
+    )
+    .unwrap();
+    assert_eq!(summary, ServeSummary { requests: 3, failed: 0 });
+
+    let mut batched_out = Vec::new();
+    let mut batched_log = Vec::new();
+    let store2 = MemoStore::in_memory();
+    serve_loop(
+        &ServeOpts { once: false, jobs: 3, results_dir: None },
+        Some(&store2),
+        input.as_bytes(),
+        &mut batched_out,
+        &mut batched_log,
+    )
+    .unwrap();
+    assert_eq!(
+        serial_out, batched_out,
+        "a concurrent batch must emit the serial responses byte for byte"
+    );
+    assert_eq!(serial_out.iter().filter(|&&b| b == b'\n').count(), 3);
+
+    let log = String::from_utf8(serial_log).unwrap();
+    assert!(log.contains("memo_hits="), "stats lines must be greppable:\n{log}");
+    assert!(log.contains("workload="), "{log}");
+
+    // The per-request records roll up under `snipsnap report`.
+    let recorded = std::fs::read_to_string(results.join("serve.jsonl")).unwrap();
+    assert_eq!(recorded.lines().count(), 3, "{recorded}");
+    for l in recorded.lines() {
+        let rec = Json::parse(l).unwrap();
+        assert_eq!(rec.get("bench").and_then(Json::as_str), Some("serve"));
+        assert_eq!(rec.get("rows").and_then(|r| r.get("ok")), Some(&Json::Bool(true)));
+    }
+    let rollup = snipsnap::report::report(&results).unwrap();
+    assert!(rollup.contains("serve"), "report must include service traffic:\n{rollup}");
+    let _ = std::fs::remove_dir_all(&results);
+}
+
+/// `--once` semantics: exactly one request, and an empty stdin is an
+/// error instead of a silent no-op.
+#[test]
+fn once_mode_serves_one_request_or_errors() {
+    let err = serve_loop(
+        &ServeOpts { once: true, jobs: 1, results_dir: None },
+        None,
+        "".as_bytes(),
+        &mut Vec::new(),
+        &mut Vec::new(),
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("no request"), "{err}");
+
+    let line = request_line();
+    let input = format!("{line}\n{line}\n");
+    let mut out = Vec::new();
+    let summary = serve_loop(
+        &ServeOpts { once: true, jobs: 4, results_dir: None },
+        None,
+        input.as_bytes(),
+        &mut out,
+        &mut Vec::new(),
+    )
+    .unwrap();
+    assert_eq!(summary, ServeSummary { requests: 1, failed: 0 });
+    assert_eq!(out.iter().filter(|&&b| b == b'\n').count(), 1, "--once must stop after one");
+}
