@@ -114,7 +114,7 @@ fn main() -> anyhow::Result<()> {
         ("act d=0.70", SparsityPattern::Unstructured { density: 0.70 }),
         ("act d=0.15", SparsityPattern::Unstructured { density: 0.15 }),
         ("wgt d=0.60", SparsityPattern::Unstructured { density: 0.60 }),
-        ("wgt 2:4", SparsityPattern::NM { n: 2, m: 4 }),
+        ("wgt 2:4", SparsityPattern::Nm { n: 2, m: 4 }),
     ];
     let mut worst_gap = 0.0f64;
     for (label, pattern) in cases {

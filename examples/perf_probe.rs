@@ -238,6 +238,45 @@ fn main() {
         100.0 * off.cache.hit_rate(),
     );
 
+    // 7) frontier mode: one arena pass serving all four metrics vs four
+    //    independent scalar searches on the probe op.  Serial, pruned,
+    //    index-order visits — the configuration under which the per-
+    //    metric prune sets provably match the solo searches', so the
+    //    eval-count saving is structural (rust/tests/frontier.rs pins
+    //    the winners bit for bit; this section records the perf side).
+    let mk_frontier = |metric| SearchConfig {
+        metric,
+        mode: FormatMode::Fixed,
+        mapper: MapperConfig { max_candidates: 2_000, ..Default::default() },
+        best_first: false,
+        ..Default::default()
+    };
+    let mut four_evals = 0u64;
+    let t_four = time_median(3, || {
+        four_evals = 0;
+        for &m in &Metric::SCALARS {
+            four_evals += cosearch_workload(&arch, &w, &mk_frontier(m)).evaluations;
+        }
+    });
+    let mut one = None;
+    let t_one =
+        time_median(3, || one = Some(cosearch_workload(&arch, &w, &mk_frontier(Metric::Frontier))));
+    let one = one.unwrap();
+    assert!(
+        one.evaluations < four_evals,
+        "frontier pass spent {} evaluations vs {} for four scalar passes",
+        one.evaluations,
+        four_evals
+    );
+    println!(
+        "frontier one pass:    {:>8.2} ms, {} evals | four passes {:.2} ms, {} evals | {} points",
+        t_one * 1e3,
+        one.evaluations,
+        t_four * 1e3,
+        four_evals,
+        one.frontier_size,
+    );
+
     write_record(
         "perf_probe",
         t_main.elapsed().as_secs_f64(),
@@ -267,6 +306,11 @@ fn main() {
             ("cache_misses", Json::num(on.cache.misses as f64)),
             ("cache_hit_rate_prune_on", Json::num(on.cache.hit_rate())),
             ("cache_hit_rate_prune_off", Json::num(off.cache.hit_rate())),
+            ("frontier_one_pass_evals", Json::num(one.evaluations as f64)),
+            ("frontier_four_pass_evals", Json::num(four_evals as f64)),
+            ("frontier_one_pass_s", Json::num(t_one)),
+            ("frontier_four_pass_s", Json::num(t_four)),
+            ("frontier_points", Json::num(one.frontier_size as f64)),
         ]),
     );
 }

@@ -32,7 +32,7 @@ fn main() {
     let mut records = Vec::new();
     for (label, pattern) in [
         ("90% (d=0.10)", SparsityPattern::Unstructured { density: 0.10 }),
-        ("2:4", SparsityPattern::NM { n: 2, m: 4 }),
+        ("2:4", SparsityPattern::Nm { n: 2, m: 4 }),
     ] {
         let (ex, t_ex) = time_once(|| exhaustive_search(4096, 4096, &pattern, &cfg));
         let ((top, stats), t_pen) =

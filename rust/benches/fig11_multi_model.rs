@@ -66,9 +66,9 @@ fn energy_with_pattern(w: &Workload, pat: &CompPat) -> f64 {
 fn baseline_patterns() -> Vec<(&'static str, CompPat)> {
     vec![
         ("Bitmap", CompPat::new(vec![(Prim::None, Axis::Row), (Prim::B, Axis::Col)])),
-        ("RLE", CompPat::new(vec![(Prim::None, Axis::Row), (Prim::RLE, Axis::Col)])),
-        ("CSR", CompPat::new(vec![(Prim::UOP, Axis::Row), (Prim::CP, Axis::Col)])),
-        ("COO", CompPat::new(vec![(Prim::CP, Axis::Row), (Prim::CP, Axis::Col)])),
+        ("RLE", CompPat::new(vec![(Prim::None, Axis::Row), (Prim::Rle, Axis::Col)])),
+        ("CSR", CompPat::new(vec![(Prim::Uop, Axis::Row), (Prim::Cp, Axis::Col)])),
+        ("COO", CompPat::new(vec![(Prim::Cp, Axis::Row), (Prim::Cp, Axis::Col)])),
     ]
 }
 

@@ -1,0 +1,135 @@
+//! Fig. 14 (extension beyond the paper) — single-pass Pareto-frontier
+//! co-search: one `--metric frontier` arena pass vs four independent
+//! scalar searches (energy / memory-energy / latency / EDP) on Arch 3
+//! over the reduced OPT-125M prefill workload.
+//!
+//! Claims asserted:
+//!   * the frontier pass reproduces every scalar search's winners **bit
+//!     for bit** (mapping, metric value, cost report),
+//!   * serially, with pruning on and index-order visits (so each
+//!     metric's prune decisions match its solo search exactly), the one
+//!     pass spends strictly fewer cost-model evaluations than the four
+//!     passes summed — the shared trial recorder evaluates each distinct
+//!     mapping once per proto instead of once per metric.
+//!
+//! The JSON record carries both evaluation counts and both wall times so
+//! `snipsnap report` can roll up the one-pass saving alongside the other
+//! figures.
+
+use snipsnap::arch::presets;
+use snipsnap::cost::Metric;
+use snipsnap::dataflow::mapper::MapperConfig;
+use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig, WorkloadResult};
+use snipsnap::util::bench::{banner, write_record};
+use snipsnap::util::json::Json;
+use snipsnap::util::table::{fmt_f, Table};
+use snipsnap::workload::llm;
+use std::time::Instant;
+
+const METRIC_NAMES: [&str; 4] = ["energy", "memory-energy", "latency", "edp"];
+
+/// Serial, pruned, index-order — the configuration under which the
+/// per-metric prune sets of the frontier pass and the solo searches are
+/// provably identical, making the eval-count comparison structural.
+fn cfg(metric: Metric) -> SearchConfig {
+    SearchConfig {
+        mode: FormatMode::Fixed,
+        metric,
+        threads: 1,
+        prune: true,
+        best_first: false,
+        mapper: MapperConfig { max_candidates: 600, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn assert_winners_identical(frontier: &[snipsnap::search::OpDesign], solo: &WorkloadResult, name: &str) {
+    assert_eq!(frontier.len(), solo.designs.len(), "{name}: design count mismatch");
+    for (a, b) in frontier.iter().zip(&solo.designs) {
+        assert_eq!(a.op_name, b.op_name, "{name}: op order mismatch");
+        assert_eq!(a.mapping, b.mapping, "{name} {}: mappings diverged", a.op_name);
+        assert_eq!(
+            a.metric_value.to_bits(),
+            b.metric_value.to_bits(),
+            "{name} {}: {} vs {}",
+            a.op_name,
+            a.metric_value,
+            b.metric_value
+        );
+        assert_eq!(a.report, b.report, "{name} {}: reports diverged", a.op_name);
+    }
+}
+
+fn main() {
+    let t0 = Instant::now();
+    banner("Fig. 14", "single-pass Pareto frontier vs four scalar searches");
+    let arch = presets::arch3();
+    let w = llm::opt_125m(llm::Phase::prefill_only(64));
+
+    // Four independent scalar passes (the historical workflow).
+    let mut solos = Vec::new();
+    let mut four_pass_evals = 0u64;
+    let mut four_pass_s = 0.0f64;
+    for &m in &Metric::SCALARS {
+        let t = Instant::now();
+        let r = cosearch_workload(&arch, &w, &cfg(m));
+        four_pass_s += t.elapsed().as_secs_f64();
+        four_pass_evals += r.evaluations;
+        solos.push(r);
+    }
+
+    // One frontier pass over the same arena.
+    let t = Instant::now();
+    let fr = cosearch_workload(&arch, &w, &cfg(Metric::Frontier));
+    let one_pass_s = t.elapsed().as_secs_f64();
+    let one_pass_evals = fr.evaluations;
+    let f = fr.frontier.as_ref().expect("frontier mode returns a frontier");
+
+    let mut t = Table::new(vec!["metric", "solo evals", "winner objective", "frontier objective"])
+        .with_title("per-metric winners: frontier pass vs independent searches");
+    let mut rows = Vec::new();
+    for (mi, name) in METRIC_NAMES.iter().enumerate() {
+        assert_winners_identical(&f.winners[mi], &solos[mi], name);
+        t.add_row(vec![
+            name.to_string(),
+            solos[mi].evaluations.to_string(),
+            fmt_f(solos[mi].metric_total(Metric::SCALARS[mi])),
+            fmt_f(f.winner_total(mi)),
+        ]);
+        rows.push(Json::obj(vec![
+            ("metric", Json::str(name)),
+            ("solo_evals", Json::num(solos[mi].evaluations as f64)),
+            ("objective", Json::num(f.winner_total(mi))),
+        ]));
+    }
+    println!("{}", t.render());
+
+    assert!(
+        one_pass_evals < four_pass_evals,
+        "one-pass frontier spent {one_pass_evals} evaluations vs {four_pass_evals} for four passes"
+    );
+    println!(
+        "evaluations: one pass {} vs four passes {} ({:.1}% saved) | {} Pareto points | walls {:.2}s vs {:.2}s",
+        one_pass_evals,
+        four_pass_evals,
+        100.0 * (1.0 - one_pass_evals as f64 / four_pass_evals as f64),
+        f.total_points(),
+        one_pass_s,
+        four_pass_s
+    );
+
+    write_record(
+        "fig14_frontier",
+        t0.elapsed().as_secs_f64(),
+        Json::obj(vec![
+            ("frontier_one_pass_evals", Json::num(one_pass_evals as f64)),
+            ("frontier_four_pass_evals", Json::num(four_pass_evals as f64)),
+            ("frontier_one_pass_s", Json::num(one_pass_s)),
+            ("frontier_four_pass_s", Json::num(four_pass_s)),
+            ("frontier_points", Json::num(f.total_points() as f64)),
+            ("pruned_by_metric", Json::arr(fr.pruned_by_metric.iter().map(|&n| Json::num(n as f64)).collect())),
+            ("rows", Json::arr(rows)),
+        ]),
+    );
+    println!("fig14 OK");
+}

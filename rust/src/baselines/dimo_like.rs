@@ -235,6 +235,10 @@ pub fn dimo_workload(
         cache: crate::cost::CacheStats::default(),
         protos: 0,
         pruned: 0,
+        pruned_by_metric: [0; 4],
+        bound_tightenings: 0,
+        frontier_size: 0,
+        frontier: None,
     }
 }
 

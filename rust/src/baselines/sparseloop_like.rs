@@ -169,8 +169,13 @@ pub fn stepwise_workload(
         evaluations: tel.evaluations,
         cache: tel.cache,
         protos: tel.protos,
-        // The stepwise workflow has no lower-bound pruning by design.
+        // The stepwise workflow has no lower-bound pruning by design
+        // (and no frontier mode — it optimizes one metric at a time).
         pruned: 0,
+        pruned_by_metric: [0; 4],
+        bound_tightenings: 0,
+        frontier_size: 0,
+        frontier: None,
     }
 }
 

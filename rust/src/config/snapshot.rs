@@ -243,7 +243,7 @@ fn pattern_json(p: &SparsityPattern) -> Json {
             ("kind", Json::str("unstructured")),
             ("density", Json::num(density)),
         ]),
-        SparsityPattern::NM { n, m } => Json::obj(vec![
+        SparsityPattern::Nm { n, m } => Json::obj(vec![
             ("kind", Json::str("nm")),
             ("n", num_u(n as u64)),
             ("m", num_u(m as u64)),
@@ -269,7 +269,7 @@ fn pattern_from(v: &Json) -> Result<SparsityPattern> {
             if n == 0 || n > m {
                 bail!("snapshot nm pattern needs 1 <= N <= M, got {n}:{m}");
             }
-            SparsityPattern::NM { n, m }
+            SparsityPattern::Nm { n, m }
         }
         "block" => {
             let (br, bc) = (get_u(v, "br")?, get_u(v, "bc")?);
@@ -329,6 +329,7 @@ fn metric_token(m: Metric) -> &'static str {
         Metric::MemoryEnergy => "memory-energy",
         Metric::Latency => "latency",
         Metric::Edp => "edp",
+        Metric::Frontier => "frontier",
     }
 }
 
@@ -377,6 +378,7 @@ fn search_json(s: &SearchConfig) -> Json {
         ("pairs_to_map", num_u(s.pairs_to_map as u64)),
         ("threads", num_u(s.threads as u64)),
         ("prune", Json::Bool(s.prune)),
+        ("best_first", Json::Bool(s.best_first)),
         ("cost", cost_json(&s.cost)),
         ("quant", quant_json(&s.quant)),
     ])
@@ -520,6 +522,13 @@ fn search_from(v: &Json) -> Result<SearchConfig> {
         pairs_to_map: get_u(v, "pairs_to_map")? as usize,
         threads: get_u(v, "threads")? as usize,
         prune: get_b(v, "prune")?,
+        // Absent in snapshots written before best-first proto ordering:
+        // those runs iterated the arena in index order with the ordering
+        // knob conceptually on-but-inert, which the default reproduces.
+        best_first: match v.get("best_first") {
+            Some(_) => get_b(v, "best_first")?,
+            None => true,
+        },
         // Absent in snapshots written before the cost-backend seam:
         // those runs evaluated analytically, so the default is exact.
         cost: match v.get("cost") {
@@ -683,6 +692,31 @@ k = 64
         assert_ne!(legacy, snap, "strip pattern went stale");
         let cfg2 = load_run_config_json(&legacy).unwrap();
         assert_eq!(cfg2.search.cost, CostModel::Analytical);
+    }
+
+    #[test]
+    fn legacy_snapshot_without_best_first_defaults_to_on() {
+        let cfg = load_run_config(SRC).unwrap();
+        let snap = render(&cfg.arch, &cfg.workload, &cfg.search);
+        // Strip the key the way a pre-best-first snapshot looked.
+        let legacy = snap.replace(",\"best_first\":true", "");
+        assert_ne!(legacy, snap, "strip pattern went stale");
+        let cfg2 = load_run_config_json(&legacy).unwrap();
+        assert!(cfg2.search.best_first);
+    }
+
+    #[test]
+    fn frontier_metric_round_trips() {
+        let src = SRC.replace("metric = \"memory-energy\"", "metric = \"frontier\"");
+        assert_ne!(src, SRC, "replace pattern went stale");
+        let cfg = load_run_config(&src).unwrap();
+        assert_eq!(cfg.search.metric, Metric::Frontier);
+        let snap = render(&cfg.arch, &cfg.workload, &cfg.search);
+        assert!(snap.contains("\"metric\":\"frontier\""), "{snap}");
+        let cfg2 = load_run_config_any(&snap).unwrap();
+        assert_eq!(cfg2.search.metric, Metric::Frontier);
+        let snap2 = render(&cfg2.arch, &cfg2.workload, &cfg2.search);
+        assert_eq!(snap, snap2);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! [run]
 //! arch = "arch3"            # preset name, or define [arch] inline
 //! workload = "llama2-7b"    # preset name, or define [op.*] tables
-//! metric = "energy"         # energy | memory-energy | latency | edp
+//! metric = "energy"         # energy | memory-energy | latency | edp | frontier
 //! mode = "search"           # search | fixed
 //!
 //! [search]
@@ -18,6 +18,8 @@
 //! threads = 4               # co-search worker threads (0 = all cores)
 //! prune = true              # branch-and-bound pruning (results are
 //!                           # identical either way; default true)
+//! best_first = true         # visit protos in ascending lower-bound
+//!                           # order (telemetry-only effect; default true)
 //!
 //! # Optional preset modifiers (scenario knobs):
 //! [workload]
@@ -290,6 +292,7 @@ pub fn metric_by_name(name: &str) -> Result<Metric> {
         "memory-energy" | "memory_energy" => Metric::MemoryEnergy,
         "latency" => Metric::Latency,
         "edp" => Metric::Edp,
+        "frontier" => Metric::Frontier,
         other => bail!("unknown metric '{other}'"),
     })
 }
@@ -653,6 +656,9 @@ pub fn load_run_config(src: &str) -> Result<RunConfig> {
         if let Some(p) = sec.get("prune").and_then(|v| v.as_bool()) {
             search.prune = p;
         }
+        if let Some(b) = sec.get("best_first").and_then(|v| v.as_bool()) {
+            search.best_first = b;
+        }
     }
     parse_cost_section(&doc, &mut search)?;
     // Preset-bundled quant seeds the axis; [quant] keys override per key.
@@ -761,6 +767,7 @@ top_k = 2
 max_mappings = 1000
 threads = 4
 prune = false
+best_first = false
 "#,
         )
         .unwrap();
@@ -770,6 +777,22 @@ prune = false
         assert_eq!(cfg.search.mapper.max_candidates, 1000);
         assert_eq!(cfg.search.threads, 4);
         assert!(!cfg.search.prune);
+        assert!(!cfg.search.best_first);
+    }
+
+    #[test]
+    fn frontier_metric_and_best_first_default() {
+        let cfg = load_run_config(
+            r#"
+[run]
+arch = "arch3"
+workload = "opt-125m"
+metric = "frontier"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.search.metric, Metric::Frontier);
+        assert!(cfg.search.best_first, "best-first ordering defaults on");
     }
 
     #[test]

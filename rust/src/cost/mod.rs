@@ -132,21 +132,53 @@ impl CostReport {
 
 /// Which metric the search optimizes (paper: "the prioritized performance
 /// metric ... energy consumption, latency, and energy-delay-product").
+///
+/// [`Metric::Frontier`] is the multi-objective mode: one arena pass
+/// serves all four scalar metrics at once, maintaining a Pareto set
+/// ([`crate::search::frontier::Frontier`]) and extracting per-metric
+/// winners bit-identical to four independent scalar searches
+/// (`docs/SEARCH.md` § Frontier search).  Wherever a frontier context
+/// needs a single scalar projection (ranking, bounds, aggregate
+/// totals), it uses the **primary** metric — energy, the paper's
+/// headline objective.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Metric {
     Energy,
     MemoryEnergy,
     Latency,
     Edp,
+    /// Multi-objective Pareto-frontier search over all four scalar
+    /// metrics in a single arena pass.  Scalar projections (`of`,
+    /// `lower_bound`, workload totals) use the primary metric (energy).
+    Frontier,
 }
 
 impl Metric {
+    /// The scalar metrics, in the canonical index order used by
+    /// [`EvalContext::lower_bound_vec`], frontier vectors and the
+    /// per-metric telemetry arrays.
+    pub const SCALARS: [Metric; 4] =
+        [Metric::Energy, Metric::MemoryEnergy, Metric::Latency, Metric::Edp];
+
+    /// Index of this metric in [`Metric::SCALARS`]; `Frontier` projects
+    /// to its primary metric (energy, index 0).
+    pub fn scalar_index(&self) -> usize {
+        match self {
+            Metric::Energy | Metric::Frontier => 0,
+            Metric::MemoryEnergy => 1,
+            Metric::Latency => 2,
+            Metric::Edp => 3,
+        }
+    }
+
     pub fn of(&self, r: &CostReport) -> f64 {
         match self {
             Metric::Energy => r.total_energy_pj(),
             Metric::MemoryEnergy => r.memory_energy_pj(),
             Metric::Latency => r.latency_cycles(),
             Metric::Edp => r.edp(),
+            // The frontier's scalar projection is its primary metric.
+            Metric::Frontier => r.total_energy_pj(),
         }
     }
 }
@@ -800,6 +832,67 @@ impl<'a> EvalContext<'a> {
         reduction: &ReductionStrategy,
         ratios: &CompressionRatios,
     ) -> f64 {
+        let parts = self.bound_parts(factors, tiles, spatial, spec, reduction, ratios);
+        match self.metric {
+            Metric::Energy => parts.mac_energy + parts.mem_energy,
+            Metric::MemoryEnergy => parts.mem_energy,
+            Metric::Latency => parts.compute_cycles.max(parts.worst_mem_cycles),
+            Metric::Edp => {
+                (parts.mac_energy + parts.mem_energy)
+                    * parts.compute_cycles.max(parts.worst_mem_cycles)
+            }
+            // The frontier's scalar bound is its primary-metric (energy)
+            // bound — used for best-first ordering, never for pruning a
+            // non-primary metric (that goes through `lower_bound_vec`).
+            Metric::Frontier => parts.mac_energy + parts.mem_energy,
+        }
+    }
+
+    /// Per-metric lower bounds, one entry per [`Metric::SCALARS`] slot,
+    /// from **one** pass over the same order-independent traffic
+    /// products as [`Self::lower_bound`].
+    ///
+    /// Each entry is combined from the shared bound components with the
+    /// exact f64 expression the scalar bound uses for that metric, so
+    /// `lower_bound_vec(..)[m] == lower_bound(..)` bit-for-bit when the
+    /// context metric is `Metric::SCALARS[m]` — the same floats, not a
+    /// re-derivation (pinned by `rust/tests/properties.rs`).  This is
+    /// what lets one arena pass prune every metric of the frontier
+    /// search at the cost of a single bound computation.
+    pub fn lower_bound_vec(
+        &self,
+        factors: &[[u64; 3]],
+        tiles: &[[u64; 3]],
+        spatial: Spatial,
+        spec: &SparsitySpec,
+        reduction: &ReductionStrategy,
+        ratios: &CompressionRatios,
+    ) -> [f64; 4] {
+        let parts = self.bound_parts(factors, tiles, spatial, spec, reduction, ratios);
+        [
+            parts.mac_energy + parts.mem_energy,
+            parts.mem_energy,
+            parts.compute_cycles.max(parts.worst_mem_cycles),
+            (parts.mac_energy + parts.mem_energy)
+                * parts.compute_cycles.max(parts.worst_mem_cycles),
+        ]
+    }
+
+    /// The order-independent bound components shared by
+    /// [`Self::lower_bound`] and [`Self::lower_bound_vec`]: one
+    /// traversal of the proto-arena row producing MAC energy, bounded
+    /// memory energy, compute cycles and the worst per-boundary memory
+    /// cycles.  Metric-independent by construction, so every metric's
+    /// bound combines the identical f64 components.
+    fn bound_parts(
+        &self,
+        factors: &[[u64; 3]],
+        tiles: &[[u64; 3]],
+        spatial: Spatial,
+        spec: &SparsitySpec,
+        reduction: &ReductionStrategy,
+        ratios: &CompressionRatios,
+    ) -> BoundParts {
         let arch = self.arch;
         let data_bits = arch.data_bits as f64;
         let peak_macs = self.p.macs() as f64;
@@ -846,17 +939,23 @@ impl<'a> EvalContext<'a> {
             let cycles = self.model.boundary_cycles(arch, b, &op_bits, bits, ratios);
             worst_mem_cycles = worst_mem_cycles.max(cycles);
         }
-        match self.metric {
-            Metric::Energy => mac_energy + mem_energy,
-            Metric::MemoryEnergy => mem_energy,
-            Metric::Latency => compute_cycles.max(worst_mem_cycles),
-            Metric::Edp => (mac_energy + mem_energy) * compute_cycles.max(worst_mem_cycles),
-        }
+        BoundParts { mac_energy, mem_energy, compute_cycles, worst_mem_cycles }
     }
 
     pub fn cache_stats(&self) -> CacheStats {
         self.stats
     }
+}
+
+/// Order-independent lower-bound components produced by one traversal
+/// of a proto-arena row (see [`EvalContext::lower_bound`] for the
+/// derivation and the backend-monotonicity argument).
+#[derive(Clone, Copy, Debug)]
+struct BoundParts {
+    mac_energy: f64,
+    mem_energy: f64,
+    compute_cycles: f64,
+    worst_mem_cycles: f64,
 }
 
 #[cfg(test)]

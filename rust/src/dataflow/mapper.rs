@@ -323,6 +323,25 @@ impl ProtoArena {
         }
         out.spatial = self.spatial(i);
     }
+
+    /// Best-first index permutation: every arena id, sorted ascending by
+    /// `key(id)` with the id itself as tie-break — a deterministic total
+    /// order.  The search uses the primary-metric lower bound as the
+    /// key so branch-and-bound visits the most promising protos first
+    /// and the incumbent tightens early (`docs/SEARCH.md` § Frontier
+    /// search); results are unchanged because the shard reduction is
+    /// visit-order independent by construction.
+    pub fn order_by(&self, mut key: impl FnMut(usize) -> f64) -> Vec<u32> {
+        let keys: Vec<f64> = (0..self.len()).map(&mut key).collect();
+        let mut idx: Vec<u32> = (0..self.len() as u32).collect();
+        idx.sort_unstable_by(|&a, &b| {
+            keys[a as usize]
+                .partial_cmp(&keys[b as usize])
+                .expect("best-first ordering key was NaN")
+                .then(a.cmp(&b))
+        });
+        idx
+    }
 }
 
 /// Stream every tiling *proto* (canonical loop order) for `p` over

@@ -68,9 +68,9 @@ fn candidate_patterns(ws: &[WeightedWorkload<'_>], cfg: &EngineConfig) -> Vec<Co
     let mut cands: Vec<CompPat> = vec![
         // Baselines: Bitmap, RLE, CSR, COO (as patterns).
         CompPat::new(vec![(Prim::None, Axis::Row), (Prim::B, Axis::Col)]),
-        CompPat::new(vec![(Prim::None, Axis::Row), (Prim::RLE, Axis::Col)]),
-        CompPat::new(vec![(Prim::UOP, Axis::Row), (Prim::CP, Axis::Col)]),
-        CompPat::new(vec![(Prim::CP, Axis::Row), (Prim::CP, Axis::Col)]),
+        CompPat::new(vec![(Prim::None, Axis::Row), (Prim::Rle, Axis::Col)]),
+        CompPat::new(vec![(Prim::Uop, Axis::Row), (Prim::Cp, Axis::Col)]),
+        CompPat::new(vec![(Prim::Cp, Axis::Row), (Prim::Cp, Axis::Col)]),
     ];
     for ww in ws {
         // Dominant tensors: the sparse ops with the most MACs; search

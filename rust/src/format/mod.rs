@@ -48,13 +48,13 @@ pub enum Prim {
     /// Bitmap: one presence bit per child slot of every active parent.
     B,
     /// Coordinate payload: one coordinate per non-empty child.
-    CP,
+    Cp,
     /// Run-length encoding: one run length per non-empty child plus a
     /// terminator per active parent.
-    RLE,
+    Rle,
     /// Uncompressed offset pairs (CSR-style pointer array): `fanout + 1`
     /// offsets per active parent.
-    UOP,
+    Uop,
     /// User-defined primitive with a linear metadata cost model:
     /// `bits = parents * bits_per_parent + children * bits_per_child`.
     Custom {
@@ -74,9 +74,9 @@ impl Prim {
         match self {
             Prim::None => "None",
             Prim::B => "B",
-            Prim::CP => "CP",
-            Prim::RLE => "RLE",
-            Prim::UOP => "UOP",
+            Prim::Cp => "CP",
+            Prim::Rle => "RLE",
+            Prim::Uop => "UOP",
             Prim::Custom { name, .. } => name,
         }
     }
@@ -86,9 +86,9 @@ impl Prim {
         match self {
             Prim::None => 0,
             Prim::B => 1,
-            Prim::CP => 2,
-            Prim::RLE => 3,
-            Prim::UOP => 4,
+            Prim::Cp => 2,
+            Prim::Rle => 3,
+            Prim::Uop => 4,
             Prim::Custom { .. } => 5,
         }
     }
@@ -272,12 +272,12 @@ impl Format {
         match l.prim {
             // Runs can span the whole fanout, offsets index up to the full
             // region payload under the parent; coordinates index children.
-            Prim::UOP => {
+            Prim::Uop => {
                 let b = self.boundaries();
                 let region = b[i].region_rows as u128 * b[i].region_cols as u128;
                 ceil_log2((region as u64).saturating_add(1).max(2))
             }
-            Prim::RLE => ceil_log2(l.size + 1),
+            Prim::Rle => ceil_log2(l.size + 1),
             _ => ceil_log2(l.size.max(2)),
         }
     }
@@ -307,7 +307,7 @@ mod tests {
     fn csc_structure_of_fig4() {
         // CSC over M x N (M=3, N=6): UOP(N)-CP(M).
         let f = Format::new(
-            vec![lv(Prim::UOP, Axis::Col, 6), lv(Prim::CP, Axis::Row, 3)],
+            vec![lv(Prim::Uop, Axis::Col, 6), lv(Prim::Cp, Axis::Row, 3)],
             3,
             6,
         )
@@ -346,9 +346,9 @@ mod tests {
         // UOP(N1,3)-CP(M,3)-CP(N2,2) over 3 x 6 — the paper's §III-B example.
         let f = Format::new(
             vec![
-                lv(Prim::UOP, Axis::Col, 3),
-                lv(Prim::CP, Axis::Row, 3),
-                lv(Prim::CP, Axis::Col, 2),
+                lv(Prim::Uop, Axis::Col, 3),
+                lv(Prim::Cp, Axis::Row, 3),
+                lv(Prim::Cp, Axis::Col, 2),
             ],
             3,
             6,
@@ -363,7 +363,7 @@ mod tests {
     #[test]
     fn widths() {
         let f = Format::new(
-            vec![lv(Prim::CP, Axis::Col, 1024), lv(Prim::RLE, Axis::Row, 16)],
+            vec![lv(Prim::Cp, Axis::Col, 1024), lv(Prim::Rle, Axis::Row, 16)],
             16,
             1024,
         )
@@ -391,7 +391,7 @@ mod tests {
 
     #[test]
     fn display_pattern() {
-        let p = CompPat::new(vec![(Prim::UOP, Axis::Col), (Prim::CP, Axis::Row)]);
+        let p = CompPat::new(vec![(Prim::Uop, Axis::Col), (Prim::Cp, Axis::Row)]);
         assert_eq!(p.to_string(), "UOP(N)-CP(M)");
         assert_eq!(p.compressing_depth(), 2);
     }

@@ -24,7 +24,7 @@ pub fn bitmap(rows: u64, cols: u64) -> Format {
 /// `None(M)-RLE(N)`.
 pub fn rle(rows: u64, cols: u64) -> Format {
     Format::new(
-        vec![lv(Prim::None, Axis::Row, rows), lv(Prim::RLE, Axis::Col, cols)],
+        vec![lv(Prim::None, Axis::Row, rows), lv(Prim::Rle, Axis::Col, cols)],
         rows,
         cols,
     )
@@ -34,7 +34,7 @@ pub fn rle(rows: u64, cols: u64) -> Format {
 /// CSR: row-pointer array + column coordinates: `UOP(M)-CP(N)`.
 pub fn csr(rows: u64, cols: u64) -> Format {
     Format::new(
-        vec![lv(Prim::UOP, Axis::Row, rows), lv(Prim::CP, Axis::Col, cols)],
+        vec![lv(Prim::Uop, Axis::Row, rows), lv(Prim::Cp, Axis::Col, cols)],
         rows,
         cols,
     )
@@ -45,7 +45,7 @@ pub fn csr(rows: u64, cols: u64) -> Format {
 /// Flexagon).
 pub fn csc(rows: u64, cols: u64) -> Format {
     Format::new(
-        vec![lv(Prim::UOP, Axis::Col, cols), lv(Prim::CP, Axis::Row, rows)],
+        vec![lv(Prim::Uop, Axis::Col, cols), lv(Prim::Cp, Axis::Row, rows)],
         rows,
         cols,
     )
@@ -55,7 +55,7 @@ pub fn csc(rows: u64, cols: u64) -> Format {
 /// COO: full coordinates per non-zero: `CP(M)-CP(N)`.
 pub fn coo(rows: u64, cols: u64) -> Format {
     Format::new(
-        vec![lv(Prim::CP, Axis::Row, rows), lv(Prim::CP, Axis::Col, cols)],
+        vec![lv(Prim::Cp, Axis::Row, rows), lv(Prim::Cp, Axis::Col, cols)],
         rows,
         cols,
     )
@@ -68,8 +68,8 @@ pub fn csb(rows: u64, cols: u64, br: u64, bc: u64) -> Format {
     assert!(rows % br == 0 && cols % bc == 0, "block must divide tensor");
     Format::new(
         vec![
-            lv(Prim::CP, Axis::Row, rows / br),
-            lv(Prim::CP, Axis::Col, cols / bc),
+            lv(Prim::Cp, Axis::Row, rows / br),
+            lv(Prim::Cp, Axis::Col, cols / bc),
             lv(Prim::None, Axis::Row, br),
             lv(Prim::B, Axis::Col, bc),
         ],
@@ -99,7 +99,7 @@ pub fn b3(rows: u64, cols: u64, n1: u64) -> Format {
 /// lower-overhead bitmap.
 pub fn uop_b(rows: u64, cols: u64) -> Format {
     Format::new(
-        vec![lv(Prim::UOP, Axis::Row, rows), lv(Prim::B, Axis::Col, cols)],
+        vec![lv(Prim::Uop, Axis::Row, rows), lv(Prim::B, Axis::Col, cols)],
         rows,
         cols,
     )

@@ -10,7 +10,7 @@ use super::{Axis, CompPat, Format, Level, PatternLevel, Prim};
 use crate::util::mathx::ordered_factorizations;
 
 /// Which primitives pattern enumeration draws from.
-pub const SEARCH_PRIMS: [Prim; 5] = [Prim::None, Prim::B, Prim::CP, Prim::RLE, Prim::UOP];
+pub const SEARCH_PRIMS: [Prim; 5] = [Prim::None, Prim::B, Prim::Cp, Prim::Rle, Prim::Uop];
 
 /// Configuration of the pattern space.
 #[derive(Clone, Debug)]
@@ -49,7 +49,7 @@ pub fn pattern_is_valid(pat: &CompPat) -> bool {
     if pat.compressing_depth() == 0 {
         return false;
     }
-    if matches!(pat.levels[n - 1].prim, Prim::UOP) {
+    if matches!(pat.levels[n - 1].prim, Prim::Uop) {
         return false;
     }
     for w in pat.levels.windows(2) {
@@ -199,13 +199,13 @@ mod tests {
         ])));
         // UOP at leaf.
         assert!(!pattern_is_valid(&CompPat::new(vec![
-            (Prim::CP, Axis::Row),
-            (Prim::UOP, Axis::Col)
+            (Prim::Cp, Axis::Row),
+            (Prim::Uop, Axis::Col)
         ])));
         // CSR shape is valid.
         assert!(pattern_is_valid(&CompPat::new(vec![
-            (Prim::UOP, Axis::Row),
-            (Prim::CP, Axis::Col)
+            (Prim::Uop, Axis::Row),
+            (Prim::Cp, Axis::Col)
         ])));
     }
 

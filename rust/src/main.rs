@@ -34,6 +34,12 @@ fn usage() -> ! {
                              bit-identical for any thread count)\n\
                              [--prune on|off]  (branch-and-bound pruning;\n\
                              identical results either way, default on)\n\
+                             [--best-first on|off]  (visit protos in\n\
+                             ascending lower-bound order; identical\n\
+                             results either way, default on)\n\
+                             --metric frontier searches all four metrics\n\
+                             in one arena pass and prints the Pareto\n\
+                             frontier plus per-metric winners\n\
                              [--cost-backend analytical|contention]  (memory\n\
                              model, docs/COST.md; default analytical — tune\n\
                              contention knobs via the [cost] config section)\n\
@@ -186,6 +192,13 @@ fn cmd_search(args: &Args) -> Result<()> {
             other => bail!("--prune takes on|off, got '{other}'"),
         };
     }
+    if let Some(b) = args.get("best-first") {
+        cfg.best_first = match b {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            other => bail!("--best-first takes on|off, got '{other}'"),
+        };
+    }
     if let Some(b) = args.get("cost-backend") {
         use snipsnap::cost::CostModel;
         match CostModel::by_name(b) {
@@ -283,6 +296,31 @@ fn cmd_search(args: &Args) -> Result<()> {
         r.pruned,
         100.0 * r.prune_rate(),
     );
+    if let Some(f) = &r.frontier {
+        let metric_names = ["energy", "memory-energy", "latency", "edp"];
+        let mut ft = Table::new(vec!["metric", "energy (pJ)", "cycles", "metric total"])
+            .with_title("Pareto frontier: per-metric winners (single arena pass)");
+        for (mi, name) in metric_names.iter().enumerate() {
+            let ds = &f.winners[mi];
+            let energy: f64 = ds.iter().map(|d| d.report.total_energy_pj() * d.count as f64).sum();
+            let cycles: f64 = ds.iter().map(|d| d.report.latency_cycles() * d.count as f64).sum();
+            ft.add_row(vec![
+                name.to_string(),
+                fmt_f(energy),
+                fmt_f(cycles),
+                fmt_f(f.winner_total(mi)),
+            ]);
+        }
+        println!("{}", ft.render());
+        println!(
+            "frontier: {} Pareto points across {} ops | pruned per metric {:?} | \
+             {} shared-bound prunes",
+            f.total_points(),
+            f.op_points.len(),
+            r.pruned_by_metric,
+            r.bound_tightenings,
+        );
+    }
     Ok(())
 }
 
@@ -486,7 +524,7 @@ fn cmd_list() -> Result<()> {
         "workload modifiers (transformer presets): --prefill N --decode N --batch B \
          --kv-density D --nm N:M"
     );
-    println!("metrics:         energy memory-energy latency edp");
+    println!("metrics:         energy memory-energy latency edp frontier");
     Ok(())
 }
 

@@ -1,0 +1,299 @@
+//! In-pass Pareto frontier and cross-shard incumbent sharing for the
+//! single-pass multi-metric co-search (`--metric frontier`).
+//!
+//! One arena pass evaluates each surviving proto once per distinct
+//! trial mapping and feeds every result into two structures:
+//!
+//! * a [`Frontier`] — a small Pareto set over the four scalar metrics
+//!   ([`Metric::SCALARS`] order) with deterministic `(values, id)`
+//!   tie-breaking, so the set's contents are a pure function of the
+//!   points inserted and the (deterministic) insertion sequence;
+//! * a [`SharedBounds`] cell bank — one relaxed `AtomicU64` per scalar
+//!   metric holding the f64 bit pattern of the best value *achieved* so
+//!   far by any shard (monotone min).  Shards read it to tighten their
+//!   branch-and-bound prune threshold, never to select a winner, so
+//!   results stay bit-identical to serial whatever the interleaving
+//!   (`docs/SEARCH.md` § Frontier search).
+//!
+//! The dominance rule: point `a` dominates `b` iff `a.values[i] <=
+//! b.values[i]` on every metric and `<` on at least one; two points
+//! with equal vectors keep the smaller `id` (the deterministic
+//! composite key built by [`point_id`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of scalar metrics a frontier point carries
+/// (`Metric::SCALARS.len()`).
+pub const NUM_METRICS: usize = 4;
+
+/// Maximum points a [`Frontier`] retains.  Beyond the cap the point
+/// with the largest `(primary value, id)` key is evicted — a
+/// deterministic rule, so capped contents stay reproducible.
+pub const FRONTIER_CAP: usize = 64;
+
+/// One evaluated design projected onto the four scalar metrics.
+///
+/// `values` is in [`crate::cost::Metric::SCALARS`] order; `id` is the
+/// deterministic composite ordering key from [`point_id`] used for
+/// tie-breaking and eviction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FrontierPoint {
+    pub values: [f64; NUM_METRICS],
+    pub id: u64,
+}
+
+impl FrontierPoint {
+    /// Pareto dominance with deterministic duplicate resolution: `self`
+    /// dominates `other` when it is no worse on every metric and
+    /// strictly better on at least one, or when the vectors are equal
+    /// and `self` has the smaller id.
+    pub fn dominates(&self, other: &FrontierPoint) -> bool {
+        let mut strictly = false;
+        for i in 0..NUM_METRICS {
+            if self.values[i] > other.values[i] {
+                return false;
+            }
+            if self.values[i] < other.values[i] {
+                strictly = true;
+            }
+        }
+        strictly || self.id < other.id
+    }
+
+    /// Canonical total order: lexicographic over the value vector, then
+    /// the id.  Metric values are finite (the search would have
+    /// panicked on NaN long before a point is built).
+    fn key_cmp(&self, other: &FrontierPoint) -> std::cmp::Ordering {
+        for i in 0..NUM_METRICS {
+            match self.values[i].partial_cmp(&other.values[i]) {
+                Some(std::cmp::Ordering::Equal) | None => {}
+                Some(ord) => return ord,
+            }
+        }
+        self.id.cmp(&other.id)
+    }
+}
+
+/// Deterministic composite id for a frontier point: which format pair,
+/// which arena proto, and which slot produced it.  Slots 0–3 are the
+/// in-pass per-metric descents; slots 8–11 are the post-reduction
+/// refined winners (`8 + metric index`).  The packing keeps ids
+/// strictly ordered by `(pair, proto, slot)`, giving the `(values,
+/// id)` tie-break a stable meaning across runs.
+pub fn point_id(pair: u64, proto: u64, slot: usize) -> u64 {
+    debug_assert!(slot < 16);
+    debug_assert!(proto < 1 << 40);
+    (pair << 44) | (proto << 4) | slot as u64
+}
+
+/// A small Pareto set over [`FrontierPoint`]s, kept in canonical
+/// `(values, id)` order.
+///
+/// Inserts filter dominated points in both directions; when the set
+/// exceeds [`FRONTIER_CAP`] the worst `(primary value, id)` point is
+/// evicted.  Without the cap the retained set is exactly the maximal
+/// elements of everything inserted — insertion-order independent; with
+/// the cap, contents depend on the insertion sequence, which the
+/// search keeps deterministic (shards merge in shard order).
+#[derive(Clone, Debug, Default)]
+pub struct Frontier {
+    points: Vec<FrontierPoint>,
+}
+
+impl Frontier {
+    /// Insert `p`, returning whether it survived (was not dominated).
+    pub fn insert(&mut self, p: FrontierPoint) -> bool {
+        if self.points.iter().any(|q| q.dominates(&p)) {
+            return false;
+        }
+        self.points.retain(|q| !p.dominates(q));
+        let pos = self
+            .points
+            .partition_point(|q| q.key_cmp(&p) == std::cmp::Ordering::Less);
+        self.points.insert(pos, p);
+        if self.points.len() > FRONTIER_CAP {
+            // Evict the worst (primary value, id) — deterministic.
+            let worst = self
+                .points
+                .iter()
+                .enumerate()
+                .max_by(|(_, a), (_, b)| {
+                    a.values[0]
+                        .partial_cmp(&b.values[0])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.id.cmp(&b.id))
+                })
+                .map(|(i, _)| i)
+                .expect("frontier over cap cannot be empty");
+            self.points.remove(worst);
+        }
+        true
+    }
+
+    /// Merge `other` into `self` (point-by-point insert, in `other`'s
+    /// canonical order — deterministic for deterministic inputs).
+    pub fn merge(&mut self, other: &Frontier) {
+        for p in &other.points {
+            self.insert(*p);
+        }
+    }
+
+    /// The retained points in canonical `(values, id)` order.
+    pub fn points(&self) -> &[FrontierPoint] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// Cross-shard incumbent cells: one relaxed `AtomicU64` per scalar
+/// metric holding the f64 **bit pattern** of the best value achieved so
+/// far across every shard of the current pair search.
+///
+/// For non-negative finite f64s the IEEE-754 bit pattern is monotone in
+/// the value, so `fetch_min` on the bits is `fetch_min` on the floats —
+/// no CAS loop needed.  Metric values are strictly positive (energies,
+/// cycles, their product), and the cells start at `+inf`.
+///
+/// Determinism argument (`docs/SEARCH.md` § Frontier search): the cell
+/// only ever decreases toward the true global minimum, every published
+/// value is *achieved* by some proto, and readers prune a proto only
+/// when its lower bound is **strictly** above the cell — such a proto's
+/// achievable value is strictly above an achieved value and can never
+/// win the `(value, proto-id)` reduction, ties included.  A stale read
+/// merely prunes less.  The shared cell is never consulted when
+/// *selecting* a winner, so the reduced result is bit-identical to the
+/// serial search at any thread count and under any interleaving.
+#[derive(Debug)]
+pub struct SharedBounds {
+    cells: [AtomicU64; NUM_METRICS],
+}
+
+impl Default for SharedBounds {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SharedBounds {
+    pub fn new() -> Self {
+        let inf = f64::INFINITY.to_bits();
+        SharedBounds {
+            cells: [
+                AtomicU64::new(inf),
+                AtomicU64::new(inf),
+                AtomicU64::new(inf),
+                AtomicU64::new(inf),
+            ],
+        }
+    }
+
+    /// Publish an achieved value for scalar metric `m` (monotone min).
+    pub fn publish(&self, m: usize, v: f64) {
+        debug_assert!(v >= 0.0, "metric values are non-negative");
+        self.cells[m].fetch_min(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Best value achieved so far for scalar metric `m` across all
+    /// shards (`+inf` until something is published).
+    pub fn get(&self, m: usize) -> f64 {
+        f64::from_bits(self.cells[m].load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(values: [f64; 4], id: u64) -> FrontierPoint {
+        FrontierPoint { values, id }
+    }
+
+    #[test]
+    fn dominance_requires_strict_improvement_or_smaller_id() {
+        let a = pt([1.0, 2.0, 3.0, 4.0], 0);
+        let b = pt([1.0, 2.0, 3.0, 5.0], 1);
+        assert!(a.dominates(&b));
+        assert!(!b.dominates(&a));
+        // Equal vectors: smaller id wins.
+        let c = pt([1.0, 2.0, 3.0, 4.0], 7);
+        assert!(a.dominates(&c));
+        assert!(!c.dominates(&a));
+        // Incomparable: neither dominates.
+        let d = pt([0.5, 9.0, 3.0, 4.0], 2);
+        assert!(!a.dominates(&d));
+        assert!(!d.dominates(&a));
+    }
+
+    #[test]
+    fn frontier_keeps_only_maximal_points_in_canonical_order() {
+        let mut f = Frontier::default();
+        assert!(f.insert(pt([2.0, 2.0, 2.0, 2.0], 3)));
+        assert!(f.insert(pt([1.0, 3.0, 2.0, 2.0], 1)));
+        // Dominated by the first point.
+        assert!(!f.insert(pt([2.0, 2.0, 2.0, 3.0], 9)));
+        // Dominates the first point — replaces it.
+        assert!(f.insert(pt([2.0, 2.0, 1.0, 2.0], 5)));
+        let ids: Vec<u64> = f.points().iter().map(|p| p.id).collect();
+        assert_eq!(ids, vec![1, 5]);
+        // Canonical order: sorted by (values, id).
+        for w in f.points().windows(2) {
+            assert_eq!(w[0].key_cmp(&w[1]), std::cmp::Ordering::Less);
+        }
+    }
+
+    #[test]
+    fn frontier_merge_is_insertion_of_all_points() {
+        let mut a = Frontier::default();
+        a.insert(pt([1.0, 4.0, 4.0, 4.0], 0));
+        let mut b = Frontier::default();
+        b.insert(pt([4.0, 1.0, 4.0, 4.0], 1));
+        b.insert(pt([1.0, 4.0, 4.0, 4.0], 2)); // duplicate vector, larger id
+        a.merge(&b);
+        let ids: Vec<u64> = a.points().iter().map(|p| p.id).collect();
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn frontier_cap_evicts_worst_primary_value() {
+        let mut f = Frontier::default();
+        // Mutually incomparable points: descending primary, ascending
+        // secondary.
+        for i in 0..(FRONTIER_CAP + 8) {
+            let v = i as f64;
+            let n = (FRONTIER_CAP + 8) as f64;
+            f.insert(pt([n - v, v, 1.0, 1.0], i as u64));
+        }
+        assert_eq!(f.len(), FRONTIER_CAP);
+        // The evicted points are the largest primary values — the
+        // earliest inserted ids here.
+        assert!(f.points().iter().all(|p| p.id >= 8));
+    }
+
+    #[test]
+    fn shared_bounds_monotone_min_over_positive_values() {
+        let s = SharedBounds::new();
+        assert_eq!(s.get(2), f64::INFINITY);
+        s.publish(2, 5.0);
+        s.publish(2, 7.0); // larger value never raises the cell
+        assert_eq!(s.get(2), 5.0);
+        s.publish(2, 4.875);
+        assert_eq!(s.get(2), 4.875);
+        // Other cells untouched.
+        assert_eq!(s.get(0), f64::INFINITY);
+    }
+
+    #[test]
+    fn point_id_orders_by_pair_then_proto_then_slot() {
+        let a = point_id(0, 5, 3);
+        let b = point_id(0, 6, 0);
+        let c = point_id(1, 0, 0);
+        assert!(a < b && b < c);
+    }
+}

@@ -44,6 +44,7 @@
 //! Contrast with the Sparseloop-style stepwise workflow in
 //! [`crate::baselines::sparseloop_like`].
 
+pub mod frontier;
 pub mod progressive;
 
 use crate::arch::Accelerator;
@@ -79,8 +80,23 @@ pub struct SearchTelemetry {
     /// iterated, across all format pairs).
     pub protos: u64,
     /// Protos whose order sweep was skipped because their metric lower
-    /// bound already reached the incumbent best.
+    /// bound already reached the incumbent best.  In frontier mode a
+    /// proto counts here only when **every** scalar metric's descent
+    /// was skipped; the per-metric breakdown is `pruned_by_metric`.
     pub pruned: u64,
+    /// Per-scalar-metric prune counts ([`Metric::SCALARS`] order): how
+    /// many per-metric order sweeps the vector lower bound skipped.
+    /// Scalar searches attribute their prunes to their own metric's
+    /// slot.
+    pub pruned_by_metric: [u64; 4],
+    /// Prunes that fired only because a *shared* cross-shard incumbent
+    /// (`search::frontier::SharedBounds`) was tighter than the shard's
+    /// local incumbent.  Like all prune telemetry this depends on
+    /// thread interleaving; designs and scores do not.
+    pub bound_tightenings: u64,
+    /// Points retained on the Pareto frontier (frontier mode only;
+    /// summed across ops).
+    pub frontier_size: u64,
 }
 
 impl SearchTelemetry {
@@ -95,6 +111,11 @@ impl SearchTelemetry {
         self.cache.merge(other.cache);
         self.protos += other.protos;
         self.pruned += other.pruned;
+        for (a, b) in self.pruned_by_metric.iter_mut().zip(other.pruned_by_metric) {
+            *a += b;
+        }
+        self.bound_tightenings += other.bound_tightenings;
+        self.frontier_size += other.frontier_size;
     }
 }
 
@@ -219,6 +240,17 @@ pub struct SearchConfig {
     /// (`evaluations`, cache and prune stats) do depend on this flag and
     /// — when pruning is on — on the shard count.  Default `true`.
     pub prune: bool,
+    /// Best-first proto ordering: when pruning is on, shards visit
+    /// arena protos in ascending primary-metric lower bound (a
+    /// precomputed [`ProtoArena::order_by`](crate::dataflow::mapper::ProtoArena::order_by)
+    /// permutation) instead of ascending id, so the incumbent tightens
+    /// — and branch-and-bound fires — much earlier.  The shard
+    /// reduction is visit-order independent by construction
+    /// (`docs/SEARCH.md` § Frontier search), so designs and scores are
+    /// bit-identical with this on or off; only the prune/evaluation
+    /// telemetry changes (pinned by `rust/tests/frontier.rs`).  Inert
+    /// when `prune` is off.  Default `true`.
+    pub best_first: bool,
     /// Cost backend every evaluation (and lower bound) dispatches
     /// through; see `docs/COST.md`.  The default analytical backend is
     /// bit-identical to the pre-backend cost model; branch-and-bound
@@ -247,6 +279,7 @@ impl Default for SearchConfig {
             pairs_to_map: 2,
             threads: 1,
             prune: true,
+            best_first: true,
             cost: CostModel::Analytical,
             quant: QuantConfig::default(),
         }
@@ -271,10 +304,53 @@ pub struct OpDesign {
     pub count: u64,
 }
 
+/// Per-metric winners and Pareto points of a frontier-mode search
+/// (`Metric::Frontier`).  `winners[m]` holds one design per workload op
+/// (op order) for scalar metric `Metric::SCALARS[m]`, each
+/// bit-identical to what an independent scalar search of that metric
+/// would have chosen (pinned by `rust/tests/frontier.rs`);
+/// `op_points` holds each op's retained Pareto set.
+#[derive(Clone, Debug, Default)]
+pub struct FrontierResult {
+    pub winners: [Vec<OpDesign>; 4],
+    pub op_points: Vec<(String, Vec<frontier::FrontierPoint>)>,
+}
+
+impl FrontierResult {
+    /// Total Pareto points retained across all ops.
+    pub fn total_points(&self) -> u64 {
+        self.op_points.iter().map(|(_, ps)| ps.len() as u64).sum()
+    }
+
+    /// Workload total of scalar metric `Metric::SCALARS[mi]` over that
+    /// metric's winner designs, combined exactly like
+    /// [`WorkloadResult::metric_total`] (EDP is the workload-level
+    /// energy × cycles product, not a per-op sum).
+    pub fn winner_total(&self, mi: usize) -> f64 {
+        let designs = &self.winners[mi];
+        let energy: f64 =
+            designs.iter().map(|d| d.report.total_energy_pj() * d.count as f64).sum();
+        let mem: f64 =
+            designs.iter().map(|d| d.report.memory_energy_pj() * d.count as f64).sum();
+        let cycles: f64 =
+            designs.iter().map(|d| d.report.latency_cycles() * d.count as f64).sum();
+        match mi {
+            0 => energy,
+            1 => mem,
+            2 => cycles,
+            _ => energy * cycles,
+        }
+    }
+}
+
 /// Aggregated result over a workload.
 #[derive(Clone, Debug)]
 pub struct WorkloadResult {
     pub workload: String,
+    /// One chosen design per op.  In frontier mode these are the
+    /// **primary-metric** (energy) winners, so every aggregate below
+    /// keeps its meaning; the other metrics' winners are in
+    /// [`Self::frontier`].
     pub designs: Vec<OpDesign>,
     pub elapsed: Duration,
     /// Cost-model evaluations performed (the exploration-effort metric;
@@ -289,6 +365,17 @@ pub struct WorkloadResult {
     pub protos: u64,
     /// Protos skipped by the branch-and-bound lower bound.
     pub pruned: u64,
+    /// Per-scalar-metric prune counts (see
+    /// [`SearchTelemetry::pruned_by_metric`]).
+    pub pruned_by_metric: [u64; 4],
+    /// Prunes enabled only by cross-shard incumbent sharing (see
+    /// [`SearchTelemetry::bound_tightenings`]).
+    pub bound_tightenings: u64,
+    /// Pareto points retained (frontier mode; 0 otherwise).
+    pub frontier_size: u64,
+    /// Frontier-mode payload: per-metric winners + Pareto points.
+    /// `None` for scalar searches.
+    pub frontier: Option<FrontierResult>,
 }
 
 impl WorkloadResult {
@@ -338,6 +425,8 @@ impl WorkloadResult {
             Metric::MemoryEnergy => self.memory_energy_pj(),
             Metric::Latency => self.total_cycles(),
             Metric::Edp => self.edp(),
+            // Frontier designs are the primary-metric (energy) winners.
+            Metric::Frontier => self.total_energy_pj(),
         }
     }
 }

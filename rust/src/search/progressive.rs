@@ -14,16 +14,19 @@
 //! new bests `clone_from` into place).  `docs/SEARCH.md` walks the
 //! whole pipeline and states the determinism contract.
 
+use super::frontier::{point_id, Frontier, FrontierPoint, SharedBounds};
 use super::{
-    FormatMode, OpDesign, ScoredMapping, SearchConfig, SearchHooks, SearchLimiter,
+    FormatMode, FrontierResult, OpDesign, ScoredMapping, SearchConfig, SearchHooks, SearchLimiter,
     SearchTelemetry, WorkloadResult,
 };
 use crate::arch::Accelerator;
 use crate::cost::{
-    mapping_is_legal, tiles_are_legal, CompressionRatios, CostReport, EvalContext, SharedCounts,
+    mapping_is_legal, pack_key, tiles_are_legal, CompressionRatios, CostReport, EvalContext,
+    MapKey, Metric, SharedCounts,
 };
 use crate::dataflow::mapper::{MapperConfig, OpEnumeration, ProtoArena};
 use crate::dataflow::{tiles_of, Mapping, ProblemDims, MAX_LEVELS};
+use std::collections::HashMap;
 use crate::engine::allocate::TileHints;
 use crate::engine::{search_formats_quant, ScoredFormat};
 use crate::format::{named, Format};
@@ -346,12 +349,43 @@ struct PairBest {
     report: CostReport,
 }
 
+impl PairBest {
+    /// `(value, proto id)` total-order comparison: does a candidate with
+    /// `(v, id)` beat this incumbent?  The same rule the cross-shard
+    /// reduction uses, applied in-shard too so the shard best is the
+    /// total-order minimum of its evaluated protos **whatever order the
+    /// shard visited them in** — the property that makes the best-first
+    /// permutation result-neutral.  Under ascending-id visits the id
+    /// clause never fires (the incumbent is always earlier), so this is
+    /// exactly the historical "first strictly better wins" rule.
+    fn beaten_by(&self, v: f64, id: u64) -> bool {
+        match v.partial_cmp(&self.value).expect("metric value was NaN") {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Equal => id < self.proto_id,
+            std::cmp::Ordering::Greater => false,
+        }
+    }
+
+    /// Can a proto whose lower bound is `lb` still beat this incumbent
+    /// under the `(value, id)` order?  `lb` bounds every value the proto
+    /// can achieve, so `lb > value` rules it out; at `lb == value` only
+    /// an *earlier* id could still win the tie-break.  Under ascending-id
+    /// visits the candidate id is always later, so the condition reduces
+    /// to the historical `lb >= value` prune.
+    fn prunes(&self, lb: f64, id: u64) -> bool {
+        lb > self.value || (lb == self.value && id > self.proto_id)
+    }
+}
+
 /// One shard's outcome: the partial best plus the enumeration counters
 /// feeding [`SearchTelemetry`].
 struct ShardOutcome {
     best: Option<PairBest>,
     protos: u64,
     pruned: u64,
+    /// Prunes that only fired thanks to the shared cross-shard incumbent
+    /// ([`SharedBounds`]) being tighter than the local one.
+    bound_tightenings: u64,
 }
 
 /// The immutable inputs one (op, ratios) mapping search shares across
@@ -363,36 +397,182 @@ struct PairSearch<'s> {
     cfg: &'s SearchConfig,
     ratios: &'s CompressionRatios,
     limiter: Option<&'s SearchLimiter>,
+    /// Best-first visit permutation over arena ids (ascending
+    /// primary-metric lower bound; `None` = ascending id).
+    perm: Option<&'s [u32]>,
+    /// Primary-metric lower bounds per arena id, precomputed alongside
+    /// `perm` so scalar shards don't re-derive them per visit.
+    bounds: Option<&'s [f64]>,
+    /// Index of the format pair in this op's candidate list — the pair
+    /// component of deterministic frontier point ids.
+    pair_idx: u64,
+}
+
+/// Precompute the best-first machinery for one (op, ratios) arena: the
+/// primary-metric lower bound of every proto and the permutation
+/// visiting them in ascending bound order.  Only worth building when
+/// pruning is on (without pruning every proto is swept regardless of
+/// order); `None` leaves the classic ascending-id iteration.
+fn build_best_first(
+    arena: &ProtoArena,
+    ctx: &EvalContext<'_>,
+    op: &MatMulOp,
+    ratios: &CompressionRatios,
+    cfg: &SearchConfig,
+) -> Option<(Vec<f64>, Vec<u32>)> {
+    if !(cfg.best_first && cfg.prune) || arena.is_empty() {
+        return None;
+    }
+    let arch = ctx.arch;
+    let bounds: Vec<f64> = (0..arena.len())
+        .map(|i| {
+            ctx.lower_bound(
+                arena.factors(i),
+                arena.tiles(i),
+                arena.spatial(i),
+                &op.spec,
+                &arch.reduction,
+                ratios,
+            )
+        })
+        .collect();
+    let perm = arena.order_by(|i| bounds[i]);
+    Some((bounds, perm))
+}
+
+/// Per-proto trial memo for the frontier descent: mapping key → report.
+///
+/// In frontier mode the four per-metric greedy descents of one proto all
+/// start from the identical canonical-order mapping and mostly walk the
+/// same trial mappings.  Routing every trial through this recorder —
+/// sitting *above* the [`EvalContext`] — turns each repeat into zero
+/// context lookups (so zero `evaluations`), while a miss costs exactly
+/// one counted [`EvalContext::evaluate`].  Reports are pure functions of
+/// the mapping (given the pair's fixed spec/reduction/ratios), so the
+/// recorded report is bit-identical to what a fresh evaluation — or a
+/// scalar search's [`EvalContext::sweep_level`] resume — would produce;
+/// per-metric winners therefore match the four independent searches
+/// exactly while the one-pass evaluation count is strictly lower
+/// (`rust/tests/frontier.rs`, `fig14_frontier`).
+struct TrialRecorder {
+    map: HashMap<MapKey, CostReport>,
+}
+
+impl TrialRecorder {
+    fn new() -> TrialRecorder {
+        TrialRecorder { map: HashMap::new() }
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+    }
+
+    fn eval(
+        &mut self,
+        ctx: &mut EvalContext<'_>,
+        m: &Mapping,
+        spec: &SparsitySpec,
+        ratios: &CompressionRatios,
+    ) -> CostReport {
+        let key = pack_key(m);
+        if let Some(r) = self.map.get(&key) {
+            return *r;
+        }
+        let arch = ctx.arch;
+        let r = ctx.evaluate(m, spec, &arch.reduction, ratios);
+        self.map.insert(key, r);
+        r
+    }
+}
+
+/// [`choose_orders_greedy`] for an explicit `metric`, with every trial
+/// routed through the [`TrialRecorder`]: the same level-sweep schedule,
+/// the same six-order trials with first-wins tie-breaking, the same
+/// `1e-12` improvement exit and the same final re-evaluation — so the
+/// chosen orders and the returned report are bit-identical to the
+/// scalar path's, only the evaluation accounting differs (recorded
+/// repeats cost nothing).
+fn choose_orders_greedy_recorded(
+    m: &mut Mapping,
+    ctx: &mut EvalContext<'_>,
+    rec: &mut TrialRecorder,
+    metric: Metric,
+    spec: &SparsitySpec,
+    ratios: &CompressionRatios,
+) -> CostReport {
+    let mut sweep_lvls: InlineVec<usize, MAX_LEVELS> = InlineVec::new();
+    for (lvl, level) in m.levels.iter().enumerate() {
+        if level.factors.iter().filter(|&&f| f > 1).count() > 1 {
+            sweep_lvls.push(lvl);
+        }
+    }
+    let mut current = f64::INFINITY;
+    for _sweep in 0..3 {
+        let mut improved = false;
+        for &lvl in &sweep_lvls {
+            let mut best: Option<([crate::dataflow::LoopDim; 3], f64)> = None;
+            for ord in crate::dataflow::mapper::ALL_ORDERS {
+                m.levels[lvl].order = ord;
+                let r = rec.eval(ctx, m, spec, ratios);
+                let trial = metric.of(&r);
+                if best.map(|(_, b)| trial < b).unwrap_or(true) {
+                    best = Some((ord, trial));
+                }
+            }
+            let (ord, v) = best.unwrap();
+            m.levels[lvl].order = ord;
+            if v < current - 1e-12 {
+                current = v;
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    rec.eval(ctx, m, spec, ratios)
 }
 
 /// Run the mapping search over one shard's slice of the prebuilt proto
-/// arena: indices congruent to `shard` mod `nshards` (a balanced
-/// interleave; ids are arena-global, so the reduction is partition-
-/// independent).  The per-proto loop is allocation-free: the shard owns
-/// one scratch mapping the arena writes into, the order sweep mutates it
-/// in place, and a new best `clone_from`s it (reusing the incumbent's
-/// storage).  In-shard ties keep the earliest proto (strict `<`).
+/// arena: visit positions congruent to `shard` mod `nshards` (a
+/// balanced interleave) of either the ascending id sequence or the
+/// best-first permutation; ids stay arena-global, so the reduction is
+/// partition- and visit-order-independent.  The per-proto loop is
+/// allocation-free: the shard owns one scratch mapping the arena writes
+/// into, the order sweep mutates it in place, and a new best
+/// `clone_from`s it (reusing the incumbent's storage).  The incumbent
+/// update and the prune test both use the `(value, proto id)` total
+/// order ([`PairBest::beaten_by`] / [`PairBest::prunes`]), so the shard
+/// best is the total-order minimum of its slice whatever order it was
+/// visited in — under ascending-id visits both rules collapse to the
+/// historical first-wins / `lb >= value` forms.
 ///
-/// With `cfg.prune` on, a proto whose order-independent lower bound
-/// already reaches the shard's incumbent value is skipped before the
-/// sweep.  Any value it could achieve is ≥ that bound, and an equal
-/// value would lose the `(value, proto id)` tie-break to the earlier
-/// incumbent anyway, so pruning can never change the reduced result —
-/// only the evaluation counters.
+/// With `cfg.prune` on, a proto is also skipped when its lower bound is
+/// **strictly** above the shared cross-shard incumbent ([`SharedBounds`]
+/// — strict because no proto id is attached to the shared value, so a
+/// tie might still win the id tie-break).  Every shared value was
+/// achieved by some proto, so such a proto can never win the reduction:
+/// pruning changes the counters, never the result.
 fn search_pair_shard(
     shard: usize,
     nshards: usize,
     ctx: &mut EvalContext<'_>,
     ps: &PairSearch<'_>,
+    shared: &SharedBounds,
 ) -> ShardOutcome {
-    let PairSearch { arena, op, cfg, ratios, limiter } = *ps;
-    let mut out = ShardOutcome { best: None, protos: 0, pruned: 0 };
+    let PairSearch { arena, op, cfg, ratios, limiter, perm, bounds, .. } = *ps;
+    let mut out = ShardOutcome { best: None, protos: 0, pruned: 0, bound_tightenings: 0 };
     if arena.is_empty() || shard >= arena.len() {
         return out;
     }
     let arch = ctx.arch;
+    let mi = ctx.metric.scalar_index();
     let mut scratch = arena.scratch_mapping();
-    for id in (shard..arena.len()).step_by(nshards.max(1)) {
+    for pos in (shard..arena.len()).step_by(nshards.max(1)) {
+        let id = match perm {
+            Some(p) => p[pos] as usize,
+            None => pos,
+        };
         // Budget gate (serve requests): once a cap fires, every shard
         // stops opening protos.
         if let Some(l) = limiter {
@@ -402,26 +582,33 @@ fn search_pair_shard(
         }
         out.protos += 1;
         if cfg.prune {
-            if let Some(b) = &out.best {
-                let lb = ctx.lower_bound(
+            let lb = match bounds {
+                Some(bs) => bs[id],
+                None => ctx.lower_bound(
                     arena.factors(id),
                     arena.tiles(id),
                     arena.spatial(id),
                     &op.spec,
                     &arch.reduction,
                     ratios,
-                );
-                if lb >= b.value {
-                    out.pruned += 1;
-                    continue;
-                }
+                ),
+            };
+            if out.best.as_ref().is_some_and(|b| b.prunes(lb, id as u64)) {
+                out.pruned += 1;
+                continue;
+            }
+            if lb > shared.get(mi) {
+                out.pruned += 1;
+                out.bound_tightenings += 1;
+                continue;
             }
         }
         arena.write_mapping(id, &mut scratch);
         let r = choose_orders_greedy(&mut scratch, ctx, &op.spec, ratios);
         let v = ctx.metric.of(&r);
+        shared.publish(mi, v);
         match &mut out.best {
-            Some(b) if v < b.value => {
+            Some(b) if b.beaten_by(v, id as u64) => {
                 b.value = v;
                 b.proto_id = id as u64;
                 b.mapping.clone_from(&scratch);
@@ -441,6 +628,34 @@ fn search_pair_shard(
     out
 }
 
+/// Deterministic reduction of shard outcomes: fold counters into `tel`
+/// (prunes attributed to scalar-metric slot `mi`) and minimize
+/// `(value, proto id)`.  The id tie-break reproduces the serial rule
+/// "first strictly better wins" exactly, independent of shard count,
+/// scheduling and visit order.
+fn reduce_outcomes(
+    outcomes: Vec<ShardOutcome>,
+    mi: usize,
+    tel: &mut SearchTelemetry,
+) -> Option<PairBest> {
+    let mut best: Option<PairBest> = None;
+    for o in outcomes {
+        tel.protos += o.protos;
+        tel.pruned += o.pruned;
+        tel.pruned_by_metric[mi] += o.pruned;
+        tel.bound_tightenings += o.bound_tightenings;
+        let Some(pb) = o.best else { continue };
+        let wins = match &best {
+            Some(b) => b.beaten_by(pb.value, pb.proto_id),
+            None => true,
+        };
+        if wins {
+            best = Some(pb);
+        }
+    }
+    best
+}
+
 /// Sharded mapping search for one (op, ratios) pair: fan the arena out
 /// over the contexts' threads, merge the partial bests by the total
 /// order on `(value, proto id)` — bit-identical to the serial pass for
@@ -452,14 +667,18 @@ fn map_search(
     tel: &mut SearchTelemetry,
 ) -> Option<ScoredMapping> {
     let nshards = ctxs.len();
+    let shared = SharedBounds::new();
     let outcomes: Vec<ShardOutcome> = if nshards <= 1 {
-        vec![search_pair_shard(0, 1, &mut ctxs[0], ps)]
+        vec![search_pair_shard(0, 1, &mut ctxs[0], ps, &shared)]
     } else {
         std::thread::scope(|s| {
             let handles: Vec<_> = ctxs
                 .iter_mut()
                 .enumerate()
-                .map(|(i, ctx)| s.spawn(move || search_pair_shard(i, nshards, ctx, ps)))
+                .map(|(i, ctx)| {
+                    let shared = &shared;
+                    s.spawn(move || search_pair_shard(i, nshards, ctx, ps, shared))
+                })
                 .collect();
             handles
                 .into_iter()
@@ -467,29 +686,8 @@ fn map_search(
                 .collect()
         })
     };
-    // Deterministic reduction: minimize (value, proto id).  The id
-    // tie-break reproduces the serial rule "first strictly better wins"
-    // exactly, independent of shard count and scheduling.
-    let mut best: Option<PairBest> = None;
-    for o in outcomes {
-        tel.protos += o.protos;
-        tel.pruned += o.pruned;
-        let Some(pb) = o.best else { continue };
-        let wins = match &best {
-            Some(b) => {
-                match pb.value.partial_cmp(&b.value).expect("metric value was NaN") {
-                    std::cmp::Ordering::Less => true,
-                    std::cmp::Ordering::Equal => pb.proto_id < b.proto_id,
-                    std::cmp::Ordering::Greater => false,
-                }
-            }
-            None => true,
-        };
-        if wins {
-            best = Some(pb);
-        }
-    }
-    let pb = best?;
+    let mi = ctxs[0].metric.scalar_index();
+    let pb = reduce_outcomes(outcomes, mi, tel)?;
     // Tile refinement is bounded and runs on the already-reduced winner,
     // so it stays outside the budget gate: a fired limiter stops new
     // arena work but never truncates refinement of a found design.
@@ -500,6 +698,226 @@ fn map_search(
         ps.ratios,
         ps.cfg.prune,
     ))
+}
+
+/// One frontier shard's outcome: a partial best per scalar metric, the
+/// shard's local Pareto points, and the prune counters.
+struct FrontierShardOutcome {
+    best: [Option<PairBest>; 4],
+    points: Frontier,
+    protos: u64,
+    /// Protos where *every* metric's descent was skipped.
+    pruned: u64,
+    pruned_by_metric: [u64; 4],
+    bound_tightenings: u64,
+}
+
+/// Frontier-mode shard: one pass over the shard's slice serving all
+/// four scalar metrics.  Per proto, the vector lower bound
+/// ([`EvalContext::lower_bound_vec`]) decides independently per metric
+/// whether that metric's greedy descent can still beat its incumbent
+/// (the same `(value, id)` total-order rules as the scalar shard, plus
+/// the strict shared-bound test); the surviving descents run through a
+/// per-proto [`TrialRecorder`], so mappings shared between metrics —
+/// always including the canonical starting point and the first swept
+/// level's six trials — are evaluated once instead of four times.
+/// Every descent result feeds the shard's Pareto [`Frontier`] with its
+/// full four-metric vector.
+fn search_pair_shard_frontier(
+    shard: usize,
+    nshards: usize,
+    ctx: &mut EvalContext<'_>,
+    ps: &PairSearch<'_>,
+    shared: &SharedBounds,
+) -> FrontierShardOutcome {
+    let PairSearch { arena, op, cfg, ratios, limiter, perm, pair_idx, .. } = *ps;
+    let mut out = FrontierShardOutcome {
+        best: [None, None, None, None],
+        points: Frontier::default(),
+        protos: 0,
+        pruned: 0,
+        pruned_by_metric: [0; 4],
+        bound_tightenings: 0,
+    };
+    if arena.is_empty() || shard >= arena.len() {
+        return out;
+    }
+    let arch = ctx.arch;
+    let mut scratch = arena.scratch_mapping();
+    let mut work = arena.scratch_mapping();
+    let mut rec = TrialRecorder::new();
+    for pos in (shard..arena.len()).step_by(nshards.max(1)) {
+        let id = match perm {
+            Some(p) => p[pos] as usize,
+            None => pos,
+        };
+        if let Some(l) = limiter {
+            if !l.admit_proto() {
+                break;
+            }
+        }
+        out.protos += 1;
+        let mut skip = [false; 4];
+        if cfg.prune {
+            let lbs = ctx.lower_bound_vec(
+                arena.factors(id),
+                arena.tiles(id),
+                arena.spatial(id),
+                &op.spec,
+                &arch.reduction,
+                ratios,
+            );
+            for (mi, lb) in lbs.into_iter().enumerate() {
+                if out.best[mi].as_ref().is_some_and(|b| b.prunes(lb, id as u64)) {
+                    skip[mi] = true;
+                    out.pruned_by_metric[mi] += 1;
+                } else if lb > shared.get(mi) {
+                    skip[mi] = true;
+                    out.pruned_by_metric[mi] += 1;
+                    out.bound_tightenings += 1;
+                }
+            }
+            if skip.iter().all(|&s| s) {
+                out.pruned += 1;
+                continue;
+            }
+        }
+        arena.write_mapping(id, &mut scratch);
+        rec.clear();
+        for (mi, metric) in Metric::SCALARS.into_iter().enumerate() {
+            if skip[mi] {
+                continue;
+            }
+            // Each metric's descent replays its solo search exactly:
+            // same canonical start, same trial sequence, same
+            // selections — only the evaluations are shared.
+            work.clone_from(&scratch);
+            let r = choose_orders_greedy_recorded(&mut work, ctx, &mut rec, metric, &op.spec, ratios);
+            let v = metric.of(&r);
+            shared.publish(mi, v);
+            out.points.insert(FrontierPoint {
+                values: [
+                    Metric::SCALARS[0].of(&r),
+                    Metric::SCALARS[1].of(&r),
+                    Metric::SCALARS[2].of(&r),
+                    Metric::SCALARS[3].of(&r),
+                ],
+                id: point_id(pair_idx, id as u64, mi),
+            });
+            match &mut out.best[mi] {
+                Some(b) if b.beaten_by(v, id as u64) => {
+                    b.value = v;
+                    b.proto_id = id as u64;
+                    b.mapping.clone_from(&work);
+                    b.report = r;
+                }
+                None => {
+                    out.best[mi] = Some(PairBest {
+                        value: v,
+                        proto_id: id as u64,
+                        mapping: work.clone(),
+                        report: r,
+                    });
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+/// Per-metric winners and Pareto points of one (op, format pair)
+/// frontier search.
+struct FrontierPairOutcome {
+    winners: [Option<ScoredMapping>; 4],
+    points: Frontier,
+}
+
+/// Frontier-mode counterpart of [`map_search`]: one sharded arena pass
+/// serving all four scalar metrics, a per-metric `(value, proto id)`
+/// reduction, then per-metric tile refinement (serial, with the
+/// context temporarily projected onto that metric) whose results are
+/// bit-identical to four independent scalar searches
+/// (`rust/tests/frontier.rs`).
+fn map_search_frontier(
+    ctxs: &mut [EvalContext<'_>],
+    ps: &PairSearch<'_>,
+    tel: &mut SearchTelemetry,
+) -> Option<FrontierPairOutcome> {
+    let nshards = ctxs.len();
+    let shared = SharedBounds::new();
+    let outcomes: Vec<FrontierShardOutcome> = if nshards <= 1 {
+        vec![search_pair_shard_frontier(0, 1, &mut ctxs[0], ps, &shared)]
+    } else {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = ctxs
+                .iter_mut()
+                .enumerate()
+                .map(|(i, ctx)| {
+                    let shared = &shared;
+                    s.spawn(move || search_pair_shard_frontier(i, nshards, ctx, ps, shared))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("frontier-search worker panicked"))
+                .collect()
+        })
+    };
+    let mut best: [Option<PairBest>; 4] = [None, None, None, None];
+    let mut points = Frontier::default();
+    for o in outcomes {
+        tel.protos += o.protos;
+        tel.pruned += o.pruned;
+        for (a, b) in tel.pruned_by_metric.iter_mut().zip(o.pruned_by_metric) {
+            *a += b;
+        }
+        tel.bound_tightenings += o.bound_tightenings;
+        points.merge(&o.points);
+        for (mi, pb) in o.best.into_iter().enumerate() {
+            let Some(pb) = pb else { continue };
+            let wins = match &best[mi] {
+                Some(b) => b.beaten_by(pb.value, pb.proto_id),
+                None => true,
+            };
+            if wins {
+                best[mi] = Some(pb);
+            }
+        }
+    }
+    if best.iter().all(|b| b.is_none()) {
+        return None;
+    }
+    // Per-metric refinement, serial on ctxs[0] with the context
+    // projected onto the metric — refinement is a pure function of the
+    // winner and the metric, so each result matches the scalar path's.
+    let mut winners: [Option<ScoredMapping>; 4] = [None, None, None, None];
+    let outer_metric = ctxs[0].metric;
+    for (mi, pb) in best.into_iter().enumerate() {
+        let Some(pb) = pb else { continue };
+        ctxs[0].metric = Metric::SCALARS[mi];
+        let (mapping, report, value) = refine_tiles(
+            (pb.mapping, pb.report, pb.value),
+            &mut ctxs[0],
+            &ps.op.spec,
+            ps.ratios,
+            ps.cfg.prune,
+        );
+        points.insert(FrontierPoint {
+            values: [
+                Metric::SCALARS[0].of(&report),
+                Metric::SCALARS[1].of(&report),
+                Metric::SCALARS[2].of(&report),
+                Metric::SCALARS[3].of(&report),
+            ],
+            // Slot 8+mi marks refined winners; pb.proto_id keys the
+            // proto the refinement started from.
+            id: point_id(ps.pair_idx, pb.proto_id, 8 + mi),
+        });
+        winners[mi] = Some((mapping, report, value));
+    }
+    ctxs[0].metric = outer_metric;
+    Some(FrontierPairOutcome { winners, points })
 }
 
 /// Refine a request-level memo scope to one op by folding in its
@@ -534,7 +952,7 @@ fn cosearch_op_sharded(
     shards: usize,
     tel: &mut SearchTelemetry,
     hooks: SearchHooks<'_>,
-) -> Option<OpDesign> {
+) -> (Option<OpDesign>, Option<OpFrontier>) {
     let memo = op_memo(hooks.memo, &op.dims);
     let mut ctxs: Vec<EvalContext<'_>> = (0..shards.max(1))
         .map(|_| {
@@ -547,8 +965,11 @@ fn cosearch_op_sharded(
         .collect();
     let en = op_enumeration(arch, &op.dims, &cfg.mapper);
     let mut arena = ProtoArena::new();
+    let frontier_mode = cfg.metric == Metric::Frontier;
     let mut best: Option<OpDesign> = None;
-    for choice in format_pairs(arch, op, cfg) {
+    let mut fbest: [Option<OpDesign>; 4] = [None, None, None, None];
+    let mut fpoints = Frontier::default();
+    for (pair_idx, choice) in format_pairs(arch, op, cfg).into_iter().enumerate() {
         if hooks.limiter.is_some_and(|l| l.exhausted()) {
             break;
         }
@@ -556,28 +977,77 @@ fn cosearch_op_sharded(
         arena.rebuild(&en, &cfg.mapper, |tiles, spatial| {
             tiles_are_legal(arch, tiles, spatial, &ratios)
         });
-        let ps = PairSearch { arena: &arena, op, cfg, ratios: &ratios, limiter: hooks.limiter };
-        let found = map_search(&mut ctxs, &ps, tel);
-        if let Some((mapping, report, v)) = found {
-            if best.as_ref().map(|b| v < b.metric_value).unwrap_or(true) {
-                best = Some(OpDesign {
-                    op_name: op.name.clone(),
-                    input_format: choice.input.format.clone(),
-                    weight_format: choice.weight.format.clone(),
-                    input_bits: choice.input_bits,
-                    weight_bits: choice.weight_bits,
-                    mapping,
-                    report,
-                    metric_value: v,
-                    count: op.count,
-                });
+        let bf = build_best_first(&arena, &ctxs[0], op, &ratios, cfg);
+        let ps = PairSearch {
+            arena: &arena,
+            op,
+            cfg,
+            ratios: &ratios,
+            limiter: hooks.limiter,
+            perm: bf.as_ref().map(|(_, p)| p.as_slice()),
+            bounds: bf.as_ref().map(|(b, _)| b.as_slice()),
+            pair_idx: pair_idx as u64,
+        };
+        if frontier_mode {
+            if let Some(fo) = map_search_frontier(&mut ctxs, &ps, tel) {
+                for (mi, w) in fo.winners.into_iter().enumerate() {
+                    let Some((mapping, report, v)) = w else { continue };
+                    // First-pair-wins on exact ties — the scalar rule.
+                    if fbest[mi].as_ref().map(|b| v < b.metric_value).unwrap_or(true) {
+                        fbest[mi] = Some(OpDesign {
+                            op_name: op.name.clone(),
+                            input_format: choice.input.format.clone(),
+                            weight_format: choice.weight.format.clone(),
+                            input_bits: choice.input_bits,
+                            weight_bits: choice.weight_bits,
+                            mapping,
+                            report,
+                            metric_value: v,
+                            count: op.count,
+                        });
+                    }
+                }
+                fpoints.merge(&fo.points);
+            }
+        } else {
+            let found = map_search(&mut ctxs, &ps, tel);
+            if let Some((mapping, report, v)) = found {
+                if best.as_ref().map(|b| v < b.metric_value).unwrap_or(true) {
+                    best = Some(OpDesign {
+                        op_name: op.name.clone(),
+                        input_format: choice.input.format.clone(),
+                        weight_format: choice.weight.format.clone(),
+                        input_bits: choice.input_bits,
+                        weight_bits: choice.weight_bits,
+                        mapping,
+                        report,
+                        metric_value: v,
+                        count: op.count,
+                    });
+                }
             }
         }
     }
     for ctx in &ctxs {
         tel.absorb(ctx);
     }
-    best
+    if frontier_mode {
+        tel.frontier_size += fpoints.len() as u64;
+        // The workload-level design list carries the primary-metric
+        // (energy) winner; the full per-metric set travels alongside.
+        let primary = fbest[0].clone();
+        (primary, Some(OpFrontier { winners: fbest, points: fpoints }))
+    } else {
+        (best, None)
+    }
+}
+
+/// Frontier-mode payload of one op's co-search: per-scalar-metric
+/// winners (each bit-identical to an independent scalar search of that
+/// metric) plus the op's retained Pareto points.
+pub(crate) struct OpFrontier {
+    winners: [Option<OpDesign>; 4],
+    points: Frontier,
 }
 
 /// Progressive co-search for one operator.  Returns `None` only if no
@@ -598,6 +1068,7 @@ pub fn cosearch_op(
         tel,
         SearchHooks::default(),
     )
+    .0
 }
 
 /// Split `threads` between op-level workers and a per-op proto-shard
@@ -627,12 +1098,13 @@ fn collect_workload(
     arch: &Accelerator,
     w: &Workload,
     start: Instant,
-    per_op: Vec<(Option<OpDesign>, SearchTelemetry)>,
+    per_op: Vec<(Option<OpDesign>, Option<OpFrontier>, SearchTelemetry)>,
     limiter: Option<&SearchLimiter>,
 ) -> Result<WorkloadResult> {
     let mut tel = SearchTelemetry::default();
     let mut designs = Vec::with_capacity(w.ops.len());
-    for (i, (d, t)) in per_op.into_iter().enumerate() {
+    let mut fres: Option<FrontierResult> = None;
+    for (i, (d, f, t)) in per_op.into_iter().enumerate() {
         tel.merge(t);
         match d {
             Some(d) => designs.push(d),
@@ -645,6 +1117,24 @@ fn collect_workload(
                 None => bail!("no legal mapping for op {} on {}", w.ops[i].name, arch.name),
             },
         }
+        if let Some(f) = f {
+            let fr = fres.get_or_insert_with(FrontierResult::default);
+            for (mi, wd) in f.winners.into_iter().enumerate() {
+                match wd {
+                    Some(wd) => fr.winners[mi].push(wd),
+                    // Unreachable when the primary design above exists
+                    // (the first descended proto serves all metrics),
+                    // but fail loudly rather than silently dropping a
+                    // metric column.
+                    None => bail!(
+                        "frontier search lost the {:?} winner for op {}",
+                        Metric::SCALARS[mi],
+                        w.ops[i].name
+                    ),
+                }
+            }
+            fr.op_points.push((w.ops[i].name.clone(), f.points.points().to_vec()));
+        }
     }
     Ok(WorkloadResult {
         workload: w.name.clone(),
@@ -654,6 +1144,10 @@ fn collect_workload(
         cache: tel.cache,
         protos: tel.protos,
         pruned: tel.pruned,
+        pruned_by_metric: tel.pruned_by_metric,
+        bound_tightenings: tel.bound_tightenings,
+        frontier_size: tel.frontier_size,
+        frontier: fres,
     })
 }
 
@@ -672,8 +1166,8 @@ pub fn try_cosearch_workload(
     let (workers, shard_plan) = split_threads(pool::resolve_threads(cfg.threads), w.ops.len());
     let per_op = pool::parallel_map(workers, &w.ops, |i, op| {
         let mut tel = SearchTelemetry::default();
-        let d = cosearch_op_sharded(arch, op, cfg, shard_plan[i], &mut tel, hooks);
-        (d, tel)
+        let (d, f) = cosearch_op_sharded(arch, op, cfg, shard_plan[i], &mut tel, hooks);
+        (d, f, tel)
     });
     collect_workload(arch, w, start, per_op, hooks.limiter)
 }
@@ -725,7 +1219,17 @@ pub fn evaluate_with_formats(
             tiles_are_legal(arch, tiles, spatial, &ratios)
         });
         let mut tel = SearchTelemetry::default();
-        let ps = PairSearch { arena: &arena, op, cfg, ratios: &ratios, limiter: None };
+        let bf = build_best_first(&arena, &ctxs[0], op, &ratios, cfg);
+        let ps = PairSearch {
+            arena: &arena,
+            op,
+            cfg,
+            ratios: &ratios,
+            limiter: None,
+            perm: bf.as_ref().map(|(_, p)| p.as_slice()),
+            bounds: bf.as_ref().map(|(b, _)| b.as_slice()),
+            pair_idx: 0,
+        };
         let found = map_search(&mut ctxs, &ps, &mut tel);
         for ctx in &ctxs {
             tel.absorb(ctx);
@@ -741,7 +1245,7 @@ pub fn evaluate_with_formats(
             metric_value: v,
             count: op.count,
         });
-        (design, tel)
+        (design, None::<OpFrontier>, tel)
     });
     collect_workload(arch, w, start, per_op, None).unwrap_or_else(|e| panic!("{e}"))
 }
@@ -824,7 +1328,7 @@ mod tests {
             dims: ProblemDims::new(64, 64, 64),
             spec: SparsitySpec {
                 input: SparsityPattern::Dense,
-                weight: SparsityPattern::NM { n: 2, m: 4 },
+                weight: SparsityPattern::Nm { n: 2, m: 4 },
             },
             count: 1,
         };

@@ -36,6 +36,16 @@
 //! are line-atomic in practice but a crash mid-write can truncate the
 //! final line, so the loader tolerates (drops) a malformed *last* line
 //! while rejecting corruption anywhere else.
+//!
+//! Append-only files accumulate duplicate lines when several processes
+//! share a store (each appends entries the others already wrote; the
+//! loader keeps the last copy, and all copies are byte-identical
+//! because counts for a key are unique and the renderer is
+//! deterministic).  [`MemoStore::flush`] therefore auto-compacts: when
+//! the dead (duplicate) bytes exceed twice the live bytes it rewrites
+//! the file as header + one line per live entry in ascending key order
+//! — a canonical form, so compaction is idempotent.  [`MemoStore::compact`]
+//! forces the same rewrite unconditionally.
 
 use crate::arch::Accelerator;
 use crate::config::snapshot;
@@ -89,6 +99,13 @@ struct Inner {
     /// Entries inserted since the last [`MemoStore::flush`], in insert
     /// order — the append-mode write set.
     pending: Vec<(u128, AccessCounts)>,
+    /// Entry-line bytes currently in the backing file (header excluded).
+    file_bytes: usize,
+    /// Entry-line bytes of the live (deduplicated) entries.  Duplicate
+    /// lines for a key are byte-identical (counts for a key are unique
+    /// and the renderer is deterministic), so the file's dead bytes are
+    /// exactly `file_bytes - live_bytes`.
+    live_bytes: usize,
 }
 
 impl MemoStore {
@@ -99,7 +116,7 @@ impl MemoStore {
         let mut inner = Inner::default();
         match std::fs::read_to_string(path) {
             Ok(text) => {
-                load_entries(&text, &mut inner.map)
+                load_entries(&text, &mut inner)
                     .with_context(|| format!("memo store {}", path.display()))?;
             }
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
@@ -140,34 +157,94 @@ impl MemoStore {
     /// Append all pending entries to the backing file (creating it with
     /// the header if needed) and clear the write set.  Returns how many
     /// entries were written; an in-memory store just drains.
+    ///
+    /// After appending, auto-compacts: when the file's dead (duplicate)
+    /// bytes exceed twice its live bytes — left behind by earlier
+    /// appends from other processes sharing the store — the file is
+    /// rewritten from the deduplicated in-memory map (see [`compact`]).
+    ///
+    /// [`compact`]: MemoStore::compact
     pub fn flush(&self) -> Result<usize> {
         let pending: Vec<(u128, AccessCounts)> = {
             let mut inner = self.inner.lock().unwrap();
             std::mem::take(&mut inner.pending)
         };
         let Some(path) = &self.path else { return Ok(pending.len()) };
-        if pending.is_empty() {
-            return Ok(0);
-        }
-        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
-            std::fs::create_dir_all(dir)
+        let mut appended = 0usize;
+        if !pending.is_empty() {
+            if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("memo store {}", path.display()))?;
+            }
+            let mut out = String::new();
+            if !path.exists() {
+                out.push_str(&format!("{}\n", header_json()));
+            }
+            let header_len = out.len();
+            for (key, ac) in &pending {
+                out.push_str(&format!("{}\n", entry_json(*key, ac)));
+            }
+            appended = out.len() - header_len;
+            std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .and_then(|mut f| f.write_all(out.as_bytes()))
                 .with_context(|| format!("memo store {}", path.display()))?;
         }
-        let mut out = String::new();
-        if !path.exists() {
-            out.push_str(&format!("{}\n", header_json()));
+        // Account the new lines (all fresh keys: `insert` only queues a
+        // key the map had never seen) and compact if dead bytes dominate.
+        let mut inner = self.inner.lock().unwrap();
+        inner.file_bytes += appended;
+        inner.live_bytes += appended;
+        if inner.file_bytes - inner.live_bytes > 2 * inner.live_bytes {
+            rewrite_file(path, &mut inner)?;
         }
-        for (key, ac) in &pending {
-            out.push_str(&format!("{}\n", entry_json(*key, ac)));
-        }
-        std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(path)
-            .and_then(|mut f| f.write_all(out.as_bytes()))
-            .with_context(|| format!("memo store {}", path.display()))?;
         Ok(pending.len())
     }
+
+    /// Rewrite the backing file as header + one line per live entry in
+    /// ascending key order, dropping every duplicate line earlier
+    /// appends (this process's or another's) left behind.  The output
+    /// is canonical, so compacting twice is byte-identical — and a
+    /// compacted store reloads to exactly the same map.  A no-op for
+    /// in-memory stores.
+    ///
+    /// Entries another process appended after our last load are not in
+    /// our map and are dropped from the file; that only costs a future
+    /// recompute (the store is a pure cache), never correctness.
+    pub fn compact(&self) -> Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        let mut inner = self.inner.lock().unwrap();
+        rewrite_file(path, &mut inner)
+    }
+}
+
+/// The compaction rewrite shared by [`MemoStore::flush`] and
+/// [`MemoStore::compact`]: canonical contents, written to a sibling temp
+/// file and renamed into place so a crash never tears the store.
+/// Pending entries land in the rewrite, so the write set is cleared.
+fn rewrite_file(path: &Path, inner: &mut Inner) -> Result<()> {
+    let mut keys: Vec<u128> = inner.map.keys().copied().collect();
+    keys.sort_unstable();
+    let mut out = format!("{}\n", header_json());
+    let mut live = 0usize;
+    for k in keys {
+        let line = format!("{}\n", entry_json(k, &inner.map[&k]));
+        live += line.len();
+        out.push_str(&line);
+    }
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir).with_context(|| format!("memo store {}", path.display()))?;
+    }
+    let tmp = path.with_extension("compact-tmp");
+    std::fs::write(&tmp, out.as_bytes())
+        .and_then(|()| std::fs::rename(&tmp, path))
+        .with_context(|| format!("memo store {}", path.display()))?;
+    inner.pending.clear();
+    inner.file_bytes = live;
+    inner.live_bytes = live;
+    Ok(())
 }
 
 impl CountsMemo for MemoStore {
@@ -265,7 +342,7 @@ fn entry_from(v: &Json) -> Result<(u128, AccessCounts)> {
 /// malformed **final** line (torn append) is dropped; corruption
 /// anywhere else is an error — silently skipping mid-file lines would
 /// mask real damage.
-fn load_entries(text: &str, map: &mut HashMap<u128, AccessCounts>) -> Result<()> {
+fn load_entries(text: &str, inner: &mut Inner) -> Result<()> {
     let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
     let Some((first, rest)) = lines.split_first() else { return Ok(()) };
     let header = Json::parse(first).map_err(|e| anyhow!("bad header line: {e}"))?;
@@ -283,7 +360,13 @@ fn load_entries(text: &str, map: &mut HashMap<u128, AccessCounts>) -> Result<()>
             .and_then(|v| entry_from(&v).map_err(|e| anyhow!("line {}: {e}", i + 2)));
         match parsed {
             Ok((key, ac)) => {
-                map.insert(key, ac);
+                // Duplicate lines for a key are byte-identical, so only
+                // the first occurrence counts toward the live bytes.
+                let bytes = line.len() + 1;
+                inner.file_bytes += bytes;
+                if inner.map.insert(key, ac).is_none() {
+                    inner.live_bytes += bytes;
+                }
             }
             Err(_) if last => {} // torn final append — drop it
             Err(e) => return Err(e),
@@ -368,6 +451,65 @@ mod tests {
         assert!(MemoStore::open(&path).unwrap_err().to_string().contains("snipsnap_memo"));
         std::fs::write(&path, "{\"snipsnap_memo\":99}\n").unwrap();
         assert!(MemoStore::open(&path).unwrap_err().to_string().contains("schema"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compaction_dedupes_sorts_and_round_trips() {
+        let path = tmp("compact");
+        let _ = std::fs::remove_file(&path);
+        // Four copies of the same entries, the way concurrent processes
+        // leave a shared file (keys written in descending order to prove
+        // the rewrite canonicalizes).  Dead = 3x live > 2x live.
+        let entries: String = (0..8u128)
+            .rev()
+            .map(|k| format!("{}\n", entry_json(k, &counts(k as f64 + 0.5))))
+            .collect();
+        std::fs::write(&path, format!("{}\n{entries}{entries}{entries}{entries}", header_json()))
+            .unwrap();
+        let store = MemoStore::open(&path).unwrap();
+        assert_eq!(store.len(), 8);
+        // flush with nothing pending still auto-compacts past threshold.
+        assert_eq!(store.flush().unwrap(), 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let canonical: String = std::iter::once(format!("{}\n", header_json()))
+            .chain((0..8u128).map(|k| format!("{}\n", entry_json(k, &counts(k as f64 + 0.5)))))
+            .collect();
+        assert_eq!(text, canonical, "header + live entries in ascending key order");
+        // Round trip: the compacted file reloads to the same map.
+        let re = MemoStore::open(&path).unwrap();
+        assert_eq!(re.len(), 8);
+        for k in 0..8u128 {
+            assert_eq!(re.get(k), Some(counts(k as f64 + 0.5)), "{k}");
+        }
+        // Idempotence: compacting a compacted store is byte-identical.
+        re.compact().unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), canonical);
+        re.compact().unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), canonical);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compaction_threshold_spares_append_only_files() {
+        let path = tmp("compact_threshold");
+        let _ = std::fs::remove_file(&path);
+        // Three copies: dead == 2x live, NOT over the threshold — the
+        // flush must leave the file byte-identical (append-only wins
+        // until duplication actually dominates).
+        let entries: String =
+            (0..4u128).map(|k| format!("{}\n", entry_json(k, &counts(k as f64)))).collect();
+        let text = format!("{}\n{entries}{entries}{entries}", header_json());
+        std::fs::write(&path, &text).unwrap();
+        let store = MemoStore::open(&path).unwrap();
+        assert_eq!(store.flush().unwrap(), 0);
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), text);
+        // New inserts append, then the accounting still holds.
+        store.insert(100, &counts(7.0));
+        assert_eq!(store.flush().unwrap(), 1);
+        let re = MemoStore::open(&path).unwrap();
+        assert_eq!(re.len(), 5);
+        assert_eq!(re.get(100), Some(counts(7.0)));
         let _ = std::fs::remove_file(&path);
     }
 

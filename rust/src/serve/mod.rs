@@ -184,7 +184,8 @@ impl SearchResponse {
     pub fn wire_json(&self) -> Json {
         let id = self.id.as_deref().map(Json::str).unwrap_or(Json::Null);
         match &self.result {
-            Ok(r) => Json::obj(vec![
+            Ok(r) => {
+                let mut rows = vec![
                 ("snipsnap_response", Json::num(RESPONSE_VERSION as f64)),
                 ("id", id),
                 ("ok", Json::Bool(true)),
@@ -214,7 +215,30 @@ impl SearchResponse {
                         ("edp", Json::num(r.edp())),
                     ]),
                 ),
-            ]),
+                ];
+                // Frontier runs add the Pareto summary: the point count
+                // and each per-metric winner's total.  All deterministic
+                // for a fixed request (the request pins threads/prune),
+                // so replays stay byte-identical.
+                if let Some(f) = &r.frontier {
+                    rows.push((
+                        "frontier",
+                        Json::obj(vec![
+                            ("points", Json::num(f.total_points() as f64)),
+                            (
+                                "winners",
+                                Json::obj(vec![
+                                    ("energy_pj", Json::num(f.winner_total(0))),
+                                    ("memory_energy_pj", Json::num(f.winner_total(1))),
+                                    ("cycles", Json::num(f.winner_total(2))),
+                                    ("edp", Json::num(f.winner_total(3))),
+                                ]),
+                            ),
+                        ]),
+                    ));
+                }
+                Json::obj(rows)
+            }
             Err(msg) => Json::obj(vec![
                 ("snipsnap_response", Json::num(RESPONSE_VERSION as f64)),
                 ("id", id),

@@ -80,8 +80,8 @@ pub fn operands_from_ne(format: &Format, ne: &[f64]) -> CostOperands {
         // The XLA scorer has no delimiter flag; an undelimited CP level
         // shares RLE's (children + parents) * width formula, so pack it
         // with the RLE kind id.
-        let kind = if matches!(l.prim, Prim::CP) && !level_is_delimited(format, i) {
-            Prim::RLE.kind_id()
+        let kind = if matches!(l.prim, Prim::Cp) && !level_is_delimited(format, i) {
+            Prim::Rle.kind_id()
         } else {
             l.prim.kind_id()
         };
@@ -119,12 +119,12 @@ pub fn level_metadata_bits(
     match prim {
         Prim::None => 0.0,
         Prim::B => parents * fanout,
-        Prim::CP => {
+        Prim::Cp => {
             let count_field = if delimited { 0.0 } else { parents * width };
             children * width + count_field
         }
-        Prim::RLE => (children + parents) * width,
-        Prim::UOP => parents * (fanout + 1.0) * width,
+        Prim::Rle => (children + parents) * width,
+        Prim::Uop => parents * (fanout + 1.0) * width,
         Prim::Custom { bits_per_parent, bits_per_child, .. } => {
             parents * bits_per_parent + children * bits_per_child
         }
@@ -133,7 +133,7 @@ pub fn level_metadata_bits(
 
 /// Is level `i` of `format` delimited by its enclosing level?
 pub fn level_is_delimited(format: &Format, i: usize) -> bool {
-    i > 0 && matches!(format.levels[i - 1].prim, Prim::UOP)
+    i > 0 && matches!(format.levels[i - 1].prim, Prim::Uop)
 }
 
 /// Full format cost from a non-empty-count vector, with the payload

@@ -22,7 +22,7 @@ pub enum SparsityPattern {
     Unstructured { density: f64 },
     /// N:M structured sparsity along the column axis: exactly `n` non-zeros
     /// per aligned group of `m` (e.g. 2:4).
-    NM { n: u32, m: u32 },
+    Nm { n: u32, m: u32 },
     /// Block sparsity: the tensor is tiled into `br x bc` blocks; each
     /// block is entirely non-zero with probability `block_density`.
     Block { br: u64, bc: u64, block_density: f64 },
@@ -35,7 +35,7 @@ impl SparsityPattern {
     pub fn density(&self) -> f64 {
         match *self {
             SparsityPattern::Unstructured { density } => density,
-            SparsityPattern::NM { n, m } => n as f64 / m as f64,
+            SparsityPattern::Nm { n, m } => n as f64 / m as f64,
             SparsityPattern::Block { block_density, .. } => block_density,
             SparsityPattern::Dense => 1.0,
         }
@@ -57,7 +57,7 @@ impl SparsityPattern {
             SparsityPattern::Unstructured { density } => {
                 p_nonempty_iid(density, (gr as f64) * (gc as f64))
             }
-            SparsityPattern::NM { n, m } => {
+            SparsityPattern::Nm { n, m } => {
                 if n == 0 {
                     return 0.0;
                 }
@@ -128,7 +128,7 @@ mod tests {
     #[test]
     fn densities() {
         assert_eq!(SparsityPattern::Dense.density(), 1.0);
-        assert_eq!(SparsityPattern::NM { n: 2, m: 4 }.density(), 0.5);
+        assert_eq!(SparsityPattern::Nm { n: 2, m: 4 }.density(), 0.5);
         assert_eq!(
             SparsityPattern::Block { br: 2, bc: 2, block_density: 0.3 }.density(),
             0.3
@@ -145,7 +145,7 @@ mod tests {
 
     #[test]
     fn nm_region_probability() {
-        let p = SparsityPattern::NM { n: 2, m: 4 };
+        let p = SparsityPattern::Nm { n: 2, m: 4 };
         // Full group always non-empty.
         assert_eq!(p.p_region_nonempty(1, 4), 1.0);
         assert_eq!(p.p_region_nonempty(3, 8), 1.0);
@@ -154,7 +154,7 @@ mod tests {
         // Two of four slots: P(empty) = C(2,2)/C(4,2) = 1/6.
         assert!((p.p_region_nonempty(1, 2) - (1.0 - 1.0 / 6.0)).abs() < 1e-12);
         // 1:4 single element: P = 1/4.
-        let p14 = SparsityPattern::NM { n: 1, m: 4 };
+        let p14 = SparsityPattern::Nm { n: 1, m: 4 };
         assert!((p14.p_region_nonempty(1, 1) - 0.25).abs() < 1e-12);
     }
 
@@ -182,7 +182,7 @@ mod tests {
 
     #[test]
     fn nm_monotone_in_region_size() {
-        let p = SparsityPattern::NM { n: 2, m: 8 };
+        let p = SparsityPattern::Nm { n: 2, m: 8 };
         let mut last = 0.0;
         for gc in 1..=8 {
             let v = p.p_region_nonempty(1, gc);

@@ -25,7 +25,7 @@ pub fn sample_mask(pattern: &SparsityPattern, rows: u64, cols: u64, seed: u64) -
             }
             m
         }
-        SparsityPattern::NM { n, m } => {
+        SparsityPattern::Nm { n, m } => {
             assert!(cols % m as u64 == 0, "cols {cols} not divisible by m {m}");
             let mut mask = DenseMask::new(rows, cols);
             let mut slots: Vec<u32> = (0..m).collect();
@@ -72,7 +72,7 @@ mod tests {
 
     #[test]
     fn nm_is_exact() {
-        let p = SparsityPattern::NM { n: 2, m: 4 };
+        let p = SparsityPattern::Nm { n: 2, m: 4 };
         let mask = sample_mask(&p, 64, 64, 9);
         assert_eq!(mask.nnz(), 64 * 64 / 2);
         // Every aligned group of 4 holds exactly 2.

@@ -419,7 +419,7 @@ pub fn weight_nm_variant(mut w: Workload, n: u32, m: u32) -> Workload {
         }
         let d = op.spec.weight.density();
         op.spec.weight = if d < 1.0 {
-            SparsityPattern::NM { n, m }
+            SparsityPattern::Nm { n, m }
         } else {
             SparsityPattern::Dense
         };
@@ -540,7 +540,7 @@ mod tests {
                 // K/V operands are activations, not weights: untouched.
                 assert_eq!(op.spec.weight, base_op.spec.weight, "{}", op.name);
             } else if base_op.spec.weight.density() < 1.0 {
-                assert_eq!(op.spec.weight, SparsityPattern::NM { n: 2, m: 4 }, "{}", op.name);
+                assert_eq!(op.spec.weight, SparsityPattern::Nm { n: 2, m: 4 }, "{}", op.name);
             } else {
                 assert_eq!(op.spec.weight, SparsityPattern::Dense, "{}", op.name);
             }
@@ -555,6 +555,6 @@ mod tests {
         let av = w.ops.iter().find(|o| o.name.ends_with("/av")).unwrap();
         assert_eq!(av.spec.weight, SparsityPattern::Unstructured { density: 0.9 });
         let qkv = w.ops.iter().find(|o| o.name.contains("/qkv")).unwrap();
-        assert_eq!(qkv.spec.weight, SparsityPattern::NM { n: 2, m: 4 });
+        assert_eq!(qkv.spec.weight, SparsityPattern::Nm { n: 2, m: 4 });
     }
 }

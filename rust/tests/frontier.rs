@@ -1,0 +1,237 @@
+//! Frontier-mode differential correctness: one `--metric frontier`
+//! arena pass must reproduce, **bit for bit**, the winners of four
+//! independent scalar searches (energy / memory-energy / latency /
+//! EDP) — across thread counts, prune on/off and both cost backends —
+//! while spending strictly fewer cost-model evaluations than the four
+//! passes combined (serially, with identical prune decisions).
+//!
+//! Also pinned here: the best-first proto ordering is telemetry-only
+//! (designs, scores and frontier winners are bit-identical with it on
+//! or off), and with pruning off the retained Pareto points themselves
+//! are thread-invariant.
+
+use snipsnap::arch::presets;
+use snipsnap::cost::{ContentionParams, CostModel, Metric};
+use snipsnap::dataflow::mapper::MapperConfig;
+use snipsnap::search::{cosearch_workload, FormatMode, OpDesign, SearchConfig, WorkloadResult};
+use snipsnap::workload::llm;
+
+fn reduced_llm() -> snipsnap::workload::Workload {
+    llm::opt_125m(llm::Phase::prefill_only(64))
+}
+
+fn backends() -> [CostModel; 2] {
+    [CostModel::Analytical, CostModel::Contention(ContentionParams::default())]
+}
+
+fn cfg(
+    metric: Metric,
+    threads: usize,
+    prune: bool,
+    best_first: bool,
+    cost: CostModel,
+) -> SearchConfig {
+    SearchConfig {
+        mode: FormatMode::Fixed,
+        metric,
+        threads,
+        prune,
+        best_first,
+        cost,
+        mapper: MapperConfig { max_candidates: 600, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Design lists equal bit for bit (telemetry intentionally ignored).
+fn assert_design_lists_identical(a: &[OpDesign], b: &[OpDesign], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: design count diverged");
+    for (da, db) in a.iter().zip(b) {
+        assert_eq!(da.op_name, db.op_name, "{what}");
+        assert_eq!(da.mapping, db.mapping, "{what}: {} mappings diverged", da.op_name);
+        assert_eq!(
+            da.metric_value.to_bits(),
+            db.metric_value.to_bits(),
+            "{what}: {} values diverged ({} vs {})",
+            da.op_name,
+            da.metric_value,
+            db.metric_value
+        );
+        assert_eq!(da.input_format.to_string(), db.input_format.to_string(), "{what}");
+        assert_eq!(da.weight_format.to_string(), db.weight_format.to_string(), "{what}");
+        assert_eq!(da.input_bits, db.input_bits, "{what}");
+        assert_eq!(da.weight_bits, db.weight_bits, "{what}");
+        assert_eq!(da.report, db.report, "{what}: {} reports diverged", da.op_name);
+        assert_eq!(da.count, db.count, "{what}");
+    }
+}
+
+/// Four independent scalar searches — the reference the frontier pass
+/// must reproduce exactly.
+fn solo_references(
+    arch: &snipsnap::arch::Accelerator,
+    w: &snipsnap::workload::Workload,
+    cost: CostModel,
+) -> Vec<WorkloadResult> {
+    Metric::SCALARS
+        .iter()
+        .map(|&m| cosearch_workload(arch, w, &cfg(m, 1, true, true, cost)))
+        .collect()
+}
+
+#[test]
+fn frontier_winners_match_independent_scalar_searches() {
+    let arch = presets::arch3();
+    let w = reduced_llm();
+    for cost in backends() {
+        let solo = solo_references(&arch, &w, cost);
+        for threads in [1usize, 3, 4] {
+            for prune in [false, true] {
+                let what = format!("{cost} threads={threads} prune={prune}");
+                let r = cosearch_workload(
+                    &arch,
+                    &w,
+                    &cfg(Metric::Frontier, threads, prune, true, cost),
+                );
+                let f = r.frontier.as_ref().unwrap_or_else(|| panic!("{what}: no frontier"));
+                for (mi, s) in solo.iter().enumerate() {
+                    assert_design_lists_identical(
+                        &f.winners[mi],
+                        &s.designs,
+                        &format!("{what} metric={:?}", Metric::SCALARS[mi]),
+                    );
+                }
+                // The result's primary designs ARE the energy winners.
+                assert_design_lists_identical(&r.designs, &f.winners[0], &what);
+                assert!(r.frontier_size as usize >= w.ops.len(), "{what}: frontier too small");
+                assert_eq!(r.frontier_size, f.total_points(), "{what}");
+                if !prune {
+                    assert_eq!(r.pruned, 0, "{what}: prune=false must never prune");
+                    assert_eq!(r.pruned_by_metric, [0; 4], "{what}");
+                    assert_eq!(r.bound_tightenings, 0, "{what}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn frontier_winners_match_in_format_search_mode() {
+    // Same differential with the format pair loop live: the per-metric
+    // first-pair-wins rule must match each solo search's pair choice.
+    let arch = presets::arch3();
+    let w = reduced_llm();
+    let cost = CostModel::Analytical;
+    let mk = |metric, threads| SearchConfig {
+        mode: FormatMode::Search,
+        ..cfg(metric, threads, true, true, cost)
+    };
+    let solo: Vec<WorkloadResult> =
+        Metric::SCALARS.iter().map(|&m| cosearch_workload(&arch, &w, &mk(m, 1))).collect();
+    for threads in [1usize, 3] {
+        let r = cosearch_workload(&arch, &w, &mk(Metric::Frontier, threads));
+        let f = r.frontier.as_ref().expect("frontier mode returns a frontier");
+        for (mi, s) in solo.iter().enumerate() {
+            assert_design_lists_identical(
+                &f.winners[mi],
+                &s.designs,
+                &format!("search-mode threads={threads} metric={:?}", Metric::SCALARS[mi]),
+            );
+        }
+    }
+}
+
+#[test]
+fn best_first_ordering_is_telemetry_only() {
+    let arch = presets::arch3();
+    let w = reduced_llm();
+    let cost = CostModel::Analytical;
+    // Scalar search: designs identical with the ordering on or off, at
+    // serial and sharded thread counts, prune on or off (off makes the
+    // ordering inert by construction — also covered).
+    for metric in [Metric::Energy, Metric::Edp] {
+        for threads in [1usize, 3] {
+            for prune in [false, true] {
+                let off = cosearch_workload(&arch, &w, &cfg(metric, threads, prune, false, cost));
+                let on = cosearch_workload(&arch, &w, &cfg(metric, threads, prune, true, cost));
+                let what = format!("{metric:?} threads={threads} prune={prune}");
+                assert_design_lists_identical(&off.designs, &on.designs, &what);
+                if !prune {
+                    // Inert: with pruning off the permutation is never
+                    // built, so even the telemetry matches.
+                    assert_eq!(off.evaluations, on.evaluations, "{what}");
+                    assert_eq!(off.pruned, on.pruned, "{what}");
+                }
+            }
+        }
+    }
+    // Frontier search: all four winner lists and the Pareto points are
+    // bit-identical with the ordering on or off.
+    for threads in [1usize, 3] {
+        let off = cosearch_workload(&arch, &w, &cfg(Metric::Frontier, threads, true, false, cost));
+        let on = cosearch_workload(&arch, &w, &cfg(Metric::Frontier, threads, true, true, cost));
+        let (fo, fn_) = (off.frontier.as_ref().unwrap(), on.frontier.as_ref().unwrap());
+        for mi in 0..4 {
+            assert_design_lists_identical(
+                &fo.winners[mi],
+                &fn_.winners[mi],
+                &format!("frontier threads={threads} metric={:?}", Metric::SCALARS[mi]),
+            );
+        }
+    }
+}
+
+#[test]
+fn frontier_points_are_thread_invariant_without_pruning() {
+    // With pruning off every proto descends every metric, so the point
+    // stream is a pure function of the arena — the retained Pareto sets
+    // must match across thread counts exactly.
+    let arch = presets::arch3();
+    let w = reduced_llm();
+    let cost = CostModel::Analytical;
+    let base = cosearch_workload(&arch, &w, &cfg(Metric::Frontier, 1, false, true, cost));
+    let fb = base.frontier.as_ref().unwrap();
+    for threads in [3usize, 4] {
+        let r = cosearch_workload(&arch, &w, &cfg(Metric::Frontier, threads, false, true, cost));
+        let f = r.frontier.as_ref().unwrap();
+        assert_eq!(fb.op_points.len(), f.op_points.len());
+        for ((na, pa), (nb, pb)) in fb.op_points.iter().zip(&f.op_points) {
+            assert_eq!(na, nb, "op order diverged at {threads} threads");
+            assert_eq!(pa.len(), pb.len(), "{na}: point count diverged at {threads} threads");
+            for (a, b) in pa.iter().zip(pb) {
+                assert_eq!(a.id, b.id, "{na}: point ids diverged at {threads} threads");
+                for mi in 0..4 {
+                    assert_eq!(
+                        a.values[mi].to_bits(),
+                        b.values[mi].to_bits(),
+                        "{na}: point values diverged at {threads} threads"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn one_frontier_pass_beats_four_scalar_passes() {
+    // The headline claim: serially, with pruning on and the index-order
+    // visit (best_first off, so each metric's prune set is identical to
+    // its solo search's), the single frontier pass spends strictly
+    // fewer cost-model evaluations than the four scalar passes summed —
+    // the trial recorder shares every mapping the descents have in
+    // common.
+    let arch = presets::arch3();
+    let w = reduced_llm();
+    for cost in backends() {
+        let four_pass: u64 = Metric::SCALARS
+            .iter()
+            .map(|&m| cosearch_workload(&arch, &w, &cfg(m, 1, true, false, cost)).evaluations)
+            .sum();
+        let one_pass =
+            cosearch_workload(&arch, &w, &cfg(Metric::Frontier, 1, true, false, cost)).evaluations;
+        assert!(
+            one_pass < four_pass,
+            "{cost}: one-pass frontier spent {one_pass} evaluations vs {four_pass} for four passes"
+        );
+    }
+}

@@ -18,7 +18,7 @@ fn analytical_matches_sampled_ground_truth() {
         SparsityPattern::Unstructured { density: 0.05 },
         SparsityPattern::Unstructured { density: 0.3 },
         SparsityPattern::Unstructured { density: 0.8 },
-        SparsityPattern::NM { n: 2, m: 4 },
+        SparsityPattern::Nm { n: 2, m: 4 },
         // 8x8 blocks: 256 blocks keeps per-sample occupancy variance low
         // enough for a 5-sample mean comparison.
         SparsityPattern::Block { br: 8, bc: 8, block_density: 0.25 },

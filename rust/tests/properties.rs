@@ -195,7 +195,7 @@ fn sampler_matches_pattern_statistics() {
     run("sampler statistics", 15, |g| {
         let m_group = *g.choose(&[4u64, 8]);
         let n = g.u64_in(1, m_group - 1) as u32;
-        let pattern = SparsityPattern::NM { n, m: m_group as u32 };
+        let pattern = SparsityPattern::Nm { n, m: m_group as u32 };
         let mask = sample_mask(&pattern, 32, 64, g.rng.next_u64());
         let want = (n as f64 / m_group as f64) * 32.0 * 64.0;
         assert_eq!(mask.nnz() as f64, want);
@@ -255,6 +255,54 @@ fn greedy_ordering_not_worse_than_canonical() {
             best = best.min(Metric::Energy.of(&r));
         }
         assert!(best <= Metric::Energy.of(&c) + 1e-9);
+    });
+}
+
+/// The vector lower bound must (a) bound every scalar metric of every
+/// legal mapping from below on both cost backends, and (b) agree
+/// bit-for-bit with the scalar `lower_bound` of the matching context
+/// metric — the one-pass frontier prune is only sound if both hold.
+#[test]
+fn vector_lower_bound_bounds_every_metric_on_both_backends() {
+    run("lower_bound_vec sound + bit-equal to scalar", 12, |g| {
+        use snipsnap::cost::{CompressionRatios, CostModel, EvalContext, Metric};
+        use snipsnap::dataflow::tiles_of;
+        use snipsnap::sparsity::reduction::ReductionStrategy;
+        use snipsnap::sparsity::SparsitySpec;
+        let arch = snipsnap::arch::presets::arch3();
+        let p = ProblemDims::new(16, 16, 16);
+        let m = random_mapping(g, &p, arch.levels.len());
+        if m.validate(&p).is_err() {
+            return;
+        }
+        let spec = SparsitySpec::unstructured(g.f64_in(0.1, 1.0), g.f64_in(0.1, 1.0));
+        let ratios = CompressionRatios::DENSE;
+        let red = ReductionStrategy::NONE;
+        let factors: Vec<[u64; 3]> = m.levels.iter().map(|l| l.factors).collect();
+        let tiles: Vec<[u64; 3]> = tiles_of(&m).iter().copied().collect();
+        for model in [CostModel::Analytical, CostModel::Contention(Default::default())] {
+            let mut ctx = EvalContext::with_model(&arch, p, Metric::Energy, model);
+            let r = ctx.evaluate(&m, &spec, &red, &ratios);
+            let vec = ctx.lower_bound_vec(&factors, &tiles, m.spatial, &spec, &red, &ratios);
+            for (mi, metric) in Metric::SCALARS.iter().enumerate() {
+                let achieved = metric.of(&r);
+                assert!(
+                    vec[mi] <= achieved,
+                    "{model:?} {metric:?}: bound {} above achieved {achieved} for {m}",
+                    vec[mi]
+                );
+                // Bit-equality with the scalar bound of the same metric.
+                ctx.metric = *metric;
+                let scalar =
+                    ctx.lower_bound(&factors, &tiles, m.spatial, &spec, &red, &ratios);
+                assert_eq!(
+                    vec[mi].to_bits(),
+                    scalar.to_bits(),
+                    "{model:?} {metric:?}: vec {} != scalar {scalar}",
+                    vec[mi]
+                );
+            }
+        }
     });
 }
 

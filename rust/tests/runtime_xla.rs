@@ -30,7 +30,7 @@ fn xla_stats_match_native_analyzer() {
     let Some(mut rt) = runtime_or_skip() else { return };
     for pattern in [
         SparsityPattern::Unstructured { density: 0.2 },
-        SparsityPattern::NM { n: 2, m: 4 },
+        SparsityPattern::Nm { n: 2, m: 4 },
         SparsityPattern::Block { br: 32, bc: 32, block_density: 0.3 },
     ] {
         let mask = sample_mask(&pattern, 512, 512, 41);
@@ -71,7 +71,7 @@ fn xla_empirical_cost_matches_exact_for_aligned_formats() {
 fn xla_nm_conformance_flags_violations() {
     let Some(mut rt) = runtime_or_skip() else { return };
     // Conforming 2:4 tensor -> 0 violations.
-    let ok = sample_mask(&SparsityPattern::NM { n: 2, m: 4 }, 1024, 1024, 7);
+    let ok = sample_mask(&SparsityPattern::Nm { n: 2, m: 4 }, 1024, 1024, 7);
     let outs = rt
         .exec("nm_conformance_1024x1024_2_4", &[InputBuf::F32(&ok.to_f32())])
         .expect("exec");
