@@ -1,13 +1,15 @@
 //! Configuration system: a hand-rolled TOML-subset parser ([`toml`])
 //! plus typed loaders turning config files into [`Accelerator`]s,
-//! [`Workload`]s and search settings ([`typed`]), and the JSON
-//! run-config [`snapshot`] layer that makes every CLI run a replayable
-//! artifact.
+//! [`Workload`]s and search settings ([`typed`]), the JSON run-config
+//! [`snapshot`] layer that makes every CLI run a replayable artifact,
+//! and [`sweep`] plans expanding axis cross-products into ordered lists
+//! of run configs.
 //!
 //! [`Accelerator`]: crate::arch::Accelerator
 //! [`Workload`]: crate::workload::Workload
 
 pub mod snapshot;
+pub mod sweep;
 pub mod toml;
 pub mod typed;
 

@@ -1,0 +1,213 @@
+//! Sweep plans: a TOML cross-product of run-config axes, expanded to an
+//! ordered list of fully-resolved run configurations (docs/SWEEP.md).
+//!
+//! A plan is a normal run config (`[run]`/`[workload]`/`[search]`/
+//! `[cost]`/`[quant]` — the shared base every config starts from) plus
+//! a `[sweep]` header and `[[sweep.axis]]` tables:
+//!
+//! ```toml
+//! [run]
+//! arch = "arch3"
+//! mode = "fixed"
+//!
+//! [sweep]
+//! name = "scenarios"          # roll-up file stem; default "sweep"
+//!
+//! [[sweep.axis]]
+//! key = "workload"            # any key in AXIS_KEYS (CLI spellings)
+//! values = ["gqa-tiny", "moe-tiny"]
+//!
+//! [[sweep.axis]]
+//! key = "metric"
+//! values = ["energy", "frontier"]
+//! ```
+//!
+//! Expansion is the cross-product of the axes in file order, **first
+//! axis slowest** (odometer order), so the example yields
+//! `gqa-tiny×energy, gqa-tiny×frontier, moe-tiny×energy,
+//! moe-tiny×frontier` with ids `scenarios-0..scenarios-3` (zero-padded
+//! to a fixed width so ids sort lexicographically in plan order).  Each
+//! combination resolves through [`resolve_run_config`] with the axis
+//! values as [`RunOverrides`] — exactly the CLI-flag composition rules.
+//! The expansion order is a pure function of the plan text, which is
+//! half of the sweep-determinism argument (`crate::driver::sweep` has
+//! the other half).
+
+use super::toml::{TomlDoc, TomlValue};
+use super::typed::{resolve_run_config, RunConfig, RunOverrides};
+use crate::format::quant::BitwidthSpace;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// The sweepable axes, named by their CLI-flag spellings.
+pub const AXIS_KEYS: &[&str] = &[
+    "arch",
+    "workload",
+    "metric",
+    "mode",
+    "threads",
+    "cost-backend",
+    "w-bits",
+    "a-bits",
+    "kv-bits",
+];
+
+/// Hard cap on expanded configs — a typo'd axis must not OOM the
+/// coordinator building plans.
+pub const MAX_CONFIGS: usize = 100_000;
+
+/// One expanded sweep entry: its stable id and resolved config.
+pub struct SweepEntry {
+    /// `<name>-<index>`, zero-padded; also the per-config response id.
+    pub id: String,
+    pub run: RunConfig,
+}
+
+/// A loaded plan: the sweep name plus the expanded entries in
+/// deterministic plan order.
+pub struct SweepPlan {
+    pub name: String,
+    pub entries: Vec<SweepEntry>,
+}
+
+/// One parsed `[[sweep.axis]]`: the override key and its values.
+struct Axis {
+    key: String,
+    values: Vec<TomlValue>,
+}
+
+/// Parse a bitwidth axis value: a `"4,8,16"` string, an integer, or an
+/// array of integers.
+fn bits_space(key: &str, v: &TomlValue) -> Result<BitwidthSpace> {
+    match v {
+        TomlValue::Str(s) => {
+            BitwidthSpace::parse(s).map_err(|e| anyhow!("axis '{key}': {e}"))
+        }
+        TomlValue::Arr(a) => {
+            let bits = a
+                .iter()
+                .enumerate()
+                .map(|(i, x)| {
+                    x.as_u32()
+                        .ok_or_else(|| anyhow!("axis '{key}'[{i}] must be an integer"))
+                })
+                .collect::<Result<Vec<u32>>>()?;
+            BitwidthSpace::new(bits).map_err(|e| anyhow!("axis '{key}': {e}"))
+        }
+        other => {
+            let b = other
+                .as_u32()
+                .ok_or_else(|| anyhow!("axis '{key}' values must be widths"))?;
+            BitwidthSpace::new(vec![b]).map_err(|e| anyhow!("axis '{key}': {e}"))
+        }
+    }
+}
+
+/// Apply one axis value to the overrides under construction.
+fn apply_axis_value(ov: &mut RunOverrides, key: &str, v: &TomlValue) -> Result<()> {
+    let want_str = || {
+        v.as_str()
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("axis '{key}' values must be strings"))
+    };
+    match key {
+        "arch" => ov.arch = Some(want_str()?),
+        "workload" => ov.workload = Some(want_str()?),
+        "metric" => ov.metric = Some(want_str()?),
+        "mode" => ov.mode = Some(want_str()?),
+        "threads" => {
+            ov.threads = Some(
+                v.as_u64()
+                    .ok_or_else(|| anyhow!("axis 'threads' values must be integers"))?
+                    as usize,
+            )
+        }
+        "cost-backend" => ov.backend = Some(want_str()?),
+        "w-bits" => ov.w_bits = Some(bits_space(key, v)?),
+        "a-bits" => ov.a_bits = Some(bits_space(key, v)?),
+        "kv-bits" => ov.kv_bits = Some(bits_space(key, v)?),
+        other => bail!("unknown sweep axis '{other}' (one of {})", AXIS_KEYS.join(", ")),
+    }
+    Ok(())
+}
+
+/// Load and expand a sweep plan from TOML text.
+pub fn load_sweep_plan(src: &str) -> Result<SweepPlan> {
+    let doc = TomlDoc::parse(src).map_err(|e| anyhow!("{e}"))?;
+    expand_sweep(&doc)
+}
+
+/// Expand a parsed plan document: validate the axes, walk the
+/// cross-product in odometer order (first axis slowest), and resolve
+/// every combination into a [`SweepEntry`].
+pub fn expand_sweep(doc: &TomlDoc) -> Result<SweepPlan> {
+    let name = doc
+        .section("sweep")
+        .and_then(|s| s.get("name"))
+        .map(|v| {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("[sweep] name must be a string"))
+        })
+        .transpose()?
+        .unwrap_or_else(|| "sweep".to_string());
+    if name.is_empty()
+        || !name.chars().all(|c| c.is_ascii_alphanumeric() || "._-".contains(c))
+    {
+        bail!(
+            "[sweep] name '{name}' must be non-empty and use only \
+             letters, digits, '.', '_', '-' (it names the roll-up file)"
+        );
+    }
+
+    let mut axes: Vec<Axis> = Vec::new();
+    for (i, sec) in doc.array_of_tables("sweep.axis").iter().enumerate() {
+        let key = sec
+            .get("key")
+            .and_then(|v| v.as_str())
+            .with_context(|| format!("[[sweep.axis]] #{i}: 'key' must be a string"))?;
+        if !AXIS_KEYS.contains(&key) {
+            bail!(
+                "[[sweep.axis]] #{i}: unknown key '{key}' (one of {})",
+                AXIS_KEYS.join(", ")
+            );
+        }
+        if axes.iter().any(|a| a.key == key) {
+            bail!("[[sweep.axis]] #{i}: duplicate axis '{key}'");
+        }
+        let values = sec
+            .get("values")
+            .and_then(|v| v.as_arr())
+            .with_context(|| format!("[[sweep.axis]] #{i}: 'values' must be an array"))?;
+        if values.is_empty() {
+            bail!("[[sweep.axis]] #{i}: axis '{key}' has no values");
+        }
+        axes.push(Axis { key: key.to_string(), values: values.to_vec() });
+    }
+
+    let total: usize = axes.iter().map(|a| a.values.len()).product();
+    if total > MAX_CONFIGS {
+        bail!("sweep expands to {total} configs, above the {MAX_CONFIGS} cap");
+    }
+    // Zero-pad ids to the widest index so lexicographic order == plan
+    // order (stable filenames, stable report rows).
+    let width = (total.max(1) - 1).to_string().len();
+    let mut entries = Vec::with_capacity(total.max(1));
+    for idx in 0..total.max(1) {
+        // Odometer decode: first axis is the slowest-varying digit.
+        let mut digits = vec![0usize; axes.len()];
+        let mut rem = idx;
+        for ai in (0..axes.len()).rev() {
+            digits[ai] = rem % axes[ai].values.len();
+            rem /= axes[ai].values.len();
+        }
+        let mut ov = RunOverrides::default();
+        for (ai, axis) in axes.iter().enumerate() {
+            apply_axis_value(&mut ov, &axis.key, &axis.values[digits[ai]])?;
+        }
+        let id = format!("{name}-{idx:0width$}");
+        let run =
+            resolve_run_config(doc, &ov).with_context(|| format!("sweep config {id}"))?;
+        entries.push(SweepEntry { id, run });
+    }
+    Ok(SweepPlan { name, entries })
+}

@@ -564,27 +564,66 @@ pub fn validate_quant_bits(q: &QuantConfig, data_bits: u32) -> Result<()> {
     Ok(())
 }
 
+/// Per-run overrides applied on top of a parsed TOML document — the
+/// seam `config::sweep` axes resolve through.  Every field mirrors a
+/// `snipsnap search` CLI flag and composes with the document the same
+/// way: `None` keeps the document's (or the default's) value.
+#[derive(Clone, Debug, Default)]
+pub struct RunOverrides {
+    /// Arch preset name; wins over an inline `[arch]` section.
+    pub arch: Option<String>,
+    /// Workload preset name; combining with an inline `[[op]]` /
+    /// `[op.*]` workload is an error (a preset cannot "override" custom
+    /// ops meaningfully).
+    pub workload: Option<String>,
+    pub metric: Option<String>,
+    pub mode: Option<String>,
+    pub threads: Option<usize>,
+    /// Cost-backend name; like the `--cost-backend` flag, re-selecting
+    /// `contention` keeps a document-supplied contention tuning.
+    pub backend: Option<String>,
+    pub w_bits: Option<BitwidthSpace>,
+    pub a_bits: Option<BitwidthSpace>,
+    pub kv_bits: Option<BitwidthSpace>,
+}
+
 /// Load a complete run configuration from TOML text.
 pub fn load_run_config(src: &str) -> Result<RunConfig> {
     let doc = TomlDoc::parse(src).map_err(|e| anyhow!("{e}"))?;
+    resolve_run_config(&doc, &RunOverrides::default())
+}
+
+/// Resolve a parsed TOML document into a run configuration with
+/// [`RunOverrides`] applied.  With default overrides this is exactly
+/// [`load_run_config`]'s resolution; sweeps call it once per axis
+/// combination over the same shared document.
+pub fn resolve_run_config(doc: &TomlDoc, ov: &RunOverrides) -> Result<RunConfig> {
     let run = doc.section("run").cloned().unwrap_or_default();
 
-    let arch = match parse_inline_arch(&doc)? {
-        Some(a) => a,
-        None => arch_by_name(
-            run.get("arch")
-                .and_then(|v| v.as_str())
-                .context("[run] arch missing (or provide [arch])")?,
-        )?,
+    let arch = match &ov.arch {
+        Some(name) => arch_by_name(name)?,
+        None => match parse_inline_arch(doc)? {
+            Some(a) => a,
+            None => arch_by_name(
+                run.get("arch")
+                    .and_then(|v| v.as_str())
+                    .context("[run] arch missing (or provide [arch])")?,
+            )?,
+        },
     };
     let mut preset_name: Option<String> = None;
-    let workload = match parse_inline_workload(&doc)? {
+    let inline_workload = parse_inline_workload(doc)?;
+    if inline_workload.is_some() && ov.workload.is_some() {
+        bail!("a workload override cannot be applied to an inline [op.*]/[[op]] workload");
+    }
+    let workload = match inline_workload {
         Some(w) => w,
         None => {
             let wsec = doc.section("workload");
-            let preset = wsec
-                .and_then(|s| s.get("preset"))
-                .and_then(|v| v.as_str())
+            let preset = ov
+                .workload
+                .as_deref()
+                .or_else(|| wsec.and_then(|s| s.get("preset")).and_then(|v| v.as_str()))
                 .or_else(|| run.get("workload").and_then(|v| v.as_str()))
                 .context(
                     "[run] workload / [workload] preset missing (or provide [op.*])",
@@ -624,10 +663,10 @@ pub fn load_run_config(src: &str) -> Result<RunConfig> {
     };
 
     let mut search = SearchConfig::default();
-    if let Some(m) = run.get("metric").and_then(|v| v.as_str()) {
+    if let Some(m) = ov.metric.as_deref().or_else(|| run.get("metric").and_then(|v| v.as_str())) {
         search.metric = metric_by_name(m)?;
     }
-    if let Some(m) = run.get("mode").and_then(|v| v.as_str()) {
+    if let Some(m) = ov.mode.as_deref().or_else(|| run.get("mode").and_then(|v| v.as_str())) {
         search.mode = match m {
             "search" => FormatMode::Search,
             "fixed" => FormatMode::Fixed,
@@ -660,12 +699,34 @@ pub fn load_run_config(src: &str) -> Result<RunConfig> {
             search.best_first = b;
         }
     }
-    parse_cost_section(&doc, &mut search)?;
-    // Preset-bundled quant seeds the axis; [quant] keys override per key.
+    if let Some(t) = ov.threads {
+        search.threads = t;
+    }
+    parse_cost_section(doc, &mut search)?;
+    if let Some(b) = &ov.backend {
+        match CostModel::by_name(b).map_err(|e| anyhow!(e))? {
+            // Like --cost-backend: re-selecting contention keeps a
+            // document-supplied tuning; the override's job is backend
+            // selection, not knob reset.
+            CostModel::Contention(_) if matches!(search.cost, CostModel::Contention(_)) => {}
+            m => search.cost = m,
+        }
+    }
+    // Preset-bundled quant seeds the axis; [quant] keys override per
+    // key, and per-class overrides win last.
     if let Some(q) = preset_name.as_deref().and_then(preset_quant) {
         search.quant = q;
     }
-    parse_quant_section(&doc, &mut search)?;
+    parse_quant_section(doc, &mut search)?;
+    if let Some(s) = &ov.w_bits {
+        search.quant.w_bits = Some(s.clone());
+    }
+    if let Some(s) = &ov.a_bits {
+        search.quant.a_bits = Some(s.clone());
+    }
+    if let Some(s) = &ov.kv_bits {
+        search.quant.kv_bits = Some(s.clone());
+    }
     validate_quant_bits(&search.quant, arch.data_bits)?;
     search.engine.data_bits = arch.data_bits;
     Ok(RunConfig { arch, workload, search })

@@ -1,0 +1,246 @@
+//! The reusable run driver — the pipeline behind every co-search run.
+//!
+//! Historically the whole run pipeline (resolve config → dispatch the
+//! co-search → emit the snapshot artifact → print the human report)
+//! lived inside the `snipsnap search` subcommand, unreachable from the
+//! library, from `serve`, or from any coordinator.  This module is that
+//! pipeline as a library layer:
+//!
+//! - [`RunPlan`] — one fully-resolved run.  Its canonical serialized
+//!   form **is** the run-config snapshot ([`crate::config::snapshot`]),
+//!   optionally tagged with an `id` the snapshot loader ignores — which
+//!   makes every plan simultaneously a replayable `--config` artifact
+//!   and a valid `snipsnap serve` request line.
+//! - [`execute`] — the bare co-search dispatch (scalar and frontier)
+//!   with [`SearchHooks`] for memo/budget wiring.  `snipsnap serve`
+//!   routes every request through this entry point.
+//! - [`run`] — the full pipeline: snapshot emission, stderr banners,
+//!   the human report on stdout, frontier tables.  `snipsnap search` is
+//!   flag parsing plus one call to this; its output is byte-identical
+//!   to the pre-extraction subcommand (pinned by
+//!   `rust/tests/driver_differential.rs`).
+//!
+//! The [`sweep`] submodule builds multi-process orchestration on top:
+//! a coordinator shards an ordered list of `RunPlan`s across
+//! `snipsnap serve --once` worker processes and fan-ins the responses
+//! in plan order (docs/SWEEP.md).
+
+pub mod sweep;
+
+use crate::config::snapshot;
+use crate::config::RunConfig;
+use crate::search::{try_cosearch_workload, SearchHooks, WorkloadResult};
+use crate::util::json::Json;
+use crate::util::table::{fmt_f, Table};
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::PathBuf;
+
+/// One fully-resolved run: the complete [`RunConfig`] plus an optional
+/// caller-chosen id (sweep entries and serve requests carry one; plain
+/// CLI runs do not).
+pub struct RunPlan {
+    /// Correlation id echoed into response lines and report rows.
+    pub id: Option<String>,
+    pub run: RunConfig,
+}
+
+impl RunPlan {
+    /// A plan with no id — what `snipsnap search` builds from its flags.
+    pub fn new(run: RunConfig) -> RunPlan {
+        RunPlan { id: None, run }
+    }
+
+    /// Parse a plan from its canonical serialized form: a run-config
+    /// snapshot line, optionally carrying an `id` string.  Exactly the
+    /// shape [`render`](RunPlan::render) emits and `snipsnap serve`
+    /// accepts as a request.
+    pub fn parse(line: &str) -> Result<RunPlan> {
+        let v = Json::parse(line).map_err(|e| anyhow::anyhow!("run plan: {e}"))?;
+        let run = snapshot::run_config_from_value(&v)?;
+        let id = match v.get("id") {
+            None | Some(Json::Null) => None,
+            Some(other) => {
+                Some(other.as_str().context("plan 'id' must be a string")?.to_string())
+            }
+        };
+        Ok(RunPlan { id, run })
+    }
+
+    /// The canonical wire/artifact form: the run-config snapshot JSON
+    /// (one line, trailing newline) with the plan id injected as an
+    /// `"id"` key.  The snapshot loader ignores unknown keys, so the
+    /// rendered line replays through `snipsnap search --config` and
+    /// serves as a `snipsnap serve` request verbatim; [`Json::Obj`] is a
+    /// `BTreeMap`, so key order (and therefore the byte sequence) stays
+    /// deterministic with the id present.
+    pub fn render(&self) -> String {
+        let mut doc =
+            snapshot::snapshot_json(&self.run.arch, &self.run.workload, &self.run.search);
+        if let (Some(id), Json::Obj(m)) = (&self.id, &mut doc) {
+            m.insert("id".to_string(), Json::str(id));
+        }
+        format!("{doc}\n")
+    }
+}
+
+/// Dispatch the co-search for a resolved run config — scalar or frontier
+/// according to `run.search.metric` — through the [`SearchHooks`] seam.
+/// This is the single funnel every execution path shares: `snipsnap
+/// search` (via [`run`]), `snipsnap serve` requests, and sweep workers.
+pub fn execute(run: &RunConfig, hooks: SearchHooks<'_>) -> Result<WorkloadResult> {
+    try_cosearch_workload(&run.arch, &run.workload, &run.search, hooks)
+}
+
+/// Where the run-config snapshot artifact goes.
+pub enum SnapshotSink {
+    /// `results/run-<ts>-<pid>.config.json` (the CLI default).
+    Default,
+    /// No snapshot (`--snapshot off`).
+    Off,
+    /// An explicit destination (`--snapshot PATH`).
+    Path(PathBuf),
+}
+
+/// Output wiring for [`run`]: the snapshot destination plus the two
+/// report streams.  The CLI passes stdout/stderr; tests and embedders
+/// pass buffers.
+pub struct RunSinks<'a> {
+    pub snapshot: SnapshotSink,
+    /// The human report (design table, totals, frontier tables).
+    pub out: &'a mut dyn Write,
+    /// Banners, the snapshot notice, warnings.
+    pub log: &'a mut dyn Write,
+}
+
+/// Emit the JSON run-config snapshot for a resolved run (written before
+/// the search so a crashed run still leaves its artifact).
+/// Best-effort: an unwritable destination warns on `log` instead of
+/// failing the run.
+fn emit_snapshot(plan: &RunPlan, sink: &SnapshotSink, log: &mut dyn Write) -> Result<()> {
+    let path = match sink {
+        SnapshotSink::Off => return Ok(()),
+        SnapshotSink::Path(p) => p.clone(),
+        SnapshotSink::Default => {
+            let ts = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0);
+            PathBuf::from("results")
+                .join(format!("run-{ts}-{}.config.json", std::process::id()))
+        }
+    };
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let run = &plan.run;
+    match std::fs::write(&path, snapshot::render(&run.arch, &run.workload, &run.search)) {
+        Ok(()) => writeln!(log, "run-config snapshot: {}", path.display())?,
+        Err(e) => writeln!(log, "warning: could not write snapshot {}: {e}", path.display())?,
+    }
+    Ok(())
+}
+
+/// The full run pipeline: snapshot emission, stderr banners, co-search
+/// dispatch through [`execute`], and the human report — byte-identical
+/// to what the pre-extraction `snipsnap search` printed (pinned by
+/// `rust/tests/driver_differential.rs`).  Returns the search result so
+/// embedders can post-process beyond the rendered report.
+pub fn run(
+    plan: &RunPlan,
+    hooks: SearchHooks<'_>,
+    sinks: &mut RunSinks<'_>,
+) -> Result<WorkloadResult> {
+    let RunConfig { arch, workload, search: cfg } = &plan.run;
+    emit_snapshot(plan, &sinks.snapshot, sinks.log)?;
+
+    writeln!(sinks.log, "arch: {}", arch.name)?;
+    writeln!(sinks.log, "workload: {} ({} ops)", workload.name, workload.op_count())?;
+    writeln!(sinks.log, "cost backend: {}", cfg.cost)?;
+    if !cfg.quant.is_default() {
+        let qs = cfg.quant.resolve(arch.data_bits);
+        writeln!(
+            sinks.log,
+            "quant axis: W{{{}}} A{{{}}} KV{{{}}} (payload bits; dense ref {})",
+            qs.weight, qs.act, qs.kv, arch.data_bits
+        )?;
+    }
+    let r = execute(&plan.run, hooks)?;
+
+    let mut t = Table::new(vec![
+        "op", "I format", "W format", "bits (A/W)", "energy (pJ)", "cycles",
+    ])
+    .with_title(format!(
+        "SnipSnap co-search: {} on {} [{:?}, {:?}]",
+        workload.name, arch.name, cfg.metric, cfg.mode
+    ));
+    for d in &r.designs {
+        t.add_row(vec![
+            d.op_name.clone(),
+            d.input_format.to_string(),
+            d.weight_format.to_string(),
+            format!("{}/{}", d.input_bits, d.weight_bits),
+            fmt_f(d.report.total_energy_pj()),
+            fmt_f(d.report.latency_cycles()),
+        ]);
+    }
+    writeln!(sinks.out, "{}", t.render())?;
+    writeln!(
+        sinks.out,
+        "totals: energy {} pJ | memory energy {} pJ | cycles {} | EDP {}",
+        fmt_f(r.total_energy_pj()),
+        fmt_f(r.memory_energy_pj()),
+        fmt_f(r.total_cycles()),
+        fmt_f(r.edp()),
+    )?;
+    writeln!(
+        sinks.out,
+        "search: {} cost-model evaluations in {:.2}s ({} threads)",
+        r.evaluations,
+        r.elapsed.as_secs_f64(),
+        crate::util::pool::resolve_threads(cfg.threads),
+    )?;
+    writeln!(
+        sinks.out,
+        "cache: access-counts {} hits / {} misses ({:.1}% hit rate)",
+        r.cache.hits,
+        r.cache.misses,
+        100.0 * r.cache.hit_rate(),
+    )?;
+    writeln!(
+        sinks.out,
+        "enumeration: {} legal protos, {} pruned by lower bound ({:.1}%)",
+        r.protos,
+        r.pruned,
+        100.0 * r.prune_rate(),
+    )?;
+    if let Some(f) = &r.frontier {
+        let metric_names = ["energy", "memory-energy", "latency", "edp"];
+        let mut ft = Table::new(vec!["metric", "energy (pJ)", "cycles", "metric total"])
+            .with_title("Pareto frontier: per-metric winners (single arena pass)");
+        for (mi, name) in metric_names.iter().enumerate() {
+            let ds = &f.winners[mi];
+            let energy: f64 =
+                ds.iter().map(|d| d.report.total_energy_pj() * d.count as f64).sum();
+            let cycles: f64 =
+                ds.iter().map(|d| d.report.latency_cycles() * d.count as f64).sum();
+            ft.add_row(vec![
+                name.to_string(),
+                fmt_f(energy),
+                fmt_f(cycles),
+                fmt_f(f.winner_total(mi)),
+            ]);
+        }
+        writeln!(sinks.out, "{}", ft.render())?;
+        writeln!(
+            sinks.out,
+            "frontier: {} Pareto points across {} ops | pruned per metric {:?} | \
+             {} shared-bound prunes",
+            f.total_points(),
+            f.op_points.len(),
+            r.pruned_by_metric,
+            r.bound_tightenings,
+        )?;
+    }
+    Ok(r)
+}

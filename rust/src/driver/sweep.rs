@@ -1,0 +1,185 @@
+//! `snipsnap sweep` — the multi-process sweep coordinator.
+//!
+//! A sweep plan ([`crate::config::sweep`]) expands to an ordered list of
+//! [`RunPlan`](super::RunPlan)s.  This module shards those plans across
+//! N worker processes and fan-ins the responses **in plan order**, so
+//! the merged artifact is byte-identical at any `--workers` count:
+//!
+//! - **Workers are `snipsnap serve --once` children** of the current
+//!   executable, speaking the existing serve wire format: one rendered
+//!   plan line on stdin (a run-config snapshot tagged with the sweep
+//!   entry's `id`), one response line on stdout.  No new protocol.
+//! - **Determinism.** Each plan is a fully-resolved snapshot — it pins
+//!   threads, prune, best-first, the cost backend, the quant spaces —
+//!   and the `(value, proto-id)` reduction makes every individual run
+//!   bit-identical regardless of scheduling.  Response lines carry only
+//!   deterministic fields (the nondeterministic observables go to the
+//!   worker's stderr and its own results records).  The fan-in writes
+//!   responses in plan order, not completion order.  Composing the
+//!   three: the merged file is a pure function of the plan file.
+//! - **Workers run memo-off and results-off** (`--memo off --results
+//!   off`): the coordinator owns the sweep's artifacts, and a shared
+//!   memo file would be a cross-process write race.
+//!
+//! The merged roll-up lands at `<out>/<name>.sweep.jsonl`, which
+//! `snipsnap report` renders as per-config rows plus a sweep summary
+//! line (see `crate::report`).
+
+use crate::config::sweep::{load_sweep_plan, SweepPlan};
+use crate::serve::{SearchResponse, SearchStats};
+use crate::util::json::Json;
+use crate::util::{bench, pool};
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+/// Coordinator configuration (resolved from the CLI flags in `main`).
+pub struct SweepOpts {
+    /// The TOML sweep plan (`[sweep]` + `[[sweep.axis]]`, docs/SWEEP.md).
+    pub plan_path: PathBuf,
+    /// Worker process count; clamped to `[1, configs]`.  Any value
+    /// yields byte-identical merged output.
+    pub workers: usize,
+    /// Where the merged roll-up and the sweep bench record land.
+    pub out_dir: PathBuf,
+}
+
+/// What the coordinator did, for the exit banner and the caller.
+pub struct SweepSummary {
+    /// The sweep name (`[sweep] name`), also the roll-up file stem.
+    pub name: String,
+    pub configs: u64,
+    /// Configs whose worker failed or whose response was `ok:false`.
+    pub failed: u64,
+    /// The merged `<name>.sweep.jsonl` roll-up.
+    pub merged_path: PathBuf,
+}
+
+/// Run one config through a `snipsnap serve --once` worker child and
+/// return its response line.  The request is the rendered plan
+/// (newline-terminated already); memo and results are off — the
+/// coordinator owns the sweep's artifacts.
+fn run_worker(request: &str) -> Result<String> {
+    let exe = std::env::current_exe().context("locating the snipsnap executable")?;
+    let mut child = Command::new(exe)
+        .args(["serve", "--once", "--memo", "off", "--results", "off"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .context("spawning worker")?;
+    {
+        let mut stdin = child.stdin.take().context("worker stdin")?;
+        stdin.write_all(request.as_bytes()).context("writing request to worker")?;
+        // Dropping stdin closes it; `serve --once` reads the one line
+        // and exits.
+    }
+    let out = child.wait_with_output().context("waiting for worker")?;
+    if !out.status.success() {
+        bail!(
+            "worker exited with {}: {}",
+            out.status,
+            String::from_utf8_lossy(&out.stderr).trim(),
+        );
+    }
+    let line = String::from_utf8(out.stdout).context("worker response was not UTF-8")?;
+    let line = line.trim_end_matches('\n').to_string();
+    if line.is_empty() {
+        bail!("worker produced no response");
+    }
+    Ok(line)
+}
+
+/// Whether a response line reports `"ok":true`.
+fn response_ok(line: &str) -> bool {
+    Json::parse(line)
+        .map(|v| v.get("ok").and_then(Json::as_bool) == Some(true))
+        .unwrap_or(false)
+}
+
+/// Run a sweep: load and expand the plan, shard the configs across
+/// worker processes, and merge the responses **in plan order** into
+/// `<out>/<name>.sweep.jsonl`.  Worker crashes become synthesized
+/// `ok:false` response lines (counted in `failed`), so one bad config
+/// never loses the rest of the sweep.
+pub fn run_sweep(opts: &SweepOpts, log: &mut dyn Write) -> Result<SweepSummary> {
+    let start = std::time::Instant::now();
+    let src = std::fs::read_to_string(&opts.plan_path)
+        .with_context(|| opts.plan_path.display().to_string())?;
+    let SweepPlan { name, entries } = load_sweep_plan(&src)?;
+    let requests: Vec<(String, String)> = entries
+        .into_iter()
+        .map(|e| {
+            let plan = super::RunPlan { id: Some(e.id.clone()), run: e.run };
+            (e.id, plan.render())
+        })
+        .collect();
+    let workers = opts.workers.min(requests.len()).max(1);
+    writeln!(
+        log,
+        "snipsnap sweep '{}': {} configs across {} worker{}",
+        name,
+        requests.len(),
+        workers,
+        if workers == 1 { "" } else { "s" },
+    )?;
+
+    // Shard: each config runs in its own `serve --once` child; the pool
+    // caps concurrency at `workers` and returns results in item order.
+    let results = pool::parallel_map(workers, &requests, |_, (_, request)| {
+        run_worker(request).map_err(|e| format!("{e:#}"))
+    });
+
+    // Fan-in, strictly in plan order.  Completion order never touches
+    // the merged artifact.
+    let mut merged = String::new();
+    let mut failed = 0u64;
+    for ((id, _), result) in requests.iter().zip(results) {
+        let line = match result {
+            Ok(line) => line,
+            Err(msg) => SearchResponse {
+                id: Some(id.clone()),
+                result: Err(format!("worker: {msg}")),
+                stats: SearchStats::default(),
+            }
+            .render()
+            .trim_end_matches('\n')
+            .to_string(),
+        };
+        let ok = response_ok(&line);
+        failed += u64::from(!ok);
+        writeln!(log, "sweep: config {id} {}", if ok { "ok" } else { "FAILED" })?;
+        merged.push_str(&line);
+        merged.push('\n');
+    }
+
+    std::fs::create_dir_all(&opts.out_dir)
+        .with_context(|| opts.out_dir.display().to_string())?;
+    let merged_path = opts.out_dir.join(format!("{name}.sweep.jsonl"));
+    std::fs::write(&merged_path, &merged)
+        .with_context(|| merged_path.display().to_string())?;
+
+    // One bench record for the sweep itself.  Wall time (the one
+    // nondeterministic observable) lives here, never in the roll-up.
+    let configs = requests.len() as u64;
+    bench::write_record_at(
+        &opts.out_dir,
+        "sweep",
+        start.elapsed().as_secs_f64(),
+        Json::obj(vec![
+            ("sweep", Json::str(&name)),
+            ("configs", Json::num(configs as f64)),
+            ("failed", Json::num(failed as f64)),
+            ("workers", Json::num(workers as f64)),
+        ]),
+    );
+    writeln!(
+        log,
+        "snipsnap sweep: {} configs merged to {} ({} failed)",
+        configs,
+        merged_path.display(),
+        failed,
+    )?;
+    Ok(SweepSummary { name, configs, failed, merged_path })
+}

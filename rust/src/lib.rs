@@ -15,7 +15,10 @@
 //! - [`search`] — the progressive co-search workflow (§III-D)
 //! - [`baselines`] — Sparseloop-like and DiMO-like comparison workflows
 //! - [`runtime`] — PJRT loader/executor for the AOT XLA artifacts
-//! - [`config`] — TOML-subset run configs + JSON run-config snapshots
+//! - [`config`] — TOML-subset run configs, JSON run-config snapshots,
+//!   and sweep plans
+//! - [`driver`] — the reusable run pipeline behind `snipsnap search`
+//!   and `serve`, plus the multi-process sweep coordinator
 //! - [`serve`] — the long-running co-search service (JSONL requests,
 //!   per-request budgets, persistent cross-run memo store)
 //! - [`report`] — roll-up over the `results/` run artifacts
@@ -34,6 +37,7 @@ pub mod baselines;
 pub mod config;
 pub mod cost;
 pub mod dataflow;
+pub mod driver;
 pub mod engine;
 pub mod format;
 pub mod report;

@@ -6,6 +6,8 @@
 //!   serve     long-running co-search service: JSONL requests on stdin,
 //!             deterministic JSONL responses on stdout, per-request
 //!             budgets, persistent cross-run memo store
+//!   sweep     expand a [[sweep.axis]] plan and run every config through
+//!             serve --once worker processes, merged in plan order
 //!   report    roll up the results/ run artifacts into a summary table
 //!   formats   show the adaptive engine's top formats for one tensor
 //!   validate  run the Fig. 8 / Fig. 9 model-validation studies
@@ -19,7 +21,7 @@ use snipsnap::config::typed::{
 };
 use snipsnap::engine::{search_formats, EngineConfig};
 use snipsnap::format::quant::BitwidthSpace;
-use snipsnap::search::{cosearch_workload, FormatMode, SearchConfig};
+use snipsnap::search::{FormatMode, SearchConfig};
 use snipsnap::sparsity::SparsityPattern;
 use snipsnap::util::table::{fmt_f, fmt_pct, Table};
 
@@ -54,7 +56,7 @@ fn usage() -> ! {
                              [--prefill N] [--decode N] [--batch B]\n\
                              [--kv-density D] [--nm N:M]\n\
            snipsnap serve    [--once] [--jobs N] [--memo PATH|off]\n\
-                             [--results DIR|off]\n\
+                             [--memo-max-entries N] [--results DIR|off]\n\
                              long-running co-search service: one JSON\n\
                              request per stdin line (the run-config\n\
                              snapshot format, plus optional \"id\" and\n\
@@ -63,8 +65,18 @@ fn usage() -> ! {
                              --once serves a single request then exits;\n\
                              --memo is the persistent cross-run counts\n\
                              store (default results/serve_memo.jsonl);\n\
+                             --memo-max-entries caps the store (enforced\n\
+                             at flush, deterministic eviction order);\n\
                              --results is where per-request records land\n\
                              for `snipsnap report` (default results)\n\
+           snipsnap sweep    --plan F.toml [--workers N] [--out DIR]\n\
+                             expand the plan's [[sweep.axis]] cross-\n\
+                             product and run every config through\n\
+                             `serve --once` worker processes (docs/\n\
+                             SWEEP.md).  Responses merge in plan order\n\
+                             to <out>/<name>.sweep.jsonl — byte-\n\
+                             identical at any --workers count — and\n\
+                             roll up via `snipsnap report`\n\
            snipsnap report   [--dir results]  (summarize results/*.json(l);\n\
                              exits non-zero on any unparseable artifact)\n\
            snipsnap formats  --rows R --cols C --density D [--gamma G] [--depth N]\n\
@@ -75,18 +87,60 @@ fn usage() -> ! {
     std::process::exit(2);
 }
 
-/// Flags that are bare switches (no value argument).
-const SWITCHES: &[&str] = &["once"];
+/// Per-subcommand flag allowlist: the value-taking `--flags` and the
+/// bare `switches` a subcommand accepts.  Anything else is a usage
+/// error — a typo like `--thread 4` must fail loudly, not silently run
+/// single-threaded.
+struct FlagSpec {
+    flags: &'static [&'static str],
+    switches: &'static [&'static str],
+}
+
+const SEARCH_SPEC: FlagSpec = FlagSpec {
+    flags: &[
+        "config",
+        "arch",
+        "workload",
+        "metric",
+        "mode",
+        "max-mappings",
+        "threads",
+        "prune",
+        "best-first",
+        "cost-backend",
+        "snapshot",
+        "w-bits",
+        "a-bits",
+        "kv-bits",
+        "prefill",
+        "decode",
+        "batch",
+        "kv-density",
+        "nm",
+    ],
+    switches: &[],
+};
+const SERVE_SPEC: FlagSpec = FlagSpec {
+    flags: &["jobs", "memo", "memo-max-entries", "results"],
+    switches: &["once"],
+};
+const SWEEP_SPEC: FlagSpec = FlagSpec { flags: &["plan", "workers", "out"], switches: &[] };
+const REPORT_SPEC: FlagSpec = FlagSpec { flags: &["dir"], switches: &[] };
+const FORMATS_SPEC: FlagSpec =
+    FlagSpec { flags: &["rows", "cols", "density", "gamma", "depth"], switches: &[] };
+const VALIDATE_SPEC: FlagSpec = FlagSpec { flags: &["study"], switches: &[] };
+const XLA_SPEC: FlagSpec = FlagSpec { flags: &["artifacts"], switches: &[] };
+const LIST_SPEC: FlagSpec = FlagSpec { flags: &[], switches: &[] };
 
 /// Tiny argv parser: `--key value` pairs after the subcommand, plus the
-/// bare [`SWITCHES`].
+/// subcommand's bare switches, both checked against its [`FlagSpec`].
 struct Args {
     flags: std::collections::HashMap<String, String>,
     switches: std::collections::HashSet<String>,
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> Result<Args> {
+    fn parse(argv: &[String], cmd: &str, spec: &FlagSpec) -> Result<Args> {
         let mut flags = std::collections::HashMap::new();
         let mut switches = std::collections::HashSet::new();
         let mut i = 0;
@@ -96,10 +150,13 @@ impl Args {
                 bail!("unexpected argument '{k}'");
             }
             let key = k.trim_start_matches("--").to_string();
-            if SWITCHES.contains(&key.as_str()) {
+            if spec.switches.contains(&key.as_str()) {
                 switches.insert(key);
                 i += 1;
                 continue;
+            }
+            if !spec.flags.contains(&key.as_str()) {
+                bail!("unknown flag '--{key}' for 'snipsnap {cmd}'");
             }
             let val = argv
                 .get(i + 1)
@@ -132,7 +189,11 @@ impl Args {
     }
 }
 
-fn cmd_search(args: &Args) -> Result<()> {
+/// Resolve the `snipsnap search` flags into a full run config — either
+/// replaying a `--config` file or composing preset + modifier flags.
+/// Pure flag resolution: the run itself is one `driver::run` call in
+/// [`cmd_search`].
+fn resolve_search_config(args: &Args) -> Result<snipsnap::config::RunConfig> {
     let mut cfg;
     let arch;
     let workload;
@@ -238,122 +299,48 @@ fn cmd_search(args: &Args) -> Result<()> {
         eprintln!("error: {e}");
         usage();
     }
+    Ok(snipsnap::config::RunConfig { arch, workload, search: cfg })
+}
 
-    write_snapshot(args, &arch, &workload, &cfg);
+/// `snipsnap search` — flag parsing plus one [`driver::run`] call.  The
+/// whole pipeline (snapshot emission, banners, the human report) lives
+/// in `snipsnap::driver`; `--snapshot off` disables the artifact,
+/// `--snapshot PATH` redirects it, the default lands next to the bench
+/// results with a timestamped name.
+fn cmd_search(args: &Args) -> Result<()> {
+    use snipsnap::driver::{self, RunPlan, RunSinks, SnapshotSink};
 
-    eprintln!("arch: {}", arch.name);
-    eprintln!("workload: {} ({} ops)", workload.name, workload.op_count());
-    eprintln!("cost backend: {}", cfg.cost);
-    if !cfg.quant.is_default() {
-        let qs = cfg.quant.resolve(arch.data_bits);
-        eprintln!(
-            "quant axis: W{{{}}} A{{{}}} KV{{{}}} (payload bits; dense ref {})",
-            qs.weight, qs.act, qs.kv, arch.data_bits
-        );
-    }
-    let r = cosearch_workload(&arch, &workload, &cfg);
-
-    let mut t = Table::new(vec![
-        "op", "I format", "W format", "bits (A/W)", "energy (pJ)", "cycles",
-    ])
-    .with_title(format!(
-        "SnipSnap co-search: {} on {} [{:?}, {:?}]",
-        workload.name, arch.name, cfg.metric, cfg.mode
-    ));
-    for d in &r.designs {
-        t.add_row(vec![
-            d.op_name.clone(),
-            d.input_format.to_string(),
-            d.weight_format.to_string(),
-            format!("{}/{}", d.input_bits, d.weight_bits),
-            fmt_f(d.report.total_energy_pj()),
-            fmt_f(d.report.latency_cycles()),
-        ]);
-    }
-    println!("{}", t.render());
-    println!(
-        "totals: energy {} pJ | memory energy {} pJ | cycles {} | EDP {}",
-        fmt_f(r.total_energy_pj()),
-        fmt_f(r.memory_energy_pj()),
-        fmt_f(r.total_cycles()),
-        fmt_f(r.edp()),
-    );
-    println!(
-        "search: {} cost-model evaluations in {:.2}s ({} threads)",
-        r.evaluations,
-        r.elapsed.as_secs_f64(),
-        snipsnap::util::pool::resolve_threads(cfg.threads),
-    );
-    println!(
-        "cache: access-counts {} hits / {} misses ({:.1}% hit rate)",
-        r.cache.hits,
-        r.cache.misses,
-        100.0 * r.cache.hit_rate(),
-    );
-    println!(
-        "enumeration: {} legal protos, {} pruned by lower bound ({:.1}%)",
-        r.protos,
-        r.pruned,
-        100.0 * r.prune_rate(),
-    );
-    if let Some(f) = &r.frontier {
-        let metric_names = ["energy", "memory-energy", "latency", "edp"];
-        let mut ft = Table::new(vec!["metric", "energy (pJ)", "cycles", "metric total"])
-            .with_title("Pareto frontier: per-metric winners (single arena pass)");
-        for (mi, name) in metric_names.iter().enumerate() {
-            let ds = &f.winners[mi];
-            let energy: f64 = ds.iter().map(|d| d.report.total_energy_pj() * d.count as f64).sum();
-            let cycles: f64 = ds.iter().map(|d| d.report.latency_cycles() * d.count as f64).sum();
-            ft.add_row(vec![
-                name.to_string(),
-                fmt_f(energy),
-                fmt_f(cycles),
-                fmt_f(f.winner_total(mi)),
-            ]);
-        }
-        println!("{}", ft.render());
-        println!(
-            "frontier: {} Pareto points across {} ops | pruned per metric {:?} | \
-             {} shared-bound prunes",
-            f.total_points(),
-            f.op_points.len(),
-            r.pruned_by_metric,
-            r.bound_tightenings,
-        );
-    }
+    let plan = RunPlan::new(resolve_search_config(args)?);
+    let snapshot = match args.get("snapshot") {
+        Some("off") => SnapshotSink::Off,
+        Some(p) => SnapshotSink::Path(std::path::PathBuf::from(p)),
+        None => SnapshotSink::Default,
+    };
+    let mut sinks = RunSinks {
+        snapshot,
+        out: &mut std::io::stdout(),
+        log: &mut std::io::stderr(),
+    };
+    driver::run(&plan, snipsnap::search::SearchHooks::default(), &mut sinks)?;
     Ok(())
 }
 
-/// Emit the JSON run-config snapshot for a resolved search run (written
-/// before the search so a crashed run still leaves its artifact).
-/// Best-effort: an unwritable destination warns instead of failing the
-/// run.  `--snapshot off` disables, `--snapshot PATH` redirects; the
-/// default lands next to the bench results with a timestamped name.
-fn write_snapshot(
-    args: &Args,
-    arch: &snipsnap::arch::Accelerator,
-    workload: &snipsnap::workload::Workload,
-    cfg: &SearchConfig,
-) {
-    let path = match args.get("snapshot") {
-        Some("off") => return,
-        Some(p) => std::path::PathBuf::from(p),
-        None => {
-            let ts = std::time::SystemTime::now()
-                .duration_since(std::time::UNIX_EPOCH)
-                .map(|d| d.as_secs())
-                .unwrap_or(0);
-            std::path::PathBuf::from("results")
-                .join(format!("run-{ts}-{}.config.json", std::process::id()))
-        }
+/// `snipsnap sweep` — expand a plan's axis cross-product and run every
+/// config through `serve --once` worker processes
+/// (`snipsnap::driver::sweep`).  Exits non-zero when any config failed.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use snipsnap::driver::sweep::{run_sweep, SweepOpts};
+
+    let opts = SweepOpts {
+        plan_path: std::path::PathBuf::from(args.get("plan").context("--plan required")?),
+        workers: args.get_u64("workers")?.unwrap_or(1).max(1) as usize,
+        out_dir: std::path::PathBuf::from(args.get("out").unwrap_or("results")),
     };
-    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
-        let _ = std::fs::create_dir_all(dir);
+    let summary = run_sweep(&opts, &mut std::io::stderr())?;
+    if summary.failed > 0 {
+        bail!("{} of {} sweep configs failed", summary.failed, summary.configs);
     }
-    match std::fs::write(&path, snipsnap::config::snapshot::render(arch, workload, cfg)) {
-        Ok(()) => eprintln!("run-config snapshot: {}", path.display()),
-        Err(e) => eprintln!("warning: could not write snapshot {}: {e}", path.display()),
-    }
+    Ok(())
 }
 
 /// `snipsnap serve` — the long-running co-search service
@@ -371,13 +358,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => Some(std::path::PathBuf::from("results")),
         },
     };
-    let store = match args.get("memo") {
+    let mut store = match args.get("memo") {
         Some("off") => None,
         Some(path) => Some(snipsnap::serve::memo::MemoStore::open(std::path::Path::new(path))?),
         None => Some(snipsnap::serve::memo::MemoStore::open(std::path::Path::new(
             "results/serve_memo.jsonl",
         ))?),
     };
+    if let Some(cap) = args.get_u64("memo-max-entries")? {
+        if cap == 0 {
+            bail!("--memo-max-entries must be >= 1");
+        }
+        match &mut store {
+            Some(s) => s.set_max_entries(Some(cap as usize)),
+            None => bail!("--memo-max-entries requires a memo store (remove --memo off)"),
+        }
+    }
     eprintln!(
         "snipsnap serve: {} jobs, memo {} ({} entries), {}",
         opts.jobs,
@@ -531,7 +527,21 @@ fn cmd_list() -> Result<()> {
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else { usage() };
-    let args = match Args::parse(&argv[1..]) {
+    let spec = match cmd.as_str() {
+        "search" => &SEARCH_SPEC,
+        "serve" => &SERVE_SPEC,
+        "sweep" => &SWEEP_SPEC,
+        "report" => &REPORT_SPEC,
+        "formats" => &FORMATS_SPEC,
+        "validate" => &VALIDATE_SPEC,
+        "xla" => &XLA_SPEC,
+        "list" => &LIST_SPEC,
+        _ => {
+            eprintln!("unknown subcommand '{cmd}'");
+            usage();
+        }
+    };
+    let args = match Args::parse(&argv[1..], cmd, spec) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -541,15 +551,13 @@ fn main() {
     let result = match cmd.as_str() {
         "search" => cmd_search(&args),
         "serve" => cmd_serve(&args),
+        "sweep" => cmd_sweep(&args),
         "report" => cmd_report(&args),
         "formats" => cmd_formats(&args),
         "validate" => cmd_validate(&args),
         "xla" => cmd_xla(&args),
         "list" => cmd_list(),
-        _ => {
-            eprintln!("unknown subcommand '{cmd}'");
-            usage();
-        }
+        _ => unreachable!("spec resolution rejects unknown subcommands"),
     };
     if let Err(e) = result {
         eprintln!("error: {e:#}");

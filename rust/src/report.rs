@@ -1,6 +1,6 @@
 //! `snipsnap report` — roll up the run artifacts under `results/`.
 //!
-//! The results layer emits three artifact shapes (docs/ARCHITECTURE.md
+//! The results layer emits four artifact shapes (docs/ARCHITECTURE.md
 //! "Run artifacts"):
 //! - `<bench>.jsonl` — append-mode bench history, one unified-schema
 //!   record per line (`{bench, git_rev, ts_unix, wall_time_s, rows}`,
@@ -9,6 +9,10 @@
 //!   search`, replayable via `--config` ([`crate::config::snapshot`]);
 //!   the scanner runs them through the real snapshot loader, so a
 //!   snapshot the config layer could not replay fails the roll-up;
+//! - `<sweep>.sweep.jsonl` — a sweep's merged roll-up
+//!   ([`crate::driver::sweep`]): one serve-format response line per
+//!   config, in plan order.  Rendered as per-config rows (id, totals,
+//!   frontier size) plus a sweep summary line;
 //! - legacy `*.json` — single-record files from the pre-JSONL harness,
 //!   still readable so old results keep counting: a parseable legacy
 //!   record is merged into the same bench's history (as the oldest
@@ -24,7 +28,7 @@
 //! regression in any emitter can never silently rot the artifacts.
 
 use crate::util::json::Json;
-use crate::util::table::Table;
+use crate::util::table::{fmt_f, Table};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -50,10 +54,19 @@ impl BenchHistory {
     }
 }
 
+/// One sweep's merged roll-up: the response lines of
+/// `<name>.sweep.jsonl`, in plan order.
+pub struct SweepRollup {
+    pub name: String,
+    pub path: PathBuf,
+    pub responses: Vec<Json>,
+}
+
 /// Everything found under a results directory.
 pub struct ResultsScan {
     pub benches: Vec<BenchHistory>,
     pub snapshots: Vec<PathBuf>,
+    pub sweeps: Vec<SweepRollup>,
     /// Legacy `*.json` files that do not parse — typically history
     /// poisoned by the old non-finite-rendering bug.  Surfaced as
     /// warnings: the current harness can no longer produce them, so
@@ -76,6 +89,7 @@ pub fn scan_results(dir: &Path) -> Result<ResultsScan> {
     entries.sort();
     let mut by_bench: BTreeMap<String, BenchHistory> = BTreeMap::new();
     let mut snapshots = Vec::new();
+    let mut sweeps = Vec::new();
     let mut unreadable_legacy = Vec::new();
     // `legacy` records always predate the append-mode migration, so on a
     // merge they splice in *front* of any JSONL history — even when the
@@ -114,6 +128,30 @@ pub fn scan_results(dir: &Path) -> Result<ResultsScan> {
             crate::config::snapshot::load_run_config_json(&src)
                 .map_err(|e| anyhow!("{}: {e:#}", path.display()))?;
             snapshots.push(path);
+        } else if fname.ends_with(".sweep.jsonl") {
+            // A sweep's merged roll-up: serve-format response lines in
+            // plan order.  Harness-emitted, so parse failures are errors.
+            let src = read()?;
+            let mut responses = Vec::new();
+            for (i, line) in src.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let v = Json::parse(line)
+                    .map_err(|e| anyhow!("{} line {}: {e}", path.display(), i + 1))?;
+                if v.get("snipsnap_response").is_none() {
+                    bail!(
+                        "{} line {}: not a snipsnap response line",
+                        path.display(),
+                        i + 1
+                    );
+                }
+                responses.push(v);
+            }
+            if !responses.is_empty() {
+                let name = fname.trim_end_matches(".sweep.jsonl").to_string();
+                sweeps.push(SweepRollup { name, path, responses });
+            }
         } else if fname.ends_with(".jsonl") {
             let src = read()?;
             let mut records = Vec::new();
@@ -142,7 +180,12 @@ pub fn scan_results(dir: &Path) -> Result<ResultsScan> {
         }
         // Anything else (e.g. editor droppings) is ignored.
     }
-    Ok(ResultsScan { benches: by_bench.into_values().collect(), snapshots, unreadable_legacy })
+    Ok(ResultsScan {
+        benches: by_bench.into_values().collect(),
+        snapshots,
+        sweeps,
+        unreadable_legacy,
+    })
 }
 
 fn bench_id(records: &[Json], stem: &str) -> Option<String> {
@@ -246,12 +289,72 @@ pub fn render_trajectory(b: &BenchHistory) -> Option<String> {
     Some(out)
 }
 
+/// Render one sweep's roll-up: a per-config table (grouped by the
+/// sweep's id prefix, in plan order) plus a summary line surfacing the
+/// failure and frontier-run counts.
+pub fn render_sweep(s: &SweepRollup) -> String {
+    let mut t = Table::new(vec![
+        "config", "workload", "ok", "energy (pJ)", "cycles", "EDP", "frontier",
+    ])
+    .with_title(format!("Sweep '{}' ({} configs)", s.name, s.responses.len()));
+    let mut failed = 0usize;
+    let mut frontier_runs = 0usize;
+    for (i, r) in s.responses.iter().enumerate() {
+        let id = r
+            .get("id")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("#{i}"));
+        let ok = r.get("ok").and_then(Json::as_bool) == Some(true);
+        failed += usize::from(!ok);
+        let total = |k: &str| {
+            r.get("totals")
+                .and_then(|t| t.get(k))
+                .and_then(Json::as_f64)
+                .map(fmt_f)
+                .unwrap_or_else(|| "-".to_string())
+        };
+        let frontier = r
+            .get("frontier")
+            .and_then(|f| f.get("points"))
+            .and_then(Json::as_f64)
+            .map(|p| {
+                frontier_runs += 1;
+                format!("{p} pts")
+            })
+            .unwrap_or_else(|| "-".to_string());
+        t.add_row(vec![
+            id,
+            r.get("workload").and_then(Json::as_str).unwrap_or("-").to_string(),
+            if ok { "yes".to_string() } else { "NO".to_string() },
+            total("energy_pj"),
+            total("cycles"),
+            total("edp"),
+            frontier,
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "sweep {}: {} configs, {} failed, {} frontier run{}\n",
+        s.name,
+        s.responses.len(),
+        failed,
+        frontier_runs,
+        if frontier_runs == 1 { "" } else { "s" },
+    ));
+    out
+}
+
 /// Render the whole roll-up for a results directory: summary table,
-/// per-bench trajectories, snapshot count.  Errors when the directory
-/// is missing, empty of artifacts, or any artifact fails to parse.
+/// sweep roll-ups, per-bench trajectories, snapshot count.  Errors when
+/// the directory is missing, empty of artifacts, or any artifact fails
+/// to parse.
 pub fn report(dir: &Path) -> Result<String> {
     let scan = scan_results(dir)?;
-    if scan.benches.is_empty() && scan.snapshots.is_empty() && scan.unreadable_legacy.is_empty()
+    if scan.benches.is_empty()
+        && scan.snapshots.is_empty()
+        && scan.sweeps.is_empty()
+        && scan.unreadable_legacy.is_empty()
     {
         bail!("no run artifacts under '{}'", dir.display());
     }
@@ -263,6 +366,10 @@ pub fn report(dir: &Path) -> Result<String> {
             path.display()
         ));
     }
+    for s in &scan.sweeps {
+        out.push('\n');
+        out.push_str(&render_sweep(s));
+    }
     let diffs: Vec<String> = scan.benches.iter().filter_map(render_trajectory).collect();
     if !diffs.is_empty() {
         out.push_str("\nTrajectories:\n");
@@ -271,7 +378,7 @@ pub fn report(dir: &Path) -> Result<String> {
         }
     }
     out.push_str(&format!(
-        "\n{} bench histor{} ({} record{}), {} run-config snapshot{}\n",
+        "\n{} bench histor{} ({} record{}), {} run-config snapshot{}",
         scan.benches.len(),
         if scan.benches.len() == 1 { "y" } else { "ies" },
         scan.benches.iter().map(|b| b.records.len()).sum::<usize>(),
@@ -279,6 +386,14 @@ pub fn report(dir: &Path) -> Result<String> {
         scan.snapshots.len(),
         if scan.snapshots.len() == 1 { "" } else { "s" },
     ));
+    if !scan.sweeps.is_empty() {
+        out.push_str(&format!(
+            ", {} sweep roll-up{}",
+            scan.sweeps.len(),
+            if scan.sweeps.len() == 1 { "" } else { "s" },
+        ));
+    }
+    out.push('\n');
     Ok(out)
 }
 
@@ -434,6 +549,37 @@ mod tests {
         let scan = scan_results(&dir).unwrap();
         assert_eq!(scan.benches.len(), 1);
         assert_eq!(scan.benches[0].bench, "real");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Sweep roll-ups render per-config rows (plan order), surface the
+    /// frontier point count, and count into the footer; a non-response
+    /// line in a `.sweep.jsonl` fails the roll-up like any other
+    /// harness-emitted artifact.
+    #[test]
+    fn sweep_rollups_render_rows_and_summary() {
+        let dir = tmpdir("sweep");
+        let ok_line = "{\"snipsnap_response\":1,\"id\":\"demo-0\",\"ok\":true,\
+                       \"workload\":\"w\",\"designs\":[],\
+                       \"totals\":{\"energy_pj\":10.5,\"cycles\":100,\"edp\":1050},\
+                       \"frontier\":{\"points\":7}}";
+        let err_line =
+            "{\"snipsnap_response\":1,\"id\":\"demo-1\",\"ok\":false,\"error\":\"boom\"}";
+        std::fs::write(dir.join("demo.sweep.jsonl"), format!("{ok_line}\n{err_line}\n"))
+            .unwrap();
+        let scan = scan_results(&dir).unwrap();
+        assert_eq!(scan.sweeps.len(), 1);
+        assert!(scan.benches.is_empty(), "sweep roll-ups are not bench histories");
+        let out = report(&dir).unwrap();
+        assert!(out.contains("Sweep 'demo' (2 configs)"), "{out}");
+        assert!(out.contains("demo-0"), "{out}");
+        assert!(out.contains("7 pts"), "{out}");
+        assert!(out.contains("sweep demo: 2 configs, 1 failed, 1 frontier run\n"), "{out}");
+        assert!(out.contains("1 sweep roll-up\n"), "{out}");
+
+        std::fs::write(dir.join("bad.sweep.jsonl"), "{\"not_a_response\":1}\n").unwrap();
+        let e = report(&dir).unwrap_err().to_string();
+        assert!(e.contains("bad.sweep.jsonl") && e.contains("line 1"), "{e}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1152,9 +1152,11 @@ fn collect_workload(
 }
 
 /// Progressive co-search across a whole workload with explicit
-/// [`SearchHooks`] — the fallible entry point `snipsnap serve` calls.
-/// With default hooks this is byte-for-byte [`cosearch_workload`]; with
-/// a limiter bound, an exhausted budget surfaces as an `Err` naming the
+/// [`SearchHooks`] — the fallible entry point behind
+/// `driver::execute`, and through it the single funnel for `snipsnap
+/// search`, `snipsnap serve` and `snipsnap sweep` workers.  With
+/// default hooks this is byte-for-byte [`cosearch_workload`]; with a
+/// limiter bound, an exhausted budget surfaces as an `Err` naming the
 /// first op left without a design instead of a panic.
 pub fn try_cosearch_workload(
     arch: &Accelerator,

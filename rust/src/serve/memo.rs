@@ -46,6 +46,17 @@
 //! the file as header + one line per live entry in ascending key order
 //! — a canonical form, so compaction is idempotent.  [`MemoStore::compact`]
 //! forces the same rewrite unconditionally.
+//!
+//! # Size cap (`--memo-max-entries`)
+//!
+//! An optional entry cap ([`MemoStore::set_max_entries`]) is enforced at
+//! flush time through the same canonical rewrite: when the store holds
+//! more than `cap` entries, the `cap` **smallest keys survive** and the
+//! rest are evicted — the same ascending-key order the compacted file
+//! uses, so eviction is deterministic (two stores with the same entries
+//! and cap evict identically, regardless of insert order).  The store
+//! is a pure cache, so eviction can only cost a future recompute, never
+//! correctness.
 
 use crate::arch::Accelerator;
 use crate::config::snapshot;
@@ -90,6 +101,9 @@ pub fn request_scope(arch: &Accelerator, w: &Workload, cfg: &SearchConfig) -> u6
 /// contention is off the hot path).
 pub struct MemoStore {
     path: Option<PathBuf>,
+    /// Entry cap enforced at flush time (see module docs); `None` means
+    /// unbounded.
+    max_entries: Option<usize>,
     inner: Mutex<Inner>,
 }
 
@@ -122,12 +136,26 @@ impl MemoStore {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
             Err(e) => return Err(anyhow!("memo store {}: {e}", path.display())),
         }
-        Ok(MemoStore { path: Some(path.to_path_buf()), inner: Mutex::new(inner) })
+        Ok(MemoStore {
+            path: Some(path.to_path_buf()),
+            max_entries: None,
+            inner: Mutex::new(inner),
+        })
     }
 
     /// A store with no backing file — same semantics, nothing persists.
     pub fn in_memory() -> MemoStore {
-        MemoStore { path: None, inner: Mutex::new(Inner::default()) }
+        MemoStore { path: None, max_entries: None, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Cap the store at `cap` entries (`None` removes the cap).  The cap
+    /// is enforced at [`flush`](MemoStore::flush) time, not per insert:
+    /// the flush evicts down to the cap — the `cap` smallest keys
+    /// survive, in the same ascending order the canonical compacted file
+    /// uses, so eviction is deterministic — and rewrites the backing
+    /// file through the [`compact`](MemoStore::compact) path.
+    pub fn set_max_entries(&mut self, cap: Option<usize>) {
+        self.max_entries = cap;
     }
 
     /// Entries currently held (flushed or pending).
@@ -162,6 +190,9 @@ impl MemoStore {
     /// bytes exceed twice its live bytes — left behind by earlier
     /// appends from other processes sharing the store — the file is
     /// rewritten from the deduplicated in-memory map (see [`compact`]).
+    /// A [`set_max_entries`](MemoStore::set_max_entries) cap is enforced
+    /// here too: over-cap stores evict down to the cap (smallest keys
+    /// survive) and rewrite unconditionally.
     ///
     /// [`compact`]: MemoStore::compact
     pub fn flush(&self) -> Result<usize> {
@@ -169,7 +200,12 @@ impl MemoStore {
             let mut inner = self.inner.lock().unwrap();
             std::mem::take(&mut inner.pending)
         };
-        let Some(path) = &self.path else { return Ok(pending.len()) };
+        let Some(path) = &self.path else {
+            if let Some(cap) = self.max_entries {
+                evict_to_cap(&mut self.inner.lock().unwrap(), cap);
+            }
+            return Ok(pending.len());
+        };
         let mut appended = 0usize;
         if !pending.is_empty() {
             if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
@@ -193,11 +229,15 @@ impl MemoStore {
                 .with_context(|| format!("memo store {}", path.display()))?;
         }
         // Account the new lines (all fresh keys: `insert` only queues a
-        // key the map had never seen) and compact if dead bytes dominate.
+        // key the map had never seen), then enforce the entry cap and
+        // compact if dead bytes dominate.
         let mut inner = self.inner.lock().unwrap();
         inner.file_bytes += appended;
         inner.live_bytes += appended;
-        if inner.file_bytes - inner.live_bytes > 2 * inner.live_bytes {
+        if self.max_entries.is_some_and(|cap| inner.map.len() > cap) {
+            evict_to_cap(&mut inner, self.max_entries.unwrap());
+            rewrite_file(path, &mut inner)?;
+        } else if inner.file_bytes - inner.live_bytes > 2 * inner.live_bytes {
             rewrite_file(path, &mut inner)?;
         }
         Ok(pending.len())
@@ -218,6 +258,23 @@ impl MemoStore {
         let mut inner = self.inner.lock().unwrap();
         rewrite_file(path, &mut inner)
     }
+}
+
+/// Evict entries until at most `cap` remain: the `cap` smallest keys
+/// survive, mirroring the canonical file's ascending-key order so the
+/// eviction set is a deterministic function of (entries, cap).  Pending
+/// entries whose keys were evicted are dropped from the write set too.
+fn evict_to_cap(inner: &mut Inner, cap: usize) {
+    if inner.map.len() <= cap {
+        return;
+    }
+    let mut keys: Vec<u128> = inner.map.keys().copied().collect();
+    keys.sort_unstable();
+    for k in keys.drain(cap..) {
+        inner.map.remove(&k);
+    }
+    let Inner { map, pending, .. } = inner;
+    pending.retain(|(k, _)| map.contains_key(k));
 }
 
 /// The compaction rewrite shared by [`MemoStore::flush`] and

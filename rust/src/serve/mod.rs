@@ -34,7 +34,7 @@ pub mod memo;
 use crate::config::snapshot::run_config_from_value;
 use crate::config::RunConfig;
 use crate::cost::{CacheStats, SharedCounts};
-use crate::search::{try_cosearch_workload, SearchHooks, SearchLimiter, WorkloadResult};
+use crate::search::{SearchHooks, SearchLimiter, WorkloadResult};
 use crate::util::bench;
 use crate::util::json::Json;
 use crate::util::pool;
@@ -255,9 +255,10 @@ impl SearchResponse {
 }
 
 /// Run one parsed request: bind the memo session and budget limiter as
-/// [`SearchHooks`] and drive the fallible co-search.  Search errors
-/// (budget exhaustion, no legal mapping) become `ok:false` responses,
-/// never a dead service.
+/// [`SearchHooks`] and drive the co-search through the shared run
+/// driver ([`crate::driver::execute`]).  Search errors (budget
+/// exhaustion, no legal mapping) become `ok:false` responses, never a
+/// dead service.
 pub fn handle_request(req: &SearchRequest, store: Option<&MemoStore>) -> SearchResponse {
     let start = Instant::now();
     let limiter = req.budget.limiter();
@@ -267,7 +268,7 @@ pub fn handle_request(req: &SearchRequest, store: Option<&MemoStore>) -> SearchR
         memo: session.as_ref().map(|s| SharedCounts { store: s, scope }),
         limiter: limiter.as_ref(),
     };
-    let result = try_cosearch_workload(&req.run.arch, &req.run.workload, &req.run.search, hooks);
+    let result = crate::driver::execute(&req.run, hooks);
     let mut stats = SearchStats {
         wall_time_s: start.elapsed().as_secs_f64(),
         budget_exhausted: limiter.as_ref().is_some_and(|l| l.exhausted()),

@@ -406,6 +406,54 @@ fn report_rolls_up_results_and_rejects_rot() {
     assert!(stderr.contains("rotten.jsonl"), "{stderr}");
 }
 
+/// Regression: flags outside the subcommand's allowlist are usage
+/// errors — exit 2, a message naming the flag and the subcommand, usage
+/// on stderr, nothing on stdout.  A typo like `--thread 4` must never
+/// silently run single-threaded.
+#[test]
+fn unknown_flags_exit_2_with_usage() {
+    let run = |args: &[&str]| {
+        let out = snipsnap().args(args).output().expect("run");
+        assert_eq!(out.status.code(), Some(2), "{args:?}: usage errors exit 2: {:?}", out.status);
+        assert!(out.stdout.is_empty(), "{args:?}: nothing belongs on stdout");
+        let stderr = String::from_utf8_lossy(&out.stderr).to_string();
+        assert!(stderr.contains("USAGE"), "{args:?}: usage must go to stderr:\n{stderr}");
+        stderr
+    };
+    let e = run(&["search", "--thread", "4"]);
+    assert!(e.contains("unknown flag '--thread' for 'snipsnap search'"), "{e}");
+    // Flags valid for one subcommand are still rejected on another.
+    let e = run(&["search", "--jobs", "2"]);
+    assert!(e.contains("unknown flag '--jobs' for 'snipsnap search'"), "{e}");
+    let e = run(&["report", "--once"]);
+    assert!(e.contains("unknown flag '--once' for 'snipsnap report'"), "{e}");
+    let e = run(&["serve", "--plan", "x.toml"]);
+    assert!(e.contains("unknown flag '--plan' for 'snipsnap serve'"), "{e}");
+    let e = run(&["sweep", "--snapshot", "off"]);
+    assert!(e.contains("unknown flag '--snapshot' for 'snipsnap sweep'"), "{e}");
+}
+
+/// `--memo-max-entries` needs a store to cap: combining it with
+/// `--memo off` is an error, and a zero cap is rejected.
+#[test]
+fn serve_memo_cap_requires_a_store() {
+    let out = run_with_stdin(
+        &["serve", "--once", "--memo", "off", "--memo-max-entries", "5", "--results", "off"],
+        "",
+    );
+    assert!(!out.status.success(), "--memo off + a cap must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--memo-max-entries requires a memo store"), "{stderr}");
+
+    let out = run_with_stdin(
+        &["serve", "--once", "--memo", "off", "--memo-max-entries", "0", "--results", "off"],
+        "",
+    );
+    assert!(!out.status.success(), "a zero cap must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--memo-max-entries must be >= 1"), "{stderr}");
+}
+
 #[test]
 fn bad_flags_fail_cleanly() {
     let out = snipsnap()

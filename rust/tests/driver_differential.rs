@@ -1,0 +1,182 @@
+//! Differential suite for the run driver (`snipsnap::driver`) — the
+//! extraction of the `snipsnap search` pipeline into the library.
+//!
+//! The load-bearing claims, each pinned here:
+//!
+//! 1. **`driver::execute` IS the co-search.**  Scalar and frontier runs
+//!    through the driver are bit-identical to a direct
+//!    `try_cosearch_workload` — designs, scores, evaluations, frontier
+//!    winner totals.
+//! 2. **`driver::run` is replayable.**  The rendered report is
+//!    deterministic, and the snapshot it emits parses back into a
+//!    `RunPlan` whose re-run produces the same report bytes (stable
+//!    lines) — the pre-extraction `--snapshot` contract, now at the
+//!    library seam.
+//! 3. **`RunPlan` render/parse is a fixed point** and round-trips the
+//!    optional id without disturbing the snapshot form.
+
+use snipsnap::config::load_run_config;
+use snipsnap::driver::{self, RunPlan, RunSinks, SnapshotSink};
+use snipsnap::search::{try_cosearch_workload, SearchHooks, WorkloadResult};
+
+/// Two small ops with distinct problem dims — enough structure for the
+/// format/mapping search to make non-trivial picks, small enough to run
+/// in milliseconds.
+const SRC: &str = r#"
+[run]
+arch = "arch3"
+metric = "energy"
+mode = "fixed"
+[search]
+max_mappings = 300
+[[op]]
+name = "a"
+m = 32
+n = 32
+k = 64
+act_density = 0.5
+wgt_density = 0.4
+[[op]]
+name = "b"
+m = 48
+n = 32
+k = 32
+act_density = 0.3
+wgt_density = 0.6
+"#;
+
+/// Designs equal bit for bit (mapping, formats, widths, metric value).
+fn assert_identical(a: &WorkloadResult, b: &WorkloadResult, what: &str) {
+    assert_eq!(a.designs.len(), b.designs.len(), "{what}");
+    for (da, db) in a.designs.iter().zip(&b.designs) {
+        assert_eq!(da.op_name, db.op_name, "{what}");
+        assert_eq!(da.mapping, db.mapping, "{what}: {} mappings diverged", da.op_name);
+        assert_eq!(da.input_format, db.input_format, "{what}: {}", da.op_name);
+        assert_eq!(da.weight_format, db.weight_format, "{what}: {}", da.op_name);
+        assert_eq!(
+            (da.input_bits, da.weight_bits),
+            (db.input_bits, db.weight_bits),
+            "{what}: {}",
+            da.op_name
+        );
+        assert_eq!(
+            da.metric_value.to_bits(),
+            db.metric_value.to_bits(),
+            "{what}: {} metric diverged",
+            da.op_name
+        );
+    }
+    assert_eq!(a.evaluations, b.evaluations, "{what}: evaluations diverged");
+}
+
+/// Drop the wall-time line; everything else in the report is
+/// deterministic for a fixed config (same filter as `rust/tests/cli.rs`
+/// uses across processes).
+fn stable(bytes: &[u8]) -> String {
+    String::from_utf8_lossy(bytes)
+        .lines()
+        .filter(|l| {
+            !l.starts_with("search:") && !l.starts_with("cache:")
+                && !l.starts_with("enumeration:")
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Claim 1 (scalar): the driver's dispatch is the direct co-search.
+#[test]
+fn execute_matches_direct_cosearch_bitwise() {
+    let run = load_run_config(SRC).unwrap();
+    let direct =
+        try_cosearch_workload(&run.arch, &run.workload, &run.search, SearchHooks::default())
+            .unwrap();
+    let via = driver::execute(&run, SearchHooks::default()).unwrap();
+    assert_identical(&direct, &via, "driver::execute vs direct co-search");
+    assert!(via.frontier.is_none(), "a scalar metric must not grow a frontier");
+}
+
+/// Claim 1 (frontier): `--metric frontier` dispatches through the same
+/// funnel, with bit-identical per-metric winner totals.
+#[test]
+fn execute_matches_direct_cosearch_for_frontier() {
+    let src = SRC.replace("metric = \"energy\"", "metric = \"frontier\"");
+    let run = load_run_config(&src).unwrap();
+    let direct =
+        try_cosearch_workload(&run.arch, &run.workload, &run.search, SearchHooks::default())
+            .unwrap();
+    let via = driver::execute(&run, SearchHooks::default()).unwrap();
+    assert_identical(&direct, &via, "driver::execute vs direct frontier search");
+    let fa = direct.frontier.as_ref().expect("frontier metric must produce a frontier");
+    let fb = via.frontier.as_ref().expect("frontier metric must produce a frontier");
+    assert_eq!(fa.total_points(), fb.total_points(), "frontier sizes diverged");
+    for mi in 0..4 {
+        assert_eq!(
+            fa.winner_total(mi).to_bits(),
+            fb.winner_total(mi).to_bits(),
+            "winner total for metric {mi} diverged"
+        );
+    }
+}
+
+/// Claim 2: the driver's report is deterministic and the snapshot it
+/// emits replays the run — `RunPlan::parse` of the artifact, re-run
+/// through `driver::run`, same stable report bytes.
+#[test]
+fn run_report_is_deterministic_and_snapshot_replays() {
+    let dir = std::env::temp_dir()
+        .join(format!("snipsnap_driver_snap_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let snap = dir.join("run.config.json");
+    let _ = std::fs::remove_file(&snap);
+
+    let plan = RunPlan::new(load_run_config(SRC).unwrap());
+    let (mut out1, mut log1) = (Vec::new(), Vec::new());
+    let mut sinks = RunSinks {
+        snapshot: SnapshotSink::Path(snap.clone()),
+        out: &mut out1,
+        log: &mut log1,
+    };
+    driver::run(&plan, SearchHooks::default(), &mut sinks).unwrap();
+    let log = String::from_utf8(log1).unwrap();
+    assert!(log.contains("run-config snapshot:"), "{log}");
+    assert!(log.contains("arch: arch3"), "{log}");
+    let report = stable(&out1);
+    assert!(report.contains("totals:"), "{report}");
+
+    // The artifact is a valid plan; replaying it reproduces the report.
+    let text = std::fs::read_to_string(&snap).expect("snapshot written");
+    let replay = RunPlan::parse(text.trim()).expect("snapshot must parse as a plan");
+    assert!(replay.id.is_none(), "snapshots carry no id");
+    let (mut out2, mut log2) = (Vec::new(), Vec::new());
+    let mut sinks2 =
+        RunSinks { snapshot: SnapshotSink::Off, out: &mut out2, log: &mut log2 };
+    driver::run(&replay, SearchHooks::default(), &mut sinks2).unwrap();
+    assert_eq!(report, stable(&out2), "replayed run diverged from the original");
+    let _ = std::fs::remove_file(&snap);
+}
+
+/// Claim 3: render ∘ parse is a fixed point, ids round-trip, and a
+/// plain plan renders exactly the snapshot line (no stray keys).
+#[test]
+fn run_plan_render_parse_round_trips_ids() {
+    let tagged = RunPlan {
+        id: Some("cfg-07".to_string()),
+        run: load_run_config(SRC).unwrap(),
+    };
+    let line = tagged.render();
+    assert!(line.ends_with('\n'), "plans render as complete lines");
+    assert!(line.contains(r#""id":"cfg-07""#), "{line}");
+    let re = RunPlan::parse(line.trim()).unwrap();
+    assert_eq!(re.id.as_deref(), Some("cfg-07"));
+    assert_eq!(re.render(), line, "render must be a fixed point under parse");
+
+    let plain = RunPlan::new(load_run_config(SRC).unwrap());
+    let pline = plain.render();
+    assert!(!pline.contains(r#""id":"#), "an id-less plan must not emit one:\n{pline}");
+    assert_eq!(RunPlan::parse(pline.trim()).unwrap().id, None);
+
+    // A non-string id is a parse error, not a silent drop.
+    let bad = format!(r#"{{"id":7,{}"#, &pline.trim()[1..]);
+    let err = RunPlan::parse(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("'id' must be a string"), "{err:#}");
+}

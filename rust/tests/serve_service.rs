@@ -351,3 +351,59 @@ fn once_mode_serves_one_request_or_errors() {
     assert_eq!(summary, ServeSummary { requests: 1, failed: 0 });
     assert_eq!(out.iter().filter(|&&b| b == b'\n').count(), 1, "--once must stop after one");
 }
+
+/// `--memo-max-entries`: the cap is enforced at flush through the
+/// canonical rewrite — the smallest keys survive, eviction depends only
+/// on (entries, cap) and never on insert order, the capped file reloads
+/// exactly, and a cap at or above the entry count is a no-op.
+#[test]
+fn memo_max_entries_caps_at_flush_with_deterministic_eviction() {
+    use snipsnap::dataflow::{AccessCounts, MAX_LEVELS};
+    use snipsnap::util::inline::InlineVec;
+
+    let counts = |seed: f64| {
+        let mut fills: InlineVec<[f64; 3], MAX_LEVELS> = InlineVec::new();
+        fills.push([seed, seed * 2.0, seed + 0.125]);
+        fills.push([1.0, f64::from_bits(0x3ff0_0000_0000_0001), 3.0e16]);
+        AccessCounts { fills }
+    };
+
+    let path = tmp("cap");
+    let _ = std::fs::remove_file(&path);
+    let mut store = MemoStore::open(&path).unwrap();
+    store.set_max_entries(Some(4));
+    // Insert in descending key order: the surviving set must be a
+    // function of the keys, not of insert order.
+    for k in (0..10u128).rev() {
+        store.insert(k, &counts(k as f64));
+    }
+    assert_eq!(store.len(), 10, "the cap is enforced at flush, not per insert");
+    store.flush().unwrap();
+    assert_eq!(store.len(), 4);
+    for k in 0..4u128 {
+        assert!(store.get(k).is_some(), "smallest keys must survive: {k}");
+    }
+    for k in 4..10u128 {
+        assert!(store.get(k).is_none(), "largest keys must evict: {k}");
+    }
+
+    // The rewrite is canonical: the capped file reloads to the capped
+    // map, and a second flush with nothing pending is byte-stable.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let re = MemoStore::open(&path).unwrap();
+    assert_eq!(re.len(), 4);
+    assert_eq!(re.get(0), Some(counts(0.0)));
+    store.flush().unwrap();
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), text);
+    let _ = std::fs::remove_file(&path);
+
+    // A cap at or above the entry count must not evict (in-memory
+    // stores enforce the cap at flush too).
+    let mut roomy = MemoStore::in_memory();
+    roomy.set_max_entries(Some(8));
+    for k in 0..5u128 {
+        roomy.insert(k, &counts(k as f64));
+    }
+    roomy.flush().unwrap();
+    assert_eq!(roomy.len(), 5, "a cap above the entry count must not evict");
+}

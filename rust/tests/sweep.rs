@@ -1,0 +1,223 @@
+//! Sweep plans and the multi-process coordinator (`snipsnap sweep`).
+//!
+//! The load-bearing claims, each pinned here:
+//!
+//! 1. **Expansion is deterministic odometer order.**  Axes cross in
+//!    file order, first axis slowest, ids zero-padded so lexicographic
+//!    order equals plan order; the shared base config (max_mappings,
+//!    mode, arch) carries into every entry.
+//! 2. **Bad plans fail loudly**: unknown axis keys, empty value lists,
+//!    duplicate axes, overrides aimed at inline workloads, and roll-up
+//!    names that cannot be filenames.
+//! 3. **The merged roll-up is worker-count invariant.**  The same plan
+//!    at `--workers 1` and `--workers 3` produces byte-identical
+//!    `<name>.sweep.jsonl` files, in plan order, and `snipsnap report`
+//!    rolls the sweep up like a single run.
+
+use snipsnap::config::sweep::load_sweep_plan;
+use snipsnap::cost::Metric;
+use std::process::Command;
+
+const PLAN: &str = r#"
+[run]
+arch = "arch3"
+mode = "fixed"
+
+[workload]
+preset = "gqa-tiny"
+prefill_tokens = 32
+decode_tokens = 4
+
+[search]
+max_mappings = 150
+
+[sweep]
+name = "demo"
+
+[[sweep.axis]]
+key = "metric"
+values = ["energy", "latency", "frontier"]
+"#;
+
+/// Claim 1: one axis expands in value order with the base config
+/// applied to every entry.
+#[test]
+fn plan_expands_with_padded_ids_and_shared_base() {
+    let plan = load_sweep_plan(PLAN).unwrap();
+    assert_eq!(plan.name, "demo");
+    let ids: Vec<&str> = plan.entries.iter().map(|e| e.id.as_str()).collect();
+    assert_eq!(ids, ["demo-0", "demo-1", "demo-2"]);
+    let metrics: Vec<Metric> = plan.entries.iter().map(|e| e.run.search.metric).collect();
+    assert_eq!(metrics, [Metric::Energy, Metric::Latency, Metric::Frontier]);
+    for e in &plan.entries {
+        assert_eq!(e.run.search.mapper.max_candidates, 150, "{}: base [search] lost", e.id);
+        assert_eq!(e.run.arch.name, plan.entries[0].run.arch.name, "{}: base arch lost", e.id);
+    }
+}
+
+/// Claim 1: two axes cross in odometer order — first axis slowest.
+#[test]
+fn cross_product_walks_first_axis_slowest() {
+    let src = r#"
+[run]
+arch = "arch3"
+mode = "fixed"
+
+[[sweep.axis]]
+key = "workload"
+values = ["gqa-tiny", "moe-tiny"]
+
+[[sweep.axis]]
+key = "threads"
+values = [1, 2]
+"#;
+    let plan = load_sweep_plan(src).unwrap();
+    assert_eq!(plan.name, "sweep", "the name defaults without a [sweep] header");
+    assert_eq!(plan.entries.len(), 4);
+    let wl = |i: usize| plan.entries[i].run.workload.name.to_ascii_lowercase();
+    let th = |i: usize| plan.entries[i].run.search.threads;
+    assert!(wl(0).contains("gqa") && th(0) == 1, "{} t{}", wl(0), th(0));
+    assert!(wl(1).contains("gqa") && th(1) == 2, "{} t{}", wl(1), th(1));
+    assert!(wl(2).contains("moe") && th(2) == 1, "{} t{}", wl(2), th(2));
+    assert!(wl(3).contains("moe") && th(3) == 2, "{} t{}", wl(3), th(3));
+}
+
+/// Claim 1: ids pad to the widest index so they sort in plan order.
+#[test]
+fn ids_zero_pad_to_the_widest_index() {
+    let src = r#"
+[run]
+arch = "arch3"
+mode = "fixed"
+
+[workload]
+preset = "gqa-tiny"
+
+[[sweep.axis]]
+key = "threads"
+values = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11]
+"#;
+    let plan = load_sweep_plan(src).unwrap();
+    assert_eq!(plan.entries.len(), 11);
+    assert_eq!(plan.entries[0].id, "sweep-00");
+    assert_eq!(plan.entries[10].id, "sweep-10");
+    let mut ids: Vec<&str> = plan.entries.iter().map(|e| e.id.as_str()).collect();
+    let in_plan_order = ids.clone();
+    ids.sort();
+    assert_eq!(ids, in_plan_order, "lexicographic order must equal plan order");
+}
+
+/// A plan with no axes is a single-config sweep, not an error.
+#[test]
+fn plan_without_axes_yields_one_entry() {
+    let src = r#"
+[run]
+arch = "arch3"
+mode = "fixed"
+
+[workload]
+preset = "gqa-tiny"
+"#;
+    let plan = load_sweep_plan(src).unwrap();
+    assert_eq!(plan.entries.len(), 1);
+    assert_eq!(plan.entries[0].id, "sweep-0");
+}
+
+/// Claim 2: malformed plans fail with messages naming the problem.
+#[test]
+fn bad_plans_fail_loudly() {
+    let base = "[run]\narch = \"arch3\"\nmode = \"fixed\"\n\
+                [workload]\npreset = \"gqa-tiny\"\n";
+    let expect = |extra: &str, needle: &str| {
+        let err = load_sweep_plan(&format!("{base}{extra}"))
+            .expect_err(&format!("must reject: {extra}"));
+        let msg = format!("{err:#}");
+        assert!(msg.contains(needle), "error for {extra:?} must mention '{needle}': {msg}");
+    };
+    expect("[[sweep.axis]]\nkey = \"metrik\"\nvalues = [\"energy\"]\n", "unknown key 'metrik'");
+    expect("[[sweep.axis]]\nkey = \"metric\"\nvalues = []\n", "has no values");
+    expect(
+        "[[sweep.axis]]\nkey = \"metric\"\nvalues = [\"energy\"]\n\
+         [[sweep.axis]]\nkey = \"metric\"\nvalues = [\"latency\"]\n",
+        "duplicate axis 'metric'",
+    );
+    expect("[sweep]\nname = \"de mo\"\n", "[sweep] name");
+    expect(
+        "[[sweep.axis]]\nkey = \"metric\"\nvalues = [7]\n",
+        "values must be strings",
+    );
+
+    // A workload axis cannot override an inline [[op]] workload.
+    let inline = "[run]\narch = \"arch3\"\nmode = \"fixed\"\n\
+                  [[op]]\nname = \"g\"\nm = 32\nn = 32\nk = 32\n\
+                  act_density = 0.5\nwgt_density = 0.5\n\
+                  [[sweep.axis]]\nkey = \"workload\"\nvalues = [\"gqa-tiny\"]\n";
+    let err = load_sweep_plan(inline).expect_err("inline workload + workload axis");
+    assert!(format!("{err:#}").contains("cannot be applied"), "{err:#}");
+}
+
+fn snipsnap() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_snipsnap"))
+}
+
+/// Claim 3 (the sweep acceptance test): the merged roll-up is
+/// byte-identical at any worker count, holds plan order, and reports.
+#[test]
+fn sweep_merged_output_is_worker_count_invariant() {
+    let dir = std::env::temp_dir().join(format!("snipsnap_sweep_cli_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let plan = dir.join("plan.toml");
+    std::fs::write(&plan, PLAN).unwrap();
+
+    let out1 = dir.join("w1");
+    let out3 = dir.join("w3");
+    for (workers, out_dir) in [("1", &out1), ("3", &out3)] {
+        let out = snipsnap()
+            .args([
+                "sweep",
+                "--plan",
+                plan.to_str().unwrap(),
+                "--workers",
+                workers,
+                "--out",
+                out_dir.to_str().unwrap(),
+            ])
+            .output()
+            .expect("run");
+        assert!(
+            out.status.success(),
+            "--workers {workers}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains("3 configs"), "{stderr}");
+        assert!(out.stdout.is_empty(), "the roll-up belongs in --out, not on stdout");
+    }
+
+    let merged1 = std::fs::read_to_string(out1.join("demo.sweep.jsonl")).unwrap();
+    let merged3 = std::fs::read_to_string(out3.join("demo.sweep.jsonl")).unwrap();
+    assert_eq!(merged1, merged3, "merged roll-up must be byte-identical at any worker count");
+    let lines: Vec<&str> = merged1.lines().collect();
+    assert_eq!(lines.len(), 3, "{merged1}");
+    for (i, l) in lines.iter().enumerate() {
+        assert!(l.contains(&format!("\"id\":\"demo-{i}\"")), "plan order lost:\n{l}");
+        assert!(l.contains("\"ok\":true"), "{l}");
+    }
+    assert!(
+        lines[2].contains("\"frontier\""),
+        "the frontier config's Pareto stats must survive the wire:\n{}",
+        lines[2]
+    );
+
+    // The sweep rolls up under `snipsnap report` like a single run.
+    let out = snipsnap()
+        .args(["report", "--dir", out1.to_str().unwrap()])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("Sweep 'demo'"), "{stdout}");
+    assert!(stdout.contains("demo-2"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
